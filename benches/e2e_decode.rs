@@ -1,0 +1,100 @@
+//! End-to-end decode throughput through the full stack: coordinator →
+//! quantized weights → PJRT executor. The L3 counterpart of the paper's
+//! App. H runtime benchmark, at miniature scale.
+//!
+//! Run: `cargo bench --bench e2e_decode` (needs `make artifacts`)
+//!
+//! Reports tokens/sec for FP vs TTQ(r=0) vs TTQ(r=16) serving and the
+//! share of time spent on online quantization (must be small — Eq. 3).
+
+use std::time::{Duration, Instant};
+
+use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
+use ttq_serve::corpus::{CorpusStream, Split, BOS};
+use ttq_serve::eval::{Evaluator, MethodSpec};
+use ttq_serve::quant::QuantSpec;
+use ttq_serve::runtime::Runtime;
+
+fn main() {
+    if !ttq_serve::artifacts_ready() {
+        eprintln!("skipping e2e_decode: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&ttq_serve::artifacts_dir()).unwrap();
+    let model = "qwen-micro";
+    let requests = 48;
+
+    println!("== e2e serving throughput, {model}, {requests} requests ==");
+    for (label, rank, bits) in [
+        ("TTQ q=4 r=0", 0usize, 4u32),
+        ("TTQ q=4 r=16", 16, 4),
+        ("TTQ q=2 r=0", 0, 2),
+    ] {
+        let mut cfg = ServerConfig::new(model);
+        cfg.spec = QuantSpec::new(bits, 32);
+        cfg.rank = rank;
+        cfg.policy = BatchPolicy {
+            buckets: vec![1, 4],
+            linger: Duration::ZERO,
+        };
+        let mut server = Server::new(&rt, cfg).unwrap();
+        let seq = server.seq();
+        let mut s = CorpusStream::new("wt2s", Split::Eval);
+        let t0 = Instant::now();
+        for _ in 0..requests {
+            let mut toks = vec![BOS; seq];
+            for t in toks.iter_mut().skip(1) {
+                *t = s.next_token();
+            }
+            server.submit(toks);
+            server.step(Instant::now()).unwrap();
+        }
+        server.drain().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        use std::sync::atomic::Ordering::Relaxed;
+        let toks = server.metrics.tokens.load(Relaxed);
+        let quant_ms = server.metrics.quant_us.load(Relaxed) as f64 / 1e3;
+        println!(
+            "{label:<14} wall {wall:>6.2}s  {:>8.0} tok/s  quant {quant_ms:>7.1}ms \
+             ({:.1}% of wall)  generations {}",
+            toks as f64 / wall,
+            100.0 * quant_ms / (wall * 1e3),
+            server.weight_generation(),
+        );
+    }
+
+    // per-batch eval-pipeline throughput (the Table 1-3 workhorse)
+    println!("\n== eval pipeline batch throughput ==");
+    let mut ev = Evaluator::new(&rt, model).unwrap();
+    let seq = ev.weights.manifest.config.seq;
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    for (label, method) in [
+        ("plain nll b4", None),
+        ("TTQ two-pass b4", Some(MethodSpec::Ttq { rank: 0 })),
+    ] {
+        let iters = 6;
+        let t0 = Instant::now();
+        let mut total_tokens = 0usize;
+        for _ in 0..iters {
+            let toks = s.batch(4, seq);
+            total_tokens += toks.len();
+            if let Some(m) = &method {
+                ev.restore();
+                let st = ev.collect(&toks, 4, false).unwrap();
+                ev.apply_quantization(
+                    m,
+                    Some(&st),
+                    &ttq_serve::eval::EvalConfig::default(),
+                )
+                .unwrap();
+            }
+            ev.nll(&toks, 4).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{label:<18} {:>8.0} tok/s ({:.1} ms/batch)",
+            total_tokens as f64 / wall,
+            wall * 1e3 / iters as f64
+        );
+    }
+}

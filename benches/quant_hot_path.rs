@@ -1,0 +1,74 @@
+//! Hot-path microbenchmarks for the quant library (L3).
+//!
+//! Run: `cargo bench --bench quant_hot_path`
+//!
+//! Reports element-throughput of the QDQ inner loop, the AWQ scaling
+//! path, GPTQ (the O(d³) baseline the paper contrasts), packing, and
+//! the fused packed-dequant matmul vs a dense f32 matmul — the CPU
+//! stand-in for `marlin_gemm` vs FP16 GEMV.
+
+use ttq_serve::linalg::{Mat, Rng};
+use ttq_serve::quant::{
+    awq_quantize, diag_from_x, gptq_quantize, lowrank_init, pack,
+    packed_matmul, rtn_quantize, rtn_quantize_int, QuantSpec,
+};
+use ttq_serve::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(1);
+
+    // paper-ish layer dims at our scale: d'=512, d=512
+    let (dout, din, t) = (512usize, 512usize, 16usize);
+    let w = Mat::randn(dout, din, &mut rng);
+    let x = Mat::randn(din, t, &mut rng);
+    let n = (dout * din) as f64;
+
+    println!("-- RTN groupwise QDQ (Eq. 1) --");
+    for (bits, group) in [(2u32, 32usize), (3, 32), (4, 32), (4, 128), (8, 32)] {
+        let spec = QuantSpec::new(bits, group);
+        b.run_with_items(
+            &format!("rtn_qdq q={bits} g={group} {dout}x{din}"),
+            n,
+            || rtn_quantize(black_box(&w), &spec),
+        );
+    }
+
+    println!("-- AWQ scaled QDQ (Eq. 19-20) --");
+    let spec = QuantSpec::new(4, 32);
+    b.run_with_items(&format!("awq_diag d={din} T={t}"), (din * t) as f64, || {
+        diag_from_x(black_box(&x), 2.0, 0.4, 0.5)
+    });
+    let d = diag_from_x(&x, 2.0, 0.4, 0.5);
+    b.run_with_items(&format!("awq_quantize {dout}x{din}"), n, || {
+        awq_quantize(black_box(&w), &d, &spec)
+    });
+
+    println!("-- low-rank init (App. E) --");
+    for r in [4usize, 16] {
+        b.run(&format!("lowrank_init r={r} {dout}x{din}"), || {
+            lowrank_init(black_box(&w), r)
+        });
+    }
+
+    println!("-- GPTQ baseline (App. C, O(d^3)) --");
+    let wg = Mat::randn(128, 128, &mut rng);
+    let xg = Mat::randn(128, 256, &mut rng);
+    let c = xg.matmul_bt(&xg);
+    Bencher::quick().run("gptq 128x128", || {
+        gptq_quantize(black_box(&wg), &c, &QuantSpec::new(4, 32), 0.01)
+    });
+
+    println!("-- packed int matmul vs dense f32 (marlin analogue) --");
+    let xt = Mat::randn(din, 1, &mut rng); // decode: single token
+    let dense_flops = (dout * din) as f64;
+    b.run_with_items("dense f32 matvec", dense_flops, || {
+        black_box(&w).matmul(black_box(&xt))
+    });
+    for bits in [2u32, 4] {
+        let p = pack(&rtn_quantize_int(&w, &QuantSpec::new(bits, 32)));
+        b.run_with_items(&format!("packed q={bits} dequant-matvec"), dense_flops, || {
+            packed_matmul(black_box(&p), black_box(&xt))
+        });
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: quantize a model three ways and compare perplexity.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the public API end to end: load the PJRT runtime, bind an
+//! evaluator to a model's artifacts, and measure RTN vs offline-AWQ vs
+//! online-TTQ at 3 bits — the paper's core comparison in ~40 lines.
+
+use anyhow::Result;
+use ttq_serve::eval::{EvalConfig, Evaluator, MethodSpec};
+use ttq_serve::quant::QuantSpec;
+use ttq_serve::runtime::Runtime;
+
+fn main() -> Result<()> {
+    if !ttq_serve::artifacts_ready() {
+        eprintln!("run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&ttq_serve::artifacts_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let model = "qwen-micro";
+    let mut ev = Evaluator::new(&rt, model)?;
+    println!(
+        "model {model}: {} params, {} quantizable linears\n",
+        ev.weights.param_count(),
+        ev.weights.manifest.linears.len()
+    );
+
+    let cfg = EvalConfig {
+        spec: QuantSpec::new(3, 32), // 3-bit, groupsize 32
+        eval_batches: 6,
+        calib_batches: 8,
+        ..Default::default()
+    };
+
+    let methods = [
+        MethodSpec::Fp,
+        MethodSpec::Rtn,
+        MethodSpec::Awq { calib_domain: "c4s".into() },
+        MethodSpec::Ttq { rank: 0 },
+        MethodSpec::Ttq { rank: 16 },
+    ];
+    println!("3-bit perplexity on the wt2s eval stream:");
+    for m in methods {
+        let ppl = ev.perplexity(&m, "wt2s", &cfg)?;
+        println!("  {:<22} {ppl:8.2}", m.label());
+    }
+    println!("\nExpected ordering: FP < TTQ(r=16) <= TTQ(r=0) <= AWQ < RTN");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Serving demo: shape-bucketed dynamic batching + online
+//! self-calibration under shifting traffic.
+//!
+//! Drives the coordinator with a bursty two-domain workload and prints
+//! the metrics a serving operator would watch: batch fill, throughput,
+//! latency, and how many weight generations the TTQ calibrator created
+//! (it should requantize on the traffic shift, then settle).
+//!
+//! ```bash
+//! cargo run --release --example serve_batch
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
+use ttq_serve::corpus::{CorpusStream, Split, BOS};
+use ttq_serve::quant::QuantSpec;
+use ttq_serve::runtime::Runtime;
+
+fn main() -> Result<()> {
+    if !ttq_serve::artifacts_ready() {
+        eprintln!("run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&ttq_serve::artifacts_dir())?;
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.spec = QuantSpec::new(4, 32);
+    cfg.policy = BatchPolicy {
+        buckets: vec![1, 4],
+        linger: Duration::from_millis(1),
+    };
+    let mut server = Server::new(&rt, cfg)?;
+    let seq = server.seq();
+
+    let phases = [("ptbs", 24usize), ("c4s", 24), ("ptbs", 12)];
+    println!("traffic: {phases:?} (requests per phase)\n");
+    for (domain, n) in phases {
+        let mut stream = CorpusStream::new(domain, Split::Eval);
+        let gen_before = server.weight_generation();
+        let mut replies = 0usize;
+        for i in 0..n {
+            let mut toks = vec![BOS; seq];
+            for t in toks.iter_mut().skip(1) {
+                *t = stream.next_token();
+            }
+            server.submit(toks);
+            // bursty arrivals: drive the engine every few submissions
+            if i % 3 == 2 {
+                replies += server.step(Instant::now())?.len();
+            }
+        }
+        replies += server.drain()?.len();
+        println!(
+            "phase {domain:>5}: {replies}/{n} replies, weight generations {} -> {}",
+            gen_before,
+            server.weight_generation()
+        );
+    }
+
+    println!("\n{}", server.metrics.summary());
+    println!(
+        "\nNote the generation bumps at phase boundaries: the calibrator\n\
+         detected the activation-statistics drift and requantized — the\n\
+         paper's on-device self-calibration (Fig. 1b) in action."
+    );
+    Ok(())
+}

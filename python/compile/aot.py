@@ -1,0 +1,207 @@
+"""AOT compiler: lower every (model, variant, batch-bucket) to HLO text.
+
+Python's ONLY appearance in the system: `make artifacts` runs this once,
+after which the rust binary is self-contained. Outputs under artifacts/:
+
+  ckpt/<name>.npz            — trained checkpoints (cache)
+  <name>.weights.bin         — f32 LE tensors concatenated in schema order
+  <name>.manifest.json       — config + tensor offsets + linear schema
+  <name>_<variant>_b<B>.hlo.txt — HLO text modules (see model.make_entry)
+  kernels/ttq_linear.hlo.txt — standalone fused TTQ kernel (microbench)
+  golden/quant_golden.json   — ref-oracle vectors for rust cross-checks
+  corpus_golden.json         — corpus fixtures shared with rust tests
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, train
+from .kernels import ref, ttq as ttq_kernels
+
+VARIANTS = ["nll", "logits", "stats", "corr", "ttq"]
+# (variant, batch) buckets to compile. logits b1 drives decode; nll/ttq
+# get b1 (serving) + b4 (eval throughput); stats/corr are eval-only.
+BUCKETS: dict[str, list[int]] = {
+    "nll": [1, 4],
+    "logits": [1, 4],
+    "stats": [1, 4],
+    "corr": [4],
+    "ttq": [1, 4],
+}
+SEQ = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(cfg: model.ModelConfig, variant: str, batch: int) -> str:
+    fn = model.make_entry(cfg, variant)
+    tok_spec = jax.ShapeDtypeStruct((batch, SEQ), jnp.int32)
+    w_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in model.param_schema(cfg)
+    ]
+    if variant == "ttq":
+        qmax_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        lowered = jax.jit(fn).lower(tok_spec, qmax_spec, *w_specs)
+    else:
+        lowered = jax.jit(fn).lower(tok_spec, *w_specs)
+    return to_hlo_text(lowered)
+
+
+def dump_weights(out_dir: str, cfg: model.ModelConfig, params: dict) -> dict:
+    """Write weights.bin + manifest; returns the manifest dict."""
+    tensors = []
+    offset = 0
+    blob = bytearray()
+    for name, shape in model.param_schema(cfg):
+        arr = np.asarray(params[name], np.float32)
+        assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+        raw = arr.tobytes()  # C-order f32 LE
+        tensors.append(
+            {"name": name, "shape": list(shape), "offset": offset,
+             "numel": int(arr.size)}
+        )
+        blob += raw
+        offset += arr.size
+    with open(os.path.join(out_dir, f"{cfg.name}.weights.bin"), "wb") as f:
+        f.write(bytes(blob))
+    manifest = {
+        "name": cfg.name,
+        "family": cfg.family,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim,
+            "d_mlp": cfg.d_mlp, "max_seq": cfg.max_seq, "seq": SEQ,
+        },
+        "tensors": tensors,
+        "linears": model.linear_schema(cfg),
+        "norm_ps": list(model.NORM_PS),
+        "ttq_defaults": {
+            "g": model.TTQ_G, "p": model.TTQ_P, "lam": model.TTQ_LAM,
+            "alpha": model.TTQ_ALPHA,
+        },
+        "buckets": BUCKETS,
+    }
+    with open(os.path.join(out_dir, f"{cfg.name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def dump_quant_golden(out_dir: str) -> None:
+    """Golden vectors from the jnp ref oracle for the rust quant tests."""
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(8, 64)).astype(np.float32)
+    x = rng.normal(size=(64, 12)).astype(np.float32)
+    cases = {}
+    for q, g in [(2, 16), (3, 32), (4, 32), (5, 64), (4, 128)]:
+        qmax = float(2 ** q - 1)
+        key = f"q{q}_g{g}"
+        cases[key] = {
+            "rtn": np.asarray(ref.rtn_ref(w, qmax, g)).flatten().tolist(),
+            "awq": np.asarray(
+                ref.awq_ref(x, w, qmax, g, 2.0, 0.4, 0.5)
+            ).flatten().tolist(),
+        }
+    dvec = np.asarray(ref.awq_diag(jnp.asarray(x), 2.0, 0.4, 0.5))
+    b, a = ref.lowrank_init_ref(jnp.asarray(w), 4)
+    y_ttq = ref.ttq_linear_ref(jnp.asarray(x), jnp.asarray(w), 7.0, 32,
+                               b=b, a=a)
+    golden = {
+        "w": w.flatten().tolist(),
+        "w_shape": [8, 64],
+        "x": x.flatten().tolist(),
+        "x_shape": [64, 12],
+        "awq_diag_p2": dvec.tolist(),
+        "ba": np.asarray(b @ a).flatten().tolist(),
+        "ttq_r4_q3_g32_y": np.asarray(y_ttq).flatten().tolist(),
+        "cases": cases,
+    }
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+    with open(os.path.join(out_dir, "golden", "quant_golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def dump_kernel_artifact(out_dir: str) -> None:
+    """Standalone fused TTQ kernel at serving-ish dims for microbenches."""
+    os.makedirs(os.path.join(out_dir, "kernels"), exist_ok=True)
+    d, ddash, t = 128, 384, 16
+
+    def fn(x, w, qmax):
+        return (ttq_kernels.ttq_linear(x, w, qmax, g=32),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((d, t), jnp.float32),
+        jax.ShapeDtypeStruct((ddash, d), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    with open(os.path.join(out_dir, "kernels", "ttq_linear.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def dump_corpus_golden(out_dir: str) -> None:
+    with open(os.path.join(out_dir, "corpus_golden.json"), "w") as f:
+        json.dump(corpus.golden_fixture(), f, indent=0)
+
+
+def build_all(out_dir: str, models: list[str] | None = None, log=print) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    ckpt_dir = os.path.join(out_dir, "ckpt")
+    os.makedirs(ckpt_dir, exist_ok=True)
+
+    dump_corpus_golden(out_dir)
+    dump_quant_golden(out_dir)
+    dump_kernel_artifact(out_dir)
+
+    names = models or list(model.CONFIGS)
+    for name in names:
+        cfg = model.CONFIGS[name]
+        t0 = time.time()
+        params = train.train_or_load(cfg, ckpt_dir, train.steps_for(cfg), log=log)
+        dump_weights(out_dir, cfg, params)
+        for variant in VARIANTS:
+            for b in BUCKETS[variant]:
+                path = os.path.join(out_dir, f"{name}_{variant}_b{b}.hlo.txt")
+                if os.path.exists(path):
+                    continue
+                text = lower_entry(cfg, variant, b)
+                with open(path, "w") as f:
+                    f.write(text)
+                log(f"  [{name}] {variant}_b{b}: {len(text)//1024}KiB")
+        log(f"[{name}] done in {time.time()-t0:.1f}s")
+    # Build stamp consumed by the Makefile's up-to-date check.
+    with open(os.path.join(out_dir, "BUILD_OK"), "w") as f:
+        f.write(str(time.time()))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of model names (default: all)")
+    args = ap.parse_args()
+    build_all(args.out, args.models)
+
+
+if __name__ == "__main__":
+    main()

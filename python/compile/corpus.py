@@ -1,0 +1,157 @@
+"""Synthetic corpus engine — python half.
+
+Stand-in for the paper's WikiText-2 / PTB / C4 / TextVQA / LIBERO data
+(DESIGN.md §3). Each *domain* is a seeded stochastic language over a
+shared 512-token vocabulary with domain-specific statistics:
+
+  wt2s — wiki-like: mid vocab, moderate predictability, Zipf s=1.1
+  ptbs — newswire-like: narrow vocab, highly templated, Zipf s=1.3
+  c4s  — web-crawl-like: full vocab, high entropy, Zipf s=0.9
+  vqas — VQA-proxy: narrow, predictable (accuracy is measurable)
+  acts — action-stream proxy for VLA suites: tiny vocab, near-deterministic
+
+The generator is a counter-based SplitMix64 process with an order-≤2
+Markov structure: for each context (prev2, prev1) a deterministic hash
+fixes K candidate successors (drawn through the Zipf quantile map), and
+a geometric choice + ε-noise picks among them. Low conditional entropy
+=> learnable by a tiny LM; distinct hashes/shape per domain => real
+domain shift between calibration sets, which is what the paper's AWQ
+baseline is sensitive to.
+
+The rust side (`rust/src/corpus/`) implements the *identical* algorithm;
+`tests/test_corpus.py` emits and checks the shared golden fixture
+`testdata/corpus_golden.json` consumed by the rust tests too.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+VOCAB = 512
+BOS = 0
+
+C_DOMAIN = 0x9E3779B97F4A7C15
+C_PREV1 = 0xC2B2AE3D27D4EB4F
+C_PREV2 = 0x165667B19E3779F9
+C_SPLIT = 0x27D4EB2F165667C5
+
+
+def splitmix64(z: int) -> int:
+    z = (z + 0x9E3779B97F4A7C15) & M64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return (z ^ (z >> 31)) & M64
+
+
+@dataclass(frozen=True)
+class DomainSpec:
+    name: str
+    id: int
+    vocab_used: int  # tokens 1..vocab_used are live; 0 is BOS
+    k: int  # candidate successors per context
+    eps: float  # marginal-noise probability
+    q: float  # geometric decay over candidates
+    order: int  # markov order (1 or 2)
+    zipf: float  # Zipf exponent of the marginal
+
+
+DOMAINS: dict[str, DomainSpec] = {
+    "wt2s": DomainSpec("wt2s", 1, 440, 4, 0.05, 0.55, 2, 1.1),
+    "ptbs": DomainSpec("ptbs", 2, 160, 3, 0.02, 0.45, 2, 1.3),
+    "c4s": DomainSpec("c4s", 3, 500, 8, 0.15, 0.80, 1, 0.9),
+    "vqas": DomainSpec("vqas", 4, 96, 2, 0.03, 0.40, 2, 1.05),
+    "acts": DomainSpec("acts", 5, 64, 2, 0.01, 0.35, 2, 1.0),
+}
+
+# Splits: 0 = train, 1 = eval, 2 = calibration. Same language (context
+# hashes), independent random draws.
+TRAIN, EVAL, CALIB = 0, 1, 2
+
+BASE_SEED = 0x7751_2026
+
+
+def zipf_cdf(spec: DomainSpec) -> np.ndarray:
+    w = (np.arange(1, spec.vocab_used + 1, dtype=np.float64)) ** (-spec.zipf)
+    c = np.cumsum(w)
+    return c / c[-1]
+
+
+def zipf_quantile(cdf: np.ndarray, u: float) -> int:
+    """Rank (0-based) whose CDF bucket contains u ∈ [0,1)."""
+    return int(np.searchsorted(cdf, u, side="right"))
+
+
+class CorpusStream:
+    """Deterministic token stream for (domain, split, stream_id)."""
+
+    def __init__(self, domain: str, split: int, stream_id: int = 0):
+        self.spec = DOMAINS[domain]
+        self.cdf = zipf_cdf(self.spec)
+        self.lang_seed = splitmix64(BASE_SEED ^ (self.spec.id * C_DOMAIN & M64))
+        self.ctr_seed = splitmix64(
+            (self.lang_seed ^ ((split * C_SPLIT) & M64) ^ stream_id) & M64
+        )
+        self.ctr = 0
+        self.prev1 = BOS
+        self.prev2 = BOS
+
+    def _rand_u01(self) -> float:
+        self.ctr += 1
+        v = splitmix64((self.ctr_seed + self.ctr) & M64)
+        return (v >> 11) * (1.0 / (1 << 53))
+
+    def _context_hash(self) -> int:
+        h = self.lang_seed
+        h ^= (self.prev1 * C_PREV1) & M64
+        if self.spec.order >= 2:
+            h ^= (self.prev2 * C_PREV2) & M64
+        return splitmix64(h)
+
+    def next_token(self) -> int:
+        spec = self.spec
+        u = self._rand_u01()
+        if u < spec.eps:
+            rank = zipf_quantile(self.cdf, self._rand_u01())
+            tok = 1 + rank
+        else:
+            h = self._context_hash()
+            u2 = self._rand_u01()
+            # geometric choice among k candidates (truncated, renormalized
+            # implicitly by the final clamp)
+            j = 0
+            acc = 1.0 - spec.q
+            p = acc
+            while j < spec.k - 1 and u2 >= p:
+                acc *= spec.q
+                p += acc
+                j += 1
+            frac = ((h >> (13 * (j % 4))) & 0xFFFF) * (1.0 / 65536.0)
+            tok = 1 + zipf_quantile(self.cdf, frac)
+        self.prev2 = self.prev1
+        self.prev1 = tok
+        return tok
+
+    def tokens(self, n: int) -> np.ndarray:
+        return np.asarray([self.next_token() for _ in range(n)], np.int32)
+
+    def batches(self, n_batches: int, batch: int, seq: int) -> np.ndarray:
+        """(n_batches, batch, seq) int32, each row starts with BOS."""
+        out = np.zeros((n_batches, batch, seq), np.int32)
+        for i in range(n_batches):
+            for b in range(batch):
+                out[i, b, 0] = BOS
+                out[i, b, 1:] = self.tokens(seq - 1)
+        return out
+
+
+def golden_fixture() -> dict:
+    """First tokens of every (domain, split) — shared with the rust tests."""
+    out = {}
+    for name in DOMAINS:
+        for split, sname in [(TRAIN, "train"), (EVAL, "eval"), (CALIB, "calib")]:
+            s = CorpusStream(name, split)
+            out[f"{name}/{sname}"] = s.tokens(64).tolist()
+    return out

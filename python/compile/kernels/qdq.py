@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: groupwise round-to-nearest quantize-dequantize (RTN).
+
+The paper's Eq. (1): W_int = round[clamp_q[(W - Z) ⊘ S]], Ŵ = W_int ∘ S + Z
+with asymmetric per-group scale/zero (App. B/D). The weight is viewed as
+(G, g) groups; the grid tiles G so each program QDQs a block of groups
+entirely inside VMEM — one HBM→VMEM round-trip per weight element.
+
+``qmax`` (= 2^q − 1) is a *runtime* scalar input so a single AOT artifact
+serves every bit-width q ∈ {2..8}.
+
+Hardware adaptation note (DESIGN.md §6): on a real TPU this block layout
+keeps each group's min/max reduction within a VMEM tile (the analogue of
+Marlin's SMEM-resident dequant); on CPU we run interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Groups per program instance. 64 groups x g<=512 floats x 4B <= 128KiB,
+# comfortably inside a TPU core's ~16MiB VMEM alongside double-buffering.
+DEFAULT_BLOCK_GROUPS = 64
+
+
+def _qdq_kernel(w_ref, qmax_ref, o_ref):
+    """QDQ one (BG, g) block of groups."""
+    w = w_ref[...]
+    qmax = qmax_ref[0, 0]
+    wmax = jnp.max(w, axis=1, keepdims=True)
+    wmin = jnp.min(w, axis=1, keepdims=True)
+    z = wmin
+    s = (wmax - wmin) / qmax
+    s = jnp.where(s <= 0.0, 1.0, s)
+    wint = jnp.clip(jnp.round((w - z) / s), 0.0, qmax)
+    o_ref[...] = wint * s + z
+
+
+@functools.partial(jax.jit, static_argnames=("g", "block_groups"))
+def rtn_qdq(
+    w: jnp.ndarray,
+    qmax: jnp.ndarray,
+    g: int = 32,
+    block_groups: int = DEFAULT_BLOCK_GROUPS,
+) -> jnp.ndarray:
+    """Groupwise RTN QDQ of ``w`` (d', d) with flat groupsize ``g``.
+
+    qmax: scalar f32 array (2^q - 1). Requires d'*d % g == 0 and the
+    number of groups to be divisible by the block size (pad upstream).
+    """
+    ddash, d = w.shape
+    n = ddash * d
+    assert n % g == 0, f"weight numel {n} not divisible by groupsize {g}"
+    n_groups = n // g
+    bg = min(block_groups, n_groups)
+    while n_groups % bg != 0:  # shrink to a divisor (power-of-two sizes)
+        bg //= 2
+    bg = max(bg, 1)
+    wg = w.reshape(n_groups, g)
+    qm = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _qdq_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_groups, g), w.dtype),
+        grid=(n_groups // bg,),
+        in_specs=[
+            pl.BlockSpec((bg, g), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bg, g), lambda i: (i, 0)),
+        interpret=True,
+    )(wg, qm)
+    return out.reshape(ddash, d)
+
+
+def _diag_kernel(x_ref, o_ref, *, p: float, lam: float, alpha: float):
+    """Activation diagonal D_i = (‖X_i,:‖_p + λ)^α for one block of rows."""
+    x = x_ref[...]
+    if p == 2.0:
+        nrm = jnp.sqrt(jnp.sum(x * x, axis=1))
+    elif p == 1.0:
+        nrm = jnp.sum(jnp.abs(x), axis=1)
+    else:
+        nrm = jnp.sum(jnp.abs(x) ** p, axis=1) ** (1.0 / p)
+    o_ref[...] = (nrm + lam) ** alpha
+
+
+@functools.partial(jax.jit, static_argnames=("p", "lam", "alpha", "block_rows"))
+def awq_diag(
+    x: jnp.ndarray,
+    p: float = 2.0,
+    lam: float = 0.4,
+    alpha: float = 0.5,
+    block_rows: int = 128,
+) -> jnp.ndarray:
+    """Pallas activation-scaling diagonal over X (d, T) → D (d,).
+
+    One pass over X; O[dT] — the dominant term of the paper's overhead
+    ratio ρ = O[1/d' + 3/T] (Eq. 3).
+    """
+    d, t = x.shape
+    br = min(block_rows, d)
+    while d % br != 0:
+        br //= 2
+    br = max(br, 1)
+    kern = functools.partial(_diag_kernel, p=p, lam=lam, alpha=alpha)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        grid=(d // br,),
+        in_specs=[pl.BlockSpec((br, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        interpret=True,
+    )(x)

@@ -1,0 +1,154 @@
+"""Pure-jnp reference oracles for the TTQ quantization stack.
+
+These are the *correctness ground truth* for every Pallas kernel (L1) and
+for the rust quant library (L3, cross-checked through golden vectors
+emitted by aot.py). All formulas follow the paper:
+
+  RTN (Eq. 1 / App. B):   Ŵ = G⁻[G[W]] with flat groupwise scale/zero
+  AWQ (Eq. 19-20/App. C): D_ii = (‖X_i,:‖_p + λ)^α,  Ŵ = Q[W·D]·D⁻¹
+  TTQ (+ low rank, §2):   Ŵ = Q[(W−BA)·D]·D⁻¹ + BA, D from the live X
+
+Shapes follow the paper: W is (d', d), X is (d, T), Y = W @ X is (d', T).
+Grouping is over the *flattened* weight (d'*d/g, g), exactly as in the
+paper's pseudo-code (a group may span row boundaries).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_params(wg: jnp.ndarray, qmax: float, nu: float = 1.0):
+    """Asymmetric scale/zero for grouped weights ``wg`` of shape (G, g).
+
+    ``qmax`` is 2^q - 1 (kept as a float so a single lowered artifact can
+    serve any bit-width). ``nu`` is the range-expansion factor of App. D
+    (nu=1.0 is the standard min/max scaling).
+    """
+    wmax = wg.max(axis=1, keepdims=True)
+    wmin = wg.min(axis=1, keepdims=True)
+    if nu != 1.0:
+        wmax, wmin = (
+            0.5 * (1 + nu) * wmax + 0.5 * (1 - nu) * wmin,
+            0.5 * (1 - nu) * wmax + 0.5 * (1 + nu) * wmin,
+        )
+    z = wmin
+    s = (wmax - wmin) / qmax
+    # Guard all-equal groups: scale 0 -> dequant to the (constant) zero point.
+    s = jnp.where(s <= 0.0, 1.0, s)
+    return s, z
+
+
+def quant_params_symmetric(wg: jnp.ndarray, qmax: float):
+    """Symmetric format of App. D: S = 2|W|max/qmax, Z = -|W|max."""
+    amax = jnp.abs(wg).max(axis=1, keepdims=True)
+    s = 2.0 * amax / qmax
+    s = jnp.where(s <= 0.0, 1.0, s)
+    z = -amax
+    return s, z
+
+
+def rtn_ref(
+    w: jnp.ndarray,
+    qmax: float,
+    g: int,
+    nu: float = 1.0,
+    symmetric: bool = False,
+) -> jnp.ndarray:
+    """Groupwise round-to-nearest QDQ (paper Eq. 1, App. B pseudo-code)."""
+    ddash, d = w.shape
+    assert (ddash * d) % g == 0, f"{ddash}x{d} not divisible by group {g}"
+    wg = w.reshape(-1, g)
+    if symmetric:
+        s, z = quant_params_symmetric(wg, qmax)
+    else:
+        s, z = quant_params(wg, qmax, nu)
+    wint = jnp.clip(jnp.round((wg - z) / s), 0.0, qmax)
+    what = wint * s + z
+    return what.reshape(ddash, d)
+
+
+def rtn_int_ref(w: jnp.ndarray, qmax: float, g: int):
+    """Integer codes + params, for packing tests. Returns (wint, s, z)."""
+    ddash, d = w.shape
+    wg = w.reshape(-1, g)
+    s, z = quant_params(wg, qmax)
+    wint = jnp.clip(jnp.round((wg - z) / s), 0.0, qmax)
+    return wint.reshape(ddash, d), s[:, 0], z[:, 0]
+
+
+def awq_diag(
+    x: jnp.ndarray, p: float, lam: float, alpha: float
+) -> jnp.ndarray:
+    """Diagonal activation scaling D_i = (‖X_i,:‖_p + λ)^α; X is (d, T)."""
+    if p == 2.0:
+        nrm = jnp.sqrt(jnp.sum(x * x, axis=1))
+    elif p == 1.0:
+        nrm = jnp.sum(jnp.abs(x), axis=1)
+    else:
+        nrm = jnp.sum(jnp.abs(x) ** p, axis=1) ** (1.0 / p)
+    return (nrm + lam) ** alpha
+
+
+def awq_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    qmax: float,
+    g: int,
+    p: float = 2.0,
+    lam: float = 0.4,
+    alpha: float = 0.5,
+) -> jnp.ndarray:
+    """Activation-aware scaled QDQ (paper App. C pseudo-code)."""
+    dvec = awq_diag(x, p, lam, alpha)
+    what = rtn_ref(w * dvec[None, :], qmax, g)
+    return what / dvec[None, :]
+
+
+def awq_ref_with_diag(
+    w: jnp.ndarray, dvec: jnp.ndarray, qmax: float, g: int
+) -> jnp.ndarray:
+    """Scaled QDQ given a precomputed diagonal (offline-AWQ path)."""
+    what = rtn_ref(w * dvec[None, :], qmax, g)
+    return what / dvec[None, :]
+
+
+def ttq_linear_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    qmax: float,
+    g: int,
+    p: float = 2.0,
+    lam: float = 0.4,
+    alpha: float = 0.5,
+    b: jnp.ndarray | None = None,
+    a: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Full fused TTQ projection: Y = Q[(W−BA)D]D⁻¹ X + B(AX).
+
+    This is the paper's §2 "TTQ with Low-Rank Decomposition" forward with
+    the live activation X supplying D (r = 0 when b/a are None).
+    """
+    resid = w if b is None else w - b @ a
+    dvec = awq_diag(x, p, lam, alpha)
+    wq = rtn_ref(resid * dvec[None, :], qmax, g) / dvec[None, :]
+    y = wq @ x
+    if b is not None:
+        y = y + b @ (a @ x)
+    return y
+
+
+def lowrank_init_ref(w: jnp.ndarray, r: int):
+    """Top-r principal components init (App. E Eq. 31-33):
+    B = U_r Λ_r^{1/2}, A = Λ_r^{1/2} V_r   (so BA = U_r Λ_r V_r)."""
+    u, sv, vt = jnp.linalg.svd(w, full_matrices=False)
+    sr = jnp.sqrt(sv[:r])
+    b = u[:, :r] * sr[None, :]
+    a = sr[:, None] * vt[:r, :]
+    return b, a
+
+
+def approx_loss_ref(w, what, x):
+    """The activation-aware loss L = ‖(W−Ŵ)X‖² of Eq. 2."""
+    e = (w - what) @ x
+    return jnp.sum(e * e)

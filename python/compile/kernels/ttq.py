@@ -1,0 +1,188 @@
+"""L1 Pallas kernel: fused TTQ linear projection (the paper's hot spot).
+
+Computes, in one kernel pass over W (no intermediate HBO round trip for
+the scaled/quantized weight):
+
+    Y = Q[(W − BA)·diag(D)]·diag(D)⁻¹ @ X  (+ B @ (A @ X) when r > 0)
+
+where D is the activation diagonal from the *live* X (computed by the
+companion ``awq_diag`` kernel — one O[dT] pass). This is the "prologue
+fusion" the paper's App. H calls for: AWQ can fold D into the previous
+layer offline, TTQ must fuse it into the int-matmul; here the W tile is
+rescaled, QDQ'd and fed to the MXU while still resident in VMEM.
+
+Tiling: grid over d' row-blocks of W. Each program holds one
+(BD, d) weight tile + the full (d, T) activation block in VMEM, mirrors
+Marlin's SMEM-staged dequant-into-GEMM on the TPU memory hierarchy.
+Groupsize g must divide d so that groups never span the K dimension of a
+tile (g ≤ d; the flat-grouped reference coincides in that regime).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import qdq
+
+
+def _qdq_rows(w, qmax, g):
+    """Groupwise QDQ of a (BD, d) tile with per-row groups of size g."""
+    bd, d = w.shape
+    wg = w.reshape(bd * d // g, g)
+    wmax = jnp.max(wg, axis=1, keepdims=True)
+    wmin = jnp.min(wg, axis=1, keepdims=True)
+    s = (wmax - wmin) / qmax
+    s = jnp.where(s <= 0.0, 1.0, s)
+    wint = jnp.clip(jnp.round((wg - wmin) / s), 0.0, qmax)
+    return (wint * s + wmin).reshape(bd, d)
+
+
+def _ttq_matmul_kernel(x_ref, w_ref, dvec_ref, qmax_ref, o_ref, *, g: int):
+    """One (BD, d) tile: prescale -> QDQ -> descale -> matmul."""
+    w = w_ref[...]
+    dvec = dvec_ref[...]
+    qmax = qmax_ref[0, 0]
+    ws = w * dvec[None, :]
+    wq = _qdq_rows(ws, qmax, g) * (1.0 / dvec)[None, :]
+    o_ref[...] = jnp.dot(wq, x_ref[...], preferred_element_type=jnp.float32)
+
+
+def _ttq_matmul_lr_kernel(
+    x_ref, w_ref, dvec_ref, qmax_ref, b_ref, ax_ref, o_ref, *, g: int
+):
+    """Low-rank variant: residual-quantized matmul + B @ (AX) epilogue."""
+    w = w_ref[...]
+    dvec = dvec_ref[...]
+    qmax = qmax_ref[0, 0]
+    ws = w * dvec[None, :]
+    wq = _qdq_rows(ws, qmax, g) * (1.0 / dvec)[None, :]
+    y = jnp.dot(wq, x_ref[...], preferred_element_type=jnp.float32)
+    y = y + jnp.dot(b_ref[...], ax_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y
+
+
+def _pick_block(ddash: int, want: int = 128) -> int:
+    bd = min(want, ddash)
+    while ddash % bd != 0:
+        bd //= 2
+    return max(bd, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("g", "p", "lam", "alpha", "block_d")
+)
+def ttq_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    qmax: jnp.ndarray,
+    g: int = 32,
+    p: float = 2.0,
+    lam: float = 0.4,
+    alpha: float = 0.5,
+    block_d: int = 128,
+) -> jnp.ndarray:
+    """Fused TTQ projection Y = Q[W·D]D⁻¹ X, rank-0 path. X: (d,T), W: (d',d)."""
+    d, t = x.shape
+    ddash, d2 = w.shape
+    assert d == d2 and d % g == 0, f"g={g} must divide d={d}"
+    dvec = qdq.awq_diag(x, p=p, lam=lam, alpha=alpha)
+    bd = _pick_block(ddash, block_d)
+    qm = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_ttq_matmul_kernel, g=g)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((ddash, t), jnp.float32),
+        grid=(ddash // bd,),
+        in_specs=[
+            pl.BlockSpec((d, t), lambda i: (0, 0)),
+            pl.BlockSpec((bd, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, t), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w, dvec, qm)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("g", "p", "lam", "alpha", "block_d")
+)
+def ttq_linear_lowrank(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    qmax: jnp.ndarray,
+    g: int = 32,
+    p: float = 2.0,
+    lam: float = 0.4,
+    alpha: float = 0.5,
+    block_d: int = 128,
+) -> jnp.ndarray:
+    """TTQ + low-rank: Y = Q[(W−BA)D]D⁻¹ X + B(AX).  b: (d',r), a: (r,d).
+
+    The caller passes the *original* W; the residual W − BA is formed
+    tile-by-tile inside the kernel-feeding prescale (here: upfront, since
+    BA is rank-r it is cheap at build dims), matching App. E.
+    """
+    d, t = x.shape
+    ddash, _ = w.shape
+    r = b.shape[1]
+    resid = w - b @ a  # O[r d' d] one-off; dominated by the matmul.
+    dvec = qdq.awq_diag(x, p=p, lam=lam, alpha=alpha)
+    ax = a @ x  # O[r d T] << O[d' d T]
+    bd = _pick_block(ddash, block_d)
+    qm = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_ttq_matmul_lr_kernel, g=g)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((ddash, t), jnp.float32),
+        grid=(ddash // bd,),
+        in_specs=[
+            pl.BlockSpec((d, t), lambda i: (0, 0)),
+            pl.BlockSpec((bd, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bd, r), lambda i: (i, 0)),
+            pl.BlockSpec((r, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, t), lambda i: (i, 0)),
+        interpret=True,
+    )(x, resid, dvec, qm, b, ax)
+
+
+def awq_prescaled_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    dvec: jnp.ndarray,
+    qmax: jnp.ndarray,
+    g: int = 32,
+    block_d: int = 128,
+) -> jnp.ndarray:
+    """Offline-AWQ baseline path: D precomputed from calibration data.
+
+    Same fused kernel, but D arrives as a static input instead of being
+    derived from the live X — this is exactly Fig. 1(a) vs (b).
+    """
+    d, t = x.shape
+    ddash, _ = w.shape
+    bd = _pick_block(ddash, block_d)
+    qm = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_ttq_matmul_kernel, g=g)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((ddash, t), jnp.float32),
+        grid=(ddash // bd,),
+        in_specs=[
+            pl.BlockSpec((d, t), lambda i: (0, 0)),
+            pl.BlockSpec((bd, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, t), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w, dvec, qm)

@@ -1,0 +1,358 @@
+"""L2: JAX decoder-only transformer families for the TTQ reproduction.
+
+Three architecture-faithful miniature families (DESIGN.md §3):
+
+  opt   — LayerNorm(+bias), ReLU MLP, learned absolute positions  (OPT)
+  qwen  — RMSNorm, SwiGLU, RoPE, GQA, per-head QK-norm            (Qwen3)
+  gemma — RMSNorm(1+w), GeGLU, RoPE, MQA(kv=1), wide head_dim,
+          sqrt(d)-scaled embedding                                 (Gemma3)
+
+Weights live in a *flat name→array dict* whose canonical ordering is the
+interchange contract with the rust runtime (manifest order). All
+projection weights are stored paper-style as (d_out, d_in); `y = x @ W.T`.
+
+Forward variants (all lowered to HLO text by aot.py; weights are
+*inputs*, so the rust coordinator can substitute quantized weights):
+
+  nll    — sum token NLL + count (perplexity eval)
+  logits — full logits (serving / greedy decode)
+  stats  — nll + per-linear activation norm sums Σ|x|^p, p∈{½,1,2,4}
+  corr   — stats + per-linear input auto-correlation XᵀX (GPTQ, App. C)
+  ttq    — every attn/MLP linear routed through the fused L1
+           `ttq_linear` Pallas kernel with a *runtime* qmax scalar
+           (the paper's Fig. 1(b) single-pass online path)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ttq as ttq_kernels
+
+NORM_PS = (0.5, 1.0, 2.0, 4.0)  # Fig. 2 hyperparameter grid support
+TTQ_G = 32  # paper default groupsize
+TTQ_P = 2.0
+TTQ_LAM = 0.4
+TTQ_ALPHA = 0.5
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # opt | qwen | gemma
+    vocab: int = 512
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 16
+    d_mlp: int = 256
+    max_seq: int = 64
+    norm_eps: float = 1e-5
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+# Scaled-down registry mirroring the paper's Tables 14-16 families.
+CONFIGS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig("opt-micro", "opt", d_model=64, n_layers=2, n_heads=4,
+                    n_kv_heads=4, head_dim=16, d_mlp=256),
+        ModelConfig("opt-mini", "opt", d_model=128, n_layers=4, n_heads=8,
+                    n_kv_heads=8, head_dim=16, d_mlp=512),
+        ModelConfig("opt-small", "opt", d_model=192, n_layers=6, n_heads=8,
+                    n_kv_heads=8, head_dim=24, d_mlp=768),
+        ModelConfig("qwen-micro", "qwen", d_model=64, n_layers=2, n_heads=4,
+                    n_kv_heads=2, head_dim=16, d_mlp=192),
+        ModelConfig("qwen-mini", "qwen", d_model=128, n_layers=4, n_heads=8,
+                    n_kv_heads=2, head_dim=16, d_mlp=384),
+        ModelConfig("gemma-micro", "gemma", d_model=64, n_layers=2, n_heads=4,
+                    n_kv_heads=1, head_dim=32, d_mlp=256),
+        ModelConfig("gemma-mini", "gemma", d_model=128, n_layers=4, n_heads=4,
+                    n_kv_heads=1, head_dim=32, d_mlp=512),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter schema — the canonical tensor ordering (interchange contract).
+# ---------------------------------------------------------------------------
+
+def param_schema(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list; rust reads weights.bin in this order."""
+    out: list[tuple[str, tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.d_model))]
+    if cfg.family == "opt":
+        out.append(("pos_embed", (cfg.max_seq, cfg.d_model)))
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        out.append((p + "ln1", (cfg.d_model,)))
+        if cfg.family == "opt":
+            out.append((p + "ln1b", (cfg.d_model,)))
+        out.append((p + "wq", (cfg.d_attn, cfg.d_model)))
+        out.append((p + "wk", (cfg.d_kv, cfg.d_model)))
+        out.append((p + "wv", (cfg.d_kv, cfg.d_model)))
+        out.append((p + "wo", (cfg.d_model, cfg.d_attn)))
+        if cfg.family == "qwen":
+            out.append((p + "qnorm", (cfg.head_dim,)))
+            out.append((p + "knorm", (cfg.head_dim,)))
+        out.append((p + "ln2", (cfg.d_model,)))
+        if cfg.family == "opt":
+            out.append((p + "ln2b", (cfg.d_model,)))
+        if cfg.family == "opt":
+            out.append((p + "up", (cfg.d_mlp, cfg.d_model)))
+            out.append((p + "down", (cfg.d_model, cfg.d_mlp)))
+        else:
+            out.append((p + "gate", (cfg.d_mlp, cfg.d_model)))
+            out.append((p + "up", (cfg.d_mlp, cfg.d_model)))
+            out.append((p + "down", (cfg.d_model, cfg.d_mlp)))
+    out.append(("lnf", (cfg.d_model,)))
+    if cfg.family == "opt":
+        out.append(("lnfb", (cfg.d_model,)))
+    return out
+
+
+def linear_schema(cfg: ModelConfig) -> list[dict]:
+    """Quantizable linears in tap order: the contract for stats outputs."""
+    out = []
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        out.append({"name": p + "wq", "d_in": cfg.d_model, "d_out": cfg.d_attn})
+        out.append({"name": p + "wk", "d_in": cfg.d_model, "d_out": cfg.d_kv})
+        out.append({"name": p + "wv", "d_in": cfg.d_model, "d_out": cfg.d_kv})
+        out.append({"name": p + "wo", "d_in": cfg.d_attn, "d_out": cfg.d_model})
+        if cfg.family != "opt":
+            out.append({"name": p + "gate", "d_in": cfg.d_model, "d_out": cfg.d_mlp})
+        out.append({"name": p + "up", "d_in": cfg.d_model, "d_out": cfg.d_mlp})
+        out.append({"name": p + "down", "d_in": cfg.d_mlp, "d_out": cfg.d_model})
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    params: dict[str, jnp.ndarray] = {}
+    for name, shape in param_schema(cfg):
+        base = name.split(".")[-1]
+        if base in ("ln1", "ln2", "lnf", "qnorm", "knorm"):
+            arr = (np.zeros(shape) if cfg.family == "gemma" else np.ones(shape))
+        elif base in ("ln1b", "ln2b", "lnfb"):
+            arr = np.zeros(shape)
+        elif name == "embed":
+            arr = rng.normal(0, 0.02, shape)
+        elif name == "pos_embed":
+            arr = rng.normal(0, 0.01, shape)
+        else:  # projection: fan-in scaled
+            fan_in = shape[1]
+            arr = rng.normal(0, fan_in ** -0.5, shape)
+            if base in ("wo", "down"):
+                arr = arr / np.sqrt(2.0 * cfg.n_layers)
+        params[name] = jnp.asarray(arr, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, w, b, eps):
+    mu = x.mean(-1, keepdims=True)
+    v = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(v + eps) * w + b
+
+
+def _rmsnorm(x, w, eps, unit_offset=False):
+    v = (x * x).mean(-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(v + eps)
+    return xn * (1.0 + w) if unit_offset else xn * w
+
+
+def _rope(x, positions, head_dim):
+    """x: (B,S,H,hd). Standard rotary embedding, theta=1e4."""
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+LinearFn = Callable[[str, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _make_linear(mode: str, taps: list, qmax) -> LinearFn:
+    """Returns the projection op for the chosen forward variant."""
+
+    def plain(name, x, w):
+        return x @ w.T
+
+    def tapped(name, x, w):
+        x2 = x.reshape(-1, x.shape[-1])
+        norms = jnp.stack(
+            [jnp.sum(jnp.abs(x2) ** p, axis=0) for p in NORM_PS]
+        )  # (4, d_in)
+        entry = {"name": name, "norms": norms}
+        if mode == "corr":
+            entry["corr"] = x2.T @ x2
+        taps.append(entry)
+        return x @ w.T
+
+    def fused_ttq(name, x, w):
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])  # (N, d_in)
+        y = ttq_kernels.ttq_linear(
+            x2.T, w, qmax, g=TTQ_G, p=TTQ_P, lam=TTQ_LAM, alpha=TTQ_ALPHA
+        ).T  # (N, d_out)
+        return y.reshape(*lead, w.shape[0])
+
+    if mode in ("stats", "corr"):
+        return tapped
+    if mode == "ttq":
+        return fused_ttq
+    return plain
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,  # (B, S) int32
+    mode: str = "plain",
+    qmax: jnp.ndarray | None = None,
+):
+    """Returns (logits, taps). taps is [] unless mode in {stats, corr}."""
+    taps: list = []
+    lin = _make_linear(mode, taps, qmax)
+    eps = cfg.norm_eps
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+    h = params["embed"][tokens]
+    if cfg.family == "gemma":
+        h = h * jnp.sqrt(jnp.float32(cfg.d_model))
+    if cfg.family == "opt":
+        h = h + params["pos_embed"][pos]
+
+    def norm1(i, x):
+        if cfg.family == "opt":
+            return _layernorm(x, params[f"l{i}.ln1"], params[f"l{i}.ln1b"], eps)
+        return _rmsnorm(x, params[f"l{i}.ln1"], eps, cfg.family == "gemma")
+
+    def norm2(i, x):
+        if cfg.family == "opt":
+            return _layernorm(x, params[f"l{i}.ln2"], params[f"l{i}.ln2b"], eps)
+        return _rmsnorm(x, params[f"l{i}.ln2"], eps, cfg.family == "gemma")
+
+    mask = jnp.tril(jnp.ones((S, S), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        x = norm1(i, h)
+        q = lin(p + "wq", x, params[p + "wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = lin(p + "wk", x, params[p + "wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = lin(p + "wv", x, params[p + "wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.family == "qwen":
+            q = _rmsnorm(q, params[p + "qnorm"], eps)
+            k = _rmsnorm(k, params[p + "knorm"], eps)
+        if cfg.family in ("qwen", "gemma"):
+            q = _rope(q, pos, cfg.head_dim)
+            k = _rope(k, pos, cfg.head_dim)
+        rep = cfg.n_heads // cfg.n_kv_heads
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        att = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(cfg.head_dim)
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhst,bthd->bshd", att, v).reshape(B, S, cfg.d_attn)
+        h = h + lin(p + "wo", o, params[p + "wo"])
+
+        x = norm2(i, h)
+        if cfg.family == "opt":
+            m = jax.nn.relu(lin(p + "up", x, params[p + "up"]))
+        else:
+            gate = lin(p + "gate", x, params[p + "gate"])
+            up = lin(p + "up", x, params[p + "up"])
+            act = jax.nn.silu(gate) if cfg.family == "qwen" else jax.nn.gelu(gate)
+            m = act * up
+        h = h + lin(p + "down", m, params[p + "down"])
+
+    if cfg.family == "opt":
+        h = _layernorm(h, params["lnf"], params["lnfb"], eps)
+    else:
+        h = _rmsnorm(h, params["lnf"], eps, cfg.family == "gemma")
+
+    logits = h @ params["embed"].T  # tied LM head (never quantized)
+    return logits, taps
+
+
+def nll_from_logits(logits: jnp.ndarray, tokens: jnp.ndarray):
+    """Sum next-token NLL and count over (B, S)."""
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll), jnp.float32(nll.size)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (weights passed positionally in schema order)
+# ---------------------------------------------------------------------------
+
+def _params_from_list(cfg: ModelConfig, weights: tuple) -> dict:
+    names = [n for n, _ in param_schema(cfg)]
+    assert len(names) == len(weights)
+    return dict(zip(names, weights))
+
+
+def make_entry(cfg: ModelConfig, variant: str):
+    """Returns fn(tokens, [qmax,] *weights) -> tuple of outputs."""
+
+    if variant == "nll":
+        def fn(tokens, *weights):
+            params = _params_from_list(cfg, weights)
+            logits, _ = forward(cfg, params, tokens, "plain")
+            s, c = nll_from_logits(logits, tokens)
+            return (s, c)
+        return fn
+
+    if variant == "logits":
+        def fn(tokens, *weights):
+            params = _params_from_list(cfg, weights)
+            logits, _ = forward(cfg, params, tokens, "plain")
+            return (logits,)
+        return fn
+
+    if variant in ("stats", "corr"):
+        def fn(tokens, *weights):
+            params = _params_from_list(cfg, weights)
+            logits, taps = forward(cfg, params, tokens, variant)
+            s, c = nll_from_logits(logits, tokens)
+            outs = [s, c]
+            for t in taps:
+                outs.append(t["norms"])
+            if variant == "corr":
+                for t in taps:
+                    outs.append(t["corr"])
+            return tuple(outs)
+        return fn
+
+    if variant == "ttq":
+        def fn(tokens, qmax, *weights):
+            params = _params_from_list(cfg, weights)
+            logits, _ = forward(cfg, params, tokens, "ttq", qmax=qmax)
+            s, c = nll_from_logits(logits, tokens)
+            return (s, c)
+        return fn
+
+    raise ValueError(f"unknown variant {variant}")

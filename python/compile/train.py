@@ -1,0 +1,125 @@
+"""Build-time trainer for the miniature model zoo.
+
+Trains each registry model (model.CONFIGS) on a domain mixture of the
+synthetic corpora (wt2s/ptbs/c4s/vqas/acts) with a hand-rolled Adam +
+cosine schedule. Checkpoints are cached under ``artifacts/ckpt/`` so
+`make artifacts` only trains once; aot.py consumes the checkpoints.
+
+This is the "fwd/bwd" half of L2: the same `model.forward` graph is
+differentiated here with jax.grad. It runs once at build time — never on
+the rust request path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+# Training mixture: every eval domain participates so each model has
+# sane statistics everywhere (the paper's LLMs saw web-scale mixtures).
+TRAIN_DOMAINS = ["wt2s", "ptbs", "c4s", "vqas", "acts"]
+BATCH = 32
+SEQ = 64
+
+
+def _adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def train_model(
+    cfg: model.ModelConfig,
+    steps: int = 800,
+    lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 100,
+    log=print,
+) -> tuple[dict, list[float]]:
+    """Returns (trained params, loss history)."""
+    params = model.init_params(cfg, seed=seed)
+
+    def loss_fn(p, tokens):
+        logits, _ = model.forward(cfg, p, tokens, "plain")
+        s, c = model.nll_from_logits(logits, tokens)
+        return s / c
+
+    @jax.jit
+    def step_fn(p, opt_m, opt_v, t, tokens):
+        loss, grads = jax.value_and_grad(loss_fn)(p, tokens)
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        # cosine decay with 5% warmup
+        warm = 0.05 * steps
+        frac = jnp.minimum(t / warm, 1.0)
+        prog = jnp.clip((t - warm) / jnp.maximum(steps - warm, 1.0), 0.0, 1.0)
+        cur_lr = lr * frac * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        new_p, new_m, new_v = {}, {}, {}
+        for k in p:
+            g = grads[k]
+            m = b1 * opt_m[k] + (1 - b1) * g
+            v = b2 * opt_v[k] + (1 - b2) * g * g
+            mh = m / (1 - b1 ** (t + 1))
+            vh = v / (1 - b2 ** (t + 1))
+            new_p[k] = p[k] - cur_lr * mh / (jnp.sqrt(vh) + eps)
+            new_m[k], new_v[k] = m, v
+        return loss, new_p, new_m, new_v
+
+    # Pre-generate the training stream (python loops are the slow part).
+    streams = {d: corpus.CorpusStream(d, corpus.TRAIN, stream_id=seed) for d in TRAIN_DOMAINS}
+    per_dom = steps // len(TRAIN_DOMAINS) + 1
+    batches = {d: s.batches(per_dom, BATCH, SEQ) for d, s in streams.items()}
+
+    opt = _adam_init(params)
+    m, v = opt["m"], opt["v"]
+    hist: list[float] = []
+    t0 = time.time()
+    for t in range(steps):
+        d = TRAIN_DOMAINS[t % len(TRAIN_DOMAINS)]
+        tokens = jnp.asarray(batches[d][t // len(TRAIN_DOMAINS)])
+        loss, params, m, v = step_fn(params, m, v, jnp.float32(t), tokens)
+        hist.append(float(loss))
+        if log_every and (t % log_every == 0 or t == steps - 1):
+            log(f"  [{cfg.name}] step {t:4d} loss {float(loss):.4f} "
+                f"({time.time()-t0:.1f}s)")
+    return params, hist
+
+
+def save_checkpoint(path: str, cfg: model.ModelConfig, params: dict, hist):
+    os.makedirs(path, exist_ok=True)
+    np.savez(
+        os.path.join(path, f"{cfg.name}.npz"),
+        **{k: np.asarray(v) for k, v in params.items()},
+    )
+    with open(os.path.join(path, f"{cfg.name}.loss.json"), "w") as f:
+        json.dump(hist, f)
+
+
+def load_checkpoint(path: str, cfg: model.ModelConfig) -> dict | None:
+    fp = os.path.join(path, f"{cfg.name}.npz")
+    if not os.path.exists(fp):
+        return None
+    data = np.load(fp)
+    names = [n for n, _ in model.param_schema(cfg)]
+    if set(names) != set(data.files):
+        return None  # schema changed; retrain
+    return {k: jnp.asarray(data[k]) for k in names}
+
+
+def train_or_load(cfg: model.ModelConfig, ckpt_dir: str, steps: int, log=print):
+    params = load_checkpoint(ckpt_dir, cfg)
+    if params is not None:
+        log(f"  [{cfg.name}] checkpoint cache hit")
+        return params
+    params, hist = train_model(cfg, steps=steps, log=log)
+    save_checkpoint(ckpt_dir, cfg, params, hist)
+    return params
+
+
+def steps_for(cfg: model.ModelConfig) -> int:
+    return {2: 500, 4: 700, 6: 800}.get(cfg.n_layers, 700)

@@ -1,0 +1,170 @@
+"""Pallas kernels (L1) vs the pure-jnp reference — the core correctness
+signal of the compile path. Hypothesis sweeps shapes/bits/groups."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qdq, ref, ttq
+
+ATOL = 2e-4
+
+
+def _rand(shape, seed):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# rtn_qdq kernel
+# --------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ddash=st.sampled_from([8, 16, 32, 96]),
+    d=st.sampled_from([32, 64, 128]),
+    q=st.integers(2, 8),
+    g=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_rtn_qdq_matches_ref(ddash, d, q, g, seed):
+    w = _rand((ddash, d), seed)
+    qmax = jnp.float32(2.0 ** q - 1)
+    got = qdq.rtn_qdq(w, qmax, g=g)
+    want = ref.rtn_ref(w, float(qmax), g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_rtn_qdq_group_spanning_rows():
+    """Flat grouping: g larger than a row still matches the ref."""
+    w = _rand((8, 16), 3)
+    got = qdq.rtn_qdq(w, jnp.float32(7.0), g=64)
+    want = ref.rtn_ref(w, 7.0, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_rtn_qdq_odd_block_shrink():
+    """Group count not divisible by the default block: kernel must shrink."""
+    w = _rand((6, 32), 4)  # 6 groups of g=32
+    got = qdq.rtn_qdq(w, jnp.float32(15.0), g=32, block_groups=64)
+    want = ref.rtn_ref(w, 15.0, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_rtn_qdq_runtime_qmax_consistency():
+    """One artifact, many bit-widths: qmax is a runtime input."""
+    w = _rand((16, 64), 5)
+    for q in (2, 3, 4, 5):
+        got = qdq.rtn_qdq(w, jnp.float32(2.0 ** q - 1), g=32)
+        want = ref.rtn_ref(w, 2.0 ** q - 1, 32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# awq_diag kernel
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.sampled_from([32, 64, 128, 192]),
+    t=st.sampled_from([1, 7, 16, 64]),
+    p=st.sampled_from([0.5, 1.0, 2.0, 4.0]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_awq_diag_matches_ref(d, t, p, seed):
+    x = _rand((d, t), seed)
+    got = qdq.awq_diag(x, p=p, lam=0.4, alpha=0.5)
+    want = ref.awq_diag(x, p, 0.4, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=ATOL, rtol=1e-4)
+
+
+@pytest.mark.parametrize("alpha", [0.0, 0.25, 0.5, 0.75, 1.0])
+@pytest.mark.parametrize("lam", [0.01, 0.4, 1.0])
+def test_awq_diag_hyperparams(alpha, lam):
+    x = _rand((64, 32), 9)
+    got = qdq.awq_diag(x, p=2.0, lam=lam, alpha=alpha)
+    want = ref.awq_diag(x, 2.0, lam, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# fused ttq_linear kernel
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ddash=st.sampled_from([16, 48, 96, 128]),
+    d=st.sampled_from([32, 64, 128]),
+    t=st.sampled_from([1, 5, 16]),
+    q=st.integers(2, 5),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_ttq_linear_matches_ref(ddash, d, t, q, seed):
+    w = _rand((ddash, d), seed)
+    x = _rand((d, t), seed + 1)
+    qmax = jnp.float32(2.0 ** q - 1)
+    got = ttq.ttq_linear(x, w, qmax, g=32)
+    want = ref.ttq_linear_ref(x, w, float(qmax), 32)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=5e-4, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.sampled_from([1, 4, 16]),
+    q=st.integers(2, 5),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_ttq_linear_lowrank_matches_ref(r, q, seed):
+    w = _rand((48, 64), seed)
+    x = _rand((64, 9), seed + 1)
+    b, a = ref.lowrank_init_ref(w, r)
+    qmax = jnp.float32(2.0 ** q - 1)
+    got = ttq.ttq_linear_lowrank(x, w, b, a, qmax, g=32)
+    want = ref.ttq_linear_ref(x, w, float(qmax), 32, b=b, a=a)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-3)
+
+
+def test_ttq_linear_block_partitioning_invariance():
+    """Result must not depend on the d' tile size (pure data parallel)."""
+    w, x = _rand((128, 64), 11), _rand((64, 8), 12)
+    qmax = jnp.float32(7.0)
+    outs = [
+        np.asarray(ttq.ttq_linear(x, w, qmax, g=32, block_d=bd))
+        for bd in (16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+def test_awq_prescaled_matches_ttq_when_same_x():
+    """Fig. 1(a) vs (b): identical when calibration X == live X."""
+    w, x = _rand((48, 64), 13), _rand((64, 16), 14)
+    qmax = jnp.float32(7.0)
+    dvec = qdq.awq_diag(x, p=2.0, lam=0.4, alpha=0.5)
+    y_awq = ttq.awq_prescaled_linear(x, w, dvec, qmax, g=32)
+    y_ttq = ttq.ttq_linear(x, w, qmax, g=32)
+    np.testing.assert_allclose(
+        np.asarray(y_awq), np.asarray(y_ttq), atol=1e-5)
+
+
+def test_awq_prescaled_differs_under_domain_shift():
+    """Stale calibration produces a *different* (worse) projection — the
+    domain-shift mechanism TTQ removes."""
+    w = _rand((48, 64), 15)
+    x_live = _rand((64, 16), 16)
+    rng = np.random.default_rng(17)
+    x_stale = jnp.asarray(
+        (rng.normal(size=(64, 16)) * rng.lognormal(0, 2, (64, 1))
+         ).astype(np.float32))
+    qmax = jnp.float32(3.0)
+    d_stale = qdq.awq_diag(x_stale, p=2.0, lam=0.4, alpha=0.5)
+    y_stale = ttq.awq_prescaled_linear(x_live, w, d_stale, qmax, g=32)
+    y_live = ttq.ttq_linear(x_live, w, qmax, g=32)
+    y_true = w @ x_live
+    e_stale = float(jnp.sum((y_true - y_stale) ** 2))
+    e_live = float(jnp.sum((y_true - y_live) ** 2))
+    assert e_live < e_stale

@@ -1,0 +1,155 @@
+"""L2 model-family tests: shapes, causality, stats taps, TTQ forward."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model
+
+MICROS = ["opt-micro", "qwen-micro", "gemma-micro"]
+
+
+def _tokens(b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(1, 512, size=(b, s)).astype(np.int32)
+    t[:, 0] = corpus.BOS
+    return jnp.asarray(t)
+
+
+@pytest.mark.parametrize("name", list(model.CONFIGS))
+def test_schema_consistency(name):
+    cfg = model.CONFIGS[name]
+    schema = model.param_schema(cfg)
+    names = [n for n, _ in schema]
+    assert len(names) == len(set(names)), "duplicate tensor names"
+    params = model.init_params(cfg)
+    assert set(params) == set(names)
+    for n, shape in schema:
+        assert params[n].shape == shape
+    # every quantizable linear is a real 2D tensor with matching dims
+    for lin in model.linear_schema(cfg):
+        w = params[lin["name"]]
+        assert w.shape == (lin["d_out"], lin["d_in"])
+        assert lin["d_in"] % 32 == 0, "TTQ groupsize must divide d_in"
+
+
+@pytest.mark.parametrize("name", MICROS)
+def test_forward_shapes(name):
+    cfg = model.CONFIGS[name]
+    params = model.init_params(cfg)
+    toks = _tokens()
+    logits, taps = model.forward(cfg, params, toks, "plain")
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert taps == []
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", MICROS)
+def test_causality(name):
+    """Changing a future token must not change past logits."""
+    cfg = model.CONFIGS[name]
+    params = model.init_params(cfg)
+    t1 = _tokens(1, 32, 1)
+    t2 = t1.at[0, 20].set((int(t1[0, 20]) % 511) + 1)
+    l1, _ = model.forward(cfg, params, t1, "plain")
+    l2, _ = model.forward(cfg, params, t2, "plain")
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :20]), np.asarray(l2[0, :20]), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, 20:]), np.asarray(l2[0, 20:]))
+
+
+@pytest.mark.parametrize("name", MICROS)
+def test_stats_taps_order_and_values(name):
+    """Tap order must equal linear_schema order; norms must match a
+    direct computation from the traced activations."""
+    cfg = model.CONFIGS[name]
+    params = model.init_params(cfg)
+    toks = _tokens()
+    _, taps = model.forward(cfg, params, toks, "stats")
+    schema = model.linear_schema(cfg)
+    assert [t["name"] for t in taps] == [l["name"] for l in schema]
+    for t, l in zip(taps, schema):
+        assert t["norms"].shape == (len(model.NORM_PS), l["d_in"])
+        assert bool(jnp.all(t["norms"] >= 0))
+
+
+@pytest.mark.parametrize("name", MICROS)
+def test_corr_taps_psd(name):
+    """XᵀX must be symmetric PSD with trace = Σ|x|² (norms p=2 row)."""
+    cfg = model.CONFIGS[name]
+    params = model.init_params(cfg)
+    _, taps = model.forward(cfg, params, _tokens(), "corr")
+    for t in taps:
+        c = np.asarray(t["corr"])
+        assert np.allclose(c, c.T, atol=1e-3)
+        tr = np.trace(c)
+        p2 = np.sum(np.asarray(t["norms"])[2])  # NORM_PS[2] == 2.0
+        assert np.isclose(tr, p2, rtol=1e-4)
+        evals = np.linalg.eigvalsh(c)
+        assert evals.min() > -1e-2
+
+
+@pytest.mark.parametrize("name", MICROS)
+def test_ttq_forward_close_to_plain_at_high_bits(name):
+    """8-bit online quantization must barely move the NLL."""
+    cfg = model.CONFIGS[name]
+    params = model.init_params(cfg)
+    toks = _tokens()
+    lp, _ = model.forward(cfg, params, toks, "plain")
+    lq, _ = model.forward(cfg, params, toks, "ttq", qmax=jnp.float32(255.0))
+    sp, c = model.nll_from_logits(lp, toks)
+    sq, _ = model.nll_from_logits(lq, toks)
+    assert abs(float(sp - sq)) / float(c) < 0.05
+
+
+@pytest.mark.parametrize("name", MICROS)
+def test_ttq_forward_degrades_at_2bit(name):
+    cfg = model.CONFIGS[name]
+    params = model.init_params(cfg)
+    toks = _tokens()
+    lp, _ = model.forward(cfg, params, toks, "plain")
+    lq, _ = model.forward(cfg, params, toks, "ttq", qmax=jnp.float32(3.0))
+    sp, _ = model.nll_from_logits(lp, toks)
+    sq, _ = model.nll_from_logits(lq, toks)
+    assert float(sq) != float(sp)  # quantization visibly acts
+    assert bool(jnp.isfinite(sq))
+
+
+def test_nll_matches_manual():
+    cfg = model.CONFIGS["opt-micro"]
+    params = model.init_params(cfg)
+    toks = _tokens(1, 16)
+    logits, _ = model.forward(cfg, params, toks, "plain")
+    s, c = model.nll_from_logits(logits, toks)
+    lp = np.asarray(jnp.log(jnp.exp(logits[0, :-1]) /
+                            jnp.sum(jnp.exp(logits[0, :-1]), -1,
+                                    keepdims=True)))
+    manual = -sum(lp[i, int(toks[0, i + 1])] for i in range(15))
+    assert np.isclose(float(s), manual, rtol=1e-3)
+    assert float(c) == 15.0
+
+
+def test_entry_weight_ordering_respected():
+    """make_entry must bind positional weights by schema order."""
+    cfg = model.CONFIGS["qwen-micro"]
+    params = model.init_params(cfg)
+    ws = [params[n] for n, _ in model.param_schema(cfg)]
+    fn = model.make_entry(cfg, "nll")
+    toks = _tokens()
+    s1, c1 = fn(toks, *ws)
+    logits, _ = model.forward(cfg, params, toks, "plain")
+    s2, c2 = model.nll_from_logits(logits, toks)
+    assert np.isclose(float(s1), float(s2), rtol=1e-5)
+
+
+def test_gqa_families_differ():
+    """The three families must produce genuinely different functions."""
+    toks = _tokens()
+    outs = []
+    for name in MICROS:
+        cfg = model.CONFIGS[name]
+        params = model.init_params(cfg, seed=0)
+        logits, _ = model.forward(cfg, params, toks, "plain")
+        outs.append(np.asarray(logits))
+    assert not np.allclose(outs[0], outs[1])
+    assert not np.allclose(outs[1], outs[2])

@@ -1,0 +1,163 @@
+"""Mathematical invariants of the pure-jnp reference oracles.
+
+These pin down the *semantics* of the paper's equations before any
+kernel or rust code is compared against them.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def _w(shape=(16, 64), seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+def _x(shape=(64, 24), seed=1):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32))
+
+
+class TestRTN:
+    @pytest.mark.parametrize("q", [2, 3, 4, 5, 8])
+    @pytest.mark.parametrize("g", [16, 32, 64])
+    def test_error_bounded_by_half_step(self, q, g):
+        """|W − Ŵ| ≤ S/2 per group: the defining RTN property (Eq. 1)."""
+        w = _w()
+        qmax = 2.0 ** q - 1
+        what = ref.rtn_ref(w, qmax, g)
+        wg = np.asarray(w).reshape(-1, g)
+        s = (wg.max(1) - wg.min(1)) / qmax
+        err = np.abs(np.asarray(what).reshape(-1, g) - wg)
+        assert np.all(err <= s[:, None] / 2 + 1e-6)
+
+    def test_idempotent(self):
+        """QDQ of an already-quantized weight is a fixed point."""
+        w = _w()
+        w1 = ref.rtn_ref(w, 15.0, 32)
+        w2 = ref.rtn_ref(w1, 15.0, 32)
+        assert np.allclose(np.asarray(w1), np.asarray(w2), atol=2e-6)
+
+    def test_levels_count(self):
+        """Quantized values take at most 2^q distinct levels per group."""
+        w = _w((4, 32))
+        what = np.asarray(ref.rtn_ref(w, 3.0, 32))  # q=2
+        for row in what.reshape(-1, 32):
+            assert len(np.unique(np.round(row, 5))) <= 4
+
+    def test_more_bits_less_error(self):
+        w = _w()
+        errs = [
+            float(jnp.sum((w - ref.rtn_ref(w, 2.0 ** q - 1, 32)) ** 2))
+            for q in (2, 3, 4, 5, 8)
+        ]
+        assert all(a > b for a, b in zip(errs, errs[1:]))
+
+    def test_smaller_groups_less_error(self):
+        w = _w()
+        errs = [
+            float(jnp.sum((w - ref.rtn_ref(w, 7.0, g)) ** 2))
+            for g in (8, 32, 128, 512)
+        ]
+        assert all(a <= b + 1e-9 for a, b in zip(errs, errs[1:]))
+
+    def test_constant_group_exact(self):
+        """All-equal group has scale 0 → dequantizes exactly to Z."""
+        w = jnp.ones((2, 32)) * 0.37
+        what = ref.rtn_ref(w, 7.0, 32)
+        assert np.allclose(np.asarray(what), 0.37, atol=1e-7)
+
+    def test_flat_grouping_spans_rows(self):
+        """g > d is legal: grouping runs over the flattened weight."""
+        w = _w((8, 16))
+        what = ref.rtn_ref(w, 7.0, 64)  # 64 > 16
+        assert what.shape == (8, 16)
+
+    def test_symmetric_format(self):
+        w = _w()
+        what = ref.rtn_ref(w, 15.0, 32, symmetric=True)
+        # symmetric has fewer degrees of freedom => never better than asym
+        e_sym = float(jnp.sum((w - what) ** 2))
+        e_asym = float(jnp.sum((w - ref.rtn_ref(w, 15.0, 32)) ** 2))
+        assert e_sym >= e_asym - 1e-6
+
+    def test_expansion_factor(self):
+        """ν≈0.95 (App. D) changes the result but stays a valid QDQ."""
+        w = _w()
+        what = ref.rtn_ref(w, 7.0, 32, nu=0.95)
+        assert float(jnp.max(jnp.abs(w - what))) < 1.0
+
+
+class TestAWQ:
+    def test_diag_positive(self):
+        d = ref.awq_diag(_x(), 2.0, 0.4, 0.5)
+        assert np.all(np.asarray(d) > 0)
+
+    def test_alpha_zero_is_rtn(self):
+        """α = 0 ⇒ D = 1 ⇒ AWQ degenerates to plain RTN."""
+        w, x = _w(), _x()
+        awq = ref.awq_ref(x, w, 7.0, 32, 2.0, 0.4, 0.0)
+        rtn = ref.rtn_ref(w, 7.0, 32)
+        assert np.allclose(np.asarray(awq), np.asarray(rtn), atol=1e-5)
+
+    def test_awq_beats_rtn_on_activation_loss(self):
+        """The paper's core claim at the single-layer level (Eq. 2):
+        activation-aware scaling reduces ‖(W−Ŵ)X‖² vs plain RTN when
+        the activation has non-uniform channel energies."""
+        rng = np.random.default_rng(3)
+        # strongly non-isotropic activations (outlier channels, as in LLMs)
+        scales = rng.lognormal(0.0, 1.5, size=(64, 1)).astype(np.float32)
+        x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32) * scales)
+        w = _w((32, 64), seed=4)
+        l_rtn = float(ref.approx_loss_ref(w, ref.rtn_ref(w, 3.0, 32), x))
+        l_awq = float(ref.approx_loss_ref(
+            w, ref.awq_ref(x, w, 3.0, 32, 2.0, 0.4, 0.5), x))
+        assert l_awq < l_rtn
+
+    @pytest.mark.parametrize("p", [0.5, 1.0, 2.0, 4.0])
+    def test_p_norms(self, p):
+        d = np.asarray(ref.awq_diag(_x(), p, 0.4, 0.5))
+        assert d.shape == (64,) and np.all(np.isfinite(d))
+
+    def test_diag_matches_manual(self):
+        x = _x()
+        d = np.asarray(ref.awq_diag(x, 2.0, 0.4, 0.5))
+        manual = (np.linalg.norm(np.asarray(x), axis=1) + 0.4) ** 0.5
+        assert np.allclose(d, manual, atol=1e-5)
+
+
+class TestTTQLowRank:
+    def test_lowrank_init_reconstructs(self):
+        """BA equals the top-r SVD truncation (Eq. 31-33)."""
+        w = _w((16, 64))
+        b, a = ref.lowrank_init_ref(w, 16)
+        u, s, vt = np.linalg.svd(np.asarray(w), full_matrices=False)
+        w_r = (u[:, :16] * s[:16]) @ vt[:16]
+        assert np.allclose(np.asarray(b @ a), w_r, atol=1e-4)
+
+    def test_full_rank_residual_small(self):
+        w = _w((16, 64))
+        b, a = ref.lowrank_init_ref(w, 16)  # r = d' → exact
+        assert float(jnp.max(jnp.abs(w - b @ a))) < 1e-4
+
+    def test_lowrank_reduces_2bit_error(self):
+        """TTQ(r>0) ≤ TTQ(r=0) on activation loss — Table 3's trend."""
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+        w = _w((48, 64), seed=6)
+        y_true = w @ x
+        y0 = ref.ttq_linear_ref(x, w, 3.0, 32)
+        b, a = ref.lowrank_init_ref(w, 16)
+        y16 = ref.ttq_linear_ref(x, w, 3.0, 32, b=b, a=a)
+        e0 = float(jnp.sum((y_true - y0) ** 2))
+        e16 = float(jnp.sum((y_true - y16) ** 2))
+        assert e16 < e0
+
+    def test_rank0_matches_awq_path(self):
+        x, w = _x(), _w()
+        y = ref.ttq_linear_ref(x, w, 7.0, 32)
+        yq = ref.awq_ref(x, w, 7.0, 32, 2.0, 0.4, 0.5) @ x
+        assert np.allclose(np.asarray(y), np.asarray(yq), atol=1e-4)

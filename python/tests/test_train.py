@@ -1,0 +1,42 @@
+"""Trainer smoke tests (fast: tiny step counts)."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import model, train
+
+
+def test_loss_decreases():
+    cfg = model.CONFIGS["opt-micro"]
+    _, hist = train.train_model(cfg, steps=60, log_every=0)
+    assert hist[-1] < hist[0] * 0.8
+
+
+def test_checkpoint_roundtrip():
+    cfg = model.CONFIGS["qwen-micro"]
+    params, hist = train.train_model(cfg, steps=5, log_every=0)
+    with tempfile.TemporaryDirectory() as d:
+        train.save_checkpoint(d, cfg, params, hist)
+        loaded = train.load_checkpoint(d, cfg)
+        assert loaded is not None
+        for k in params:
+            np.testing.assert_array_equal(
+                np.asarray(params[k]), np.asarray(loaded[k]))
+
+
+def test_checkpoint_schema_mismatch_returns_none():
+    cfg_a = model.CONFIGS["qwen-micro"]
+    cfg_b = model.CONFIGS["opt-micro"]
+    params, hist = train.train_model(cfg_a, steps=2, log_every=0)
+    with tempfile.TemporaryDirectory() as d:
+        train.save_checkpoint(d, cfg_a, params, hist)
+        os.rename(os.path.join(d, f"{cfg_a.name}.npz"),
+                  os.path.join(d, f"{cfg_b.name}.npz"))
+        assert train.load_checkpoint(d, cfg_b) is None
+
+
+def test_steps_for_scales_with_depth():
+    assert (train.steps_for(model.CONFIGS["opt-micro"])
+            <= train.steps_for(model.CONFIGS["opt-small"]))

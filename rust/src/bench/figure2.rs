@@ -1,0 +1,125 @@
+//! Figure 2 — hyperparameter histogram: grid-search (α, λ, p), keep the
+//! top-5 combos per (model, bits), histogram the winners.
+//!
+//! The paper's App. F conclusions to reproduce: α around 0.5-0.75,
+//! λ ≈ 0.4 (much larger than the folklore 0.01), p = 2 good / p = 1
+//! terrible. We search on the activation-loss surrogate ‖(W−Ŵ)X‖²
+//! summed over the model's linears (cheap, artifact-free) — the same
+//! objective (Eq. 15) the paper's selection minimizes.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::Report;
+use crate::corpus::{CorpusStream, Split};
+use crate::eval::Evaluator;
+use crate::quant::{awq_quantize, diag_from_norm_sums, QuantSpec};
+use crate::runtime::Runtime;
+
+pub const ALPHAS: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+pub const LAMBDAS: [f64; 4] = [0.01, 0.1, 0.4, 1.0];
+pub const PS: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+
+/// Grid-search one model at one bit-width; returns the 5 best
+/// (alpha, lam, p) triples by summed activation loss.
+pub fn top5_for(
+    rt: &Runtime,
+    model: &str,
+    bits: u32,
+    fast: bool,
+) -> Result<Vec<(f64, f64, f64)>> {
+    let ev = Evaluator::new(rt, model)?;
+    // one stats+corr-free pass on eval traffic for the norm sums, plus
+    // a synthetic X per linear rebuilt from a fresh eval stream to score
+    // the loss. We approximate X's effect through the stats artifact:
+    // collect norm sums once, then score L = Σ ‖(W−Ŵ)·diag(n2)‖² where
+    // n2 is the per-channel ℓ2 energy — the diagonal surrogate of Eq. 15.
+    let mut stream = CorpusStream::new("wt2s", Split::Eval);
+    let batches = if fast { 1 } else { 3 };
+    let collected = {
+        let mut s: Option<crate::eval::CollectedStats> = None;
+        for _ in 0..batches {
+            let toks = stream.batch(4, ev.weights.manifest.config.seq);
+            let got = ev.collect(&toks, 4, false)?;
+            match &mut s {
+                None => s = Some(got),
+                Some(a) => {
+                    for (dst, src) in a.stats.iter_mut().zip(&got.stats) {
+                        dst.accumulate(&src.norm_sums, src.count);
+                    }
+                }
+            }
+        }
+        s.unwrap()
+    };
+    let originals = ev.weights.linear_weights();
+    let linears = ev.weights.manifest.linears.clone();
+    let spec = QuantSpec::new(bits, 32);
+
+    let mut scored: Vec<((f64, f64, f64), f64)> = Vec::new();
+    for &alpha in &ALPHAS {
+        for &lam in &LAMBDAS {
+            for &p in &PS {
+                let mut loss = 0.0f64;
+                for (i, lin) in linears.iter().enumerate() {
+                    let st = &collected.stats[i];
+                    let d = diag_from_norm_sums(st, p, lam, alpha);
+                    let w = &originals[&lin.name];
+                    let wq = awq_quantize(w, &d, &spec);
+                    // exact diagonal-correlation loss (Eq. 15 with the
+                    // true diagonal): ‖(W−Ŵ)·diag(‖X_i‖₂)‖²_F
+                    let energy = diag_from_norm_sums(st, 2.0, 0.0, 1.0);
+                    for r in 0..lin.d_out {
+                        let wr = w.row(r);
+                        let qr = wq.row(r);
+                        for c in 0..lin.d_in {
+                            let e = (wr[c] - qr[c]) as f64 * energy[c] as f64;
+                            loss += e * e;
+                        }
+                    }
+                }
+                scored.push(((alpha, lam, p), loss));
+            }
+        }
+    }
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    Ok(scored.into_iter().take(5).map(|(k, _)| k).collect())
+}
+
+/// Full Figure 2: histograms of top-5 winners across models × bits.
+pub fn figure2(rt: &Runtime, models: &[String], fast: bool) -> Result<Report> {
+    let bits_list: Vec<u32> = if fast { vec![2, 4] } else { vec![2, 3, 4, 5] };
+    let mut hist_a: HashMap<String, usize> = HashMap::new();
+    let mut hist_l: HashMap<String, usize> = HashMap::new();
+    let mut hist_p: HashMap<String, usize> = HashMap::new();
+    for model in models {
+        for &bits in &bits_list {
+            for (a, l, p) in top5_for(rt, model, bits, fast)? {
+                *hist_a.entry(format!("{a}")).or_default() += 1;
+                *hist_l.entry(format!("{l}")).or_default() += 1;
+                *hist_p.entry(format!("{p}")).or_default() += 1;
+            }
+        }
+    }
+    let mut rep = Report::new(
+        "Figure 2: histogram of top-5 hyperparameter selections",
+        &["param", "value", "count", "bar"],
+    );
+    let mut emit = |name: &str, hist: &HashMap<String, usize>, grid: &[f64]| {
+        for v in grid {
+            let key = format!("{v}");
+            let c = hist.get(&key).copied().unwrap_or(0);
+            rep.row(vec![
+                name.into(),
+                key,
+                c.to_string(),
+                "#".repeat(c),
+            ]);
+        }
+    };
+    emit("alpha", &hist_a, &ALPHAS);
+    emit("lambda", &hist_l, &LAMBDAS);
+    emit("p", &hist_p, &PS);
+    Ok(rep)
+}

@@ -1,0 +1,107 @@
+//! Table/figure regeneration harness — one entry per paper exhibit.
+//!
+//! `ttq-serve table <n>` / `ttq-serve figure2` print the same rows the
+//! paper reports (DESIGN.md §5 maps exhibits → modules). Absolute
+//! numbers live on our miniature substrate; the *shape* (ordering,
+//! ratios, crossovers) is the reproduction target and is what
+//! EXPERIMENTS.md records.
+
+pub mod ablations;
+pub mod figure2;
+pub mod tables_quality;
+pub mod tables_runtime;
+
+pub use ablations::{sweep_formats, sweep_lowrank_init, sweep_nf, sweep_prune};
+pub use figure2::figure2;
+pub use tables_quality::{table1, table2, table3, table12, table13};
+pub use tables_runtime::runtime_table;
+
+/// Simple fixed-width table printer shared by all exhibits.
+pub struct Report {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Report {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a perplexity like the paper (big values in e-notation).
+pub fn fmt_ppl(v: f64) -> String {
+    if !v.is_finite() {
+        "inf".into()
+    } else if v >= 10_000.0 {
+        format!("{v:.1e}")
+    } else if v >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_aligned() {
+        let mut r = Report::new("T", &["a", "method"]);
+        r.row(vec!["1".into(), "RTN".into()]);
+        r.row(vec!["22".into(), "TTQ (r = 16)".into()]);
+        let s = r.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("TTQ (r = 16)"));
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(25.731), "25.73");
+        assert_eq!(fmt_ppl(381.74), "381.7");
+        assert_eq!(fmt_ppl(8.2e6), "8.2e6");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+}

@@ -1,0 +1,77 @@
+//! Runtime exhibits — Tables 4-8 (k tokens/sec of the Qwen3 query
+//! projection per GPU) via the roofline simulator.
+//!
+//! The CPU-measured counterpart (criterion) lives in
+//! `benches/runtime_tables.rs`; this module produces the table-shaped
+//! report with the paper's exact row/column layout.
+
+use super::Report;
+use crate::models::QWEN3;
+use crate::perfmodel::{gpu, ktokens_per_sec, Mode, DEFAULT_AMORTIZE};
+use crate::quant::QuantSpec;
+
+/// Tables 4-8: one report per GPU name ("A40", "A100", "L40",
+/// "RTX3090", "RTX4090"). 4-bit, g=32 as in the paper's App. H.
+pub fn runtime_table(gpu_name: &str) -> Report {
+    let g = gpu(gpu_name);
+    let spec = QuantSpec::new(4, 32);
+    let modes = [
+        Mode::Fp16,
+        Mode::AwqGemm,
+        Mode::AwqMarlin,
+        Mode::Ttq { rank: 0 },
+        Mode::Ttq { rank: 16 },
+    ];
+    let mut header: Vec<String> = vec!["Qwen3".into()];
+    header.extend(QWEN3.iter().map(|m| m.name.to_string()));
+    let mut rep = Report::new(
+        &format!(
+            "Tables 4-8: runtime speed (k tokens/sec) of query projection, 4-bit, {gpu_name} (roofline sim)"
+        ),
+        &header.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for mode in modes {
+        let mut cells = vec![mode.label()];
+        for m in &QWEN3 {
+            let (dout, din) = m.qproj_dims();
+            let k = ktokens_per_sec(g, dout, din, &spec, mode, DEFAULT_AMORTIZE);
+            cells.push(format!("{k:.2}"));
+        }
+        rep.row(cells);
+    }
+    rep
+}
+
+/// All five GPU tables in paper order.
+pub fn all_runtime_tables() -> Vec<Report> {
+    ["A40", "A100", "L40", "RTX3090", "RTX4090"]
+        .iter()
+        .map(|g| runtime_table(g))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_tables_six_models() {
+        let ts = all_runtime_tables();
+        assert_eq!(ts.len(), 5);
+        for t in &ts {
+            assert_eq!(t.header.len(), 7); // name + 6 models
+            assert_eq!(t.rows.len(), 5); // 5 modes
+        }
+    }
+
+    #[test]
+    fn marlin_row_dominates_fp16_row() {
+        let t = runtime_table("A100");
+        let parse = |r: usize, c: usize| t.rows[r][c].parse::<f64>().unwrap();
+        for c in 1..7 {
+            let fp16 = parse(0, c);
+            let marlin = parse(2, c);
+            assert!(marlin > fp16, "col {c}: marlin {marlin} vs fp16 {fp16}");
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Shape-bucketed dynamic batcher.
+//!
+//! PJRT executables are compiled for fixed (batch, seq) shapes, so the
+//! batcher groups incoming requests into the AOT bucket sizes
+//! (`aot.BUCKETS` — {1, 4} per variant). A batch is released when
+//! (a) the largest bucket fills, or (b) the oldest queued request has
+//! waited past `linger`, in which case the largest bucket that can be
+//! *fully or partially* satisfied fires (padding rows repeat the last
+//! request — they are masked out of replies).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+pub type RequestId = u64;
+
+/// One inference request: a token prompt for a model.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub tokens: Vec<i32>, // length == seq of the model (BOS-padded rows)
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, tokens: Vec<i32>) -> Self {
+        Request { id, tokens, arrived: Instant::now() }
+    }
+}
+
+/// Released batch: bucket size + member requests (≤ bucket).
+#[derive(Debug)]
+pub struct Batch {
+    pub bucket: usize,
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    /// Flat (bucket × seq) token block; padding rows clone the last
+    /// real request so the executable always sees a full batch.
+    pub fn tokens(&self, seq: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.bucket * seq);
+        for i in 0..self.bucket {
+            let r = &self.requests[i.min(self.requests.len() - 1)];
+            assert_eq!(r.tokens.len(), seq, "request length != model seq");
+            out.extend_from_slice(&r.tokens);
+        }
+        out
+    }
+
+    pub fn padding_rows(&self) -> usize {
+        self.bucket - self.requests.len()
+    }
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Available bucket sizes, ascending (must match compiled shapes).
+    pub buckets: Vec<usize>,
+    /// Max time the oldest request may wait before a partial batch fires.
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { buckets: vec![1, 4], linger: Duration::from_millis(2) }
+    }
+}
+
+/// FIFO queue + bucket selection. Single-model (the server holds one
+/// per model); synchronization lives in the server loop.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(!policy.buckets.is_empty());
+        let mut p = policy;
+        p.buckets.sort_unstable();
+        Batcher { policy: p, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.queue.push_back(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Largest bucket ≤ n (None if even the smallest doesn't fit —
+    /// impossible since buckets start at 1 and n ≥ 1).
+    fn bucket_for(&self, n: usize) -> usize {
+        *self
+            .policy
+            .buckets
+            .iter()
+            .filter(|&&b| b <= n)
+            .next_back()
+            .unwrap_or(&self.policy.buckets[0])
+    }
+
+    /// Smallest bucket ≥ n (for padding partial linger batches).
+    fn bucket_covering(&self, n: usize) -> usize {
+        *self
+            .policy
+            .buckets
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(self.policy.buckets.last().unwrap())
+    }
+
+    /// Poll for a ready batch at time `now`.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let max_bucket = *self.policy.buckets.last().unwrap();
+        if self.queue.len() >= max_bucket {
+            let requests: Vec<Request> =
+                self.queue.drain(..max_bucket).collect();
+            return Some(Batch { bucket: max_bucket, requests });
+        }
+        let oldest = self.queue.front().unwrap().arrived;
+        if now.duration_since(oldest) >= self.policy.linger {
+            let n = self.queue.len();
+            // Exact bucket: take it. Otherwise trade padded rows vs
+            // extra launches: pad up to the covering bucket when the
+            // waste is at most half the bucket (one launch clears the
+            // queue); else drain the largest full bucket and let the
+            // remainder fire on the next poll.
+            let (bucket, take) = if self.policy.buckets.contains(&n) {
+                (n, n)
+            } else {
+                let covering = self.bucket_covering(n);
+                if covering >= n && covering - n <= covering / 2 {
+                    (covering, n)
+                } else {
+                    let b = self.bucket_for(n);
+                    (b, b.min(n))
+                }
+            };
+            let requests: Vec<Request> = self.queue.drain(..take).collect();
+            return Some(Batch { bucket, requests });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![0; 8])
+    }
+
+    fn mk(buckets: Vec<usize>, linger_ms: u64) -> Batcher {
+        Batcher::new(BatchPolicy {
+            buckets,
+            linger: Duration::from_millis(linger_ms),
+        })
+    }
+
+    #[test]
+    fn full_bucket_fires_immediately() {
+        let mut b = mk(vec![1, 4], 1000);
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let batch = b.poll(Instant::now()).expect("full bucket");
+        assert_eq!(batch.bucket, 4);
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn no_fire_before_linger() {
+        let mut b = mk(vec![1, 4], 1000);
+        b.push(req(0));
+        assert!(b.poll(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn linger_fires_single() {
+        let mut b = mk(vec![1, 4], 0);
+        b.push(req(0));
+        let batch = b.poll(Instant::now() + Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.bucket, 1);
+        assert_eq!(batch.padding_rows(), 0);
+    }
+
+    #[test]
+    fn linger_pads_between_buckets() {
+        let mut b = mk(vec![1, 4], 0);
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        let batch = b.poll(Instant::now() + Duration::from_millis(1)).unwrap();
+        // 3 requests, buckets {1,4}: largest full bucket is 1, but the
+        // policy prefers covering all 3 with a padded 4-batch over three
+        // sequential singles.
+        assert_eq!(batch.bucket, 4);
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.padding_rows(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn overfull_queue_drains_in_bucket_chunks() {
+        let mut b = mk(vec![1, 4], 1000);
+        for i in 0..9 {
+            b.push(req(i));
+        }
+        let b1 = b.poll(Instant::now()).unwrap();
+        let b2 = b.poll(Instant::now()).unwrap();
+        assert_eq!(b1.bucket, 4);
+        assert_eq!(b2.bucket, 4);
+        assert_eq!(b.pending(), 1);
+        // last one waits for linger
+        assert!(b.poll(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = mk(vec![1, 4], 1000);
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let batch = b.poll(Instant::now()).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn tokens_pads_with_last_request() {
+        let mut b = mk(vec![4], 0);
+        b.push(Request::new(0, vec![1; 8]));
+        b.push(Request::new(1, vec![2; 8]));
+        let batch = b.poll(Instant::now() + Duration::from_millis(1)).unwrap();
+        let toks = batch.tokens(8);
+        assert_eq!(toks.len(), 32);
+        assert_eq!(&toks[0..8], &[1; 8]);
+        assert_eq!(&toks[8..16], &[2; 8]);
+        assert_eq!(&toks[16..24], &[2; 8]); // padding repeats last
+    }
+}

@@ -1,0 +1,221 @@
+//! Online TTQ calibrator — the coordinator's half of Fig. 1(b).
+//!
+//! Keeps per-linear running activation statistics (norm sums with
+//! exponential decay) fed by the stats artifact on prefill batches, and
+//! decides *when* requantization is worth it: weights are re-quantized
+//! when the accumulated diagonal has drifted past a threshold from the
+//! diagonal used for the current weight generation. This implements the
+//! paper's "capable of on-device self-calibration at inference time"
+//! with the amortization the runtime benches assume (quantize ≈ once
+//! per prompt/domain-shift, not per token).
+
+use crate::quant::{diag_from_norm_sums, ActStats, TtqHyper};
+
+#[derive(Clone, Debug)]
+pub struct CalibratorConfig {
+    /// Exponential decay applied to old statistics per update.
+    pub decay: f64,
+    /// Relative L2 drift of D that triggers requantization.
+    pub drift_threshold: f64,
+    pub hyper: TtqHyper,
+}
+
+impl Default for CalibratorConfig {
+    fn default() -> Self {
+        CalibratorConfig {
+            decay: 0.8,
+            drift_threshold: 0.05,
+            hyper: TtqHyper::default(),
+        }
+    }
+}
+
+/// State for one linear layer.
+struct LayerState {
+    stats: ActStats,
+    /// Diagonal used by the *current* quantized weight generation.
+    active_diag: Option<Vec<f32>>,
+}
+
+/// Running calibration state for one model.
+pub struct OnlineCalibrator {
+    cfg: CalibratorConfig,
+    layers: Vec<LayerState>,
+    generation: u64,
+}
+
+impl OnlineCalibrator {
+    pub fn new(cfg: CalibratorConfig, ps: &[f64], d_ins: &[usize]) -> Self {
+        let layers = d_ins
+            .iter()
+            .map(|&d| LayerState { stats: ActStats::new(ps, d), active_diag: None })
+            .collect();
+        OnlineCalibrator { cfg, layers, generation: 0 }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Feed fresh per-layer norm sums from a stats pass.
+    pub fn observe(&mut self, per_layer: &[ActStats]) {
+        assert_eq!(per_layer.len(), self.layers.len());
+        for (layer, fresh) in self.layers.iter_mut().zip(per_layer) {
+            layer.stats.decay(self.cfg.decay);
+            layer.stats.accumulate(&fresh.norm_sums, fresh.count);
+        }
+    }
+
+    /// Current diagonal for a layer.
+    pub fn diag(&self, layer: usize) -> Vec<f32> {
+        let h = &self.cfg.hyper;
+        diag_from_norm_sums(&self.layers[layer].stats, h.p, h.lam, h.alpha)
+    }
+
+    /// Relative drift between *scale-normalized* diagonals (∞ if the
+    /// layer was never quantized). Normalization matters: the scaled
+    /// QDQ of Eq. 20 is invariant to a constant factor on D, so only
+    /// directional change in the channel profile warrants requanting —
+    /// otherwise statistics accumulation alone would thrash the weights.
+    fn drift(&self, layer: usize) -> f64 {
+        let new = self.diag(layer);
+        match &self.layers[layer].active_diag {
+            None => f64::INFINITY,
+            Some(act) => {
+                let norm = |v: &[f32]| {
+                    v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt()
+                };
+                let (na, nb) = (norm(act).max(1e-30), norm(&new).max(1e-30));
+                let mut num = 0.0f64;
+                for (a, b) in act.iter().zip(&new) {
+                    let d = *a as f64 / na - *b as f64 / nb;
+                    num += d * d;
+                }
+                num.sqrt()
+            }
+        }
+    }
+
+    /// Should the server requantize now? True when any layer drifted.
+    pub fn needs_requant(&self) -> bool {
+        (0..self.layers.len()).any(|i| self.drift(i) > self.cfg.drift_threshold)
+    }
+
+    /// Mark the current statistics as the active weight generation and
+    /// return the per-layer diagonals to quantize with.
+    pub fn commit(&mut self) -> Vec<Vec<f32>> {
+        let diags: Vec<Vec<f32>> =
+            (0..self.layers.len()).map(|i| self.diag(i)).collect();
+        for (layer, d) in self.layers.iter_mut().zip(&diags) {
+            layer.active_diag = Some(d.clone());
+        }
+        self.generation += 1;
+        diags
+    }
+
+    pub fn max_drift(&self) -> f64 {
+        (0..self.layers.len())
+            .map(|i| self.drift(i))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_with(d: usize, val: f64, count: f64) -> ActStats {
+        let ps = [2.0f64];
+        let mut s = ActStats::new(&ps, d);
+        s.accumulate(&[vec![val; d]], count);
+        s
+    }
+
+    /// Stats with a *shaped* channel profile (drift is profile-based:
+    /// uniform rescaling is invariant under Eq. 20).
+    fn stats_shaped(d: usize, hot: f64, count: f64) -> ActStats {
+        let ps = [2.0f64];
+        let mut s = ActStats::new(&ps, d);
+        let vals: Vec<f64> = (0..d)
+            .map(|i| if i % 2 == 0 { hot } else { 1.0 })
+            .collect();
+        s.accumulate(&[vals], count);
+        s
+    }
+
+    fn mk(d: usize) -> OnlineCalibrator {
+        OnlineCalibrator::new(CalibratorConfig::default(), &[2.0], &[d, d])
+    }
+
+    #[test]
+    fn fresh_calibrator_needs_requant() {
+        let mut c = mk(8);
+        c.observe(&[stats_with(8, 1.0, 4.0), stats_with(8, 1.0, 4.0)]);
+        assert!(c.needs_requant());
+        assert_eq!(c.generation(), 0);
+    }
+
+    #[test]
+    fn commit_clears_need() {
+        let mut c = mk(8);
+        c.observe(&[stats_with(8, 1.0, 4.0), stats_with(8, 1.0, 4.0)]);
+        let diags = c.commit();
+        assert_eq!(diags.len(), 2);
+        assert_eq!(c.generation(), 1);
+        assert!(!c.needs_requant(), "no drift right after commit");
+    }
+
+    #[test]
+    fn same_domain_does_not_retrigger() {
+        let mut c = mk(8);
+        for _ in 0..5 {
+            c.observe(&[stats_with(8, 1.0, 4.0), stats_with(8, 1.0, 4.0)]);
+        }
+        c.commit();
+        c.observe(&[stats_with(8, 1.0, 4.0), stats_with(8, 1.0, 4.0)]);
+        assert!(!c.needs_requant(), "drift {}", c.max_drift());
+    }
+
+    #[test]
+    fn domain_shift_triggers_requant() {
+        let mut c = mk(8);
+        c.observe(&[stats_with(8, 1.0, 4.0), stats_with(8, 1.0, 4.0)]);
+        c.commit();
+        // a different channel *profile* arrives (uniform rescaling would
+        // be invariant — Eq. 20 — so shift the shape, not the scale)
+        for _ in 0..4 {
+            c.observe(&[stats_shaped(8, 400.0, 4.0), stats_shaped(8, 400.0, 4.0)]);
+        }
+        assert!(c.needs_requant(), "drift {}", c.max_drift());
+        let g0 = c.generation();
+        c.commit();
+        assert_eq!(c.generation(), g0 + 1);
+    }
+
+    #[test]
+    fn uniform_rescaling_is_invariant() {
+        // Louder traffic with the same channel profile must NOT requant.
+        let mut c = mk(8);
+        c.observe(&[stats_with(8, 1.0, 4.0), stats_with(8, 1.0, 4.0)]);
+        c.commit();
+        for _ in 0..4 {
+            c.observe(&[stats_with(8, 400.0, 4.0), stats_with(8, 400.0, 4.0)]);
+        }
+        assert!(!c.needs_requant(), "drift {}", c.max_drift());
+    }
+
+    #[test]
+    fn decay_forgets_old_domain() {
+        let mut c = mk(4);
+        c.observe(&[stats_with(4, 1000.0, 4.0), stats_with(4, 1000.0, 4.0)]);
+        for _ in 0..40 {
+            c.observe(&[stats_with(4, 1.0, 4.0), stats_with(4, 1.0, 4.0)]);
+        }
+        // old 1000.0 contribution decayed to negligible: diag ~ fresh
+        let d = c.diag(0);
+        let expect = ((1.0f64 / (1.0 - 0.8)).sqrt() + 0.4).powf(0.5);
+        for v in d {
+            assert!((v as f64) < expect * 1.5, "diag {v} vs {expect}");
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Lock-free serving metrics (atomics only — no mutex on the hot path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_rows: AtomicU64,
+    pub tokens: AtomicU64,
+    pub requants: AtomicU64,
+    /// Cumulative latency in microseconds (request arrival → reply).
+    pub latency_us: AtomicU64,
+    /// Cumulative executor time in microseconds.
+    pub exec_us: AtomicU64,
+    /// Cumulative quantization time in microseconds.
+    pub quant_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, requests: usize, padded: usize, tokens: usize, exec: Duration) {
+        self.requests.fetch_add(requests as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_rows.fetch_add(padded as u64, Ordering::Relaxed);
+        self.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.exec_us
+            .fetch_add(exec.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latency_us
+            .fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_requant(&self, d: Duration) {
+        self.requants.fetch_add(1, Ordering::Relaxed);
+        self.quant_us
+            .fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        let req = self.requests.load(Ordering::Relaxed) as f64;
+        let pad = self.padded_rows.load(Ordering::Relaxed) as f64;
+        req / (req + pad)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let us = self.exec_us.load(Ordering::Relaxed);
+        if us == 0 {
+            return 0.0;
+        }
+        self.tokens.load(Ordering::Relaxed) as f64 / (us as f64 / 1e6)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} fill={:.2} tokens={} tput={:.0} tok/s \
+             mean_latency={:.2}ms requants={} quant_time={:.1}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_fill(),
+            self.tokens.load(Ordering::Relaxed),
+            self.tokens_per_sec(),
+            self.mean_latency_ms(),
+            self.requants.load(Ordering::Relaxed),
+            self.quant_us.load(Ordering::Relaxed) as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_fill() {
+        let m = Metrics::new();
+        m.record_batch(3, 1, 256, Duration::from_millis(2));
+        assert!((m.mean_batch_fill() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput() {
+        let m = Metrics::new();
+        m.record_batch(4, 0, 1000, Duration::from_millis(10));
+        let t = m.tokens_per_sec();
+        assert!((t - 100_000.0).abs() < 1.0, "{t}");
+    }
+
+    #[test]
+    fn latency_mean() {
+        let m = Metrics::new();
+        m.record_batch(2, 0, 10, Duration::from_millis(1));
+        m.record_latency(Duration::from_millis(4));
+        m.record_latency(Duration::from_millis(6));
+        assert!((m.mean_latency_ms() - 5.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn summary_contains_fields() {
+        let m = Metrics::new();
+        m.record_batch(1, 0, 64, Duration::from_millis(1));
+        let s = m.summary();
+        assert!(s.contains("requests=1"));
+        assert!(s.contains("tok/s"));
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator — the serving layer around the quantized runtime.
+//!
+//! A vLLM-router-shaped stack scaled to this reproduction:
+//!
+//! * [`batcher`] — shape-bucketed dynamic batching: requests queue per
+//!   (model, seq-bucket); a batch fires when a bucket fills or its
+//!   oldest request exceeds the linger deadline. Buckets correspond 1:1
+//!   to the AOT-compiled batch sizes (no dynamic shapes under PJRT).
+//! * [`calibrator`] — the TTQ-specific contribution: per-session online
+//!   activation statistics with exponential decay ("on-device
+//!   self-calibration", Fig. 1b) deciding when weights are re-quantized.
+//! * [`server`] — the engine loop tying batcher + calibrator + runtime
+//!   together; owns quantized weight generations.
+//! * [`metrics`] — lock-free counters for the runtime benches.
+
+pub mod batcher;
+pub mod calibrator;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
+pub use calibrator::{CalibratorConfig, OnlineCalibrator};
+pub use metrics::Metrics;
+pub use server::{Server, ServerConfig, ServeReply};

@@ -1,0 +1,169 @@
+//! The serving engine: batcher + online calibrator + PJRT executor.
+//!
+//! Request lifecycle (one `step`):
+//!
+//!   submit → [Batcher bucket fires] → stats pass on the batch
+//!          → calibrator.observe → (drift? requantize weight generation)
+//!          → logits pass with the quantized weights
+//!          → greedy next-token reply per request
+//!
+//! This is the paper's Fig. 1(b) loop made concrete: quantization state
+//! is owned by the server, recomputed *from the live traffic* whenever
+//! the activation statistics drift — never from offline calibration.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
+use super::calibrator::{CalibratorConfig, OnlineCalibrator};
+use super::metrics::Metrics;
+use crate::eval::Evaluator;
+use crate::quant::QuantSpec;
+use crate::runtime::{literal_f32_vec, model_inputs, ArtifactKey, Runtime};
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub model: String,
+    pub spec: QuantSpec,
+    pub rank: usize,
+    pub policy: BatchPolicy,
+    pub calib: CalibratorConfig,
+}
+
+impl ServerConfig {
+    pub fn new(model: &str) -> Self {
+        ServerConfig {
+            model: model.into(),
+            spec: QuantSpec::new(4, 32),
+            rank: 0,
+            policy: BatchPolicy::default(),
+            calib: CalibratorConfig::default(),
+        }
+    }
+}
+
+/// Reply for one request: greedy next token after the prompt.
+#[derive(Clone, Debug)]
+pub struct ServeReply {
+    pub id: RequestId,
+    pub next_token: i32,
+    pub weight_generation: u64,
+}
+
+pub struct Server<'rt> {
+    cfg: ServerConfig,
+    ev: Evaluator<'rt>,
+    batcher: Batcher,
+    calibrator: OnlineCalibrator,
+    pub metrics: Metrics,
+    next_id: RequestId,
+}
+
+impl<'rt> Server<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: ServerConfig) -> Result<Self> {
+        let ev = Evaluator::new(rt, &cfg.model)?;
+        let man = &ev.weights.manifest;
+        let d_ins: Vec<usize> = man.linears.iter().map(|l| l.d_in).collect();
+        let calibrator =
+            OnlineCalibrator::new(cfg.calib.clone(), &man.norm_ps, &d_ins);
+        let batcher = Batcher::new(cfg.policy.clone());
+        Ok(Server {
+            cfg,
+            ev,
+            batcher,
+            calibrator,
+            metrics: Metrics::new(),
+            next_id: 0,
+        })
+    }
+
+    pub fn seq(&self) -> usize {
+        self.ev.weights.manifest.config.seq
+    }
+
+    pub fn weight_generation(&self) -> u64 {
+        self.calibrator.generation()
+    }
+
+    /// Enqueue a prompt (must be exactly `seq` tokens, BOS-led).
+    pub fn submit(&mut self, tokens: Vec<i32>) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.batcher.push(Request::new(id, tokens));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Drive the engine once; returns replies if a batch fired.
+    pub fn step(&mut self, now: Instant) -> Result<Vec<ServeReply>> {
+        let Some(batch) = self.batcher.poll(now) else {
+            return Ok(Vec::new());
+        };
+        self.run_batch(batch)
+    }
+
+    /// Drain everything queued (test/bench convenience).
+    pub fn drain(&mut self) -> Result<Vec<ServeReply>> {
+        let mut out = Vec::new();
+        while self.batcher.pending() > 0 {
+            let far = Instant::now() + self.cfg.policy.linger * 2;
+            out.extend(self.step(far)?);
+        }
+        Ok(out)
+    }
+
+    fn run_batch(&mut self, batch: Batch) -> Result<Vec<ServeReply>> {
+        let seq = self.seq();
+        let bucket = batch.bucket;
+        let tokens = batch.tokens(seq);
+
+        // 1. stats pass on the live batch (the O[dT] term of Eq. 3)
+        let collected = self.ev.collect(&tokens, bucket, false)?;
+        self.calibrator.observe(&collected.stats);
+
+        // 2. requantize only when the activation statistics drifted
+        if self.calibrator.needs_requant() {
+            let t0 = Instant::now();
+            let diags = self.calibrator.commit();
+            self.ev
+                .apply_diags(&diags, self.cfg.rank, &self.cfg.spec)?;
+            self.metrics.record_requant(t0.elapsed());
+        }
+
+        // 3. forward with the current quantized generation
+        let t0 = Instant::now();
+        let key = ArtifactKey::new(&self.cfg.model, "logits", bucket);
+        let exe = self.ev.rt.load(&key)?;
+        let inputs = model_inputs(&self.ev.weights, &tokens, bucket, None)?;
+        let outs = self.ev.rt.run(&exe, &inputs)?;
+        let exec = t0.elapsed();
+        let logits = literal_f32_vec(&outs[0])?;
+        let vocab = self.ev.weights.manifest.config.vocab;
+
+        let n_real = batch.requests.len();
+        self.metrics
+            .record_batch(n_real, batch.padding_rows(), bucket * seq, exec);
+        let mut replies = Vec::with_capacity(n_real);
+        for (row, req) in batch.requests.iter().enumerate() {
+            let off = (row * seq + (seq - 1)) * vocab;
+            let slice = &logits[off..off + vocab];
+            let mut best = 0usize;
+            for (i, &v) in slice.iter().enumerate() {
+                if v > slice[best] {
+                    best = i;
+                }
+            }
+            self.metrics.record_latency(req.arrived.elapsed());
+            replies.push(ServeReply {
+                id: req.id,
+                next_token: best as i32,
+                weight_generation: self.calibrator.generation(),
+            });
+        }
+        Ok(replies)
+    }
+}

@@ -1,0 +1,441 @@
+//! Experiment pipelines: perplexity, accuracy, and success-rate
+//! evaluation of quantized models — the engines behind every table.
+//!
+//! All methods share one two-pass pipeline (DESIGN.md §7):
+//!
+//!   pass 1  `stats`/`corr` artifact → per-linear activation statistics
+//!   rust    quantize each linear with the chosen method
+//!   pass 2  `nll`/`logits` artifact with the substituted weights
+//!
+//! For **TTQ** pass 1 runs on the *evaluation batch itself* (that is
+//! the definition of test-time quantization — Fig. 1b); for **AWQ/GPTQ**
+//! pass 1 runs once on a *calibration* stream (Fig. 1a), which is what
+//! exposes them to domain shift.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::corpus::{CorpusStream, Split};
+use crate::linalg::Mat;
+use crate::models::ModelWeights;
+use crate::quant::{
+    awq_quantize, diag_from_norm_sums, gptq_quantize, lowrank_init,
+    rtn_quantize, ActStats, LowRank, QuantSpec, TtqHyper,
+};
+use crate::runtime::{
+    literal_f32_vec, literal_scalar_f32, model_inputs, ArtifactKey, Runtime,
+};
+
+/// Method selector for one experiment row.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MethodSpec {
+    /// Un-quantized baseline (the table headers' reference perplexity).
+    Fp,
+    Rtn,
+    /// Offline AWQ calibrated on the named domain's calib split.
+    Awq { calib_domain: String },
+    /// Online TTQ with rank-r low-rank compensation.
+    Ttq { rank: usize },
+    /// GPTQ calibrated on the named domain (needs the corr artifact).
+    Gptq { calib_domain: String },
+}
+
+impl MethodSpec {
+    pub fn label(&self) -> String {
+        match self {
+            MethodSpec::Fp => "FP32".into(),
+            MethodSpec::Rtn => "RTN".into(),
+            MethodSpec::Awq { calib_domain } => {
+                format!("AWQ ({} Calib)", calib_domain.to_uppercase())
+            }
+            MethodSpec::Ttq { rank } => format!("TTQ (r = {rank})"),
+            MethodSpec::Gptq { calib_domain } => {
+                format!("GPTQ ({} Calib)", calib_domain.to_uppercase())
+            }
+        }
+    }
+}
+
+/// Shared experiment knobs.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub batch: usize,
+    pub eval_batches: usize,
+    pub calib_batches: usize,
+    pub spec: QuantSpec,
+    pub hyper: TtqHyper,
+    /// GPTQ diagonal damping fraction.
+    pub gptq_damp: f64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig {
+            batch: 4,
+            eval_batches: 12,
+            calib_batches: 16,
+            spec: QuantSpec::new(3, 32),
+            hyper: TtqHyper::default(),
+            gptq_damp: 0.01,
+        }
+    }
+}
+
+/// Per-linear activation statistics from one or more stats passes.
+pub struct CollectedStats {
+    pub stats: Vec<ActStats>,
+    pub corr: Vec<Mat>, // empty unless collected via the corr artifact
+}
+
+/// Evaluation driver bound to one model's artifacts.
+pub struct Evaluator<'rt> {
+    pub rt: &'rt Runtime,
+    pub weights: ModelWeights,
+    /// Pristine copies of the quantizable linears ("the original
+    /// full-precision weights *are* recoverable" — paper's point (3)).
+    originals: HashMap<String, Mat>,
+    /// Cached low-rank factors per (linear, rank) — static per App. E.
+    lowrank_cache: HashMap<(String, usize), LowRank>,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
+        let weights = ModelWeights::load(rt.artifacts_dir(), model)?;
+        let originals = weights.linear_weights();
+        Ok(Evaluator { rt, weights, originals, lowrank_cache: HashMap::new() })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.weights.manifest.name
+    }
+
+    fn seq(&self) -> usize {
+        self.weights.manifest.config.seq
+    }
+
+    /// Run the `nll` artifact; returns (nll_sum, token_count).
+    pub fn nll(&self, tokens: &[i32], batch: usize) -> Result<(f64, f64)> {
+        let key = ArtifactKey::new(self.model_name(), "nll", batch);
+        let exe = self.rt.load(&key)?;
+        let inputs = model_inputs(&self.weights, tokens, batch, None)?;
+        let outs = self.rt.run(&exe, &inputs)?;
+        Ok((
+            literal_scalar_f32(&outs[0])? as f64,
+            literal_scalar_f32(&outs[1])? as f64,
+        ))
+    }
+
+    /// Run the fused single-pass `ttq` artifact (Fig. 1b, L1 kernel).
+    pub fn nll_fused_ttq(&self, tokens: &[i32], batch: usize, bits: u32) -> Result<(f64, f64)> {
+        let key = ArtifactKey::new(self.model_name(), "ttq", batch);
+        let exe = self.rt.load(&key)?;
+        let qmax = ((1u64 << bits) - 1) as f32;
+        let inputs = model_inputs(&self.weights, tokens, batch, Some(qmax))?;
+        let outs = self.rt.run(&exe, &inputs)?;
+        Ok((
+            literal_scalar_f32(&outs[0])? as f64,
+            literal_scalar_f32(&outs[1])? as f64,
+        ))
+    }
+
+    /// Run `stats` (or `corr`) and parse per-linear statistics.
+    pub fn collect(&self, tokens: &[i32], batch: usize, with_corr: bool) -> Result<CollectedStats> {
+        let variant = if with_corr { "corr" } else { "stats" };
+        let key = ArtifactKey::new(self.model_name(), variant, batch);
+        let exe = self.rt.load(&key)?;
+        let inputs = model_inputs(&self.weights, tokens, batch, None)?;
+        let outs = self.rt.run(&exe, &inputs)?;
+        let linears = &self.weights.manifest.linears;
+        let ps = &self.weights.manifest.norm_ps;
+        let count = literal_scalar_f32(&outs[1])? as f64;
+        let n_tokens = (batch * self.seq()) as f64;
+        let mut stats = Vec::with_capacity(linears.len());
+        for (i, lin) in linears.iter().enumerate() {
+            let raw = literal_f32_vec(&outs[2 + i])?;
+            if raw.len() != ps.len() * lin.d_in {
+                return Err(anyhow!(
+                    "stats shape mismatch for {}: {} vs {}x{}",
+                    lin.name, raw.len(), ps.len(), lin.d_in
+                ));
+            }
+            let mut st = ActStats::new(ps, lin.d_in);
+            let sums: Vec<Vec<f64>> = raw
+                .chunks(lin.d_in)
+                .map(|row| row.iter().map(|&v| v as f64).collect())
+                .collect();
+            st.accumulate(&sums, n_tokens);
+            stats.push(st);
+        }
+        let mut corr = Vec::new();
+        if with_corr {
+            for (i, lin) in linears.iter().enumerate() {
+                let raw = literal_f32_vec(&outs[2 + linears.len() + i])?;
+                corr.push(Mat::from_vec(lin.d_in, lin.d_in, raw));
+            }
+        }
+        let _ = count;
+        Ok(CollectedStats { stats, corr })
+    }
+
+    /// Accumulate stats over many batches of a stream.
+    pub fn collect_stream(
+        &self,
+        stream: &mut CorpusStream,
+        batch: usize,
+        n_batches: usize,
+        with_corr: bool,
+    ) -> Result<CollectedStats> {
+        let mut agg: Option<CollectedStats> = None;
+        for _ in 0..n_batches {
+            let toks = stream.batch(batch, self.seq());
+            let got = self.collect(&toks, batch, with_corr)?;
+            match &mut agg {
+                None => agg = Some(got),
+                Some(a) => {
+                    for (dst, src) in a.stats.iter_mut().zip(&got.stats) {
+                        dst.accumulate(&src.norm_sums, src.count);
+                    }
+                    for (dst, src) in a.corr.iter_mut().zip(&got.corr) {
+                        *dst = dst.add(src);
+                    }
+                }
+            }
+        }
+        Ok(agg.expect("n_batches >= 1"))
+    }
+
+    /// Low-rank factors for a linear (cached — static per App. E).
+    pub fn lowrank_for(&mut self, name: &str, rank: usize) -> LowRank {
+        if let Some(lr) = self.lowrank_cache.get(&(name.to_string(), rank)) {
+            return lr.clone();
+        }
+        let lr = lowrank_init(&self.originals[name], rank);
+        self.lowrank_cache
+            .insert((name.to_string(), rank), lr.clone());
+        lr
+    }
+
+    /// Substitute quantized weights for every linear given statistics.
+    pub fn apply_quantization(
+        &mut self,
+        method: &MethodSpec,
+        collected: Option<&CollectedStats>,
+        cfg: &EvalConfig,
+    ) -> Result<()> {
+        let linears = self.weights.manifest.linears.clone();
+        for (i, lin) in linears.iter().enumerate() {
+            let w0 = self.originals[&lin.name].clone();
+            let wq = match method {
+                MethodSpec::Fp => w0,
+                MethodSpec::Rtn => rtn_quantize(&w0, &cfg.spec),
+                MethodSpec::Awq { .. } => {
+                    let st = &collected.ok_or_else(|| anyhow!("AWQ needs stats"))?.stats[i];
+                    let d = diag_from_norm_sums(st, cfg.hyper.p, cfg.hyper.lam, cfg.hyper.alpha);
+                    awq_quantize(&w0, &d, &cfg.spec)
+                }
+                MethodSpec::Ttq { rank } => {
+                    let st = &collected.ok_or_else(|| anyhow!("TTQ needs stats"))?.stats[i];
+                    let d = diag_from_norm_sums(st, cfg.hyper.p, cfg.hyper.lam, cfg.hyper.alpha);
+                    if *rank == 0 {
+                        awq_quantize(&w0, &d, &cfg.spec)
+                    } else {
+                        let lr = self.lowrank_for(&lin.name, *rank);
+                        let wq = awq_quantize(&w0.sub(&lr.product()), &d, &cfg.spec);
+                        wq.add(&lr.product())
+                    }
+                }
+                MethodSpec::Gptq { .. } => {
+                    let c = &collected.ok_or_else(|| anyhow!("GPTQ needs corr"))?.corr[i];
+                    gptq_quantize(&w0, c, &cfg.spec, cfg.gptq_damp)
+                }
+            };
+            self.weights.set(&lin.name, wq);
+        }
+        Ok(())
+    }
+
+    /// Quantize every linear with externally supplied diagonals (the
+    /// serving path: the [`crate::coordinator::OnlineCalibrator`] owns
+    /// the statistics and hands committed diagonals down).
+    pub fn apply_diags(
+        &mut self,
+        diags: &[Vec<f32>],
+        rank: usize,
+        spec: &QuantSpec,
+    ) -> Result<()> {
+        let linears = self.weights.manifest.linears.clone();
+        if diags.len() != linears.len() {
+            return Err(anyhow!("{} diags for {} linears", diags.len(), linears.len()));
+        }
+        for (lin, d) in linears.iter().zip(diags) {
+            let w0 = self.originals[&lin.name].clone();
+            let wq = if rank == 0 {
+                awq_quantize(&w0, d, spec)
+            } else {
+                let lr = self.lowrank_for(&lin.name, rank);
+                awq_quantize(&w0.sub(&lr.product()), d, spec).add(&lr.product())
+            };
+            self.weights.set(&lin.name, wq);
+        }
+        Ok(())
+    }
+
+    /// Restore pristine full-precision weights.
+    pub fn restore(&mut self) {
+        for (name, w) in self.originals.clone() {
+            self.weights.set(&name, w);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Experiment drivers
+    // ------------------------------------------------------------------
+
+    /// Perplexity of `method` on `eval_domain` (paper's core metric).
+    pub fn perplexity(
+        &mut self,
+        method: &MethodSpec,
+        eval_domain: &str,
+        cfg: &EvalConfig,
+    ) -> Result<f64> {
+        // Offline calibration pass (AWQ / GPTQ), once.
+        let offline = match method {
+            MethodSpec::Awq { calib_domain } => {
+                self.restore();
+                let mut s = CorpusStream::new(calib_domain, Split::Calib);
+                Some(self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, false)?)
+            }
+            MethodSpec::Gptq { calib_domain } => {
+                self.restore();
+                let mut s = CorpusStream::new(calib_domain, Split::Calib);
+                Some(self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, true)?)
+            }
+            _ => None,
+        };
+        if let Some(st) = &offline {
+            self.apply_quantization(method, Some(st), cfg)?;
+        } else if matches!(method, MethodSpec::Fp | MethodSpec::Rtn) {
+            self.restore();
+            self.apply_quantization(method, None, cfg)?;
+        }
+
+        let mut stream = CorpusStream::new(eval_domain, Split::Eval);
+        let mut total_nll = 0.0;
+        let mut total_cnt = 0.0;
+        for _ in 0..cfg.eval_batches {
+            let toks = stream.batch(cfg.batch, self.seq());
+            if let MethodSpec::Ttq { .. } = method {
+                // TTQ: per-prompt online quantization — stats on the
+                // *incoming* batch, quantize, then evaluate it.
+                self.restore();
+                let st = self.collect(&toks, cfg.batch, false)?;
+                self.apply_quantization(method, Some(&st), cfg)?;
+            }
+            let (s, c) = self.nll(&toks, cfg.batch)?;
+            total_nll += s;
+            total_cnt += c;
+        }
+        self.restore();
+        Ok((total_nll / total_cnt).exp())
+    }
+
+    /// Next-token top-1 accuracy on a domain (VQA-proxy, Table 12).
+    pub fn accuracy(
+        &mut self,
+        method: &MethodSpec,
+        domain: &str,
+        cfg: &EvalConfig,
+    ) -> Result<f64> {
+        let vocab = self.weights.manifest.config.vocab;
+        let seq = self.seq();
+        // quantize exactly as in `perplexity`
+        match method {
+            MethodSpec::Awq { calib_domain } => {
+                self.restore();
+                let mut s = CorpusStream::new(calib_domain, Split::Calib);
+                let st = self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, false)?;
+                self.apply_quantization(method, Some(&st), cfg)?;
+            }
+            MethodSpec::Gptq { calib_domain } => {
+                self.restore();
+                let mut s = CorpusStream::new(calib_domain, Split::Calib);
+                let st = self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, true)?;
+                self.apply_quantization(method, Some(&st), cfg)?;
+            }
+            _ => {
+                self.restore();
+                if !matches!(method, MethodSpec::Ttq { .. }) {
+                    self.apply_quantization(method, None, cfg)?;
+                }
+            }
+        }
+        let key = ArtifactKey::new(self.model_name(), "logits", cfg.batch);
+        let exe = self.rt.load(&key)?;
+        let mut stream = CorpusStream::new(domain, Split::Eval);
+        let (mut hits, mut total) = (0usize, 0usize);
+        for _ in 0..cfg.eval_batches {
+            let toks = stream.batch(cfg.batch, seq);
+            if let MethodSpec::Ttq { .. } = method {
+                self.restore();
+                let st = self.collect(&toks, cfg.batch, false)?;
+                self.apply_quantization(method, Some(&st), cfg)?;
+            }
+            let inputs = model_inputs(&self.weights, &toks, cfg.batch, None)?;
+            let outs = self.rt.run(&exe, &inputs)?;
+            let logits = literal_f32_vec(&outs[0])?;
+            for b in 0..cfg.batch {
+                for s in 0..seq - 1 {
+                    let off = (b * seq + s) * vocab;
+                    let row = &logits[off..off + vocab];
+                    let mut best = 0usize;
+                    for (v, &x) in row.iter().enumerate() {
+                        if x > row[best] {
+                            best = v;
+                        }
+                    }
+                    if best as i32 == toks[b * seq + s + 1] {
+                        hits += 1;
+                    }
+                    total += 1;
+                }
+            }
+        }
+        self.restore();
+        Ok(hits as f64 / total as f64)
+    }
+}
+
+/// exp(mean NLL) — shared helper for reporting.
+pub fn ppl(nll_sum: f64, count: f64) -> f64 {
+    (nll_sum / count).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_labels_match_table_rows() {
+        assert_eq!(
+            MethodSpec::Awq { calib_domain: "c4s".into() }.label(),
+            "AWQ (C4S Calib)"
+        );
+        assert_eq!(MethodSpec::Ttq { rank: 16 }.label(), "TTQ (r = 16)");
+        assert_eq!(MethodSpec::Rtn.label(), "RTN");
+    }
+
+    #[test]
+    fn ppl_of_uniform() {
+        // uniform over 512 tokens → ppl = 512
+        let nll = (512f64).ln() * 100.0;
+        assert!((ppl(nll, 100.0) - 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = EvalConfig::default();
+        assert_eq!(c.spec.group, 32);
+        assert!(c.eval_batches > 0 && c.calib_batches > 0);
+    }
+}

@@ -1,0 +1,64 @@
+//! # ttq-serve — TTQ paper reproduction, Layer-3 coordinator library
+//!
+//! Reproduction of *"TTQ: Activation-Aware Test-Time Quantization to
+//! Accelerate LLM Inference On The Fly"* (Koike-Akino, Liu, Wang; MERL
+//! 2026) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is the runtime half: python (L2 jax models + L1 Pallas
+//! kernels) runs once at `make artifacts` and never again; everything
+//! here executes against AOT-compiled HLO-text artifacts through the
+//! PJRT CPU client plus a pure-Rust quantization library.
+//!
+//! Module map (see DESIGN.md §4 for the full inventory):
+//!
+//! * [`linalg`] — dense matrix substrate: matmul, Cholesky, truncated SVD.
+//! * [`quant`] — the paper's algorithms: RTN (Eq. 1), AWQ (Eq. 19-20),
+//!   TTQ (§2), GPTQ (App. C baseline), low-rank decomposition (App. E),
+//!   QDQ formats (App. D), and bit-packing with traffic accounting.
+//! * [`corpus`] — seeded synthetic corpora standing in for WT2/PTB/C4 and
+//!   the VQA/VLA proxies (bit-identical to `python/compile/corpus.py`).
+//! * [`models`] — model registry + weight-manifest loader (interchange
+//!   contract with `python/compile/aot.py`).
+//! * [`runtime`] — PJRT artifact loader / executor (xla crate).
+//! * [`coordinator`] — serving layer: shape-bucketed dynamic batcher,
+//!   online TTQ calibrator, scheduler, metrics.
+//! * [`eval`] — perplexity / accuracy / success-rate pipelines driving
+//!   the paper's experiments.
+//! * [`perfmodel`] — GPU roofline simulator regenerating Tables 4-8.
+//! * [`bench`] — table/figure regeneration harness (`ttq-serve table N`).
+
+pub mod bench;
+pub mod coordinator;
+pub mod corpus;
+pub mod eval;
+pub mod linalg;
+pub mod models;
+pub mod perfmodel;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Repo-relative artifacts directory (overridable via `TTQ_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("TTQ_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from the current dir until an `artifacts/` is found so that
+    // tests, benches and examples work from any working directory.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}
+
+/// True once `make artifacts` has completed (integration tests that need
+/// compiled HLO check this and skip gracefully otherwise).
+pub fn artifacts_ready() -> bool {
+    artifacts_dir().join("BUILD_OK").exists()
+}

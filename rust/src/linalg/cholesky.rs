@@ -1,0 +1,160 @@
+//! Cholesky factorization + triangular solves (f64 internals).
+//!
+//! GPTQ (paper App. C) is "optimal brain surgeon with Cholesky": it
+//! needs L such that C_λ = L Lᵀ and the inverse Hessian diag. The paper
+//! cites this as the O(d³) cost that TTQ avoids — we implement it as the
+//! baseline it is.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor of a symmetric PSD matrix.
+///
+/// Returns `None` if the matrix is not positive definite beyond the
+/// jitter tolerance (callers add λ-damping per Eq. 13 before calling).
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols, "cholesky needs square input");
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(Mat::from_vec(
+        n,
+        n,
+        l.into_iter().map(|v| v as f32).collect(),
+    ))
+}
+
+/// Solve L y = b for lower-triangular L.
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.at(i, k) as f64 * y[k];
+        }
+        y[i] = sum / l.at(i, i) as f64;
+    }
+    y.into_iter().map(|v| v as f32).collect()
+}
+
+/// Solve Lᵀ x = y for lower-triangular L (i.e. upper solve on Lᵀ).
+pub fn solve_upper(l: &Mat, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in i + 1..n {
+            sum -= l.at(k, i) as f64 * x[k];
+        }
+        x[i] = sum / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+/// Full inverse via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹ (GPTQ's inverse Hessian).
+pub fn cholesky_inverse(a: &Mat) -> Option<Mat> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for col in 0..n {
+        e[col] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper(&l, &y);
+        for row in 0..n {
+            *inv.at_mut(row, col) = x[row];
+        }
+        e[col] = 0.0;
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let x = Mat::randn(n + 4, n, &mut rng);
+        let mut g = x.gram();
+        for i in 0..n {
+            *g.at_mut(i, i) += 0.5; // damping, as in Eq. 13
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul_bt(&l);
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn lower_triangular() {
+        let l = cholesky(&spd(6, 2)).unwrap();
+        for i in 0..6 {
+            for j in i + 1..6 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solves_recover_rhs() {
+        let a = spd(10, 3);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Rng::new(4);
+        let b: Vec<f32> = (0..10).map(|_| rng.normal() as f32).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_upper(&l, &y);
+        // check A x == b
+        let ax: Vec<f32> = (0..10)
+            .map(|i| (0..10).map(|j| a.at(i, j) * x[j]).sum())
+            .collect();
+        for (got, want) in ax.iter().zip(&b) {
+            assert!((got - want).abs() < 1e-2, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd(7, 5);
+        let inv = cholesky_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        for i in 0..7 {
+            for j in 0..7 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-2);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        *a.at_mut(2, 2) = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+}

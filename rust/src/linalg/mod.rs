@@ -1,0 +1,264 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's methods need: matmul (everywhere), Cholesky factorization
+//! (GPTQ's inverse-Hessian, App. C), and truncated SVD (the low-rank
+//! factors of App. E). Nothing external is linked — this is the
+//! "implement the substrate" rule of the reproduction.
+
+mod cholesky;
+pub mod rng;
+mod svd;
+
+pub use cholesky::{cholesky, cholesky_inverse, solve_lower, solve_upper};
+pub use rng::Rng;
+pub use svd::{truncated_svd, Svd};
+
+/// Row-major f32 matrix. The one dense type used across quant/eval.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Standard-normal random matrix (deterministic via [`Rng`]).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal() as f32);
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — cache-friendly ikj loop order.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ otherᵀ` without materializing the transpose.
+    pub fn matmul_bt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_bt dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                out.data[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ @ self` (the Gram matrix XᵀX used for correlations).
+    pub fn gram(&self) -> Mat {
+        let (n, d) = (self.rows, self.cols);
+        let mut out = Mat::zeros(d, d);
+        for r in 0..n {
+            let row = &self.data[r * d..(r + 1) * d];
+            for i in 0..d {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * d..(i + 1) * d];
+                for j in 0..d {
+                    orow[j] += xi * row[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale_cols(&self, scales: &[f32]) -> Mat {
+        assert_eq!(scales.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            let row = &mut out.data[r * self.cols..(r + 1) * self.cols];
+            for (v, s) in row.iter_mut().zip(scales) {
+                *v *= s;
+            }
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+/// Activation-weighted approximation loss ‖(W−Ŵ)X‖² of paper Eq. (2).
+pub fn activation_loss(w: &Mat, what: &Mat, x: &Mat) -> f64 {
+    w.sub(what).matmul(x).frob_sq()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(5, 7, &mut rng);
+        let i = Mat::eye(7);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_bt_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(4, 6, &mut rng);
+        let b = Mat::randn(5, 6, &mut rng);
+        let got = a.matmul_bt(&b);
+        let want = a.matmul(&b.transpose());
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(20, 6, &mut rng);
+        let g = x.gram();
+        for i in 0..6 {
+            assert!(g.at(i, i) >= 0.0);
+            for j in 0..6 {
+                assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(3, 8, &mut rng);
+        assert_eq!(a.transpose().transpose().data, a.data);
+    }
+
+    #[test]
+    fn activation_loss_zero_for_exact() {
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(4, 4, &mut rng);
+        let x = Mat::randn(4, 9, &mut rng);
+        assert_eq!(activation_loss(&w, &w, &x), 0.0);
+    }
+
+    #[test]
+    fn scale_cols_roundtrip() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(4, 5, &mut rng);
+        let s: Vec<f32> = (1..=5).map(|v| v as f32).collect();
+        let inv: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+        let b = a.scale_cols(&s).scale_cols(&inv);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Truncated SVD via randomized subspace iteration.
+//!
+//! Powers the low-rank factor initialization of paper App. E
+//! (Eq. 31-33): B = U_r Λ_r^{1/2}, A = Λ_r^{1/2} V_r. Subspace iteration
+//! with re-orthonormalization converges geometrically in the spectral
+//! gap; the paper needs only small r (≤ 32), so this is exact enough —
+//! tests compare against loss reduction rather than bit equality.
+
+use super::{Mat, Rng};
+
+/// Truncated factorization W ≈ U diag(s) Vᵀ with r columns.
+pub struct Svd {
+    pub u: Mat,     // (m, r)
+    pub s: Vec<f32>, // (r,)
+    pub vt: Mat,    // (r, n)
+}
+
+/// Modified Gram–Schmidt orthonormalization of the columns of `q` (in
+/// place), with rank detection: a column whose residual after
+/// projection is tiny *relative to its original norm* is linearly
+/// dependent — normalizing it would amplify f32 noise into a wildly
+/// non-orthogonal direction — so it is zeroed instead. Two projection
+/// passes ("twice is enough") keep orthogonality at f32 precision.
+fn orthonormalize(q: &mut Mat) {
+    let (m, r) = (q.rows, q.cols);
+    for j in 0..r {
+        let mut pre = 0.0f64;
+        for i in 0..m {
+            pre += (q.at(i, j) as f64).powi(2);
+        }
+        let pre = pre.sqrt();
+        for _pass in 0..2 {
+            for k in 0..j {
+                let mut dot = 0.0f64;
+                for i in 0..m {
+                    dot += q.at(i, k) as f64 * q.at(i, j) as f64;
+                }
+                for i in 0..m {
+                    *q.at_mut(i, j) -= (dot as f32) * q.at(i, k);
+                }
+            }
+        }
+        let mut nrm = 0.0f64;
+        for i in 0..m {
+            nrm += (q.at(i, j) as f64).powi(2);
+        }
+        let nrm = nrm.sqrt();
+        if nrm < 1e-5 * pre.max(1e-30) || nrm < 1e-20 {
+            for i in 0..m {
+                *q.at_mut(i, j) = 0.0;
+            }
+        } else {
+            let inv = (1.0 / nrm) as f32;
+            for i in 0..m {
+                *q.at_mut(i, j) *= inv;
+            }
+        }
+    }
+}
+
+/// Randomized subspace iteration (Halko-style, fixed seed).
+pub fn truncated_svd(w: &Mat, r: usize, iters: usize) -> Svd {
+    let (m, n) = (w.rows, w.cols);
+    let r = r.min(m).min(n);
+    let mut rng = Rng::new(0x5EED_57D0);
+    // oversample for accuracy, trim at the end
+    let k = (r + 8).min(m).min(n);
+    let mut q = Mat::randn(m, k, &mut rng);
+    orthonormalize(&mut q);
+    for _ in 0..iters.max(2) {
+        // q <- orth(W Wᵀ q)
+        let wtq = w.transpose().matmul(&q); // (n, k)
+        let mut wq = w.matmul(&wtq); // (m, k)
+        orthonormalize(&mut wq);
+        q = wq;
+    }
+    // small projected problem: Bs = Qᵀ W  (k, n); SVD of Bs via its Gram.
+    let bs = q.transpose().matmul(w); // (k, n)
+    // eigendecomposition of Bs Bsᵀ (k×k) by Jacobi
+    let g = bs.matmul_bt(&bs); // (k, k)
+    let (evals, evecs) = jacobi_eigh(&g);
+    // sort descending
+    let mut idx: Vec<usize> = (0..evals.len()).collect();
+    idx.sort_by(|&a, &b| evals[b].partial_cmp(&evals[a]).unwrap());
+    let mut u = Mat::zeros(m, r);
+    let mut s = vec![0.0f32; r];
+    let mut vt = Mat::zeros(r, n);
+    for (out_j, &j) in idx.iter().take(r).enumerate() {
+        let sv = evals[j].max(0.0).sqrt();
+        s[out_j] = sv as f32;
+        // u column = Q * evec_j
+        for i in 0..m {
+            let mut acc = 0.0f64;
+            for t in 0..g.rows {
+                acc += q.at(i, t) as f64 * evecs.at(t, j) as f64;
+            }
+            *u.at_mut(i, out_j) = acc as f32;
+        }
+        // vt row = (uᵀ W) / s
+        if sv > 1e-12 {
+            for c in 0..n {
+                let mut acc = 0.0f64;
+                for i in 0..m {
+                    acc += u.at(i, out_j) as f64 * w.at(i, c) as f64;
+                }
+                *vt.at_mut(out_j, c) = (acc / sv) as f32;
+            }
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Cyclic Jacobi eigendecomposition for small symmetric matrices.
+/// Returns (eigenvalues, eigenvector columns).
+fn jacobi_eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|v| *v as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-30 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let evals: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    let evecs = Mat::from_vec(n, n, v.into_iter().map(|x| x as f32).collect());
+    (evals, evecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lowrank_matrix(m: usize, n: usize, true_r: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let b = Mat::randn(m, true_r, &mut rng);
+        let a = Mat::randn(true_r, n, &mut rng);
+        b.matmul(&a)
+    }
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let w = lowrank_matrix(24, 40, 3, 1);
+        let svd = truncated_svd(&w, 3, 6);
+        let rec = svd
+            .u
+            .scale_cols(&svd.s)
+            .matmul(&svd.vt);
+        let rel = w.sub(&rec).frob_sq() / w.frob_sq();
+        assert!(rel < 1e-6, "relative error {rel}");
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(16, 32, &mut rng);
+        let svd = truncated_svd(&w, 8, 8);
+        for pair in svd.s.windows(2) {
+            assert!(pair[0] >= pair[1] - 1e-5);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn u_columns_orthonormal() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(20, 20, &mut rng);
+        let svd = truncated_svd(&w, 5, 8);
+        for i in 0..5 {
+            for j in 0..5 {
+                let mut dot = 0.0f64;
+                for k in 0..20 {
+                    dot += svd.u.at(k, i) as f64 * svd.u.at(k, j) as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-3, "u[{i}]·u[{j}] = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_beats_nothing() {
+        // rank-4 approx of a full-rank matrix must capture energy
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(16, 16, &mut rng);
+        let svd = truncated_svd(&w, 4, 8);
+        let rec = svd.u.scale_cols(&svd.s).matmul(&svd.vt);
+        assert!(w.sub(&rec).frob_sq() < w.frob_sq());
+    }
+
+    #[test]
+    fn jacobi_matches_known_eigenvalues() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (mut evals, _) = jacobi_eigh(&a);
+        evals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((evals[0] - 1.0).abs() < 1e-8);
+        assert!((evals[1] - 3.0).abs() < 1e-8);
+    }
+}

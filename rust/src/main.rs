@@ -1,0 +1,260 @@
+//! ttq-serve — CLI for the TTQ reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's exhibits plus the serving loop:
+//!
+//! ```text
+//! ttq-serve eval --model qwen-mini --method ttq --bits 3 --rank 16
+//! ttq-serve table <1|2|3|4|5|6|7|8|12|13> [--fast] [--models ...]
+//! ttq-serve figure2 [--fast]
+//! ttq-serve sweep <formats|lowrank-init|nf|prune>
+//! ttq-serve serve --model qwen-micro --requests 64 [--rank R] [--bits Q]
+//! ttq-serve info
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use ttq_serve::bench::{
+    figure2, sweep_formats, sweep_lowrank_init, sweep_nf, sweep_prune,
+    table1, table12, table13, table2, table3, tables_runtime,
+};
+use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
+use ttq_serve::corpus::{CorpusStream, Split};
+use ttq_serve::eval::{EvalConfig, Evaluator, MethodSpec};
+use ttq_serve::quant::{QuantSpec, TtqHyper};
+use ttq_serve::runtime::Runtime;
+use ttq_serve::util::cli::Args;
+use ttq_serve::{artifacts_dir, artifacts_ready};
+
+const USAGE: &str = "\
+ttq-serve — TTQ test-time quantization serving stack
+
+USAGE:
+  ttq-serve eval [--model M] [--method fp|rtn|awq|ttq|gptq] [--bits Q]
+                 [--group G] [--rank R] [--domain D] [--calib D] [--fast]
+  ttq-serve table <N> [--fast] [--models M1 M2 ...]   (N: 1,2,3,4..8,12,13)
+  ttq-serve figure2 [--fast] [--models ...]
+  ttq-serve sweep <formats|lowrank-init|nf|prune>
+  ttq-serve serve [--model M] [--requests N] [--bits Q] [--rank R]
+                  [--domains d1,d2]
+  ttq-serve info";
+
+fn method_spec(method: &str, rank: usize, calib: &str) -> Result<MethodSpec> {
+    Ok(match method {
+        "fp" => MethodSpec::Fp,
+        "rtn" => MethodSpec::Rtn,
+        "awq" => MethodSpec::Awq { calib_domain: calib.into() },
+        "ttq" => MethodSpec::Ttq { rank },
+        "gptq" => MethodSpec::Gptq { calib_domain: calib.into() },
+        m => bail!("unknown method {m}"),
+    })
+}
+
+fn default_models(models: Vec<String>) -> Vec<String> {
+    if models.is_empty() {
+        ttq_serve::models::MODEL_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        models
+    }
+}
+
+fn need_artifacts() -> Result<Runtime> {
+    if !artifacts_ready() {
+        bail!(
+            "artifacts not built — run `make artifacts` first ({:?})",
+            artifacts_dir()
+        );
+    }
+    Runtime::new(&artifacts_dir())
+}
+
+fn cmd_eval(a: &Args) -> Result<()> {
+    let rt = need_artifacts()?;
+    let model = a.get_or("model", "qwen-micro").to_string();
+    let mut ev = Evaluator::new(&rt, &model)?;
+    let fast = a.has("fast");
+    let m = method_spec(
+        a.get_or("method", "ttq"),
+        a.get_usize("rank", 0),
+        a.get_or("calib", "c4s"),
+    )?;
+    let cfg = EvalConfig {
+        spec: QuantSpec::new(a.get_u32("bits", 3), a.get_usize("group", 32)),
+        eval_batches: if fast { 3 } else { 12 },
+        calib_batches: if fast { 4 } else { 16 },
+        hyper: TtqHyper::default(),
+        ..Default::default()
+    };
+    let domain = a.get_or("domain", "wt2s");
+    let t0 = Instant::now();
+    let ppl = ev.perplexity(&m, domain, &cfg)?;
+    println!(
+        "{model} {} q={} g={} on {domain}: ppl {ppl:.3} ({:.1}s)",
+        m.label(),
+        cfg.spec.bits,
+        cfg.spec.group,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_table(a: &Args) -> Result<()> {
+    let n: u32 = a
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("table number required\n{USAGE}"))?
+        .parse()?;
+    let fast = a.has("fast");
+    let models = a.get_many("models");
+    match n {
+        1 => table1(&need_artifacts()?, fast)?.print(),
+        2 => table2(&need_artifacts()?, fast)?.print(),
+        3 => {
+            let rt = need_artifacts()?;
+            for r in table3(&rt, &default_models(models), fast)? {
+                r.print();
+            }
+        }
+        4..=8 => {
+            let name =
+                ["A40", "A100", "L40", "RTX3090", "RTX4090"][(n - 4) as usize];
+            tables_runtime::runtime_table(name).print();
+        }
+        12 => {
+            let rt = need_artifacts()?;
+            let ms = if models.is_empty() {
+                vec!["qwen-micro".into(), "qwen-mini".into()]
+            } else {
+                models
+            };
+            for r in table12(&rt, &ms, fast)? {
+                r.print();
+            }
+        }
+        13 => {
+            let rt = need_artifacts()?;
+            let model = models
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "qwen-mini".into());
+            table13(&rt, &model, fast)?.print();
+        }
+        _ => bail!("no table {n} among the paper's exhibits"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let rt = need_artifacts()?;
+    let model = a.get_or("model", "qwen-micro");
+    let mut cfg = ServerConfig::new(model);
+    cfg.spec = QuantSpec::new(a.get_u32("bits", 4), 32);
+    cfg.rank = a.get_usize("rank", 0);
+    cfg.policy = BatchPolicy::default();
+    let requests = a.get_usize("requests", 64);
+    let mut server = Server::new(&rt, cfg)?;
+    let seq = server.seq();
+    let domains = a.get_or("domains", "wt2s,c4s").to_string();
+    let domain_list: Vec<&str> = domains.split(',').collect();
+    let mut streams: Vec<CorpusStream> = domain_list
+        .iter()
+        .map(|d| CorpusStream::new(d, Split::Eval))
+        .collect();
+    let t0 = Instant::now();
+    let mut replies = 0usize;
+    for i in 0..requests {
+        // traffic switches domain partway — the domain-shift scenario
+        // TTQ self-calibrates through
+        let idx = (i * domain_list.len()) / requests.max(1);
+        let s = &mut streams[idx.min(domain_list.len() - 1)];
+        let mut toks = vec![ttq_serve::corpus::BOS; seq];
+        for t in toks.iter_mut().skip(1) {
+            *t = s.next_token();
+        }
+        server.submit(toks);
+        replies += server.step(Instant::now())?.len();
+    }
+    replies += server.drain()?.len();
+    println!(
+        "served {replies}/{requests} requests in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", server.metrics.summary());
+    println!("weight generations: {}", server.weight_generation());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("artifacts dir: {:?}", artifacts_dir());
+    println!("artifacts ready: {}", artifacts_ready());
+    println!("models: {:?}", ttq_serve::models::MODEL_NAMES);
+    if artifacts_ready() {
+        let rt = Runtime::new(&artifacts_dir())?;
+        println!("PJRT platform: {}", rt.platform());
+        for name in ttq_serve::models::MODEL_NAMES {
+            if let Ok(ev) = Evaluator::new(&rt, name) {
+                println!(
+                    "  {name}: {} params, {} linears, family {}",
+                    ev.weights.param_count(),
+                    ev.weights.manifest.linears.len(),
+                    ev.weights.manifest.family
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let a = Args::from_env();
+    match a.positional.first().map(String::as_str) {
+        Some("eval") => cmd_eval(&a),
+        Some("table") => cmd_table(&a),
+        Some("figure2") => {
+            let rt = need_artifacts()?;
+            let ms = {
+                let m = a.get_many("models");
+                if m.is_empty() {
+                    vec![
+                        "opt-micro".into(),
+                        "opt-mini".into(),
+                        "opt-small".into(),
+                    ]
+                } else {
+                    m
+                }
+            };
+            figure2(&rt, &ms, a.has("fast"))?.print();
+            Ok(())
+        }
+        Some("sweep") => match a.positional.get(1).map(String::as_str) {
+            Some("formats") => {
+                sweep_formats()?.print();
+                Ok(())
+            }
+            Some("lowrank-init") => {
+                sweep_lowrank_init()?.print();
+                Ok(())
+            }
+            Some("nf") => {
+                sweep_nf()?.print();
+                Ok(())
+            }
+            Some("prune") => {
+                sweep_prune()?.print();
+                Ok(())
+            }
+            w => bail!("unknown sweep {w:?} (formats|lowrank-init|nf|prune)"),
+        },
+        Some("serve") => cmd_serve(&a),
+        Some("info") => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

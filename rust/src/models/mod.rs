@@ -1,0 +1,340 @@
+//! Model registry + weight-manifest loader.
+//!
+//! The interchange contract with `python/compile/aot.py`: a JSON
+//! manifest describing tensor order/shapes/offsets plus a raw f32-LE
+//! blob. The registry also carries the paper's *full-scale* family
+//! tables (Tables 14-16) used by the GPU roofline model — those models
+//! are never executed here, only dimension-accounted.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::linalg::Mat;
+use crate::util::json::Value;
+
+/// One tensor entry of the weights manifest.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// One quantizable linear layer (stats-output ordering contract).
+#[derive(Clone, Debug)]
+pub struct LinearInfo {
+    pub name: String,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_mlp: usize,
+    pub max_seq: usize,
+    pub seq: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TtqDefaults {
+    pub g: usize,
+    pub p: f64,
+    pub lam: f64,
+    pub alpha: f64,
+}
+
+/// Parsed `<name>.manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub family: String,
+    pub config: ModelDims,
+    pub tensors: Vec<TensorInfo>,
+    pub linears: Vec<LinearInfo>,
+    pub norm_ps: Vec<f64>,
+    pub ttq_defaults: TtqDefaults,
+}
+
+fn as_usize(v: &Value, key: &str) -> Result<usize> {
+    v.field(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_usize()
+        .ok_or_else(|| anyhow!("field '{key}' is not a number"))
+}
+
+fn as_f64(v: &Value, key: &str) -> Result<f64> {
+    v.field(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field '{key}' is not a number"))
+}
+
+fn as_str(v: &Value, key: &str) -> Result<String> {
+    Ok(v.field(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{key}' is not a string"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn parse(doc: &str) -> Result<Manifest> {
+        let v = Value::parse(doc).map_err(|e| anyhow!("{e}"))?;
+        let cfg = v.field("config").map_err(|e| anyhow!("{e}"))?;
+        let config = ModelDims {
+            vocab: as_usize(cfg, "vocab")?,
+            d_model: as_usize(cfg, "d_model")?,
+            n_layers: as_usize(cfg, "n_layers")?,
+            n_heads: as_usize(cfg, "n_heads")?,
+            n_kv_heads: as_usize(cfg, "n_kv_heads")?,
+            head_dim: as_usize(cfg, "head_dim")?,
+            d_mlp: as_usize(cfg, "d_mlp")?,
+            max_seq: as_usize(cfg, "max_seq")?,
+            seq: as_usize(cfg, "seq")?,
+        };
+        let mut tensors = Vec::new();
+        for t in v
+            .field("tensors")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensors not an array"))?
+        {
+            tensors.push(TensorInfo {
+                name: as_str(t, "name")?,
+                shape: t
+                    .field("shape")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("shape not array"))?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: as_usize(t, "offset")?,
+                numel: as_usize(t, "numel")?,
+            });
+        }
+        let mut linears = Vec::new();
+        for l in v
+            .field("linears")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("linears not an array"))?
+        {
+            linears.push(LinearInfo {
+                name: as_str(l, "name")?,
+                d_in: as_usize(l, "d_in")?,
+                d_out: as_usize(l, "d_out")?,
+            });
+        }
+        let norm_ps = v
+            .field("norm_ps")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("norm_ps not an array"))?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0))
+            .collect();
+        let td = v.field("ttq_defaults").map_err(|e| anyhow!("{e}"))?;
+        let ttq_defaults = TtqDefaults {
+            g: as_usize(td, "g")?,
+            p: as_f64(td, "p")?,
+            lam: as_f64(td, "lam")?,
+            alpha: as_f64(td, "alpha")?,
+        };
+        Ok(Manifest {
+            name: as_str(&v, "name")?,
+            family: as_str(&v, "family")?,
+            config,
+            tensors,
+            linears,
+            norm_ps,
+            ttq_defaults,
+        })
+    }
+}
+
+/// A loaded model: manifest + owned weight tensors (name → Mat; 1-D
+/// tensors are stored as (1, n) matrices).
+pub struct ModelWeights {
+    pub manifest: Manifest,
+    tensors: HashMap<String, Mat>,
+    order: Vec<String>,
+}
+
+impl ModelWeights {
+    pub fn load(artifacts: &Path, name: &str) -> Result<Self> {
+        let man_path = artifacts.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::parse(
+            &fs::read_to_string(&man_path)
+                .with_context(|| format!("reading {man_path:?}"))?,
+        )?;
+        let bin = fs::read(artifacts.join(format!("{name}.weights.bin")))?;
+        let floats: Vec<f32> = bin
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut tensors = HashMap::new();
+        let mut order = Vec::new();
+        for t in &manifest.tensors {
+            let data = floats
+                .get(t.offset..t.offset + t.numel)
+                .ok_or_else(|| anyhow!("tensor {} out of range", t.name))?
+                .to_vec();
+            let (rows, cols) = match t.shape.as_slice() {
+                [n] => (1, *n),
+                [r, c] => (*r, *c),
+                s => return Err(anyhow!("unsupported rank for {}: {s:?}", t.name)),
+            };
+            tensors.insert(t.name.clone(), Mat::from_vec(rows, cols, data));
+            order.push(t.name.clone());
+        }
+        Ok(ModelWeights { manifest, tensors, order })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Mat> {
+        self.tensors.get(name)
+    }
+
+    pub fn set(&mut self, name: &str, m: Mat) {
+        let old = self.tensors.get(name).expect("unknown tensor");
+        assert_eq!((old.rows, old.cols), (m.rows, m.cols), "shape change");
+        self.tensors.insert(name.to_string(), m);
+    }
+
+    /// Tensors in manifest order — the positional inputs of every HLO
+    /// artifact after the tokens (and qmax, for the ttq variant).
+    pub fn ordered(&self) -> Vec<&Mat> {
+        self.order.iter().map(|n| &self.tensors[n]).collect()
+    }
+
+    pub fn tensor_names(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Deep copy of the quantizable linear weights (the originals must
+    /// stay recoverable — the paper's point (3) against static quant).
+    pub fn linear_weights(&self) -> HashMap<String, Mat> {
+        self.manifest
+            .linears
+            .iter()
+            .map(|l| (l.name.clone(), self.tensors[&l.name].clone()))
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.manifest.tensors.iter().map(|t| t.numel).sum()
+    }
+}
+
+/// Miniature registry shipped in artifacts (must match python CONFIGS).
+pub const MODEL_NAMES: [&str; 7] = [
+    "opt-micro",
+    "opt-mini",
+    "opt-small",
+    "qwen-micro",
+    "qwen-mini",
+    "gemma-micro",
+    "gemma-mini",
+];
+
+/// Family grouping for the Table-3 style report layout.
+pub fn family_of(name: &str) -> &'static str {
+    if name.starts_with("opt") {
+        "opt"
+    } else if name.starts_with("qwen") {
+        "qwen"
+    } else {
+        "gemma"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Paper-scale dimension tables (Tables 14-16) for the roofline model.
+// ---------------------------------------------------------------------
+
+/// Dimensions of one full-scale model (only what the perf model needs).
+#[derive(Clone, Copy, Debug)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+}
+
+impl PaperModel {
+    /// Query-projection weight dims (d_out = heads·head_dim, d_in = d):
+    /// the module benchmarked in the paper's Tables 4-8.
+    pub fn qproj_dims(&self) -> (usize, usize) {
+        (self.n_heads * self.head_dim, self.d_model)
+    }
+}
+
+/// Qwen3 dense family — paper Table 15.
+pub const QWEN3: [PaperModel; 6] = [
+    PaperModel { name: "0.6B", d_model: 1024, n_heads: 16, head_dim: 128 },
+    PaperModel { name: "1.7B", d_model: 2048, n_heads: 16, head_dim: 128 },
+    PaperModel { name: "4B", d_model: 2560, n_heads: 32, head_dim: 128 },
+    PaperModel { name: "8B", d_model: 4096, n_heads: 32, head_dim: 128 },
+    PaperModel { name: "14B", d_model: 5120, n_heads: 40, head_dim: 128 },
+    PaperModel { name: "32B", d_model: 5120, n_heads: 64, head_dim: 128 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen32b_query_projection_dims_match_paper() {
+        // Paper App. H: "Qwen3-32B model needs to transfer 5,120 × 8,192
+        // weights ... for FP16 query projection".
+        let m = QWEN3[5];
+        let (dout, din) = m.qproj_dims();
+        assert_eq!(din, 5120);
+        assert_eq!(dout, 8192);
+    }
+
+    #[test]
+    fn registry_families() {
+        assert_eq!(family_of("opt-small"), "opt");
+        assert_eq!(family_of("qwen-mini"), "qwen");
+        assert_eq!(family_of("gemma-micro"), "gemma");
+        assert_eq!(MODEL_NAMES.len(), 7);
+    }
+
+    #[test]
+    fn manifest_parses_minimal_doc() {
+        let doc = r#"{
+          "name": "m", "family": "qwen",
+          "config": {"vocab": 512, "d_model": 64, "n_layers": 2,
+                     "n_heads": 4, "n_kv_heads": 2, "head_dim": 16,
+                     "d_mlp": 192, "max_seq": 64, "seq": 64},
+          "tensors": [{"name": "embed", "shape": [512, 64],
+                       "offset": 0, "numel": 32768}],
+          "linears": [{"name": "l0.wq", "d_in": 64, "d_out": 64}],
+          "norm_ps": [0.5, 1, 2, 4],
+          "ttq_defaults": {"g": 32, "p": 2, "lam": 0.4, "alpha": 0.5}
+        }"#;
+        let m = Manifest::parse(doc).unwrap();
+        assert_eq!(m.name, "m");
+        assert_eq!(m.config.d_mlp, 192);
+        assert_eq!(m.tensors[0].numel, 32768);
+        assert_eq!(m.linears[0].d_in, 64);
+        assert_eq!(m.norm_ps, vec![0.5, 1.0, 2.0, 4.0]);
+        assert_eq!(m.ttq_defaults.g, 32);
+    }
+
+    #[test]
+    fn manifest_missing_field_errors() {
+        assert!(Manifest::parse(r#"{"name": "m"}"#).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! AWQ: activation-aware scaled QDQ — paper Eq. (19-20) / App. C.
+//!
+//! `D_i = (‖X_i,:‖_p + λ)^α`, `Ŵ = Q[W·D]·D⁻¹`. The diagonal can come
+//! from raw activations (the fused test-time path) or from accumulated
+//! norm sums Σ|x|^p collected by the `stats` artifact across calibration
+//! batches (the offline Fig. 1(a) path). Both are provided here because
+//! the coordinator composes them differently for AWQ vs TTQ.
+
+use super::formats::QuantSpec;
+use crate::linalg::Mat;
+
+/// Accumulated activation statistics for one linear layer's input.
+///
+/// `norm_sums[k][i] = Σ_t |x_i(t)|^{p_k}` for the p-grid shared with the
+/// L2 stats artifact (`python/compile/model.py::NORM_PS`).
+#[derive(Clone, Debug, Default)]
+pub struct ActStats {
+    pub ps: Vec<f64>,
+    pub norm_sums: Vec<Vec<f64>>, // [n_p][d_in]
+    pub count: f64,               // tokens accumulated
+}
+
+impl ActStats {
+    pub fn new(ps: &[f64], d_in: usize) -> Self {
+        ActStats {
+            ps: ps.to_vec(),
+            norm_sums: vec![vec![0.0; d_in]; ps.len()],
+            count: 0.0,
+        }
+    }
+
+    /// Merge another batch's sums (used by multi-batch calibration and
+    /// by the coordinator's running EMA state).
+    pub fn accumulate(&mut self, norms: &[Vec<f64>], count: f64) {
+        assert_eq!(norms.len(), self.ps.len());
+        for (dst, src) in self.norm_sums.iter_mut().zip(norms) {
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+        self.count += count;
+    }
+
+    /// Exponential decay toward fresh statistics ("on-device
+    /// self-calibration": decode steps refresh prefill stats).
+    pub fn decay(&mut self, factor: f64) {
+        for row in &mut self.norm_sums {
+            for v in row.iter_mut() {
+                *v *= factor;
+            }
+        }
+        self.count *= factor;
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.norm_sums.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Index of p in the grid (exact match).
+    fn p_index(&self, p: f64) -> usize {
+        self.ps
+            .iter()
+            .position(|&v| (v - p).abs() < 1e-9)
+            .unwrap_or_else(|| panic!("p={p} not in stats grid {:?}", self.ps))
+    }
+}
+
+/// Diagonal from accumulated norm sums: D_i = ((Σ|x|^p)^{1/p} + λ)^α.
+pub fn diag_from_norm_sums(stats: &ActStats, p: f64, lam: f64, alpha: f64) -> Vec<f32> {
+    let k = stats.p_index(p);
+    stats.norm_sums[k]
+        .iter()
+        .map(|&s| ((s.powf(1.0 / p) + lam).powf(alpha)) as f32)
+        .collect()
+}
+
+/// Diagonal straight from an activation matrix X (d, T) — test-time path.
+pub fn diag_from_x(x: &Mat, p: f64, lam: f64, alpha: f64) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.rows);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let nrm = if (p - 2.0).abs() < 1e-9 {
+            row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+        } else if (p - 1.0).abs() < 1e-9 {
+            row.iter().map(|&v| (v as f64).abs()).sum::<f64>()
+        } else {
+            row.iter()
+                .map(|&v| (v as f64).abs().powf(p))
+                .sum::<f64>()
+                .powf(1.0 / p)
+        };
+        out.push(((nrm + lam).powf(alpha)) as f32);
+    }
+    out
+}
+
+/// Scaled QDQ: Ŵ = Q[W·diag(D)]·diag(D)⁻¹ (Eq. 20).
+///
+/// Perf notes (EXPERIMENTS.md §Perf): fused single memory pass — the
+/// naive scale → QDQ → descale walks the weight three times; here each
+/// flat group is scaled into an L1-resident scratch, its params derived
+/// there, and the dequant-descale written straight back. Column index
+/// is tracked incrementally (no per-element modulo).
+pub fn awq_quantize(w: &Mat, dvec: &[f32], spec: &QuantSpec) -> Mat {
+    assert_eq!(dvec.len(), w.cols, "diagonal length must be d_in");
+    let g = spec.group;
+    assert_eq!(w.data.len() % g, 0);
+    let qmax = spec.qmax();
+    let cols = w.cols;
+    let mut out = w.clone();
+    let mut scaled = vec![0.0f32; g];
+    for (gi, grp) in out.data.chunks_mut(g).enumerate() {
+        let mut col = (gi * g) % cols;
+        // pass 1 (L1 scratch): prescale + the group's min/max
+        for (dst, v) in scaled.iter_mut().zip(grp.iter()) {
+            *dst = *v * dvec[col];
+            col += 1;
+            if col == cols {
+                col = 0;
+            }
+        }
+        let (s, z) = super::formats::group_params(&scaled, qmax, spec.format);
+        let inv_s = 1.0 / s;
+        // pass 2: QDQ + descale, written back in the same sweep
+        let mut col = (gi * g) % cols;
+        for (v, sc) in grp.iter_mut().zip(scaled.iter()) {
+            let q = ((*sc - z) * inv_s).clamp(0.0, qmax).round_ties_even();
+            *v = (q * s + z) / dvec[col];
+            col += 1;
+            if col == cols {
+                col = 0;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{activation_loss, Mat, Rng};
+    use crate::quant::rtn::rtn_quantize;
+
+    fn spec(bits: u32, group: usize) -> QuantSpec {
+        QuantSpec::new(bits, group)
+    }
+
+    #[test]
+    fn alpha_zero_degenerates_to_rtn() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(16, 64, &mut rng);
+        let x = Mat::randn(64, 32, &mut rng);
+        let d = diag_from_x(&x, 2.0, 0.4, 0.0);
+        let a = awq_quantize(&w, &d, &spec(3, 32));
+        let r = rtn_quantize(&w, &spec(3, 32));
+        for (p, q) in a.data.iter().zip(&r.data) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn beats_rtn_on_outlier_activations() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(32, 64, &mut rng);
+        // lognormal channel scales — LLM-style outlier channels
+        let scales: Vec<f32> = (0..64).map(|_| rng.lognormal(0.0, 1.5) as f32).collect();
+        let mut x = Mat::randn(64, 256, &mut rng);
+        for i in 0..64 {
+            for v in x.row_mut(i) {
+                *v *= scales[i];
+            }
+        }
+        let d = diag_from_x(&x, 2.0, 0.4, 0.5);
+        let l_awq = activation_loss(&w, &awq_quantize(&w, &d, &spec(2, 32)), &x);
+        let l_rtn = activation_loss(&w, &rtn_quantize(&w, &spec(2, 32)), &x);
+        assert!(l_awq < l_rtn, "awq {l_awq} vs rtn {l_rtn}");
+    }
+
+    #[test]
+    fn diag_from_sums_matches_diag_from_x() {
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(48, 100, &mut rng);
+        let ps = [0.5f64, 1.0, 2.0, 4.0];
+        let mut stats = ActStats::new(&ps, 48);
+        let sums: Vec<Vec<f64>> = ps
+            .iter()
+            .map(|&p| {
+                (0..48)
+                    .map(|i| x.row(i).iter().map(|&v| (v as f64).abs().powf(p)).sum())
+                    .collect()
+            })
+            .collect();
+        stats.accumulate(&sums, 100.0);
+        for &p in &ps {
+            let a = diag_from_norm_sums(&stats, p, 0.4, 0.5);
+            let b = diag_from_x(&x, p, 0.4, 0.5);
+            for (u, v) in a.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-4, "p={p}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_is_additive() {
+        let ps = [2.0f64];
+        let mut a = ActStats::new(&ps, 4);
+        a.accumulate(&[vec![1.0, 2.0, 3.0, 4.0]], 10.0);
+        a.accumulate(&[vec![1.0, 2.0, 3.0, 4.0]], 10.0);
+        assert_eq!(a.norm_sums[0], vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(a.count, 20.0);
+    }
+
+    #[test]
+    fn decay_halves() {
+        let mut a = ActStats::new(&[2.0], 2);
+        a.accumulate(&[vec![4.0, 8.0]], 2.0);
+        a.decay(0.5);
+        assert_eq!(a.norm_sums[0], vec![2.0, 4.0]);
+        assert_eq!(a.count, 1.0);
+    }
+
+    #[test]
+    fn quantize_preserves_shape_and_finiteness() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(8, 96, &mut rng);
+        let x = Mat::randn(96, 3, &mut rng);
+        let d = diag_from_x(&x, 1.0, 0.4, 0.75);
+        let q = awq_quantize(&w, &d, &spec(2, 16));
+        assert_eq!((q.rows, q.cols), (8, 96));
+        assert!(q.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,169 @@
+//! QDQ format variants — paper App. D.
+//!
+//! Asymmetric min/max (Eq. 25-26, the default), symmetric (Eq. 29-30),
+//! and the range-expansion factor ν (Eq. 27-28, best ≈ 0.95). The
+//! ablation bench `ttq-serve sweep formats` compares them.
+
+/// Scale/zero derivation for a group.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QdqFormat {
+    /// S = (Wmax − Wmin)/qmax, Z = Wmin — Eq. (25-26).
+    Asymmetric,
+    /// S = 2|W|max/qmax, Z = −|W|max — Eq. (29-30); fewer dof, cheaper
+    /// memory, generally worse accuracy.
+    Symmetric,
+    /// Asymmetric with expanded range endpoints W′ (Eq. 27-28).
+    Expanded { nu: f32 },
+}
+
+/// Full quantizer configuration (bits + groupsize + format).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantSpec {
+    pub bits: u32,
+    pub group: usize,
+    pub format: QdqFormat,
+}
+
+impl QuantSpec {
+    pub fn new(bits: u32, group: usize) -> Self {
+        QuantSpec { bits, group, format: QdqFormat::Asymmetric }
+    }
+
+    #[inline]
+    pub fn qmax(&self) -> f32 {
+        ((1u64 << self.bits) - 1) as f32
+    }
+
+    /// Bytes to store one weight element + amortized group params, the
+    /// quantity the paper credits for the GPU speedup (App. B: "qd'd
+    /// bits for W_int and d'd/g parameters for S and Z").
+    pub fn bytes_per_element(&self) -> f64 {
+        let params_per_group = match self.format {
+            QdqFormat::Symmetric => 1.0, // Z redundant (App. D)
+            _ => 2.0,
+        };
+        self.bits as f64 / 8.0 + params_per_group * 2.0 / self.group as f64
+        // group params stored f16 (2 bytes), as deployed kernels do
+    }
+}
+
+/// 4-lane min/max reduction: breaks the serial minss/maxss dependency
+/// chain so the group scan runs at load bandwidth (§Perf).
+#[inline]
+fn minmax(grp: &[f32]) -> (f32, f32) {
+    let mut mn = [f32::MAX; 4];
+    let mut mx = [f32::MIN; 4];
+    let chunks = grp.chunks_exact(4);
+    let rem = chunks.remainder();
+    for c in chunks {
+        for i in 0..4 {
+            mn[i] = mn[i].min(c[i]);
+            mx[i] = mx[i].max(c[i]);
+        }
+    }
+    let (mut amn, mut amx) = (
+        mn[0].min(mn[1]).min(mn[2].min(mn[3])),
+        mx[0].max(mx[1]).max(mx[2].max(mx[3])),
+    );
+    for &v in rem {
+        amn = amn.min(v);
+        amx = amx.max(v);
+    }
+    (amn, amx)
+}
+
+/// Per-group (scale, zero) under the chosen format. Zero-width groups
+/// degenerate to S = 1 so dequant returns the constant Z exactly.
+#[inline]
+pub fn group_params(grp: &[f32], qmax: f32, format: QdqFormat) -> (f32, f32) {
+    match format {
+        QdqFormat::Asymmetric => {
+            let (mn, mx) = minmax(grp);
+            let s = (mx - mn) / qmax;
+            (if s <= 0.0 { 1.0 } else { s }, mn)
+        }
+        QdqFormat::Symmetric => {
+            let mut amax = 0.0f32;
+            for &v in grp {
+                amax = amax.max(v.abs());
+            }
+            let s = 2.0 * amax / qmax;
+            (if s <= 0.0 { 1.0 } else { s }, -amax)
+        }
+        QdqFormat::Expanded { nu } => {
+            let (mn, mx) = minmax(grp);
+            let mx2 = 0.5 * (1.0 + nu) * mx + 0.5 * (1.0 - nu) * mn;
+            let mn2 = 0.5 * (1.0 - nu) * mx + 0.5 * (1.0 + nu) * mn;
+            let s = (mx2 - mn2) / qmax;
+            (if s <= 0.0 { 1.0 } else { s }, mn2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Mat, Rng};
+    use crate::quant::rtn::rtn_quantize;
+
+    #[test]
+    fn asymmetric_params_match_minmax() {
+        let grp = [1.0f32, -3.0, 2.0, 0.5];
+        let (s, z) = group_params(&grp, 7.0, QdqFormat::Asymmetric);
+        assert!((z + 3.0).abs() < 1e-7);
+        assert!((s - 5.0 / 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn symmetric_params() {
+        let grp = [1.0f32, -3.0, 2.0];
+        let (s, z) = group_params(&grp, 15.0, QdqFormat::Symmetric);
+        assert!((s - 6.0 / 15.0).abs() < 1e-6);
+        assert!((z + 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn expanded_nu1_equals_asymmetric() {
+        let grp = [0.2f32, -1.4, 0.9, 2.2];
+        let a = group_params(&grp, 7.0, QdqFormat::Asymmetric);
+        let e = group_params(&grp, 7.0, QdqFormat::Expanded { nu: 1.0 });
+        assert!((a.0 - e.0).abs() < 1e-6 && (a.1 - e.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn expanded_shrinks_range() {
+        let grp = [0.0f32, 1.0];
+        let (s, z) = group_params(&grp, 1.0, QdqFormat::Expanded { nu: 0.9 });
+        assert!(s < 1.0 && z > 0.0);
+    }
+
+    #[test]
+    fn symmetric_never_beats_asymmetric() {
+        let mut rng = Rng::new(9);
+        let w = Mat::randn(8, 64, &mut rng);
+        let e_a = w
+            .sub(&rtn_quantize(&w, &QuantSpec::new(4, 32)))
+            .frob_sq();
+        let mut spec_s = QuantSpec::new(4, 32);
+        spec_s.format = QdqFormat::Symmetric;
+        let e_s = w.sub(&rtn_quantize(&w, &spec_s)).frob_sq();
+        assert!(e_s >= e_a - 1e-9);
+    }
+
+    #[test]
+    fn bytes_per_element_ordering() {
+        // 2-bit must cost half the weight traffic of 4-bit (same group)
+        let b2 = QuantSpec::new(2, 32).bytes_per_element();
+        let b4 = QuantSpec::new(4, 32).bytes_per_element();
+        assert!((b4 - b2 - 0.25).abs() < 1e-9);
+        // larger groups amortize S/Z — Table 2's memory argument
+        assert!(
+            QuantSpec::new(3, 64).bytes_per_element()
+                < QuantSpec::new(3, 32).bytes_per_element()
+        );
+        // symmetric stores one param per group
+        let mut sym = QuantSpec::new(3, 32);
+        sym.format = QdqFormat::Symmetric;
+        assert!(sym.bytes_per_element() < QuantSpec::new(3, 32).bytes_per_element());
+    }
+}

@@ -1,0 +1,132 @@
+//! Low-rank decomposition for TTQ — paper App. E.
+//!
+//! `Ŵ = W_q + BA` with B = U_r Λ_r^{1/2}, A = Λ_r^{1/2} V_r from the
+//! top-r SVD of W (Eq. 31-33). Also ships the alternating refinement of
+//! Eq. 34-35 — the paper found it gave "almost no gain", and our
+//! ablation bench (`ttq-serve sweep lowrank-init`) reproduces that.
+
+use super::formats::QuantSpec;
+use super::rtn::rtn_quantize;
+use crate::linalg::{truncated_svd, Mat};
+
+/// Static low-rank factors for one linear layer.
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    pub b: Mat, // (d_out, r)
+    pub a: Mat, // (r, d_in)
+}
+
+impl LowRank {
+    pub fn rank(&self) -> usize {
+        self.b.cols
+    }
+
+    /// The rank-r product BA (d_out, d_in).
+    pub fn product(&self) -> Mat {
+        self.b.matmul(&self.a)
+    }
+
+    /// Project activations: B (A X) — the O[r(d+d')T] fast path.
+    pub fn project(&self, x: &Mat) -> Mat {
+        self.b.matmul(&self.a.matmul(x))
+    }
+}
+
+/// Top-r principal-component initialization (Eq. 31-33).
+pub fn lowrank_init(w: &Mat, r: usize) -> LowRank {
+    let svd = truncated_svd(w, r, 8);
+    let r = svd.s.len();
+    let mut b = Mat::zeros(w.rows, r);
+    let mut a = Mat::zeros(r, w.cols);
+    for j in 0..r {
+        let sq = svd.s[j].max(0.0).sqrt();
+        for i in 0..w.rows {
+            *b.at_mut(i, j) = svd.u.at(i, j) * sq;
+        }
+        for c in 0..w.cols {
+            *a.at_mut(j, c) = sq * svd.vt.at(j, c);
+        }
+    }
+    LowRank { b, a }
+}
+
+/// Quantization-aware alternating refinement (Eq. 34-35):
+///   B⁽ᵏ⁾A⁽ᵏ⁾ = svd_r[W − W_q⁽ᵏ⁾];  W_q⁽ᵏ⁺¹⁾ = Q[W − B⁽ᵏ⁾A⁽ᵏ⁾].
+pub fn alternating_refine(
+    w: &Mat,
+    r: usize,
+    spec: &QuantSpec,
+    iters: usize,
+) -> (LowRank, Mat) {
+    let mut lr = lowrank_init(w, r);
+    let mut wq = rtn_quantize(&w.sub(&lr.product()), spec);
+    for _ in 0..iters {
+        let resid = w.sub(&wq);
+        lr = lowrank_init(&resid, r);
+        wq = rtn_quantize(&w.sub(&lr.product()), spec);
+    }
+    (lr, wq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    #[test]
+    fn init_matches_truncated_energy() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(24, 40, &mut rng);
+        let lr = lowrank_init(&w, 8);
+        let resid = w.sub(&lr.product());
+        // residual energy strictly below total (top-8 captures something)
+        assert!(resid.frob_sq() < w.frob_sq() * 0.95);
+    }
+
+    #[test]
+    fn ba_shapes() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(16, 48, &mut rng);
+        let lr = lowrank_init(&w, 4);
+        assert_eq!((lr.b.rows, lr.b.cols), (16, 4));
+        assert_eq!((lr.a.rows, lr.a.cols), (4, 48));
+        assert_eq!(lr.rank(), 4);
+    }
+
+    #[test]
+    fn project_equals_product_matmul() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(12, 20, &mut rng);
+        let x = Mat::randn(20, 7, &mut rng);
+        let lr = lowrank_init(&w, 3);
+        let fast = lr.project(&x);
+        let slow = lr.product().matmul(&x);
+        for (a, b) in fast.data.iter().zip(&slow.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn full_rank_init_near_exact() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(10, 10, &mut rng);
+        let lr = lowrank_init(&w, 10);
+        let rel = w.sub(&lr.product()).frob_sq() / w.frob_sq();
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn refine_does_not_increase_error() {
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(16, 64, &mut rng);
+        let spec = QuantSpec::new(2, 32);
+        let lr0 = lowrank_init(&w, 8);
+        let wq0 = rtn_quantize(&w.sub(&lr0.product()), &spec);
+        let e0 = w.sub(&wq0.add(&lr0.product())).frob_sq();
+        let (lr1, wq1) = alternating_refine(&w, 8, &spec, 3);
+        let e1 = w.sub(&wq1.add(&lr1.product())).frob_sq();
+        // paper: "almost no gain" — allow equality within 5% tolerance,
+        // but it must not blow up.
+        assert!(e1 <= e0 * 1.05, "refined {e1} vs init {e0}");
+    }
+}

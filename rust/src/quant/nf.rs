@@ -1,0 +1,191 @@
+//! Non-uniform (NormalFloat) quantization — the NF4-style format the
+//! paper's App. D points to (Dettmers et al. 2023).
+//!
+//! Levels are placed at the quantiles of a standard normal so that,
+//! for Gaussian-ish weight groups, every code is used equally often.
+//! The group is scaled by its absmax, mapped through the codebook by
+//! nearest-level search, and dequantized as `code_value * absmax`.
+
+use crate::linalg::Mat;
+
+/// Inverse standard-normal CDF (Acklam's rational approximation —
+/// |ε| < 1.15e-9, far below f32 resolution).
+pub fn norm_ppf(p: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&p));
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -norm_ppf(1.0 - p)
+    }
+}
+
+/// NFq codebook: 2^bits levels at normal quantiles, normalized to
+/// [-1, 1], symmetric-ish with an exact zero (as NF4 does).
+pub fn nf_codebook(bits: u32) -> Vec<f32> {
+    let n = 1usize << bits;
+    // Quantile positions i/(n-1) mapped through Φ⁻¹ with clamped tails.
+    let lo = 1.0 / (2.0 * n as f64);
+    let mut levels: Vec<f64> = (0..n)
+        .map(|i| {
+            let p = lo + (1.0 - 2.0 * lo) * i as f64 / (n - 1) as f64;
+            norm_ppf(p)
+        })
+        .collect();
+    let max = levels.iter().cloned().fold(0.0f64, |m, v| m.max(v.abs()));
+    for v in levels.iter_mut() {
+        *v /= max;
+    }
+    // force an exact zero at the nearest-to-zero level (NF4 trick)
+    let zi = levels
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    levels[zi] = 0.0;
+    levels.into_iter().map(|v| v as f32).collect()
+}
+
+/// Groupwise NF QDQ of a flat slice (absmax scaling per group).
+pub fn nf_quantize_inplace(data: &mut [f32], bits: u32, group: usize) {
+    assert_eq!(data.len() % group, 0);
+    let cb = nf_codebook(bits);
+    for grp in data.chunks_mut(group) {
+        let mut absmax = 0.0f32;
+        for v in grp.iter() {
+            absmax = absmax.max(v.abs());
+        }
+        if absmax == 0.0 {
+            continue;
+        }
+        let inv = 1.0 / absmax;
+        for v in grp.iter_mut() {
+            let t = *v * inv;
+            // nearest level (codebook is sorted ascending)
+            let mut best = 0usize;
+            let mut bd = f32::MAX;
+            for (i, &c) in cb.iter().enumerate() {
+                let d = (t - c).abs();
+                if d < bd {
+                    bd = d;
+                    best = i;
+                }
+            }
+            *v = cb[best] * absmax;
+        }
+    }
+}
+
+/// Matrix wrapper mirroring [`super::rtn::rtn_quantize`].
+pub fn nf_quantize(w: &Mat, bits: u32, group: usize) -> Mat {
+    let mut out = w.clone();
+    nf_quantize_inplace(&mut out.data, bits, group);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::quant::{rtn_quantize, QuantSpec};
+
+    #[test]
+    fn ppf_matches_known_quantiles() {
+        assert!((norm_ppf(0.5)).abs() < 1e-9);
+        assert!((norm_ppf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((norm_ppf(0.025) + 1.959964).abs() < 1e-4);
+        assert!((norm_ppf(0.8413) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn codebook_properties() {
+        for bits in [2u32, 3, 4] {
+            let cb = nf_codebook(bits);
+            assert_eq!(cb.len(), 1 << bits);
+            // sorted ascending, spans [-1, 1], contains exact zero
+            for w in cb.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!((cb[0] + 1.0).abs() < 1e-6);
+            assert!((cb[cb.len() - 1] - 1.0).abs() < 1e-6);
+            assert!(cb.iter().any(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn nf4_beats_symmetric_uniform_on_gaussian_weights() {
+        // The reason NF4 exists: for normal weights it wastes no codes.
+        // Fair baseline = symmetric uniform (same 1 param per group).
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(32, 64, &mut rng);
+        let e_nf = w.sub(&nf_quantize(&w, 4, 64)).frob_sq();
+        let mut spec = QuantSpec::new(4, 64);
+        spec.format = crate::quant::QdqFormat::Symmetric;
+        let e_sym = w.sub(&rtn_quantize(&w, &spec)).frob_sq();
+        assert!(e_nf < e_sym, "nf4 {e_nf} vs symmetric uniform {e_sym}");
+    }
+
+    #[test]
+    fn exact_zero_preserved() {
+        let mut data = vec![0.0f32; 16];
+        data[3] = 1.0; // absmax anchor
+        nf_quantize_inplace(&mut data, 4, 16);
+        assert_eq!(data[0], 0.0);
+        assert_eq!(data[5], 0.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(8, 32, &mut rng);
+        let w1 = nf_quantize(&w, 4, 32);
+        let w2 = nf_quantize(&w1, 4, 32);
+        for (a, b) in w1.data.iter().zip(&w2.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn constant_zero_group_untouched() {
+        let mut data = vec![0.0f32; 32];
+        nf_quantize_inplace(&mut data, 4, 32);
+        assert!(data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,241 @@
+//! Online PCA for test-time decomposition — paper App. E's "Test-Time
+//! Decomposition" option: dynamically adapt the low-rank factors B, A
+//! from streaming activations instead of keeping them static.
+//!
+//! Implements Oja's rule (Oja 1982) with Gram–Schmidt re-orthogonal-
+//! ization — the first of the four algorithm families App. E lists
+//! (stochastic gradient / incremental SVD / subspace tracking / online
+//! optimization). The tracker maintains an orthonormal basis U (d×r)
+//! of the top-r subspace of the streaming covariance; the coordinator
+//! can refresh a layer's `LowRank` factors from it between prompts.
+
+use crate::linalg::Mat;
+
+/// Streaming top-r subspace tracker (Oja + deflation via GS).
+pub struct OjaTracker {
+    /// Current orthonormal basis estimate, (d, r).
+    pub basis: Mat,
+    lr: f32,
+    steps: u64,
+}
+
+impl OjaTracker {
+    /// Initialize with an arbitrary (e.g. random or SVD-warmstart) basis.
+    pub fn new(init: Mat, lr: f32) -> Self {
+        let mut t = OjaTracker { basis: init, lr, steps: 0 };
+        t.orthonormalize();
+        t
+    }
+
+    pub fn rank(&self) -> usize {
+        self.basis.cols
+    }
+
+    pub fn dim(&self) -> usize {
+        self.basis.rows
+    }
+
+    /// One Oja update per sample column x (length d):
+    /// U ← orth(U + η · x (xᵀU)).
+    pub fn update(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.dim());
+        let (d, r) = (self.dim(), self.rank());
+        // y = xᵀ U  (r,)
+        let mut y = vec![0.0f32; r];
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.basis.row(i);
+            for (j, yj) in y.iter_mut().enumerate() {
+                *yj += xi * row[j];
+            }
+        }
+        // decayed step size keeps the estimate stable as it converges
+        self.steps += 1;
+        let eta = self.lr / (1.0 + 0.01 * self.steps as f32);
+        for i in 0..d {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.basis.row_mut(i);
+            for (j, &yj) in y.iter().enumerate() {
+                row[j] += eta * xi * yj;
+            }
+        }
+        self.orthonormalize();
+    }
+
+    /// Batch of samples as columns of X (d, T).
+    pub fn update_batch(&mut self, x: &Mat) {
+        assert_eq!(x.rows, self.dim());
+        let mut col = vec![0.0f32; x.rows];
+        for t in 0..x.cols {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = x.at(i, t);
+            }
+            self.update(&col);
+        }
+    }
+
+    /// Energy of a sample captured by the current subspace:
+    /// ‖Uᵀx‖² / ‖x‖² ∈ [0, 1].
+    pub fn captured_energy(&self, x: &[f32]) -> f64 {
+        let r = self.rank();
+        let mut proj = vec![0.0f64; r];
+        let mut total = 0.0f64;
+        for (i, &xi) in x.iter().enumerate() {
+            total += (xi as f64).powi(2);
+            let row = self.basis.row(i);
+            for (j, p) in proj.iter_mut().enumerate() {
+                *p += xi as f64 * row[j] as f64;
+            }
+        }
+        if total == 0.0 {
+            return 0.0;
+        }
+        proj.iter().map(|p| p * p).sum::<f64>() / total
+    }
+
+    fn orthonormalize(&mut self) {
+        let (d, r) = (self.dim(), self.rank());
+        for j in 0..r {
+            for k in 0..j {
+                let mut dot = 0.0f64;
+                for i in 0..d {
+                    dot += self.basis.at(i, k) as f64 * self.basis.at(i, j) as f64;
+                }
+                for i in 0..d {
+                    *self.basis.at_mut(i, j) -= dot as f32 * self.basis.at(i, k);
+                }
+            }
+            let mut nrm = 0.0f64;
+            for i in 0..d {
+                nrm += (self.basis.at(i, j) as f64).powi(2);
+            }
+            let nrm = nrm.sqrt().max(1e-12) as f32;
+            for i in 0..d {
+                *self.basis.at_mut(i, j) /= nrm;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    /// Samples concentrated in a known low-dim subspace + noise.
+    fn sample(planted: &Mat, rng: &mut Rng, noise: f32) -> Vec<f32> {
+        let (d, k) = (planted.rows, planted.cols);
+        let coeffs: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 3.0).collect();
+        (0..d)
+            .map(|i| {
+                let mut v = rng.normal() as f32 * noise;
+                for (j, &c) in coeffs.iter().enumerate() {
+                    v += planted.at(i, j) * c;
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_planted_subspace() {
+        let mut rng = Rng::new(1);
+        let d = 32;
+        let mut planted = Mat::randn(d, 2, &mut rng);
+        // normalize planted columns
+        for j in 0..2 {
+            let n: f32 = (0..d).map(|i| planted.at(i, j).powi(2)).sum::<f32>().sqrt();
+            for i in 0..d {
+                *planted.at_mut(i, j) /= n;
+            }
+        }
+        let mut tracker = OjaTracker::new(Mat::randn(d, 2, &mut rng), 0.05);
+        for _ in 0..600 {
+            let x = sample(&planted, &mut rng, 0.05);
+            tracker.update(&x);
+        }
+        // fresh samples should be ~fully captured
+        let mut acc = 0.0;
+        for _ in 0..50 {
+            let x = sample(&planted, &mut rng, 0.0);
+            acc += tracker.captured_energy(&x);
+        }
+        let mean = acc / 50.0;
+        assert!(mean > 0.95, "captured energy {mean}");
+    }
+
+    #[test]
+    fn basis_stays_orthonormal() {
+        let mut rng = Rng::new(2);
+        let mut t = OjaTracker::new(Mat::randn(16, 3, &mut rng), 0.1);
+        for _ in 0..100 {
+            let x: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+            t.update(&x);
+        }
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut dot = 0.0f64;
+                for k in 0..16 {
+                    dot += t.basis.at(k, i) as f64 * t.basis.at(k, j) as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "U[{i}]·U[{j}]={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn adapts_after_subspace_shift() {
+        let mut rng = Rng::new(3);
+        let d = 24;
+        let norm_cols = |m: &mut Mat| {
+            for j in 0..m.cols {
+                let n: f32 =
+                    (0..d).map(|i| m.at(i, j).powi(2)).sum::<f32>().sqrt();
+                for i in 0..d {
+                    *m.at_mut(i, j) /= n;
+                }
+            }
+        };
+        let mut p1 = Mat::randn(d, 2, &mut rng);
+        let mut p2 = Mat::randn(d, 2, &mut rng);
+        norm_cols(&mut p1);
+        norm_cols(&mut p2);
+        let mut t = OjaTracker::new(Mat::randn(d, 2, &mut rng), 0.08);
+        for _ in 0..500 {
+            let x = sample(&p1, &mut rng, 0.05);
+            t.update(&x);
+        }
+        let e_before: f64 = (0..20)
+            .map(|_| t.captured_energy(&sample(&p2, &mut rng, 0.0)))
+            .sum::<f64>()
+            / 20.0;
+        for _ in 0..1500 {
+            let x = sample(&p2, &mut rng, 0.05);
+            t.update(&x);
+        }
+        let e_after: f64 = (0..20)
+            .map(|_| t.captured_energy(&sample(&p2, &mut rng, 0.0)))
+            .sum::<f64>()
+            / 20.0;
+        assert!(
+            e_after > e_before + 0.1 && e_after > 0.8,
+            "no adaptation: {e_before} -> {e_after}"
+        );
+    }
+
+    #[test]
+    fn captured_energy_bounds() {
+        let mut rng = Rng::new(4);
+        let t = OjaTracker::new(Mat::randn(8, 2, &mut rng), 0.1);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let e = t.captured_energy(&x);
+        assert!((0.0..=1.0 + 1e-6).contains(&e));
+        assert_eq!(t.captured_energy(&vec![0.0; 8]), 0.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Integer weight packing + memory-traffic accounting.
+//!
+//! The paper's speedup mechanism (App. B/H): quantization pays off on
+//! GPUs because the *weight traffic* HBM→SMEM shrinks from 16 bits to q
+//! bits per element ("Qwen3-32B needs 168MB ... for FP16 query
+//! projection"). We pack codes into u32 words exactly like deployed
+//! int_matmul kernels, and expose the byte accounting the roofline
+//! model (Tables 4-8) consumes. A fused dequant-matmul over the packed
+//! format doubles as the CPU stand-in for `marlin_gemm`.
+
+use super::rtn::QuantizedInt;
+use crate::linalg::Mat;
+
+/// Bit-packed quantized tensor (row-major element order).
+#[derive(Clone, Debug)]
+pub struct Packed {
+    pub words: Vec<u32>,
+    pub bits: u32,
+    pub n: usize, // element count
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+    pub group: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Pack ≤8-bit codes, little-endian within each u32 word. Codes may
+/// straddle word boundaries (dense packing — 3-bit really is 3 bits).
+pub fn pack(q: &QuantizedInt) -> Packed {
+    let bits = q.spec.bits;
+    let n = q.codes.len();
+    let total_bits = n * bits as usize;
+    let mut words = vec![0u32; total_bits.div_ceil(32)];
+    for (i, &code) in q.codes.iter().enumerate() {
+        let bit = i * bits as usize;
+        let wi = bit / 32;
+        let off = bit % 32;
+        words[wi] |= (code as u32) << off;
+        if off + bits as usize > 32 {
+            words[wi + 1] |= (code as u32) >> (32 - off);
+        }
+    }
+    Packed {
+        words,
+        bits,
+        n,
+        scales: q.scales.clone(),
+        zeros: q.zeros.clone(),
+        group: q.spec.group,
+        rows: q.rows,
+        cols: q.cols,
+    }
+}
+
+/// Unpack one element.
+#[inline]
+pub fn unpack_at(p: &Packed, i: usize) -> u8 {
+    let bits = p.bits as usize;
+    let bit = i * bits;
+    let wi = bit / 32;
+    let off = bit % 32;
+    let mask = (1u32 << bits) - 1;
+    let mut v = p.words[wi] >> off;
+    if off + bits > 32 {
+        v |= p.words[wi + 1] << (32 - off);
+    }
+    (v & mask) as u8
+}
+
+/// Unpack the whole tensor back to codes (test helper).
+pub fn unpack(p: &Packed) -> Vec<u8> {
+    (0..p.n).map(|i| unpack_at(p, i)).collect()
+}
+
+/// Total bytes moved to read this weight: packed codes + f16 params.
+/// This is the traffic term of the roofline model.
+pub fn weight_bytes(p: &Packed) -> usize {
+    p.words.len() * 4 + (p.scales.len() + p.zeros.len()) * 2
+}
+
+/// FP16 baseline bytes for the same tensor.
+pub fn fp16_bytes(rows: usize, cols: usize) -> usize {
+    rows * cols * 2
+}
+
+/// Fused dequantize-and-matmul over the packed weight: `Y = Ŵ X` with
+/// X (d_in, T). The CPU analogue of the paper's `marlin_gemm` prologue
+/// fusion — dequant happens in registers per group, never materializing
+/// the f32 weight. Used by the e2e decode bench.
+///
+/// Perf notes (EXPERIMENTS.md §Perf): when groups align with rows
+/// (d_in % g == 0, the deployed layout) the group scale/zero and the
+/// `i/g` division are hoisted out of the element loop, and the decode
+/// case T = 1 accumulates into a register instead of a row slice.
+pub fn packed_matmul(p: &Packed, x: &Mat) -> Mat {
+    assert_eq!(p.cols, x.rows, "dim mismatch");
+    let (d_out, d_in, t) = (p.rows, p.cols, x.cols);
+    let g = p.group;
+    let mut y = Mat::zeros(d_out, t);
+    let bits = p.bits as usize;
+    let mask = (1u32 << bits) - 1;
+
+    #[inline(always)]
+    fn code_at(words: &[u32], bits: usize, mask: u32, i: usize) -> u32 {
+        let bit = i * bits;
+        let wi = bit / 32;
+        let off = bit % 32;
+        let mut v = words[wi] >> off;
+        if off + bits > 32 {
+            v |= words[wi + 1] << (32 - off);
+        }
+        v & mask
+    }
+
+    if d_in % g == 0 {
+        let groups_per_row = d_in / g;
+        for r in 0..d_out {
+            if t == 1 {
+                // decode fast path: scalar accumulator, group-hoisted params
+                let mut acc = 0.0f32;
+                for bg in 0..groups_per_row {
+                    let gi = r * groups_per_row + bg;
+                    let (s, z) = (p.scales[gi], p.zeros[gi]);
+                    let base = gi * g;
+                    for j in 0..g {
+                        let w = code_at(&p.words, bits, mask, base + j) as f32
+                            * s + z;
+                        acc += w * x.data[bg * g + j];
+                    }
+                }
+                y.data[r] = acc;
+            } else {
+                let yrow = &mut y.data[r * t..(r + 1) * t];
+                for bg in 0..groups_per_row {
+                    let gi = r * groups_per_row + bg;
+                    let (s, z) = (p.scales[gi], p.zeros[gi]);
+                    let base = gi * g;
+                    for j in 0..g {
+                        let w = code_at(&p.words, bits, mask, base + j) as f32
+                            * s + z;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let c = bg * g + j;
+                        let xrow = &x.data[c * t..(c + 1) * t];
+                        for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                            *yv += w * xv;
+                        }
+                    }
+                }
+            }
+        }
+        return y;
+    }
+
+    // general flat-grouped fallback (groups may span rows)
+    for r in 0..d_out {
+        let yrow = &mut y.data[r * t..(r + 1) * t];
+        for c in 0..d_in {
+            let i = r * d_in + c;
+            let gi = i / g;
+            let w =
+                code_at(&p.words, bits, mask, i) as f32 * p.scales[gi] + p.zeros[gi];
+            if w == 0.0 {
+                continue;
+            }
+            let xrow = &x.data[c * t..(c + 1) * t];
+            for (yv, xv) in yrow.iter_mut().zip(xrow) {
+                *yv += w * xv;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::quant::formats::QuantSpec;
+    use crate::quant::rtn::{rtn_dequantize, rtn_quantize_int};
+
+    #[test]
+    fn pack_unpack_roundtrip_all_bits() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(8, 64, &mut rng);
+        for bits in [2u32, 3, 4, 5, 8] {
+            let qi = rtn_quantize_int(&w, &QuantSpec::new(bits, 32));
+            let p = pack(&qi);
+            assert_eq!(unpack(&p), qi.codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn packed_size_is_dense() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(16, 64, &mut rng); // 1024 elements
+        let qi = rtn_quantize_int(&w, &QuantSpec::new(3, 32));
+        let p = pack(&qi);
+        // 1024 * 3 bits = 3072 bits = 96 words
+        assert_eq!(p.words.len(), 96);
+    }
+
+    #[test]
+    fn traffic_ratio_matches_bits() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(64, 128, &mut rng);
+        let q4 = pack(&rtn_quantize_int(&w, &QuantSpec::new(4, 32)));
+        let q2 = pack(&rtn_quantize_int(&w, &QuantSpec::new(2, 32)));
+        let fp = fp16_bytes(64, 128) as f64;
+        let r4 = weight_bytes(&q4) as f64 / fp;
+        let r2 = weight_bytes(&q2) as f64 / fp;
+        // 4-bit ≈ 1/4 of fp16 + param overhead; 2-bit ≈ 1/8 + overhead
+        assert!(r4 < 0.35 && r4 > 0.24, "r4 = {r4}");
+        assert!(r2 < 0.22 && r2 > 0.12, "r2 = {r2}");
+        // paper App. H: 2-bit "theoretically doubling" over 4-bit
+        assert!(r2 < r4);
+    }
+
+    #[test]
+    fn packed_matmul_matches_dequant_matmul() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(24, 32, &mut rng);
+        let x = Mat::randn(32, 7, &mut rng);
+        for bits in [2u32, 3, 4, 5] {
+            let qi = rtn_quantize_int(&w, &QuantSpec::new(bits, 16));
+            let p = pack(&qi);
+            let got = packed_matmul(&p, &x);
+            let want = rtn_dequantize(&qi).matmul(&x);
+            for (a, b) in got.data.iter().zip(&want.data) {
+                assert!((a - b).abs() < 1e-3, "bits={bits}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn word_straddling_codes_survive() {
+        // 3-bit codes cross u32 boundaries at element 10 (bits 30..33):
+        // craft codes that exercise the straddle path.
+        let qi = QuantizedInt {
+            codes: (0..64u8).map(|i| i % 8).collect(),
+            scales: vec![1.0; 2],
+            zeros: vec![0.0; 2],
+            rows: 2,
+            cols: 32,
+            spec: QuantSpec::new(3, 32),
+        };
+        let p = pack(&qi);
+        assert_eq!(unpack(&p), qi.codes);
+    }
+}

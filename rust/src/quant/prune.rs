@@ -1,0 +1,179 @@
+//! Test-time activation-aware pruning — the μ-MoE companion technique
+//! the paper builds on (Koike-Akino et al. 2025b) and plans to
+//! integrate ("we plan to integrate test-time pruning and
+//! decomposition into TTQ", §3).
+//!
+//! Importance score is Wanda-style `|W_ij| · D_j` using the *same*
+//! diagonal D that TTQ already computes from the live activations —
+//! the paper's App. E observation that "both use similar diagonal
+//! correlation matrix, we do not need extra computation for D".
+//! Supports unstructured and N:M semi-structured sparsity, and the
+//! combined prune-then-quantize test-time pipeline.
+
+use super::awq::awq_quantize;
+use super::formats::QuantSpec;
+use crate::linalg::Mat;
+
+/// Sparsity pattern.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sparsity {
+    /// Keep the top-(1−ratio) fraction of entries per row.
+    Unstructured { ratio: f64 },
+    /// N of every M consecutive entries are kept (hardware friendly).
+    NofM { n: usize, m: usize },
+}
+
+/// Activation-aware prune: zero the lowest-importance weights.
+/// `dvec` is the activation diagonal (length d_in).
+pub fn prune(w: &Mat, dvec: &[f32], sparsity: Sparsity) -> Mat {
+    assert_eq!(dvec.len(), w.cols);
+    let mut out = w.clone();
+    match sparsity {
+        Sparsity::Unstructured { ratio } => {
+            let keep = ((1.0 - ratio) * w.cols as f64).round() as usize;
+            let mut idx: Vec<usize> = (0..w.cols).collect();
+            for r in 0..w.rows {
+                let row = &w.data[r * w.cols..(r + 1) * w.cols];
+                idx.sort_unstable_by(|&a, &b| {
+                    let sa = row[a].abs() * dvec[a];
+                    let sb = row[b].abs() * dvec[b];
+                    sb.partial_cmp(&sa).unwrap()
+                });
+                let orow = &mut out.data[r * w.cols..(r + 1) * w.cols];
+                for &i in &idx[keep..] {
+                    orow[i] = 0.0;
+                }
+            }
+        }
+        Sparsity::NofM { n, m } => {
+            assert!(n <= m && m > 0 && w.cols % m == 0);
+            let mut order: Vec<usize> = (0..m).collect();
+            for r in 0..w.rows {
+                for blk in 0..w.cols / m {
+                    let base = r * w.cols + blk * m;
+                    order.sort_unstable_by(|&a, &b| {
+                        let sa = out.data[base + a].abs() * dvec[blk * m + a];
+                        let sb = out.data[base + b].abs() * dvec[blk * m + b];
+                        sb.partial_cmp(&sa).unwrap()
+                    });
+                    for &i in &order[n..] {
+                        out.data[base + i] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Combined test-time prune + quantize: prune on D, then scaled QDQ of
+/// the surviving weights with the same D (one stats pass for both).
+pub fn prune_then_quantize(
+    w: &Mat,
+    dvec: &[f32],
+    sparsity: Sparsity,
+    spec: &QuantSpec,
+) -> Mat {
+    let pruned = prune(w, dvec, sparsity);
+    awq_quantize(&pruned, dvec, spec)
+}
+
+/// Fraction of zero entries.
+pub fn measured_sparsity(w: &Mat) -> f64 {
+    w.data.iter().filter(|v| **v == 0.0).count() as f64 / w.data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{activation_loss, Rng};
+    use crate::quant::diag_from_x;
+
+    fn outlier_x(d: usize, t: usize, rng: &mut Rng) -> Mat {
+        let scales: Vec<f32> =
+            (0..d).map(|_| rng.lognormal(0.0, 1.5) as f32).collect();
+        let mut x = Mat::randn(d, t, rng);
+        for i in 0..d {
+            for v in x.row_mut(i) {
+                *v *= scales[i];
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn unstructured_hits_target_ratio() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(16, 64, &mut rng);
+        let d = vec![1.0f32; 64];
+        for ratio in [0.25, 0.5, 0.75] {
+            let p = prune(&w, &d, Sparsity::Unstructured { ratio });
+            assert!((measured_sparsity(&p) - ratio).abs() < 0.02, "{ratio}");
+        }
+    }
+
+    #[test]
+    fn nofm_pattern_exact() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(8, 64, &mut rng);
+        let d = vec![1.0f32; 64];
+        let p = prune(&w, &d, Sparsity::NofM { n: 2, m: 4 });
+        assert!((measured_sparsity(&p) - 0.5).abs() < 1e-9);
+        // every 4-block has exactly 2 zeros
+        for r in 0..8 {
+            for blk in 0..16 {
+                let z = (0..4)
+                    .filter(|&i| p.at(r, blk * 4 + i) == 0.0)
+                    .count();
+                assert_eq!(z, 2, "row {r} block {blk}");
+            }
+        }
+    }
+
+    #[test]
+    fn activation_aware_beats_magnitude_only() {
+        // On outlier activations, |W|·D pruning must lose less output
+        // energy than plain |W| pruning — the Wanda/μ-MoE result.
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(32, 64, &mut rng);
+        let x = outlier_x(64, 128, &mut rng);
+        let d_aware = diag_from_x(&x, 2.0, 0.0, 1.0);
+        let d_blind = vec![1.0f32; 64];
+        let s = Sparsity::Unstructured { ratio: 0.5 };
+        let e_aware = activation_loss(&w, &prune(&w, &d_aware, s), &x);
+        let e_blind = activation_loss(&w, &prune(&w, &d_blind, s), &x);
+        assert!(e_aware < e_blind, "aware {e_aware} vs blind {e_blind}");
+    }
+
+    #[test]
+    fn keeps_largest_importance_entries() {
+        let w = Mat::from_vec(1, 4, vec![0.1, -5.0, 0.2, 3.0]);
+        let d = vec![1.0f32; 4];
+        let p = prune(&w, &d, Sparsity::Unstructured { ratio: 0.5 });
+        assert_eq!(p.data, vec![0.0, -5.0, 0.0, 3.0]);
+        // now flip importance through D
+        let d2 = vec![100.0f32, 0.01, 100.0, 0.01];
+        let p2 = prune(&w, &d2, Sparsity::Unstructured { ratio: 0.5 });
+        assert_eq!(p2.data, vec![0.1, 0.0, 0.2, 0.0]);
+    }
+
+    #[test]
+    fn prune_then_quantize_stays_sparse() {
+        // QDQ must not resurrect pruned zeros (zero is representable:
+        // asymmetric groups containing 0 keep it within half a step).
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(8, 64, &mut rng);
+        let x = Mat::randn(64, 16, &mut rng);
+        let d = diag_from_x(&x, 2.0, 0.4, 0.5);
+        let s = Sparsity::NofM { n: 2, m: 4 };
+        let pq = prune_then_quantize(&w, &d, s, &QuantSpec::new(4, 32));
+        // QDQ reproduces zero to within half a quantization step; for
+        // N(0,1) groups at 4 bits that is ≈ range/(2·15) ≈ 0.15-0.2.
+        let near_zero = pq.data.iter().filter(|v| v.abs() < 0.2).count();
+        assert!(
+            near_zero as f64 / pq.data.len() as f64 > 0.45,
+            "only {near_zero}/{} near-zero",
+            pq.data.len()
+        );
+    }
+}

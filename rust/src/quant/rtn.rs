@@ -1,0 +1,206 @@
+//! Round-to-nearest groupwise QDQ — paper Eq. (1) / App. B.
+//!
+//! Hot path of the whole stack: every method (AWQ/TTQ/GPTQ grouping
+//! aside) funnels through this. The inner loop is written allocation-
+//! free over the flat weight slice; see EXPERIMENTS.md §Perf for the
+//! optimization history.
+
+use super::formats::{group_params, QuantSpec};
+use crate::linalg::Mat;
+
+/// QDQ in one shot: returns the dequantized weight (same shape).
+pub fn rtn_quantize(w: &Mat, spec: &QuantSpec) -> Mat {
+    let mut out = w.clone();
+    rtn_quantize_inplace(&mut out.data, spec);
+    out
+}
+
+/// In-place flat QDQ over any f32 slice (numel must divide by group).
+///
+/// Perf notes (EXPERIMENTS.md §Perf): `round_ties_even` instead of
+/// `round` (the latter is a libm call on x86 — round-half-away has no
+/// single instruction; ties-even is `roundss` and also matches the
+/// jnp reference's banker's rounding), clamp-before-round so the whole
+/// body vectorizes, zero allocation.
+pub fn rtn_quantize_inplace(data: &mut [f32], spec: &QuantSpec) {
+    let g = spec.group;
+    assert_eq!(
+        data.len() % g,
+        0,
+        "numel {} not divisible by groupsize {g}",
+        data.len()
+    );
+    let qmax = spec.qmax();
+    for grp in data.chunks_mut(g) {
+        let (s, z) = group_params(grp, qmax, spec.format);
+        let inv_s = 1.0 / s;
+        for v in grp.iter_mut() {
+            let q = ((*v - z) * inv_s).clamp(0.0, qmax).round_ties_even();
+            *v = q * s + z;
+        }
+    }
+}
+
+/// Integer codes + per-group scale/zero — the deployable representation
+/// consumed by [`super::pack`] (int_matmul kernels in the paper).
+#[derive(Clone, Debug)]
+pub struct QuantizedInt {
+    pub codes: Vec<u8>,    // one code per element (≤ 8 bits)
+    pub scales: Vec<f32>,  // per group
+    pub zeros: Vec<f32>,   // per group
+    pub rows: usize,
+    pub cols: usize,
+    pub spec: QuantSpec,
+}
+
+pub fn rtn_quantize_int(w: &Mat, spec: &QuantSpec) -> QuantizedInt {
+    let g = spec.group;
+    assert!(spec.bits <= 8, "QuantizedInt stores u8 codes");
+    assert_eq!(w.data.len() % g, 0);
+    let qmax = spec.qmax();
+    let n_groups = w.data.len() / g;
+    let mut codes = vec![0u8; w.data.len()];
+    let mut scales = Vec::with_capacity(n_groups);
+    let mut zeros = Vec::with_capacity(n_groups);
+    for (gi, grp) in w.data.chunks(g).enumerate() {
+        let (s, z) = group_params(grp, qmax, spec.format);
+        let inv_s = 1.0 / s;
+        for (j, v) in grp.iter().enumerate() {
+            codes[gi * g + j] =
+                ((*v - z) * inv_s).clamp(0.0, qmax).round_ties_even() as u8;
+        }
+        scales.push(s);
+        zeros.push(z);
+    }
+    QuantizedInt {
+        codes,
+        scales,
+        zeros,
+        rows: w.rows,
+        cols: w.cols,
+        spec: spec.clone(),
+    }
+}
+
+/// Dequantize integer codes back to f32 (the G⁻ operator of Eq. 1).
+pub fn rtn_dequantize(q: &QuantizedInt) -> Mat {
+    let g = q.spec.group;
+    let mut data = vec![0.0f32; q.codes.len()];
+    for (gi, chunk) in data.chunks_mut(g).enumerate() {
+        let s = q.scales[gi];
+        let z = q.zeros[gi];
+        for (j, v) in chunk.iter_mut().enumerate() {
+            *v = q.codes[gi * g + j] as f32 * s + z;
+        }
+    }
+    Mat::from_vec(q.rows, q.cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::quant::formats::QdqFormat;
+
+    fn spec(bits: u32, group: usize) -> QuantSpec {
+        QuantSpec { bits, group, format: QdqFormat::Asymmetric }
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(16, 64, &mut rng);
+        let what = rtn_quantize(&w, &spec(3, 32));
+        for (grp_w, grp_q) in w.data.chunks(32).zip(what.data.chunks(32)) {
+            let mx = grp_w.iter().cloned().fold(f32::MIN, f32::max);
+            let mn = grp_w.iter().cloned().fold(f32::MAX, f32::min);
+            let s = (mx - mn) / 7.0;
+            for (a, b) in grp_w.iter().zip(grp_q) {
+                assert!((a - b).abs() <= s / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(8, 64, &mut rng);
+        let w1 = rtn_quantize(&w, &spec(4, 32));
+        let w2 = rtn_quantize(&w1, &spec(4, 32));
+        for (a, b) in w1.data.iter().zip(&w2.data) {
+            assert!((a - b).abs() < 2e-6);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(16, 64, &mut rng);
+        let errs: Vec<f64> = [2, 3, 4, 5, 8]
+            .iter()
+            .map(|&b| w.sub(&rtn_quantize(&w, &spec(b, 32))).frob_sq())
+            .collect();
+        for pair in errs.windows(2) {
+            assert!(pair[0] > pair[1]);
+        }
+    }
+
+    #[test]
+    fn smaller_groups_less_error() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(16, 64, &mut rng);
+        let errs: Vec<f64> = [8usize, 32, 128, 512]
+            .iter()
+            .map(|&g| w.sub(&rtn_quantize(&w, &spec(3, g))).frob_sq())
+            .collect();
+        for pair in errs.windows(2) {
+            assert!(pair[0] <= pair[1] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_group_exact() {
+        let w = Mat::from_vec(2, 32, vec![0.37; 64]);
+        let what = rtn_quantize(&w, &spec(3, 32));
+        for v in &what.data {
+            assert!((v - 0.37).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn int_roundtrip_matches_qdq() {
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(8, 64, &mut rng);
+        let s = spec(4, 32);
+        let what = rtn_quantize(&w, &s);
+        let qi = rtn_quantize_int(&w, &s);
+        let deq = rtn_dequantize(&qi);
+        for (a, b) in what.data.iter().zip(&deq.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn codes_within_bit_range() {
+        let mut rng = Rng::new(6);
+        let w = Mat::randn(4, 64, &mut rng);
+        for bits in [2u32, 3, 4, 5] {
+            let qi = rtn_quantize_int(&w, &spec(bits, 32));
+            let top = (1u32 << bits) - 1;
+            assert!(qi.codes.iter().all(|&c| (c as u32) <= top));
+        }
+    }
+
+    #[test]
+    fn group_spanning_rows_is_flat() {
+        // g = 64 over a (8, 16) weight: groups run across rows.
+        let mut rng = Rng::new(7);
+        let w = Mat::randn(8, 16, &mut rng);
+        let what = rtn_quantize(&w, &spec(3, 64));
+        assert_eq!((what.rows, what.cols), (8, 16));
+        // flattened QDQ equals a manual per-64-chunk QDQ
+        let mut manual = w.data.clone();
+        rtn_quantize_inplace(&mut manual, &spec(3, 64));
+        assert_eq!(what.data, manual);
+    }
+}

@@ -1,0 +1,241 @@
+//! TTQ — the paper's contribution (§2): online activation-aware
+//! quantization at inference time.
+//!
+//! Given the *live* activations of the incoming prompt (either raw X or
+//! the norm sums collected by the stats artifact), compute D on the fly
+//! and quantize `Ŵ = Q[(W − BA)·D]·D⁻¹ (+ BA)`. Zero offline
+//! calibration; re-runs per prompt, which is affordable because the
+//! overhead ratio ρ = O[1/d′ + 3/T] → 0 (Eq. 3) — measured by
+//! `benches/ttq_overhead.rs`.
+
+use super::awq::{awq_quantize, diag_from_norm_sums, diag_from_x, ActStats};
+use super::formats::QuantSpec;
+use super::lowrank::{lowrank_init, LowRank};
+use crate::linalg::Mat;
+
+/// The constant hyperparameters (α, λ, p) the paper keeps fixed at test
+/// time (App. F: α ≈ 0.5, λ ≈ 0.4, p = 2).
+#[derive(Clone, Copy, Debug)]
+pub struct TtqHyper {
+    pub p: f64,
+    pub lam: f64,
+    pub alpha: f64,
+}
+
+impl Default for TtqHyper {
+    fn default() -> Self {
+        TtqHyper { p: 2.0, lam: 0.4, alpha: 0.5 }
+    }
+}
+
+/// Result of a TTQ pass over one linear layer.
+#[derive(Clone, Debug)]
+pub struct TtqQuantized {
+    /// Dequantized effective weight (W_q, or W_q + BA when rank > 0) —
+    /// what the plain forward artifact consumes.
+    pub weight: Mat,
+    /// The low-rank factors, if any (kept for the fast serving path).
+    pub lowrank: Option<LowRank>,
+}
+
+/// Rank-0 TTQ from live activations X (d_in, T).
+pub fn ttq_quantize(w: &Mat, x: &Mat, spec: &QuantSpec, hp: &TtqHyper) -> TtqQuantized {
+    let d = diag_from_x(x, hp.p, hp.lam, hp.alpha);
+    TtqQuantized { weight: awq_quantize(w, &d, spec), lowrank: None }
+}
+
+/// Rank-0 TTQ from accumulated norm sums (the stats-artifact path used
+/// by the coordinator: pass 1 collects Σ|x|^p, rust quantizes, pass 2
+/// runs the plain artifact with the substituted weights).
+pub fn ttq_quantize_from_stats(
+    w: &Mat,
+    stats: &ActStats,
+    spec: &QuantSpec,
+    hp: &TtqHyper,
+) -> TtqQuantized {
+    let d = diag_from_norm_sums(stats, hp.p, hp.lam, hp.alpha);
+    TtqQuantized { weight: awq_quantize(w, &d, spec), lowrank: None }
+}
+
+/// TTQ with rank-r low-rank compensation (App. E):
+/// `Ŵ = Q[(W − BA)·D]·D⁻¹ + BA`, B/A static top-r principal components.
+pub fn ttq_quantize_lowrank(
+    w: &Mat,
+    x: &Mat,
+    r: usize,
+    spec: &QuantSpec,
+    hp: &TtqHyper,
+) -> TtqQuantized {
+    if r == 0 {
+        return ttq_quantize(w, x, spec, hp);
+    }
+    let lr = lowrank_init(w, r);
+    let d = diag_from_x(x, hp.p, hp.lam, hp.alpha);
+    let wq = awq_quantize(&w.sub(&lr.product()), &d, spec);
+    TtqQuantized { weight: wq.add(&lr.product()), lowrank: Some(lr) }
+}
+
+/// Low-rank variant over accumulated stats with *precomputed* factors
+/// (the factors are static per App. E — computing the SVD per prompt
+/// would defeat the negligible-overhead claim, so the coordinator does
+/// it once at model load).
+pub fn ttq_quantize_lowrank_from_stats(
+    w: &Mat,
+    stats: &ActStats,
+    lr: &LowRank,
+    spec: &QuantSpec,
+    hp: &TtqHyper,
+) -> TtqQuantized {
+    let d = diag_from_norm_sums(stats, hp.p, hp.lam, hp.alpha);
+    let wq = awq_quantize(&w.sub(&lr.product()), &d, spec);
+    TtqQuantized { weight: wq.add(&lr.product()), lowrank: Some(lr.clone()) }
+}
+
+/// The paper's Eq. (3) overhead model: extra flops of online AWQ over
+/// the un-quantized projection, as a ratio. Used by the perf model and
+/// checked against measurement in `benches/ttq_overhead.rs`.
+pub fn overhead_ratio(d_out: usize, d_in: usize, tokens: usize) -> f64 {
+    let num = (d_in * tokens + 3 * d_out * d_in) as f64;
+    let den = (d_out * d_in * tokens) as f64;
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{activation_loss, Rng};
+    use crate::quant::rtn::rtn_quantize;
+
+    fn outlier_x(d: usize, t: usize, rng: &mut Rng) -> Mat {
+        let scales: Vec<f32> = (0..d).map(|_| rng.lognormal(0.0, 1.5) as f32).collect();
+        let mut x = Mat::randn(d, t, rng);
+        for i in 0..d {
+            for v in x.row_mut(i) {
+                *v *= scales[i];
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn rank0_equals_awq_on_same_x() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(16, 64, &mut rng);
+        let x = Mat::randn(64, 10, &mut rng);
+        let spec = QuantSpec::new(3, 32);
+        let hp = TtqHyper::default();
+        let t = ttq_quantize(&w, &x, &spec, &hp);
+        let d = diag_from_x(&x, 2.0, 0.4, 0.5);
+        let a = awq_quantize(&w, &d, &spec);
+        assert_eq!(t.weight.data, a.data);
+        assert!(t.lowrank.is_none());
+    }
+
+    #[test]
+    fn lowrank_reduces_2bit_activation_loss() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(48, 64, &mut rng);
+        let x = outlier_x(64, 128, &mut rng);
+        let spec = QuantSpec::new(2, 32);
+        let hp = TtqHyper::default();
+        let t0 = ttq_quantize(&w, &x, &spec, &hp);
+        let t16 = ttq_quantize_lowrank(&w, &x, 16, &spec, &hp);
+        let e0 = activation_loss(&w, &t0.weight, &x);
+        let e16 = activation_loss(&w, &t16.weight, &x);
+        assert!(e16 < e0, "r16 {e16} vs r0 {e0}");
+    }
+
+    #[test]
+    fn adapts_to_live_domain_better_than_stale_awq() {
+        // The domain-shift experiment at unit scale: AWQ calibrated on
+        // domain A, evaluated on domain B, loses to TTQ computed on B.
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(32, 64, &mut rng);
+        let x_stale = outlier_x(64, 128, &mut rng);
+        let x_live = outlier_x(64, 128, &mut rng); // different outliers
+        let spec = QuantSpec::new(2, 32);
+        let hp = TtqHyper::default();
+        let d_stale = diag_from_x(&x_stale, hp.p, hp.lam, hp.alpha);
+        let w_awq = awq_quantize(&w, &d_stale, &spec);
+        let w_ttq = ttq_quantize(&w, &x_live, &spec, &hp).weight;
+        let e_awq = activation_loss(&w, &w_awq, &x_live);
+        let e_ttq = activation_loss(&w, &w_ttq, &x_live);
+        assert!(e_ttq < e_awq, "ttq {e_ttq} vs stale awq {e_awq}");
+    }
+
+    #[test]
+    fn stats_path_matches_x_path() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(16, 48, &mut rng);
+        let x = Mat::randn(48, 64, &mut rng);
+        let spec = QuantSpec::new(3, 16);
+        let hp = TtqHyper::default();
+        let via_x = ttq_quantize(&w, &x, &spec, &hp);
+        let ps = [0.5f64, 1.0, 2.0, 4.0];
+        let mut stats = ActStats::new(&ps, 48);
+        let sums: Vec<Vec<f64>> = ps
+            .iter()
+            .map(|&p| {
+                (0..48)
+                    .map(|i| {
+                        x.row(i).iter().map(|&v| (v as f64).abs().powf(p)).sum()
+                    })
+                    .collect()
+            })
+            .collect();
+        stats.accumulate(&sums, 64.0);
+        let via_stats = ttq_quantize_from_stats(&w, &stats, &spec, &hp);
+        for (a, b) in via_x.weight.data.iter().zip(&via_stats.weight.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn ttq_beats_rtn_at_low_bits() {
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(32, 64, &mut rng);
+        let x = outlier_x(64, 256, &mut rng);
+        let spec = QuantSpec::new(2, 32);
+        let e_rtn = activation_loss(&w, &rtn_quantize(&w, &spec), &x);
+        let e_ttq = activation_loss(
+            &w,
+            &ttq_quantize(&w, &x, &spec, &TtqHyper::default()).weight,
+            &x,
+        );
+        assert!(e_ttq < e_rtn);
+    }
+
+    #[test]
+    fn overhead_ratio_vanishes() {
+        // Eq. 3: ρ → 0 as d', T grow
+        let small = overhead_ratio(64, 64, 4);
+        let large = overhead_ratio(4096, 4096, 512);
+        assert!(large < small);
+        assert!(large < 0.01, "ρ = {large}");
+        // exact form check
+        let rho = overhead_ratio(100, 50, 20);
+        let want = (50.0 * 20.0 + 3.0 * 100.0 * 50.0) / (100.0 * 50.0 * 20.0);
+        assert!((rho - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn precomputed_lowrank_stats_path_consistent() {
+        let mut rng = Rng::new(6);
+        let w = Mat::randn(24, 32, &mut rng);
+        let x = Mat::randn(32, 40, &mut rng);
+        let spec = QuantSpec::new(3, 32);
+        let hp = TtqHyper::default();
+        let direct = ttq_quantize_lowrank(&w, &x, 4, &spec, &hp);
+        let lr = lowrank_init(&w, 4);
+        let ps = [2.0f64];
+        let mut stats = ActStats::new(&ps, 32);
+        let sums: Vec<Vec<f64>> = vec![(0..32)
+            .map(|i| x.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())
+            .collect()];
+        stats.accumulate(&sums, 40.0);
+        let via_stats = ttq_quantize_lowrank_from_stats(&w, &stats, &lr, &spec, &hp);
+        for (a, b) in direct.weight.data.iter().zip(&via_stats.weight.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}

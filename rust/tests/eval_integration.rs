@@ -1,0 +1,151 @@
+//! End-to-end evaluation invariants over real artifacts — the paper's
+//! qualitative claims at miniature scale. These are the most important
+//! tests in the repo: they assert the *shape* of the results the
+//! benches then report quantitatively.
+
+use ttq_serve::eval::{EvalConfig, Evaluator, MethodSpec};
+use ttq_serve::quant::QuantSpec;
+use ttq_serve::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    if !ttq_serve::artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client"))
+}
+
+fn fast_cfg(bits: u32, group: usize) -> EvalConfig {
+    EvalConfig {
+        batch: 4,
+        eval_batches: 4,
+        calib_batches: 6,
+        spec: QuantSpec::new(bits, group),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn trained_model_beats_uniform() {
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    let ppl = ev
+        .perplexity(&MethodSpec::Fp, "wt2s", &fast_cfg(4, 32))
+        .unwrap();
+    assert!(ppl < 512.0 * 0.5, "fp ppl {ppl} — training failed?");
+    assert!(ppl > 1.0);
+}
+
+#[test]
+fn five_bit_close_to_fp() {
+    // Paper: "5-bit quantization achieves nearly un-quantized
+    // performance for most cases."
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    let cfg = fast_cfg(5, 32);
+    let fp = ev.perplexity(&MethodSpec::Fp, "wt2s", &cfg).unwrap();
+    let ttq = ev
+        .perplexity(&MethodSpec::Ttq { rank: 0 }, "wt2s", &cfg)
+        .unwrap();
+    assert!(ttq < fp * 1.10, "5-bit TTQ {ttq} vs fp {fp}");
+}
+
+#[test]
+fn rtn_degrades_at_2_bits_ttq_less() {
+    // The core Table-3 ordering at q=2: FP < TTQ < RTN. Note on
+    // magnitude: the paper's RTN collapse (ppl 10³-10⁶) needs the
+    // outlier activation channels of billion-param LLMs; our miniature
+    // models are intrinsically robust, so the reproduction target is
+    // the *ordering* plus visible degradation (EXPERIMENTS.md §Scope).
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    let cfg = fast_cfg(2, 32);
+    let fp = ev.perplexity(&MethodSpec::Fp, "wt2s", &cfg).unwrap();
+    let rtn = ev.perplexity(&MethodSpec::Rtn, "wt2s", &cfg).unwrap();
+    let ttq = ev
+        .perplexity(&MethodSpec::Ttq { rank: 16 }, "wt2s", &cfg)
+        .unwrap();
+    assert!(rtn > fp * 1.05, "2-bit RTN should visibly degrade: {rtn} vs {fp}");
+    assert!(ttq < rtn, "TTQ(r=16) {ttq} must beat RTN {rtn}");
+    assert!(ttq > fp, "quantization can't beat FP on average: {ttq} vs {fp}");
+}
+
+#[test]
+fn ttq_at_least_matches_mismatched_awq_at_3_bits() {
+    // Domain-shift claim (Fig. 1): AWQ calibrated on a *different*
+    // domain must not beat TTQ calibrated online on the eval domain.
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    let cfg = fast_cfg(3, 32);
+    let awq_shifted = ev
+        .perplexity(
+            &MethodSpec::Awq { calib_domain: "c4s".into() },
+            "ptbs",
+            &cfg,
+        )
+        .unwrap();
+    let ttq = ev
+        .perplexity(&MethodSpec::Ttq { rank: 0 }, "ptbs", &cfg)
+        .unwrap();
+    assert!(
+        ttq <= awq_shifted * 1.05,
+        "TTQ {ttq} vs domain-shifted AWQ {awq_shifted}"
+    );
+}
+
+#[test]
+fn lowrank_compensation_helps_at_2_bits() {
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "opt-mini").unwrap();
+    let cfg = fast_cfg(2, 32);
+    let r0 = ev
+        .perplexity(&MethodSpec::Ttq { rank: 0 }, "wt2s", &cfg)
+        .unwrap();
+    let r16 = ev
+        .perplexity(&MethodSpec::Ttq { rank: 16 }, "wt2s", &cfg)
+        .unwrap();
+    assert!(
+        r16 < r0 * 1.02,
+        "TTQ r=16 ({r16}) should be <= TTQ r=0 ({r0}) at 2 bits"
+    );
+}
+
+#[test]
+fn gptq_beats_rtn() {
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "opt-micro").unwrap();
+    let mut cfg = fast_cfg(2, 32);
+    cfg.calib_batches = 4; // corr pass is heavier
+    let rtn = ev.perplexity(&MethodSpec::Rtn, "wt2s", &cfg).unwrap();
+    let gptq = ev
+        .perplexity(
+            &MethodSpec::Gptq { calib_domain: "wt2s".into() },
+            "wt2s",
+            &cfg,
+        )
+        .unwrap();
+    assert!(gptq < rtn, "GPTQ {gptq} must beat RTN {rtn} at 2 bits");
+}
+
+#[test]
+fn restore_recovers_fp_exactly() {
+    // Paper point (3): the original weights stay recoverable.
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "opt-micro").unwrap();
+    let cfg = fast_cfg(2, 32);
+    let fp1 = ev.perplexity(&MethodSpec::Fp, "wt2s", &cfg).unwrap();
+    let _ = ev.perplexity(&MethodSpec::Rtn, "wt2s", &cfg).unwrap();
+    let fp2 = ev.perplexity(&MethodSpec::Fp, "wt2s", &cfg).unwrap();
+    assert!((fp1 - fp2).abs() < 1e-6, "restore leaked state: {fp1} vs {fp2}");
+}
+
+#[test]
+fn accuracy_pipeline_runs_and_fp_is_best_ballpark() {
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    let cfg = fast_cfg(2, 32);
+    let fp = ev.accuracy(&MethodSpec::Fp, "vqas", &cfg).unwrap();
+    let rtn = ev.accuracy(&MethodSpec::Rtn, "vqas", &cfg).unwrap();
+    assert!(fp > 0.2, "fp accuracy {fp} too low — model undertrained?");
+    assert!(rtn <= fp + 0.02, "2-bit RTN {rtn} should not beat FP {fp}");
+}

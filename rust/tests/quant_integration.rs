@@ -1,0 +1,126 @@
+//! Cross-language quant validation: the rust quantizers must match the
+//! jnp reference oracle bit-for-bit (within f32 tolerance) through the
+//! golden vectors emitted by `aot.dump_quant_golden`, plus cross-method
+//! behaviour on trained-model statistics.
+
+use std::fs;
+
+use ttq_serve::linalg::Mat;
+use ttq_serve::quant::{
+    awq_quantize, diag_from_x, lowrank_init, rtn_quantize, QuantSpec, TtqHyper,
+    ttq_quantize_lowrank,
+};
+use ttq_serve::util::json::Value;
+
+fn golden() -> Option<Value> {
+    let p = ttq_serve::artifacts_dir().join("golden/quant_golden.json");
+    let s = fs::read_to_string(p).ok()?;
+    Some(Value::parse(&s).expect("golden parses"))
+}
+
+fn mat_from(v: &Value, key: &str, rows: usize, cols: usize) -> Mat {
+    let data: Vec<f32> = v
+        .field(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    Mat::from_vec(rows, cols, data)
+}
+
+fn vec_from(v: &Value, key: &str) -> Vec<f32> {
+    v.field(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], atol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(worst <= atol, "{what}: max abs err {worst} > {atol}");
+}
+
+#[test]
+fn rtn_matches_jnp_reference_all_cases() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let w = mat_from(&g, "w", 8, 64);
+    let cases = g.field("cases").unwrap();
+    for (q, grp) in [(2u32, 16usize), (3, 32), (4, 32), (5, 64), (4, 128)] {
+        let key = format!("q{q}_g{grp}");
+        let want = vec_from(cases.field(&key).unwrap(), "rtn");
+        let got = rtn_quantize(&w, &QuantSpec::new(q, grp));
+        assert_close(&got.data, &want, 1e-5, &format!("rtn {key}"));
+    }
+}
+
+#[test]
+fn awq_matches_jnp_reference_all_cases() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let w = mat_from(&g, "w", 8, 64);
+    let x = mat_from(&g, "x", 64, 12);
+    let cases = g.field("cases").unwrap();
+    for (q, grp) in [(2u32, 16usize), (3, 32), (4, 32), (5, 64), (4, 128)] {
+        let key = format!("q{q}_g{grp}");
+        let want = vec_from(cases.field(&key).unwrap(), "awq");
+        let d = diag_from_x(&x, 2.0, 0.4, 0.5);
+        let got = awq_quantize(&w, &d, &QuantSpec::new(q, grp));
+        assert_close(&got.data, &want, 1e-4, &format!("awq {key}"));
+    }
+}
+
+#[test]
+fn awq_diag_matches_jnp_reference() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let x = mat_from(&g, "x", 64, 12);
+    let want = vec_from(&g, "awq_diag_p2");
+    let got = diag_from_x(&x, 2.0, 0.4, 0.5);
+    assert_close(&got, &want, 1e-5, "awq diag p=2");
+}
+
+#[test]
+fn lowrank_product_matches_jnp_svd() {
+    // Different SVD algorithms agree on the *product* BA (unique given
+    // distinct singular values), not on the factors themselves.
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let w = mat_from(&g, "w", 8, 64);
+    let want = vec_from(&g, "ba");
+    let lr = lowrank_init(&w, 4);
+    let got = lr.product();
+    assert_close(&got.data, &want, 5e-3, "rank-4 BA product");
+}
+
+#[test]
+fn full_ttq_lowrank_projection_matches_jnp() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let w = mat_from(&g, "w", 8, 64);
+    let x = mat_from(&g, "x", 64, 12);
+    let want = vec_from(&g, "ttq_r4_q3_g32_y");
+    let t = ttq_quantize_lowrank(&w, &x, 4, &QuantSpec::new(3, 32), &TtqHyper::default());
+    let got = t.weight.matmul(&x);
+    // looser: SVD differences flow through the quantizer rounding
+    assert_close(&got.data, &want, 0.15, "ttq r=4 projection");
+}

@@ -1,0 +1,225 @@
+//! Property-based tests over the quantization stack and coordinator
+//! invariants (via the in-tree `propcheck` substrate).
+
+use ttq_serve::coordinator::{Batcher, BatchPolicy, Request};
+use ttq_serve::linalg::Mat;
+use ttq_serve::prop_assert;
+use ttq_serve::quant::{
+    awq_quantize, diag_from_x, pack, rtn_dequantize, rtn_quantize,
+    rtn_quantize_int, unpack, QdqFormat, QuantSpec,
+};
+use ttq_serve::util::propcheck::{check, Config};
+
+fn cfg() -> Config {
+    Config { cases: 48, seed: 0xDEC0DE }
+}
+
+#[test]
+fn prop_rtn_error_bounded_by_half_step() {
+    check("rtn |err| <= S/2", &cfg(), |g| {
+        let rows = g.usize_in(1, 12);
+        let grp = *g.choose(&[8usize, 16, 32, 64]);
+        let cols = grp * g.usize_in(1, 4);
+        let bits = g.u32_in(2, 8);
+        let w = Mat::from_vec(rows, cols, g.vec_f32_adversarial(rows * cols));
+        let spec = QuantSpec::new(bits, grp);
+        let what = rtn_quantize(&w, &spec);
+        let qmax = spec.qmax();
+        for (cw, cq) in w.data.chunks(grp).zip(what.data.chunks(grp)) {
+            let mx = cw.iter().cloned().fold(f32::MIN, f32::max);
+            let mn = cw.iter().cloned().fold(f32::MAX, f32::min);
+            let s = ((mx - mn) / qmax).max(0.0);
+            for (a, b) in cw.iter().zip(cq) {
+                let tol = s / 2.0 + 1e-4 * s.max(1.0);
+                prop_assert!(
+                    (a - b).abs() <= tol,
+                    "err {} > {tol} (bits={bits} g={grp})",
+                    (a - b).abs()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rtn_idempotent() {
+    check("rtn(rtn(w)) == rtn(w)", &cfg(), |g| {
+        let grp = *g.choose(&[16usize, 32]);
+        let w = Mat::from_vec(4, grp * 2, g.vec_f32(8 * grp));
+        let spec = QuantSpec::new(g.u32_in(2, 6), grp);
+        let w1 = rtn_quantize(&w, &spec);
+        let w2 = rtn_quantize(&w1, &spec);
+        for (a, b) in w1.data.iter().zip(&w2.data) {
+            let scale = a.abs().max(1.0);
+            prop_assert!((a - b).abs() <= 1e-5 * scale, "{a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_awq_scaling_invariance() {
+    // Ŵ(c·D) == Ŵ(D) for any positive constant c: only *relative*
+    // channel scales matter (the paper's α-exponent freedom). Exact in
+    // real arithmetic; in f32 an element sitting on a rounding boundary
+    // can flip one level, so the property is: almost all elements
+    // identical, flips bounded by ~one quantization step.
+    check("awq scale invariance", &cfg(), |g| {
+        let w = Mat::from_vec(6, 32, g.vec_f32(192));
+        let x = Mat::from_vec(32, 9, g.vec_f32(288));
+        let d = diag_from_x(&x, 2.0, 0.4, 0.5);
+        let c = g.f64_in(0.5, 4.0) as f32;
+        let d2: Vec<f32> = d.iter().map(|v| v * c).collect();
+        let spec = QuantSpec::new(3, 16);
+        let a = awq_quantize(&w, &d, &spec);
+        let b = awq_quantize(&w, &d2, &spec);
+        // per-group quantization step of the scaled weight
+        let scaled: Vec<f32> = w
+            .data
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v * d[i % 32])
+            .collect();
+        let steps: Vec<f32> = scaled
+            .chunks(16)
+            .map(|grp| {
+                let mx = grp.iter().cloned().fold(f32::MIN, f32::max);
+                let mn = grp.iter().cloned().fold(f32::MAX, f32::min);
+                (mx - mn) / 7.0
+            })
+            .collect();
+        let mut flips = 0usize;
+        for (i, (u, v)) in a.data.iter().zip(&b.data).enumerate() {
+            let diff = (u - v).abs();
+            if diff <= 1e-3 * u.abs().max(0.1) {
+                continue;
+            }
+            // boundary flip: bounded by ~one step, descaled by D
+            let tol = 1.2 * steps[i / 16] / d[i % 32];
+            prop_assert!(diff <= tol, "{u} vs {v} (c={c}, diff {diff} > {tol})");
+            flips += 1;
+        }
+        prop_assert!(
+            flips * 50 <= a.data.len(),
+            "{flips}/{} elements flipped (c={c}) — not scale invariant",
+            a.data.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_roundtrip() {
+    check("pack/unpack identity", &cfg(), |g| {
+        let bits = g.u32_in(2, 8);
+        let grp = *g.choose(&[16usize, 32]);
+        let rows = g.usize_in(1, 8);
+        let w = Mat::from_vec(rows, grp * 2, g.vec_f32(rows * grp * 2));
+        let qi = rtn_quantize_int(&w, &QuantSpec::new(bits, grp));
+        let p = pack(&qi);
+        prop_assert!(unpack(&p) == qi.codes, "roundtrip mismatch bits={bits}");
+        // dense packing: words * 32 bits within one word of n*bits
+        let need = (qi.codes.len() * bits as usize).div_ceil(32);
+        prop_assert!(p.words.len() == need, "padding leak");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_int_dequant_matches_qdq() {
+    check("int path == qdq path", &cfg(), |g| {
+        let grp = *g.choose(&[16usize, 32, 64]);
+        let w = Mat::from_vec(4, grp, g.vec_f32_adversarial(4 * grp));
+        let spec = QuantSpec::new(g.u32_in(2, 8), grp);
+        let direct = rtn_quantize(&w, &spec);
+        let via_int = rtn_dequantize(&rtn_quantize_int(&w, &spec));
+        for (a, b) in direct.data.iter().zip(&via_int.data) {
+            prop_assert!((a - b).abs() <= 1e-5 * a.abs().max(1.0), "{a} vs {b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_formats_all_produce_valid_qdq() {
+    check("formats stay bounded", &cfg(), |g| {
+        let w = Mat::from_vec(4, 64, g.vec_f32_adversarial(256));
+        let fmt = *g.choose(&[
+            QdqFormat::Asymmetric,
+            QdqFormat::Symmetric,
+            QdqFormat::Expanded { nu: 0.95 },
+        ]);
+        let spec = QuantSpec { bits: g.u32_in(2, 5), group: 32, format: fmt };
+        let q = rtn_quantize(&w, &spec);
+        let wmax = w.max_abs();
+        for v in &q.data {
+            prop_assert!(v.is_finite(), "non-finite output");
+            prop_assert!(v.abs() <= 2.5 * wmax + 1.0, "runaway value {v}");
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------
+// Coordinator invariants
+// ------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_and_orders_requests() {
+    check("batcher conservation + FIFO", &cfg(), |g| {
+        let buckets = match g.usize_in(0, 2) {
+            0 => vec![1usize, 4],
+            1 => vec![1usize, 2, 8],
+            _ => vec![4usize],
+        };
+        let n = g.usize_in(1, 40);
+        let mut b = Batcher::new(BatchPolicy {
+            buckets: buckets.clone(),
+            linger: std::time::Duration::ZERO,
+        });
+        for id in 0..n as u64 {
+            b.push(Request::new(id, vec![0; 4]));
+        }
+        let mut seen = Vec::new();
+        let far = std::time::Instant::now() + std::time::Duration::from_secs(1);
+        let mut guard = 0;
+        while b.pending() > 0 {
+            guard += 1;
+            prop_assert!(guard < 1000, "batcher livelock");
+            if let Some(batch) = b.poll(far) {
+                prop_assert!(
+                    buckets.contains(&batch.bucket),
+                    "illegal bucket {}",
+                    batch.bucket
+                );
+                prop_assert!(
+                    batch.requests.len() <= batch.bucket,
+                    "overfull batch"
+                );
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        prop_assert!(seen.len() == n, "lost requests: {} of {n}", seen.len());
+        let sorted: Vec<u64> = (0..n as u64).collect();
+        prop_assert!(seen == sorted, "FIFO violated: {seen:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_never_fires_early() {
+    check("no fire before linger", &cfg(), |g| {
+        let linger = std::time::Duration::from_millis(g.usize_in(50, 500) as u64);
+        let mut b = Batcher::new(BatchPolicy { buckets: vec![1, 4], linger });
+        let n = g.usize_in(1, 3); // below max bucket
+        for id in 0..n as u64 {
+            b.push(Request::new(id, vec![0; 4]));
+        }
+        prop_assert!(
+            b.poll(std::time::Instant::now()).is_none(),
+            "fired {n} requests before linger"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,158 @@
+//! Runtime integration: load real AOT artifacts through PJRT, execute,
+//! and validate numerics against model invariants. Skips gracefully
+//! when `make artifacts` has not run.
+
+use ttq_serve::eval::Evaluator;
+use ttq_serve::runtime::{
+    literal_f32_vec, model_inputs, ArtifactKey, Runtime,
+};
+use ttq_serve::corpus::{CorpusStream, Split};
+
+fn runtime() -> Option<Runtime> {
+    if !ttq_serve::artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client"))
+}
+
+#[test]
+fn nll_artifact_executes_and_is_finite() {
+    let Some(rt) = runtime() else { return };
+    let ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    let seq = ev.weights.manifest.config.seq;
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let toks = s.batch(1, seq);
+    let (nll, count) = ev.nll(&toks, 1).unwrap();
+    assert!(nll.is_finite() && nll > 0.0, "nll {nll}");
+    assert_eq!(count as usize, seq - 1);
+    // a trained model beats the uniform bound log(512) ≈ 6.24
+    assert!(nll / count < 6.0, "per-token nll {}", nll / count);
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let key = ArtifactKey::new("opt-micro", "nll", 1);
+    let a = rt.load(&key).unwrap();
+    let n = rt.compiled_count();
+    let b = rt.load(&key).unwrap();
+    assert_eq!(rt.compiled_count(), n, "cache miss on identical key");
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn stats_artifact_matches_manifest_arity() {
+    let Some(rt) = runtime() else { return };
+    let ev = Evaluator::new(&rt, "opt-micro").unwrap();
+    let seq = ev.weights.manifest.config.seq;
+    let mut s = CorpusStream::new("ptbs", Split::Eval);
+    let toks = s.batch(4, seq);
+    let collected = ev.collect(&toks, 4, false).unwrap();
+    assert_eq!(collected.stats.len(), ev.weights.manifest.linears.len());
+    for (st, lin) in collected.stats.iter().zip(&ev.weights.manifest.linears) {
+        assert_eq!(st.d_in(), lin.d_in);
+        // norm sums are nonnegative and mostly positive
+        assert!(st.norm_sums[2].iter().all(|&v| v >= 0.0));
+        assert!(st.norm_sums[2].iter().sum::<f64>() > 0.0);
+    }
+}
+
+#[test]
+fn corr_artifact_returns_psd_gram_matrices() {
+    let Some(rt) = runtime() else { return };
+    let ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    let seq = ev.weights.manifest.config.seq;
+    let mut s = CorpusStream::new("c4s", Split::Eval);
+    let toks = s.batch(4, seq);
+    let collected = ev.collect(&toks, 4, true).unwrap();
+    assert_eq!(collected.corr.len(), ev.weights.manifest.linears.len());
+    for (c, st) in collected.corr.iter().zip(&collected.stats) {
+        assert_eq!(c.rows, c.cols);
+        // symmetry + trace == Σ‖x‖² (norms p=2 row)
+        let mut tr = 0.0f64;
+        for i in 0..c.rows {
+            tr += c.at(i, i) as f64;
+            assert!(c.at(i, i) >= -1e-3);
+            for j in 0..c.cols {
+                assert!((c.at(i, j) - c.at(j, i)).abs() < 2e-2);
+            }
+        }
+        let p2: f64 = st.norm_sums[2].iter().sum();
+        assert!(
+            (tr - p2).abs() / p2.max(1.0) < 1e-3,
+            "trace {tr} vs Σ|x|² {p2}"
+        );
+    }
+}
+
+#[test]
+fn fused_ttq_artifact_close_to_two_pass_pipeline() {
+    // The L1 fused kernel (single-pass, per-batch D) and the rust
+    // two-pass path implement the same math; per-token NLL must agree
+    // closely (both quantize with D from the same batch).
+    let Some(rt) = runtime() else { return };
+    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    let seq = ev.weights.manifest.config.seq;
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let toks = s.batch(4, seq);
+    let (fused_nll, c1) = ev.nll_fused_ttq(&toks, 4, 3).unwrap();
+
+    let collected = ev.collect(&toks, 4, false).unwrap();
+    ev.apply_quantization(
+        &ttq_serve::eval::MethodSpec::Ttq { rank: 0 },
+        Some(&collected),
+        &ttq_serve::eval::EvalConfig {
+            spec: ttq_serve::quant::QuantSpec::new(3, 32),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (two_pass_nll, c2) = ev.nll(&toks, 4).unwrap();
+    ev.restore();
+    assert_eq!(c1, c2);
+    let a = fused_nll / c1;
+    let b = two_pass_nll / c2;
+    assert!(
+        (a - b).abs() < 0.05,
+        "fused {a} vs two-pass {b} per-token nll"
+    );
+}
+
+#[test]
+fn logits_artifact_shape_and_finiteness() {
+    let Some(rt) = runtime() else { return };
+    let ev = Evaluator::new(&rt, "gemma-micro").unwrap();
+    let man = &ev.weights.manifest;
+    let (seq, vocab) = (man.config.seq, man.config.vocab);
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let toks = s.batch(1, seq);
+    let key = ArtifactKey::new("gemma-micro", "logits", 1);
+    let exe = rt.load(&key).unwrap();
+    let inputs = model_inputs(&ev.weights, &toks, 1, None).unwrap();
+    let outs = rt.run(&exe, &inputs).unwrap();
+    let logits = literal_f32_vec(&outs[0]).unwrap();
+    assert_eq!(logits.len(), seq * vocab);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn standalone_kernel_artifact_loads() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_path_rel("kernels/ttq_linear.hlo.txt");
+    assert!(
+        exe.is_ok(),
+        "fused kernel artifact must compile: {:?}",
+        exe.err()
+    );
+}
+
+#[test]
+fn all_models_load_and_report_params() {
+    let Some(rt) = runtime() else { return };
+    for name in ttq_serve::models::MODEL_NAMES {
+        let ev = Evaluator::new(&rt, name).unwrap();
+        assert!(ev.weights.param_count() > 10_000, "{name} too small");
+        assert!(!ev.weights.manifest.linears.is_empty());
+    }
+}
