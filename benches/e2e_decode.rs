@@ -30,9 +30,8 @@ fn main() {
         ("TTQ q=4 r=16", 16, 4),
         ("TTQ q=2 r=0", 0, 2),
     ] {
-        let mut cfg = ServerConfig::new(model);
+        let mut cfg = ServerConfig::new(model).with_method(MethodSpec::ttq(rank));
         cfg.spec = QuantSpec::new(bits, 32);
-        cfg.rank = rank;
         cfg.policy = BatchPolicy {
             buckets: vec![1, 4],
             linger: Duration::ZERO,
@@ -70,7 +69,7 @@ fn main() {
     let mut s = CorpusStream::new("wt2s", Split::Eval);
     for (label, method) in [
         ("plain nll b4", None),
-        ("TTQ two-pass b4", Some(MethodSpec::Ttq { rank: 0 })),
+        ("TTQ two-pass b4", Some(MethodSpec::ttq(0))),
     ] {
         let iters = 6;
         let t0 = Instant::now();

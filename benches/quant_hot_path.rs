@@ -10,7 +10,8 @@
 use ttq_serve::linalg::{Mat, Rng};
 use ttq_serve::quant::{
     awq_quantize, diag_from_x, gptq_quantize, lowrank_init, pack,
-    packed_matmul, rtn_quantize, rtn_quantize_int, QuantSpec,
+    packed_matmul, rtn_quantize, rtn_quantize_int, LayerStats, MethodSpec,
+    QuantSpec,
 };
 use ttq_serve::util::benchkit::{black_box, Bencher};
 
@@ -42,6 +43,22 @@ fn main() {
     let d = diag_from_x(&x, 2.0, 0.4, 0.5);
     b.run_with_items(&format!("awq_quantize {dout}x{din}"), n, || {
         awq_quantize(black_box(&w), &d, &spec)
+    });
+
+    println!("-- dispatch overhead: direct call vs trait object (4-bit RTN) --");
+    // The registry redesign must cost nothing on the hot path: one
+    // virtual call per *matrix* (256K elements here), not per element.
+    let spec4 = QuantSpec::new(4, 32);
+    let method = MethodSpec::parse("rtn").expect("registry has rtn");
+    let stats = LayerStats::default();
+    b.run_with_items(&format!("rtn direct fn {dout}x{din}"), n, || {
+        rtn_quantize(black_box(&w), &spec4)
+    });
+    b.run_with_items(&format!("rtn dyn Quantizer {dout}x{din}"), n, || {
+        method
+            .quantizer()
+            .quantize(black_box(&w), &stats, &spec4)
+            .expect("rtn needs no stats")
     });
 
     println!("-- low-rank init (App. E) --");

@@ -41,11 +41,7 @@ fn main() -> Result<()> {
     for calib in LM_DOMAINS {
         print!("{calib:>12}");
         for eval_d in LM_DOMAINS {
-            let p = ev.perplexity(
-                &MethodSpec::Awq { calib_domain: calib.into() },
-                eval_d,
-                &cfg,
-            )?;
+            let p = ev.perplexity(&MethodSpec::awq(calib), eval_d, &cfg)?;
             if calib == eval_d {
                 diag += p;
             } else {
@@ -58,7 +54,7 @@ fn main() -> Result<()> {
     print!("{:>12}", "TTQ (r=0)");
     let mut ttq_avg = 0.0;
     for eval_d in LM_DOMAINS {
-        let p = ev.perplexity(&MethodSpec::Ttq { rank: 0 }, eval_d, &cfg)?;
+        let p = ev.perplexity(&MethodSpec::ttq(0), eval_d, &cfg)?;
         ttq_avg += p / 3.0;
         print!("{p:>10.2}");
     }

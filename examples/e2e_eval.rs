@@ -60,12 +60,14 @@ fn main() -> Result<()> {
     println!("\n3-bit perplexity scoreboard, {model}:");
     println!("{:<24} {:>8} {:>8} {:>8}", "method", "wt2s", "ptbs", "c4s");
     for m in [
-        MethodSpec::Fp,
-        MethodSpec::Rtn,
-        MethodSpec::Awq { calib_domain: "c4s".into() },
-        MethodSpec::Gptq { calib_domain: "c4s".into() },
-        MethodSpec::Ttq { rank: 0 },
-        MethodSpec::Ttq { rank: 16 },
+        MethodSpec::fp(),
+        MethodSpec::rtn(),
+        MethodSpec::awq("c4s"),
+        MethodSpec::gptq("c4s"),
+        MethodSpec::nf_auto(), // NF at the scoreboard's 3-bit spec
+        MethodSpec::prune(0.5),
+        MethodSpec::ttq(0),
+        MethodSpec::ttq(16),
     ] {
         print!("{:<24}", m.label());
         for d in LM_DOMAINS {

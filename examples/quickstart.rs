@@ -37,11 +37,11 @@ fn main() -> Result<()> {
     };
 
     let methods = [
-        MethodSpec::Fp,
-        MethodSpec::Rtn,
-        MethodSpec::Awq { calib_domain: "c4s".into() },
-        MethodSpec::Ttq { rank: 0 },
-        MethodSpec::Ttq { rank: 16 },
+        MethodSpec::fp(),
+        MethodSpec::rtn(),
+        MethodSpec::awq("c4s"),
+        MethodSpec::ttq(0),
+        MethodSpec::ttq(16),
     ];
     println!("3-bit perplexity on the wt2s eval stream:");
     for m in methods {

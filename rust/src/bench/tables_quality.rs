@@ -1,4 +1,9 @@
 //! Quality exhibits: Tables 1, 2, 3 (+ full 9-11), 12 (VLM), 13 (VLA).
+//!
+//! Every table takes its method rows as [`MethodSpec`]s (an empty slice
+//! selects the paper's default row set), so any registered method —
+//! including `nf:4` and `prune:0.5` — can be swapped in from the CLI:
+//! `ttq-serve table 3 --methods rtn awq ttq:r=16 gptq nf:4 prune:0.5`.
 
 use anyhow::Result;
 
@@ -15,7 +20,14 @@ pub fn cfg(bits: u32, group: usize, fast: bool) -> EvalConfig {
         eval_batches: if fast { 3 } else { 12 },
         calib_batches: if fast { 4 } else { 16 },
         spec: QuantSpec::new(bits, group),
-        ..Default::default()
+    }
+}
+
+fn or_default(methods: &[MethodSpec], default: Vec<MethodSpec>) -> Vec<MethodSpec> {
+    if methods.is_empty() {
+        default
+    } else {
+        methods.to_vec()
     }
 }
 
@@ -23,39 +35,38 @@ pub fn cfg(bits: u32, group: usize, fast: bool) -> EvalConfig {
 ///
 /// Paper: AWQ (C4 calib) degrades as calibration tokens shrink; TTQ
 /// needs zero calibration and still wins. Our sweep scales 2^11..2^17
-/// down to 2^8..2^14 tokens (miniature corpus).
-pub fn table1(rt: &Runtime, fast: bool) -> Result<Report> {
+/// down to 2^8..2^14 tokens (miniature corpus). Offline methods sweep
+/// the calibration length; online methods get a single "0 tokens" row,
+/// weight-only methods a "-" row.
+pub fn table1(rt: &Runtime, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
     let model = "opt-mini";
     let mut ev = Evaluator::new(rt, model)?;
     let base = cfg(3, 32, fast);
     let seq = ev.weights.manifest.config.seq;
+    let methods = or_default(
+        methods,
+        vec![MethodSpec::ttq(0), MethodSpec::ttq(16), MethodSpec::awq("c4s")],
+    );
     let mut rep = Report::new(
         &format!("Table 1: calibration length impact, 3-bit g=32, {model}, wt2s ppl"),
-        &["setting", "calib tokens T", "WT2s ppl"],
+        &["method", "calib tokens T", "WT2s ppl"],
     );
-    for (label, method) in [
-        ("TTQ (r=0)", MethodSpec::Ttq { rank: 0 }),
-        ("TTQ (r=16)", MethodSpec::Ttq { rank: 16 }),
-    ] {
-        let p = ev.perplexity(&method, "wt2s", &base)?;
-        rep.row(vec![label.into(), "0".into(), fmt_ppl(p)]);
-    }
-    let exps = if fast { vec![8u32, 11, 14] } else { vec![8, 9, 10, 11, 12, 13, 14] };
-    for e in exps {
-        let tokens = 1usize << e;
-        let batches = (tokens / (base.batch * seq)).max(1);
-        let mut c = base.clone();
-        c.calib_batches = batches;
-        let p = ev.perplexity(
-            &MethodSpec::Awq { calib_domain: "c4s".into() },
-            "wt2s",
-            &c,
-        )?;
-        rep.row(vec![
-            "AWQ (C4s calib)".into(),
-            format!("2^{e}"),
-            fmt_ppl(p),
-        ]);
+    let exps: Vec<u32> = if fast { vec![8, 11, 14] } else { vec![8, 9, 10, 11, 12, 13, 14] };
+    for m in &methods {
+        if m.is_offline() {
+            for &e in &exps {
+                let tokens = 1usize << e;
+                let batches = (tokens / (base.batch * seq)).max(1);
+                let mut c = base.clone();
+                c.calib_batches = batches;
+                let p = ev.perplexity(m, "wt2s", &c)?;
+                rep.row(vec![m.label(), format!("2^{e}"), fmt_ppl(p)]);
+            }
+        } else {
+            let p = ev.perplexity(m, "wt2s", &base)?;
+            let t = if m.is_online() { "0" } else { "-" };
+            rep.row(vec![m.label(), t.into(), fmt_ppl(p)]);
+        }
     }
     Ok(rep)
 }
@@ -64,7 +75,7 @@ pub fn table1(rt: &Runtime, fast: bool) -> Result<Report> {
 ///
 /// Paper: micro-scaling helps everyone; RTN collapses at large g; TTQ
 /// tolerates ~2x larger groups than AWQ.
-pub fn table2(rt: &Runtime, fast: bool) -> Result<Report> {
+pub fn table2(rt: &Runtime, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
     let model = "qwen-mini";
     let mut ev = Evaluator::new(rt, model)?;
     let groups: Vec<usize> = if fast {
@@ -72,6 +83,10 @@ pub fn table2(rt: &Runtime, fast: bool) -> Result<Report> {
     } else {
         vec![8, 16, 32, 64, 128, 256, 512, 1024]
     };
+    let methods = or_default(
+        methods,
+        vec![MethodSpec::rtn(), MethodSpec::awq("wt2s"), MethodSpec::ttq(16)],
+    );
     let mut rep = Report::new(
         &format!("Table 2: groupsize impact on wt2s ppl, 3-bit, {model}"),
         &{
@@ -86,15 +101,11 @@ pub fn table2(rt: &Runtime, fast: bool) -> Result<Report> {
         cells.extend(groups.iter().map(|g| g.to_string()));
         rep.row(cells);
     }
-    for (label, method) in [
-        ("RTN", MethodSpec::Rtn),
-        ("AWQ (WT2s calib)", MethodSpec::Awq { calib_domain: "wt2s".into() }),
-        ("TTQ (r = 16)", MethodSpec::Ttq { rank: 16 }),
-    ] {
-        let mut cells = vec![label.to_string()];
+    for m in &methods {
+        let mut cells = vec![m.label()];
         for &g in &groups {
             let c = cfg(3, g, fast);
-            let p = ev.perplexity(&method, "wt2s", &c)?;
+            let p = ev.perplexity(m, "wt2s", &c)?;
             cells.push(fmt_ppl(p));
         }
         rep.row(cells);
@@ -104,16 +115,30 @@ pub fn table2(rt: &Runtime, fast: bool) -> Result<Report> {
 
 /// Tables 3 / 9-11 — the method × bit-width grid, macro-averaged over
 /// the three LM domains, for every model in the registry (or a subset).
-pub fn table3(rt: &Runtime, models: &[String], fast: bool) -> Result<Vec<Report>> {
+/// The default row set now includes the NormalFloat codebook and
+/// test-time pruning as first-class methods.
+pub fn table3(
+    rt: &Runtime,
+    models: &[String],
+    fast: bool,
+    methods: &[MethodSpec],
+) -> Result<Vec<Report>> {
     let bits_list: Vec<u32> = if fast { vec![2, 4] } else { vec![2, 3, 4, 5] };
-    let methods: Vec<MethodSpec> = vec![
-        MethodSpec::Rtn,
-        MethodSpec::Awq { calib_domain: "wt2s".into() },
-        MethodSpec::Awq { calib_domain: "ptbs".into() },
-        MethodSpec::Awq { calib_domain: "c4s".into() },
-        MethodSpec::Ttq { rank: 0 },
-        MethodSpec::Ttq { rank: 16 },
-    ];
+    let methods = or_default(
+        methods,
+        vec![
+            MethodSpec::rtn(),
+            MethodSpec::awq("wt2s"),
+            MethodSpec::awq("ptbs"),
+            MethodSpec::awq("c4s"),
+            // NF follows each column's bit-width (a pinned nf:4 would
+            // report 4-bit numbers under the 2/3/5-bit headers)
+            MethodSpec::nf_auto(),
+            MethodSpec::prune(0.5),
+            MethodSpec::ttq(0),
+            MethodSpec::ttq(16),
+        ],
+    );
     let mut reports = Vec::new();
     for model in models {
         let mut ev = Evaluator::new(rt, model)?;
@@ -121,7 +146,7 @@ pub fn table3(rt: &Runtime, models: &[String], fast: bool) -> Result<Vec<Report>
         let base = cfg(4, 32, fast);
         let mut ref_ppls = Vec::new();
         for d in LM_DOMAINS {
-            ref_ppls.push(ev.perplexity(&MethodSpec::Fp, d, &base)?);
+            ref_ppls.push(ev.perplexity(&MethodSpec::fp(), d, &base)?);
         }
         let ref_avg = ref_ppls.iter().sum::<f64>() / 3.0;
         let title = format!(
@@ -150,22 +175,30 @@ pub fn table3(rt: &Runtime, models: &[String], fast: bool) -> Result<Vec<Report>
 
 /// Table 12 — VLM proxy: next-token accuracy on the vqas domain under
 /// quantization, with AWQ calibrated on four different domains.
-pub fn table12(rt: &Runtime, models: &[String], fast: bool) -> Result<Vec<Report>> {
+pub fn table12(
+    rt: &Runtime,
+    models: &[String],
+    fast: bool,
+    methods: &[MethodSpec],
+) -> Result<Vec<Report>> {
     let bits_list: Vec<u32> = if fast { vec![2, 4] } else { vec![2, 3, 4, 5] };
-    let methods: Vec<MethodSpec> = vec![
-        MethodSpec::Rtn,
-        MethodSpec::Awq { calib_domain: "wt2s".into() },
-        MethodSpec::Awq { calib_domain: "ptbs".into() },
-        MethodSpec::Awq { calib_domain: "c4s".into() },
-        MethodSpec::Awq { calib_domain: "vqas".into() },
-        MethodSpec::Ttq { rank: 0 },
-        MethodSpec::Ttq { rank: 16 },
-    ];
+    let methods = or_default(
+        methods,
+        vec![
+            MethodSpec::rtn(),
+            MethodSpec::awq("wt2s"),
+            MethodSpec::awq("ptbs"),
+            MethodSpec::awq("c4s"),
+            MethodSpec::awq("vqas"),
+            MethodSpec::ttq(0),
+            MethodSpec::ttq(16),
+        ],
+    );
     let mut out = Vec::new();
     for model in models {
         let mut ev = Evaluator::new(rt, model)?;
         let base = cfg(4, 32, fast);
-        let ref_acc = ev.accuracy(&MethodSpec::Fp, "vqas", &base)? * 100.0;
+        let ref_acc = ev.accuracy(&MethodSpec::fp(), "vqas", &base)? * 100.0;
         let mut header = vec!["method".to_string()];
         header.extend(bits_list.iter().map(|b| format!("{b} bits")));
         let mut rep = Report::new(
@@ -189,17 +222,20 @@ pub fn table12(rt: &Runtime, models: &[String], fast: bool) -> Result<Vec<Report
 /// Table 13 — VLA proxy: episode success rate over four suites at
 /// q=2, g=64. An episode succeeds when `horizon` greedy continuations
 /// all match the ground-truth stream (exact match, like LIBERO).
-pub fn table13(rt: &Runtime, model: &str, fast: bool) -> Result<Report> {
+pub fn table13(rt: &Runtime, model: &str, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
     let episodes = if fast { 20 } else { 100 };
-    let methods: Vec<MethodSpec> = vec![
-        MethodSpec::Fp,
-        MethodSpec::Rtn,
-        MethodSpec::Awq { calib_domain: "wt2s".into() },
-        MethodSpec::Awq { calib_domain: "c4s".into() },
-        MethodSpec::Awq { calib_domain: "acts".into() },
-        MethodSpec::Ttq { rank: 0 },
-        MethodSpec::Ttq { rank: 16 },
-    ];
+    let methods = or_default(
+        methods,
+        vec![
+            MethodSpec::fp(),
+            MethodSpec::rtn(),
+            MethodSpec::awq("wt2s"),
+            MethodSpec::awq("c4s"),
+            MethodSpec::awq("acts"),
+            MethodSpec::ttq(0),
+            MethodSpec::ttq(16),
+        ],
+    );
     let mut header: Vec<String> = vec!["method".into()];
     header.extend(VLA_SUITES.iter().map(|(n, _, _)| n.to_string()));
     header.push("Avg".into());
@@ -240,27 +276,16 @@ fn vla_success_rate(
         calib_batches: if fast { 4 } else { 16 },
         ..Default::default()
     };
-    // Quantize once per (method, suite): AWQ from its calib domain,
-    // TTQ from the suite's own live prefix traffic — exactly Fig. 1.
-    match method {
-        MethodSpec::Fp => ev.restore(),
-        MethodSpec::Rtn => {
-            ev.restore();
-            ev.apply_quantization(method, None, &c)?;
-        }
-        MethodSpec::Awq { calib_domain } => {
-            ev.restore();
-            let mut s = CorpusStream::new(calib_domain, Split::Calib);
-            let st = ev.collect_stream(&mut s, c.batch, c.calib_batches, false)?;
-            ev.apply_quantization(method, Some(&st), &c)?;
-        }
-        MethodSpec::Ttq { .. } => {
-            ev.restore();
-            let mut s = CorpusStream::with_stream("acts", Split::Eval, stream_id);
-            let st = ev.collect_stream(&mut s, c.batch, 2, false)?;
-            ev.apply_quantization(method, Some(&st), &c)?;
-        }
-        MethodSpec::Gptq { .. } => unreachable!("not a Table 13 row"),
+    // Quantize once per (method, suite): offline / no-stats methods via
+    // the shared static path, online (test-time) methods from the
+    // suite's own live prefix traffic — exactly Fig. 1.
+    if method.is_online() {
+        ev.restore();
+        let mut s = CorpusStream::with_stream("acts", Split::Eval, stream_id);
+        let st = ev.collect_stream(&mut s, c.batch, 2, method.needs_corr())?;
+        ev.apply_quantization(method, Some(&st), &c)?;
+    } else {
+        ev.quantize_static(method, &c)?;
     }
 
     let key = ArtifactKey::new(ev.model_name(), "logits", 1);

@@ -3,25 +3,37 @@
 //!
 //! The CPU-measured counterpart (criterion) lives in
 //! `benches/runtime_tables.rs`; this module produces the table-shaped
-//! report with the paper's exact row/column layout.
+//! report with the paper's exact row/column layout. Rows are
+//! [`DecodeMode`]s — registry methods paired with a kernel class — so
+//! any [`MethodSpec`] can be priced, not just the built-in five.
 
 use super::Report;
 use crate::models::QWEN3;
-use crate::perfmodel::{gpu, ktokens_per_sec, Mode, DEFAULT_AMORTIZE};
-use crate::quant::QuantSpec;
+use crate::perfmodel::{gpu, ktokens_per_sec, DecodeMode, DEFAULT_AMORTIZE};
+use crate::quant::{MethodSpec, QuantSpec};
+
+/// The paper's five rows: FP16, both AWQ kernels, TTQ r=0 and r=16.
+pub fn default_modes() -> Vec<DecodeMode> {
+    vec![
+        DecodeMode::fp16(),
+        DecodeMode::awq_gemm(),
+        DecodeMode::awq_marlin(),
+        DecodeMode::ttq(0),
+        DecodeMode::ttq(16),
+    ]
+}
 
 /// Tables 4-8: one report per GPU name ("A40", "A100", "L40",
 /// "RTX3090", "RTX4090"). 4-bit, g=32 as in the paper's App. H.
 pub fn runtime_table(gpu_name: &str) -> Report {
+    runtime_table_for(gpu_name, &default_modes())
+}
+
+/// Same layout with caller-chosen method rows (e.g. from
+/// `--methods nf:4 prune:0.5` via [`DecodeMode::for_method`]).
+pub fn runtime_table_for(gpu_name: &str, modes: &[DecodeMode]) -> Report {
     let g = gpu(gpu_name);
     let spec = QuantSpec::new(4, 32);
-    let modes = [
-        Mode::Fp16,
-        Mode::AwqGemm,
-        Mode::AwqMarlin,
-        Mode::Ttq { rank: 0 },
-        Mode::Ttq { rank: 16 },
-    ];
     let mut header: Vec<String> = vec!["Qwen3".into()];
     header.extend(QWEN3.iter().map(|m| m.name.to_string()));
     let mut rep = Report::new(
@@ -40,6 +52,11 @@ pub fn runtime_table(gpu_name: &str) -> Report {
         rep.row(cells);
     }
     rep
+}
+
+/// Turn method specs into table rows on their natural kernels.
+pub fn modes_for_methods(methods: &[MethodSpec]) -> Vec<DecodeMode> {
+    methods.iter().cloned().map(DecodeMode::for_method).collect()
 }
 
 /// All five GPU tables in paper order.
@@ -73,5 +90,17 @@ mod tests {
             let marlin = parse(2, c);
             assert!(marlin > fp16, "col {c}: marlin {marlin} vs fp16 {fp16}");
         }
+    }
+
+    #[test]
+    fn custom_method_rows_render() {
+        let modes = modes_for_methods(&[
+            MethodSpec::parse("nf:4").unwrap(),
+            MethodSpec::parse("ttq:r=16").unwrap(),
+        ]);
+        let t = runtime_table_for("RTX3090", &modes);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "NF4 (marlin_gemm)");
+        assert_eq!(t.rows[1][0], "TTQ (r = 16)");
     }
 }

@@ -30,6 +30,19 @@ impl Default for CalibratorConfig {
     }
 }
 
+impl CalibratorConfig {
+    /// This config with the diagonal hyperparameters taken from a
+    /// registry method (the serving engine keeps the calibrator's D
+    /// consistent with the method that will consume it). Unchanged for
+    /// methods without a diagonal.
+    pub fn for_method(mut self, method: &crate::quant::MethodSpec) -> Self {
+        if let Some(h) = method.quantizer().diag_hyper() {
+            self.hyper = h;
+        }
+        self
+    }
+}
+
 /// State for one linear layer.
 struct LayerState {
     stats: ActStats,

@@ -10,24 +10,35 @@
 //! This is the paper's Fig. 1(b) loop made concrete: quantization state
 //! is owned by the server, recomputed *from the live traffic* whenever
 //! the activation statistics drift — never from offline calibration.
+//!
+//! The compression method is a [`MethodSpec`] registry handle. Methods
+//! that consume the activation diagonal (TTQ, online AWQ, test-time
+//! pruning) ride the calibrator's observe→drift→commit loop; weight-only
+//! methods (RTN, NF) quantize once at the first batch; correlation
+//! methods (GPTQ) are rejected up front — the serving path has no corr
+//! artifact.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
 use super::calibrator::{CalibratorConfig, OnlineCalibrator};
 use super::metrics::Metrics;
-use crate::eval::Evaluator;
-use crate::quant::QuantSpec;
+use crate::eval::{EvalConfig, Evaluator};
+use crate::quant::{MethodSpec, QuantSpec};
 use crate::runtime::{literal_f32_vec, model_inputs, ArtifactKey, Runtime};
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub model: String,
     pub spec: QuantSpec,
-    pub rank: usize,
+    /// Compression method for the serving loop (default: TTQ r=0).
+    pub method: MethodSpec,
     pub policy: BatchPolicy,
+    /// Calibrator knobs (decay, drift threshold). The diagonal
+    /// hyperparameters are re-derived from `method` at [`Server::new`],
+    /// so the calibrator's D always matches the method that consumes it.
     pub calib: CalibratorConfig,
 }
 
@@ -36,10 +47,15 @@ impl ServerConfig {
         ServerConfig {
             model: model.into(),
             spec: QuantSpec::new(4, 32),
-            rank: 0,
+            method: MethodSpec::ttq(0),
             policy: BatchPolicy::default(),
             calib: CalibratorConfig::default(),
         }
+    }
+
+    pub fn with_method(mut self, method: MethodSpec) -> Self {
+        self.method = method;
+        self
     }
 }
 
@@ -58,15 +74,32 @@ pub struct Server<'rt> {
     calibrator: OnlineCalibrator,
     pub metrics: Metrics,
     next_id: RequestId,
+    /// Weight-only methods quantize once; set after the first batch.
+    static_applied: bool,
 }
 
 impl<'rt> Server<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: ServerConfig) -> Result<Self> {
+        if cfg.method.needs_corr() {
+            bail!(
+                "method {} needs the full correlation — unsupported by the serving path",
+                cfg.method.label()
+            );
+        }
+        if cfg.method.is_offline() {
+            bail!(
+                "method {} is offline-calibrated; the serving loop self-calibrates online \
+                 (drop the calib domain)",
+                cfg.method.label()
+            );
+        }
         let ev = Evaluator::new(rt, &cfg.model)?;
         let man = &ev.weights.manifest;
         let d_ins: Vec<usize> = man.linears.iter().map(|l| l.d_in).collect();
-        let calibrator =
-            OnlineCalibrator::new(cfg.calib.clone(), &man.norm_ps, &d_ins);
+        // Keep the calibrator's diagonal consistent with the method,
+        // however cfg.method was set (constructor, builder, or field).
+        let calib_cfg = cfg.calib.clone().for_method(&cfg.method);
+        let calibrator = OnlineCalibrator::new(calib_cfg, &man.norm_ps, &d_ins);
         let batcher = Batcher::new(cfg.policy.clone());
         Ok(Server {
             cfg,
@@ -75,6 +108,7 @@ impl<'rt> Server<'rt> {
             calibrator,
             metrics: Metrics::new(),
             next_id: 0,
+            static_applied: false,
         })
     }
 
@@ -121,16 +155,25 @@ impl<'rt> Server<'rt> {
         let bucket = batch.bucket;
         let tokens = batch.tokens(seq);
 
-        // 1. stats pass on the live batch (the O[dT] term of Eq. 3)
-        let collected = self.ev.collect(&tokens, bucket, false)?;
-        self.calibrator.observe(&collected.stats);
+        if self.cfg.method.needs_stats() {
+            // 1. stats pass on the live batch (the O[dT] term of Eq. 3)
+            let collected = self.ev.collect(&tokens, bucket, false)?;
+            self.calibrator.observe(&collected.stats);
 
-        // 2. requantize only when the activation statistics drifted
-        if self.calibrator.needs_requant() {
+            // 2. requantize only when the activation statistics drifted
+            if self.calibrator.needs_requant() {
+                let t0 = Instant::now();
+                let diags = self.calibrator.commit();
+                self.ev
+                    .apply_diags(&diags, &self.cfg.method, &self.cfg.spec)?;
+                self.metrics.record_requant(t0.elapsed());
+            }
+        } else if !self.static_applied {
+            // weight-only method: one quantization pass, ever
             let t0 = Instant::now();
-            let diags = self.calibrator.commit();
-            self.ev
-                .apply_diags(&diags, self.cfg.rank, &self.cfg.spec)?;
+            let cfg = EvalConfig { spec: self.cfg.spec.clone(), ..Default::default() };
+            self.ev.apply_quantization(&self.cfg.method, None, &cfg)?;
+            self.static_applied = true;
             self.metrics.record_requant(t0.elapsed());
         }
 

@@ -7,10 +7,13 @@
 //!   rust    quantize each linear with the chosen method
 //!   pass 2  `nll`/`logits` artifact with the substituted weights
 //!
-//! For **TTQ** pass 1 runs on the *evaluation batch itself* (that is
-//! the definition of test-time quantization — Fig. 1b); for **AWQ/GPTQ**
-//! pass 1 runs once on a *calibration* stream (Fig. 1a), which is what
-//! exposes them to domain shift.
+//! Method dispatch goes through the [`crate::quant::Quantizer`] trait:
+//! the evaluator
+//! asks [`MethodSpec::requirement`] what pass 1 must collect and whether
+//! it runs *offline* on a calibration split (Fig. 1a — AWQ/GPTQ, the
+//! path exposed to domain shift) or *online* on the evaluation batch
+//! itself (Fig. 1b — that is the definition of test-time quantization),
+//! then hands each linear's [`LayerStats`] to the method.
 
 use std::collections::HashMap;
 
@@ -19,54 +22,24 @@ use anyhow::{anyhow, Result};
 use crate::corpus::{CorpusStream, Split};
 use crate::linalg::Mat;
 use crate::models::ModelWeights;
-use crate::quant::{
-    awq_quantize, diag_from_norm_sums, gptq_quantize, lowrank_init,
-    rtn_quantize, ActStats, LowRank, QuantSpec, TtqHyper,
-};
+use crate::quant::{lowrank_init, LayerStats, LowRank, QuantSpec, StatsRequirement};
 use crate::runtime::{
     literal_f32_vec, literal_scalar_f32, model_inputs, ArtifactKey, Runtime,
 };
 
-/// Method selector for one experiment row.
-#[derive(Clone, Debug, PartialEq)]
-pub enum MethodSpec {
-    /// Un-quantized baseline (the table headers' reference perplexity).
-    Fp,
-    Rtn,
-    /// Offline AWQ calibrated on the named domain's calib split.
-    Awq { calib_domain: String },
-    /// Online TTQ with rank-r low-rank compensation.
-    Ttq { rank: usize },
-    /// GPTQ calibrated on the named domain (needs the corr artifact).
-    Gptq { calib_domain: String },
-}
+// The unified method selector lives in the quant layer; re-exported
+// here because eval call sites are where methods are most often named.
+pub use crate::quant::{ActStats, MethodSpec};
 
-impl MethodSpec {
-    pub fn label(&self) -> String {
-        match self {
-            MethodSpec::Fp => "FP32".into(),
-            MethodSpec::Rtn => "RTN".into(),
-            MethodSpec::Awq { calib_domain } => {
-                format!("AWQ ({} Calib)", calib_domain.to_uppercase())
-            }
-            MethodSpec::Ttq { rank } => format!("TTQ (r = {rank})"),
-            MethodSpec::Gptq { calib_domain } => {
-                format!("GPTQ ({} Calib)", calib_domain.to_uppercase())
-            }
-        }
-    }
-}
-
-/// Shared experiment knobs.
+/// Shared experiment knobs. Method-specific hyperparameters (the TTQ
+/// diagonal (p, λ, α), GPTQ damping) live on the method itself — see
+/// [`crate::quant::MethodRegistry`].
 #[derive(Clone, Debug)]
 pub struct EvalConfig {
     pub batch: usize,
     pub eval_batches: usize,
     pub calib_batches: usize,
     pub spec: QuantSpec,
-    pub hyper: TtqHyper,
-    /// GPTQ diagonal damping fraction.
-    pub gptq_damp: f64,
 }
 
 impl Default for EvalConfig {
@@ -76,8 +49,6 @@ impl Default for EvalConfig {
             eval_batches: 12,
             calib_batches: 16,
             spec: QuantSpec::new(3, 32),
-            hyper: TtqHyper::default(),
-            gptq_damp: 0.01,
         }
     }
 }
@@ -130,8 +101,8 @@ impl<'rt> Evaluator<'rt> {
     pub fn nll_fused_ttq(&self, tokens: &[i32], batch: usize, bits: u32) -> Result<(f64, f64)> {
         let key = ArtifactKey::new(self.model_name(), "ttq", batch);
         let exe = self.rt.load(&key)?;
-        let qmax = ((1u64 << bits) - 1) as f32;
-        let inputs = model_inputs(&self.weights, tokens, batch, Some(qmax))?;
+        let inputs =
+            model_inputs(&self.weights, tokens, batch, Some(crate::quant::qmax(bits)))?;
         let outs = self.rt.run(&exe, &inputs)?;
         Ok((
             literal_scalar_f32(&outs[0])? as f64,
@@ -216,7 +187,9 @@ impl<'rt> Evaluator<'rt> {
         lr
     }
 
-    /// Substitute quantized weights for every linear given statistics.
+    /// Substitute quantized weights for every linear: look up what the
+    /// method requires, slice the collected statistics per layer, and
+    /// dispatch through [`crate::quant::Quantizer::quantize`].
     pub fn apply_quantization(
         &mut self,
         method: &MethodSpec,
@@ -224,32 +197,35 @@ impl<'rt> Evaluator<'rt> {
         cfg: &EvalConfig,
     ) -> Result<()> {
         let linears = self.weights.manifest.linears.clone();
+        let rank = method.quantizer().lowrank_rank();
         for (i, lin) in linears.iter().enumerate() {
-            let w0 = self.originals[&lin.name].clone();
-            let wq = match method {
-                MethodSpec::Fp => w0,
-                MethodSpec::Rtn => rtn_quantize(&w0, &cfg.spec),
-                MethodSpec::Awq { .. } => {
-                    let st = &collected.ok_or_else(|| anyhow!("AWQ needs stats"))?.stats[i];
-                    let d = diag_from_norm_sums(st, cfg.hyper.p, cfg.hyper.lam, cfg.hyper.alpha);
-                    awq_quantize(&w0, &d, &cfg.spec)
-                }
-                MethodSpec::Ttq { rank } => {
-                    let st = &collected.ok_or_else(|| anyhow!("TTQ needs stats"))?.stats[i];
-                    let d = diag_from_norm_sums(st, cfg.hyper.p, cfg.hyper.lam, cfg.hyper.alpha);
-                    if *rank == 0 {
-                        awq_quantize(&w0, &d, &cfg.spec)
-                    } else {
-                        let lr = self.lowrank_for(&lin.name, *rank);
-                        let wq = awq_quantize(&w0.sub(&lr.product()), &d, &cfg.spec);
-                        wq.add(&lr.product())
-                    }
-                }
-                MethodSpec::Gptq { .. } => {
-                    let c = &collected.ok_or_else(|| anyhow!("GPTQ needs corr"))?.corr[i];
-                    gptq_quantize(&w0, c, &cfg.spec, cfg.gptq_damp)
-                }
+            let lowrank = if rank > 0 {
+                Some(self.lowrank_for(&lin.name, rank))
+            } else {
+                None
             };
+            let mut stats = LayerStats::default();
+            match method.requirement() {
+                StatsRequirement::None => {}
+                StatsRequirement::DiagonalNorms | StatsRequirement::StreamingActivations => {
+                    let c = collected.ok_or_else(|| {
+                        anyhow!("{} needs activation stats", method.label())
+                    })?;
+                    stats.act = Some(&c.stats[i]);
+                }
+                StatsRequirement::FullCorrelation => {
+                    let c = collected.ok_or_else(|| {
+                        anyhow!("{} needs the corr artifact", method.label())
+                    })?;
+                    stats.corr = Some(c.corr.get(i).ok_or_else(|| {
+                        anyhow!("{} needs the corr artifact", method.label())
+                    })?);
+                }
+            }
+            stats.lowrank = lowrank.as_ref();
+            let wq = method
+                .quantizer()
+                .quantize(&self.originals[&lin.name], &stats, &cfg.spec)?;
             self.weights.set(&lin.name, wq);
         }
         Ok(())
@@ -257,25 +233,30 @@ impl<'rt> Evaluator<'rt> {
 
     /// Quantize every linear with externally supplied diagonals (the
     /// serving path: the [`crate::coordinator::OnlineCalibrator`] owns
-    /// the statistics and hands committed diagonals down).
+    /// the statistics and hands committed diagonals down through
+    /// [`LayerStats::diag`]).
     pub fn apply_diags(
         &mut self,
         diags: &[Vec<f32>],
-        rank: usize,
+        method: &MethodSpec,
         spec: &QuantSpec,
     ) -> Result<()> {
         let linears = self.weights.manifest.linears.clone();
         if diags.len() != linears.len() {
             return Err(anyhow!("{} diags for {} linears", diags.len(), linears.len()));
         }
+        let rank = method.quantizer().lowrank_rank();
         for (lin, d) in linears.iter().zip(diags) {
-            let w0 = self.originals[&lin.name].clone();
-            let wq = if rank == 0 {
-                awq_quantize(&w0, d, spec)
+            let lowrank = if rank > 0 {
+                Some(self.lowrank_for(&lin.name, rank))
             } else {
-                let lr = self.lowrank_for(&lin.name, rank);
-                awq_quantize(&w0.sub(&lr.product()), d, spec).add(&lr.product())
+                None
             };
+            let mut stats = LayerStats::from_diag(d);
+            stats.lowrank = lowrank.as_ref();
+            let wq = method
+                .quantizer()
+                .quantize(&self.originals[&lin.name], &stats, spec)?;
             self.weights.set(&lin.name, wq);
         }
         Ok(())
@@ -286,6 +267,37 @@ impl<'rt> Evaluator<'rt> {
         for (name, w) in self.originals.clone() {
             self.weights.set(&name, w);
         }
+    }
+
+    /// Offline calibration (Fig. 1a) for methods with a calib domain:
+    /// collect what the method requires from the domain's calib split
+    /// and quantize once. No-stats methods quantize directly; online
+    /// methods are left for the per-batch path.
+    pub(crate) fn quantize_static(&mut self, method: &MethodSpec, cfg: &EvalConfig) -> Result<()> {
+        self.restore();
+        if method.is_offline() {
+            let domain = method.calib_domain().expect("offline implies calib");
+            let mut s = CorpusStream::new(domain, Split::Calib);
+            let st =
+                self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, method.needs_corr())?;
+            self.apply_quantization(method, Some(&st), cfg)?;
+        } else if !method.is_online() {
+            self.apply_quantization(method, None, cfg)?;
+        }
+        Ok(())
+    }
+
+    /// Online requantization (Fig. 1b): statistics from the incoming
+    /// batch itself, then quantize — the test-time path.
+    fn requantize_online(
+        &mut self,
+        method: &MethodSpec,
+        tokens: &[i32],
+        cfg: &EvalConfig,
+    ) -> Result<()> {
+        self.restore();
+        let st = self.collect(tokens, cfg.batch, method.needs_corr())?;
+        self.apply_quantization(method, Some(&st), cfg)
     }
 
     // ------------------------------------------------------------------
@@ -299,38 +311,14 @@ impl<'rt> Evaluator<'rt> {
         eval_domain: &str,
         cfg: &EvalConfig,
     ) -> Result<f64> {
-        // Offline calibration pass (AWQ / GPTQ), once.
-        let offline = match method {
-            MethodSpec::Awq { calib_domain } => {
-                self.restore();
-                let mut s = CorpusStream::new(calib_domain, Split::Calib);
-                Some(self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, false)?)
-            }
-            MethodSpec::Gptq { calib_domain } => {
-                self.restore();
-                let mut s = CorpusStream::new(calib_domain, Split::Calib);
-                Some(self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, true)?)
-            }
-            _ => None,
-        };
-        if let Some(st) = &offline {
-            self.apply_quantization(method, Some(st), cfg)?;
-        } else if matches!(method, MethodSpec::Fp | MethodSpec::Rtn) {
-            self.restore();
-            self.apply_quantization(method, None, cfg)?;
-        }
-
+        self.quantize_static(method, cfg)?;
         let mut stream = CorpusStream::new(eval_domain, Split::Eval);
         let mut total_nll = 0.0;
         let mut total_cnt = 0.0;
         for _ in 0..cfg.eval_batches {
             let toks = stream.batch(cfg.batch, self.seq());
-            if let MethodSpec::Ttq { .. } = method {
-                // TTQ: per-prompt online quantization — stats on the
-                // *incoming* batch, quantize, then evaluate it.
-                self.restore();
-                let st = self.collect(&toks, cfg.batch, false)?;
-                self.apply_quantization(method, Some(&st), cfg)?;
+            if method.is_online() {
+                self.requantize_online(method, &toks, cfg)?;
             }
             let (s, c) = self.nll(&toks, cfg.batch)?;
             total_nll += s;
@@ -349,37 +337,15 @@ impl<'rt> Evaluator<'rt> {
     ) -> Result<f64> {
         let vocab = self.weights.manifest.config.vocab;
         let seq = self.seq();
-        // quantize exactly as in `perplexity`
-        match method {
-            MethodSpec::Awq { calib_domain } => {
-                self.restore();
-                let mut s = CorpusStream::new(calib_domain, Split::Calib);
-                let st = self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, false)?;
-                self.apply_quantization(method, Some(&st), cfg)?;
-            }
-            MethodSpec::Gptq { calib_domain } => {
-                self.restore();
-                let mut s = CorpusStream::new(calib_domain, Split::Calib);
-                let st = self.collect_stream(&mut s, cfg.batch, cfg.calib_batches, true)?;
-                self.apply_quantization(method, Some(&st), cfg)?;
-            }
-            _ => {
-                self.restore();
-                if !matches!(method, MethodSpec::Ttq { .. }) {
-                    self.apply_quantization(method, None, cfg)?;
-                }
-            }
-        }
+        self.quantize_static(method, cfg)?;
         let key = ArtifactKey::new(self.model_name(), "logits", cfg.batch);
         let exe = self.rt.load(&key)?;
         let mut stream = CorpusStream::new(domain, Split::Eval);
         let (mut hits, mut total) = (0usize, 0usize);
         for _ in 0..cfg.eval_batches {
             let toks = stream.batch(cfg.batch, seq);
-            if let MethodSpec::Ttq { .. } = method {
-                self.restore();
-                let st = self.collect(&toks, cfg.batch, false)?;
-                self.apply_quantization(method, Some(&st), cfg)?;
+            if method.is_online() {
+                self.requantize_online(method, &toks, cfg)?;
             }
             let inputs = model_inputs(&self.weights, &toks, cfg.batch, None)?;
             let outs = self.rt.run(&exe, &inputs)?;
@@ -417,12 +383,9 @@ mod tests {
 
     #[test]
     fn method_labels_match_table_rows() {
-        assert_eq!(
-            MethodSpec::Awq { calib_domain: "c4s".into() }.label(),
-            "AWQ (C4S Calib)"
-        );
-        assert_eq!(MethodSpec::Ttq { rank: 16 }.label(), "TTQ (r = 16)");
-        assert_eq!(MethodSpec::Rtn.label(), "RTN");
+        assert_eq!(MethodSpec::awq("c4s").label(), "AWQ (C4S Calib)");
+        assert_eq!(MethodSpec::ttq(16).label(), "TTQ (r = 16)");
+        assert_eq!(MethodSpec::rtn().label(), "RTN");
     }
 
     #[test]

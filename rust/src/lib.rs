@@ -12,20 +12,26 @@
 //! Module map (see DESIGN.md §4 for the full inventory):
 //!
 //! * [`linalg`] — dense matrix substrate: matmul, Cholesky, truncated SVD.
-//! * [`quant`] — the paper's algorithms: RTN (Eq. 1), AWQ (Eq. 19-20),
-//!   TTQ (§2), GPTQ (App. C baseline), low-rank decomposition (App. E),
-//!   QDQ formats (App. D), and bit-packing with traffic accounting.
+//! * [`quant`] — the paper's algorithms behind one dispatch surface: the
+//!   [`quant::Quantizer`] trait + [`quant::MethodRegistry`] (spec strings
+//!   like `"ttq:r=16"`, `"nf:4"`, `"prune:0.5"`), over RTN (Eq. 1), AWQ
+//!   (Eq. 19-20), TTQ (§2), GPTQ (App. C), NormalFloat and test-time
+//!   pruning, plus low-rank decomposition (App. E), QDQ formats (App. D)
+//!   and bit-packing with traffic accounting.
 //! * [`corpus`] — seeded synthetic corpora standing in for WT2/PTB/C4 and
 //!   the VQA/VLA proxies (bit-identical to `python/compile/corpus.py`).
 //! * [`models`] — model registry + weight-manifest loader (interchange
 //!   contract with `python/compile/aot.py`).
-//! * [`runtime`] — PJRT artifact loader / executor (xla crate).
+//! * [`runtime`] — PJRT artifact loader / executor (xla crate; an
+//!   in-tree stub keeps offline builds green).
 //! * [`coordinator`] — serving layer: shape-bucketed dynamic batcher,
-//!   online TTQ calibrator, scheduler, metrics.
-//! * [`eval`] — perplexity / accuracy / success-rate pipelines driving
-//!   the paper's experiments.
-//! * [`perfmodel`] — GPU roofline simulator regenerating Tables 4-8.
-//! * [`bench`] — table/figure regeneration harness (`ttq-serve table N`).
+//!   online calibrator driving any diagonal method, scheduler, metrics.
+//! * [`eval`] — perplexity / accuracy / success-rate pipelines; plans
+//!   stats collection from [`quant::StatsRequirement`].
+//! * [`perfmodel`] — GPU roofline simulator regenerating Tables 4-8;
+//!   rows are registry methods priced through the trait.
+//! * [`bench`] — table/figure regeneration harness (`ttq-serve table N`),
+//!   method rows swappable via `--methods`.
 
 pub mod bench;
 pub mod coordinator;

@@ -1,13 +1,15 @@
 //! ttq-serve — CLI for the TTQ reproduction.
 //!
-//! Subcommands map 1:1 onto the paper's exhibits plus the serving loop:
+//! Subcommands map 1:1 onto the paper's exhibits plus the serving loop.
+//! Methods everywhere are registry spec strings (see `ttq-serve help`):
 //!
 //! ```text
-//! ttq-serve eval --model qwen-mini --method ttq --bits 3 --rank 16
+//! ttq-serve eval --model qwen-mini --method ttq:r=16 --bits 3
 //! ttq-serve table <1|2|3|4|5|6|7|8|12|13> [--fast] [--models ...]
+//!                 [--methods rtn awq ttq:r=16 gptq nf:4 prune:0.5]
 //! ttq-serve figure2 [--fast]
 //! ttq-serve sweep <formats|lowrank-init|nf|prune>
-//! ttq-serve serve --model qwen-micro --requests 64 [--rank R] [--bits Q]
+//! ttq-serve serve --model qwen-micro --requests 64 [--method M] [--bits Q]
 //! ttq-serve info
 //! ```
 
@@ -21,8 +23,8 @@ use ttq_serve::bench::{
 };
 use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
 use ttq_serve::corpus::{CorpusStream, Split};
-use ttq_serve::eval::{EvalConfig, Evaluator, MethodSpec};
-use ttq_serve::quant::{QuantSpec, TtqHyper};
+use ttq_serve::eval::{EvalConfig, Evaluator};
+use ttq_serve::quant::{MethodRegistry, MethodSpec, QuantSpec};
 use ttq_serve::runtime::Runtime;
 use ttq_serve::util::cli::Args;
 use ttq_serve::{artifacts_dir, artifacts_ready};
@@ -31,24 +33,47 @@ const USAGE: &str = "\
 ttq-serve — TTQ test-time quantization serving stack
 
 USAGE:
-  ttq-serve eval [--model M] [--method fp|rtn|awq|ttq|gptq] [--bits Q]
-                 [--group G] [--rank R] [--domain D] [--calib D] [--fast]
-  ttq-serve table <N> [--fast] [--models M1 M2 ...]   (N: 1,2,3,4..8,12,13)
+  ttq-serve eval [--model M] [--method SPEC] [--bits Q] [--group G]
+                 [--rank R] [--domain D] [--calib D] [--fast]
+  ttq-serve table <N> [--fast] [--models M1 M2 ...]
+                      [--methods SPEC1 SPEC2 ...]   (N: 1,2,3,4..8,12,13)
   ttq-serve figure2 [--fast] [--models ...]
   ttq-serve sweep <formats|lowrank-init|nf|prune>
-  ttq-serve serve [--model M] [--requests N] [--bits Q] [--rank R]
-                  [--domains d1,d2]
-  ttq-serve info";
+  ttq-serve serve [--model M] [--requests N] [--method SPEC] [--bits Q]
+                  [--rank R] [--domains d1,d2]
+  ttq-serve info
 
-fn method_spec(method: &str, rank: usize, calib: &str) -> Result<MethodSpec> {
-    Ok(match method {
-        "fp" => MethodSpec::Fp,
-        "rtn" => MethodSpec::Rtn,
-        "awq" => MethodSpec::Awq { calib_domain: calib.into() },
-        "ttq" => MethodSpec::Ttq { rank },
-        "gptq" => MethodSpec::Gptq { calib_domain: calib.into() },
-        m => bail!("unknown method {m}"),
-    })
+METHOD SPECS (ttq-serve eval/table/serve --method(s)):";
+
+fn usage() -> String {
+    format!("{USAGE}\n{}", MethodRegistry::global().help())
+}
+
+/// Parse a method spec; offline-by-default methods (awq, gptq) given
+/// without an inline `calib=` get the CLI's `--calib` domain.
+fn parse_method(spec: &str, default_calib: &str) -> Result<MethodSpec> {
+    let mut m = MethodSpec::parse(spec)?;
+    if m.quantizer().offline_by_default() && m.calib_domain().is_none() {
+        m = m.with_calib(default_calib);
+    }
+    Ok(m)
+}
+
+fn parse_methods(a: &Args) -> Result<Vec<MethodSpec>> {
+    let calib = a.get_or("calib", "c4s");
+    a.get_many("methods")
+        .iter()
+        .map(|s| parse_method(s, calib))
+        .collect()
+}
+
+/// Legacy `--rank R` sugar: `--method ttq --rank 16` ≡ `--method ttq:r=16`.
+fn method_arg(a: &Args, default: &str) -> String {
+    let spec = a.get_or("method", default);
+    if spec == "ttq" && a.get("rank").is_some() {
+        return format!("ttq:r={}", a.get_usize("rank", 0));
+    }
+    spec.to_string()
 }
 
 fn default_models(models: Vec<String>) -> Vec<String> {
@@ -77,16 +102,11 @@ fn cmd_eval(a: &Args) -> Result<()> {
     let model = a.get_or("model", "qwen-micro").to_string();
     let mut ev = Evaluator::new(&rt, &model)?;
     let fast = a.has("fast");
-    let m = method_spec(
-        a.get_or("method", "ttq"),
-        a.get_usize("rank", 0),
-        a.get_or("calib", "c4s"),
-    )?;
+    let m = parse_method(&method_arg(a, "ttq"), a.get_or("calib", "c4s"))?;
     let cfg = EvalConfig {
         spec: QuantSpec::new(a.get_u32("bits", 3), a.get_usize("group", 32)),
         eval_batches: if fast { 3 } else { 12 },
         calib_batches: if fast { 4 } else { 16 },
-        hyper: TtqHyper::default(),
         ..Default::default()
     };
     let domain = a.get_or("domain", "wt2s");
@@ -106,23 +126,29 @@ fn cmd_table(a: &Args) -> Result<()> {
     let n: u32 = a
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("table number required\n{USAGE}"))?
+        .ok_or_else(|| anyhow!("table number required\n{}", usage()))?
         .parse()?;
     let fast = a.has("fast");
     let models = a.get_many("models");
+    let methods = parse_methods(a)?;
     match n {
-        1 => table1(&need_artifacts()?, fast)?.print(),
-        2 => table2(&need_artifacts()?, fast)?.print(),
+        1 => table1(&need_artifacts()?, fast, &methods)?.print(),
+        2 => table2(&need_artifacts()?, fast, &methods)?.print(),
         3 => {
             let rt = need_artifacts()?;
-            for r in table3(&rt, &default_models(models), fast)? {
+            for r in table3(&rt, &default_models(models), fast, &methods)? {
                 r.print();
             }
         }
         4..=8 => {
             let name =
                 ["A40", "A100", "L40", "RTX3090", "RTX4090"][(n - 4) as usize];
-            tables_runtime::runtime_table(name).print();
+            if methods.is_empty() {
+                tables_runtime::runtime_table(name).print();
+            } else {
+                let modes = tables_runtime::modes_for_methods(&methods);
+                tables_runtime::runtime_table_for(name, &modes).print();
+            }
         }
         12 => {
             let rt = need_artifacts()?;
@@ -131,7 +157,7 @@ fn cmd_table(a: &Args) -> Result<()> {
             } else {
                 models
             };
-            for r in table12(&rt, &ms, fast)? {
+            for r in table12(&rt, &ms, fast, &methods)? {
                 r.print();
             }
         }
@@ -141,7 +167,7 @@ fn cmd_table(a: &Args) -> Result<()> {
                 .first()
                 .cloned()
                 .unwrap_or_else(|| "qwen-mini".into());
-            table13(&rt, &model, fast)?.print();
+            table13(&rt, &model, fast, &methods)?.print();
         }
         _ => bail!("no table {n} among the paper's exhibits"),
     }
@@ -151,9 +177,10 @@ fn cmd_table(a: &Args) -> Result<()> {
 fn cmd_serve(a: &Args) -> Result<()> {
     let rt = need_artifacts()?;
     let model = a.get_or("model", "qwen-micro");
-    let mut cfg = ServerConfig::new(model);
+    // serving methods are online by definition — no calib default
+    let method = MethodSpec::parse(&method_arg(a, "ttq"))?;
+    let mut cfg = ServerConfig::new(model).with_method(method);
     cfg.spec = QuantSpec::new(a.get_u32("bits", 4), 32);
-    cfg.rank = a.get_usize("rank", 0);
     cfg.policy = BatchPolicy::default();
     let requests = a.get_usize("requests", 64);
     let mut server = Server::new(&rt, cfg)?;
@@ -192,6 +219,7 @@ fn cmd_info() -> Result<()> {
     println!("artifacts dir: {:?}", artifacts_dir());
     println!("artifacts ready: {}", artifacts_ready());
     println!("models: {:?}", ttq_serve::models::MODEL_NAMES);
+    println!("methods:\n{}", MethodRegistry::global().help());
     if artifacts_ready() {
         let rt = Runtime::new(&artifacts_dir())?;
         println!("PJRT platform: {}", rt.platform());
@@ -253,7 +281,7 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&a),
         Some("info") => cmd_info(),
         _ => {
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
     }

@@ -13,17 +13,15 @@
 //!
 //!   t = max(bytes/BW_eff, flops/TFLOPS_eff) + launch_overhead
 //!
-//! * FP16      — full d′·d·2 bytes every step.
-//! * AWQ       — packed q-bit weight + f16 group params; `awq_gemm` and
-//!   `marlin_gemm` differ by kernel efficiency.
-//! * TTQ(r=0)  — marlin-class traffic + the online `find_params` pass
-//!   (reads W in fp16, writes packed W) **amortized over the decode
-//!   window**: the coordinator quantizes once per prompt (prefill) and
-//!   decodes `amortize` tokens against the packed weight.
-//! * TTQ(r=16) — additionally moves B/A (fp16) and computes the
-//!   low-rank projection every step.
+//! A table row is a [`DecodeMode`]: a [`MethodSpec`] (the same registry
+//! handle the eval/bench/serve layers dispatch on) paired with a GEMV
+//! [`Kernel`] class. The cost model interrogates the method through the
+//! [`crate::quant::Quantizer`] trait — does it pack the weights, does it
+//! quantize *online* (the amortized `find_params` pass of Eq. 3), what
+//! low-rank epilogue does it carry — instead of matching on a private
+//! mode enum.
 
-use crate::quant::QuantSpec;
+use crate::quant::{MethodSpec, QuantSpec};
 
 /// Published card specs (dense FP16 tensor TFLOPs, HBM/GDDR GB/s).
 #[derive(Clone, Copy, Debug)]
@@ -47,29 +45,98 @@ pub fn gpu(name: &str) -> &'static GpuSpec {
     GPUS.iter().find(|g| g.name == name).expect("unknown GPU")
 }
 
-/// Kernel efficiency factors (fraction of peak BW actually achieved by
-/// the memory-bound GEMV): calibrated against the paper's FP16 rows.
-const EFF_FP16: f64 = 0.62;
-const EFF_AWQ_GEMM: f64 = 0.38; // the older vllm awq_gemm kernel
-const EFF_MARLIN: f64 = 0.72; // Frantar et al. 2025
-const EFF_TTQ_QUANT: f64 = 0.55; // streaming read-modify-write pass
+/// Streaming read-modify-write efficiency of the online `find_params`
+/// pass (fraction of peak BW).
+const EFF_TTQ_QUANT: f64 = 0.55;
 
-/// Execution mode — one row of Tables 4-8.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Mode {
-    Fp16,
+/// GEMV kernel class — which deployed kernel moves the weights.
+/// Efficiency factors are the fraction of peak BW the memory-bound GEMV
+/// actually achieves, calibrated against the paper's FP16 rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Dense f16 GEMV.
+    Fp16Gemv,
+    /// The older vllm `awq_gemm` packed kernel.
     AwqGemm,
-    AwqMarlin,
-    Ttq { rank: usize },
+    /// `marlin_gemm` (Frantar et al. 2025).
+    MarlinGemm,
 }
 
-impl Mode {
-    pub fn label(&self) -> String {
+impl Kernel {
+    pub fn label(&self) -> &'static str {
         match self {
-            Mode::Fp16 => "FP16".into(),
-            Mode::AwqGemm => "AWQ (awq_gemm)".into(),
-            Mode::AwqMarlin => "AWQ (marlin_gemm)".into(),
-            Mode::Ttq { rank } => format!("TTQ (r = {rank})"),
+            Kernel::Fp16Gemv => "fp16",
+            Kernel::AwqGemm => "awq_gemm",
+            Kernel::MarlinGemm => "marlin_gemm",
+        }
+    }
+
+    /// Fraction of peak bandwidth achieved. Online methods fuse the
+    /// descale-by-D prologue into the GEMV, costing a little efficiency
+    /// (App. H).
+    fn eff(&self, online_descale: bool) -> f64 {
+        let base = match self {
+            Kernel::Fp16Gemv => 0.62,
+            Kernel::AwqGemm => 0.38,
+            Kernel::MarlinGemm => 0.72,
+        };
+        if online_descale {
+            base * 0.93
+        } else {
+            base
+        }
+    }
+}
+
+/// One row of Tables 4-8: a registry method executed by a kernel class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecodeMode {
+    pub method: MethodSpec,
+    pub kernel: Kernel,
+}
+
+impl DecodeMode {
+    /// FP16 baseline row.
+    pub fn fp16() -> Self {
+        DecodeMode { method: MethodSpec::fp(), kernel: Kernel::Fp16Gemv }
+    }
+
+    /// Offline AWQ on the older `awq_gemm` kernel. The calibration
+    /// domain marks the method offline; it does not enter the model.
+    pub fn awq_gemm() -> Self {
+        DecodeMode { method: MethodSpec::awq("c4s"), kernel: Kernel::AwqGemm }
+    }
+
+    /// Offline AWQ on `marlin_gemm`.
+    pub fn awq_marlin() -> Self {
+        DecodeMode { method: MethodSpec::awq("c4s"), kernel: Kernel::MarlinGemm }
+    }
+
+    /// Online TTQ (rank-r) on a marlin-class kernel with the descale
+    /// prologue fused.
+    pub fn ttq(rank: usize) -> Self {
+        DecodeMode { method: MethodSpec::ttq(rank), kernel: Kernel::MarlinGemm }
+    }
+
+    /// Any registry method on its natural kernel: un-quantized methods
+    /// run the dense f16 GEMV, everything else marlin-class.
+    pub fn for_method(method: MethodSpec) -> Self {
+        let kernel = if method.quantizer().quantizes() {
+            Kernel::MarlinGemm
+        } else {
+            Kernel::Fp16Gemv
+        };
+        DecodeMode { method, kernel }
+    }
+
+    /// Paper row label: "FP16", "AWQ (awq_gemm)", "TTQ (r = 16)", ...
+    pub fn label(&self) -> String {
+        if self.method.quantizer().name() == "fp" {
+            "FP16".into()
+        } else if self.method.is_online() {
+            self.method.quantizer().label()
+        } else {
+            format!("{} ({})", self.method.quantizer().label(), self.kernel.label())
         }
     }
 }
@@ -85,9 +152,14 @@ pub fn ktokens_per_sec(
     d_out: usize,
     d_in: usize,
     spec: &QuantSpec,
-    mode: Mode,
+    mode: &DecodeMode,
     amortize: f64,
 ) -> f64 {
+    let q = mode.method.quantizer();
+    let quantized = q.quantizes();
+    let online = quantized && mode.method.is_online();
+    let rank = q.lowrank_rank();
+
     let n = (d_out * d_in) as f64;
     let bw = gpu.bw_gbps * 1e9;
     let flops_cap = gpu.fp16_tflops * 1e12;
@@ -95,47 +167,38 @@ pub fn ktokens_per_sec(
     let packed_bytes = n * spec.bytes_per_element();
     let matmul_flops = 2.0 * n; // single-token GEMV
 
-    let t = match mode {
-        Mode::Fp16 => {
-            let t_mem = fp16_bytes / (bw * EFF_FP16);
-            t_mem.max(matmul_flops / flops_cap) + gpu.overhead_s
-        }
-        Mode::AwqGemm => {
-            let t_mem = packed_bytes / (bw * EFF_AWQ_GEMM);
-            t_mem.max(matmul_flops / flops_cap) + gpu.overhead_s
-        }
-        Mode::AwqMarlin => {
-            let t_mem = packed_bytes / (bw * EFF_MARLIN);
-            t_mem.max(matmul_flops / flops_cap) + gpu.overhead_s
-        }
-        Mode::Ttq { rank } => {
-            // matmul against packed weights (marlin-class kernel w/ the
-            // prologue descale fused — slightly below marlin efficiency
-            // because D is applied inline, App. H)
-            let t_mm = packed_bytes / (bw * (EFF_MARLIN * 0.93));
-            // online find_params: read W fp16 + write packed, amortized
-            let quant_bytes = fp16_bytes + packed_bytes;
-            let t_quant = quant_bytes / (bw * EFF_TTQ_QUANT) / amortize.max(1.0);
-            // low-rank epilogue: move B/A fp16 + its flops every step
-            let r = rank as f64;
-            let lr_bytes = r * (d_out + d_in) as f64 * 2.0;
-            let lr_flops = 2.0 * r * (d_out + d_in) as f64;
-            let t_lr = if rank > 0 {
-                (lr_bytes / (bw * EFF_FP16)).max(lr_flops / flops_cap)
-                    + 0.35 * gpu.overhead_s // extra kernel in the graph
-            } else {
-                0.0
-            };
-            t_mm.max(matmul_flops / flops_cap) + t_quant + t_lr + gpu.overhead_s
-        }
-    };
+    // matmul: packed or dense traffic through the kernel class
+    let bytes = if quantized { packed_bytes } else { fp16_bytes };
+    let t_mem = bytes / (bw * mode.kernel.eff(online));
+    let mut t = t_mem.max(matmul_flops / flops_cap) + gpu.overhead_s;
+
+    // online find_params: read W fp16 + write packed, amortized over
+    // the decode window (Eq. 3's O[dT + 3d'd] term)
+    if online {
+        t += (fp16_bytes + packed_bytes) / (bw * EFF_TTQ_QUANT) / amortize.max(1.0);
+    }
+
+    // low-rank epilogue: move B/A fp16 + its flops every step
+    if rank > 0 {
+        let r = rank as f64;
+        let lr_bytes = r * (d_out + d_in) as f64 * 2.0;
+        let lr_flops = 2.0 * r * (d_out + d_in) as f64;
+        t += (lr_bytes / (bw * Kernel::Fp16Gemv.eff(false))).max(lr_flops / flops_cap)
+            + 0.35 * gpu.overhead_s; // extra kernel in the graph
+    }
     1.0 / t / 1000.0
 }
 
 /// Speedup of a mode over the FP16 baseline.
-pub fn speedup(gpu: &GpuSpec, d_out: usize, d_in: usize, spec: &QuantSpec, mode: Mode) -> f64 {
+pub fn speedup(
+    gpu: &GpuSpec,
+    d_out: usize,
+    d_in: usize,
+    spec: &QuantSpec,
+    mode: &DecodeMode,
+) -> f64 {
     ktokens_per_sec(gpu, d_out, d_in, spec, mode, DEFAULT_AMORTIZE)
-        / ktokens_per_sec(gpu, d_out, d_in, spec, Mode::Fp16, DEFAULT_AMORTIZE)
+        / ktokens_per_sec(gpu, d_out, d_in, spec, &DecodeMode::fp16(), DEFAULT_AMORTIZE)
 }
 
 #[cfg(test)]
@@ -148,15 +211,23 @@ mod tests {
     }
 
     #[test]
+    fn labels_match_paper_rows() {
+        assert_eq!(DecodeMode::fp16().label(), "FP16");
+        assert_eq!(DecodeMode::awq_gemm().label(), "AWQ (awq_gemm)");
+        assert_eq!(DecodeMode::awq_marlin().label(), "AWQ (marlin_gemm)");
+        assert_eq!(DecodeMode::ttq(16).label(), "TTQ (r = 16)");
+    }
+
+    #[test]
     fn quantized_beats_fp16_on_large_models() {
         // Paper: "up to 6.7 folds at 32B on RTX4090" for marlin AWQ.
         let m = QWEN3[5];
         let (dout, din) = m.qproj_dims();
         for g in &GPUS {
-            let s = speedup(g, dout, din, &spec4(), Mode::AwqMarlin);
+            let s = speedup(g, dout, din, &spec4(), &DecodeMode::awq_marlin());
             assert!(s > 2.0, "{}: marlin speedup {s}", g.name);
         }
-        let s4090 = speedup(gpu("RTX4090"), dout, din, &spec4(), Mode::AwqMarlin);
+        let s4090 = speedup(gpu("RTX4090"), dout, din, &spec4(), &DecodeMode::awq_marlin());
         assert!(s4090 > 3.0 && s4090 < 9.0, "4090 marlin speedup {s4090}");
     }
 
@@ -166,8 +237,8 @@ mod tests {
         let m = QWEN3[4];
         let (dout, din) = m.qproj_dims();
         let g = gpu("A100");
-        let marlin = ktokens_per_sec(g, dout, din, &spec4(), Mode::AwqMarlin, 64.0);
-        let ttq = ktokens_per_sec(g, dout, din, &spec4(), Mode::Ttq { rank: 0 }, 64.0);
+        let marlin = ktokens_per_sec(g, dout, din, &spec4(), &DecodeMode::awq_marlin(), 64.0);
+        let ttq = ktokens_per_sec(g, dout, din, &spec4(), &DecodeMode::ttq(0), 64.0);
         assert!(ttq > marlin * 0.7, "ttq {ttq} vs marlin {marlin}");
         assert!(ttq <= marlin * 1.02);
     }
@@ -177,9 +248,9 @@ mod tests {
         let m = QWEN3[5];
         let (dout, din) = m.qproj_dims();
         let g = gpu("RTX4090");
-        let r0 = ktokens_per_sec(g, dout, din, &spec4(), Mode::Ttq { rank: 0 }, 64.0);
-        let r16 = ktokens_per_sec(g, dout, din, &spec4(), Mode::Ttq { rank: 16 }, 64.0);
-        let fp = ktokens_per_sec(g, dout, din, &spec4(), Mode::Fp16, 64.0);
+        let r0 = ktokens_per_sec(g, dout, din, &spec4(), &DecodeMode::ttq(0), 64.0);
+        let r16 = ktokens_per_sec(g, dout, din, &spec4(), &DecodeMode::ttq(16), 64.0);
+        let fp = ktokens_per_sec(g, dout, din, &spec4(), &DecodeMode::fp16(), 64.0);
         assert!(r16 < r0);
         // Paper: "TTQ can still accelerate ... up to 4.9 folds at 32B"
         let s = r16 / fp;
@@ -193,7 +264,7 @@ mod tests {
         let mut last = f64::MAX;
         for m in &QWEN3 {
             let (dout, din) = m.qproj_dims();
-            let k = ktokens_per_sec(g, dout, din, &spec4(), Mode::Fp16, 64.0);
+            let k = ktokens_per_sec(g, dout, din, &spec4(), &DecodeMode::fp16(), 64.0);
             assert!(k < last, "{}: {k} !< {last}", m.name);
             last = k;
         }
@@ -205,8 +276,8 @@ mod tests {
         let g = gpu("A40");
         let (d0, i0) = QWEN3[0].qproj_dims();
         let (d5, i5) = QWEN3[5].qproj_dims();
-        let s_small = speedup(g, d0, i0, &spec4(), Mode::Ttq { rank: 0 });
-        let s_large = speedup(g, d5, i5, &spec4(), Mode::Ttq { rank: 0 });
+        let s_small = speedup(g, d0, i0, &spec4(), &DecodeMode::ttq(0));
+        let s_large = speedup(g, d5, i5, &spec4(), &DecodeMode::ttq(0));
         assert!(s_large > s_small);
     }
 
@@ -216,8 +287,10 @@ mod tests {
         // reduction; the roofline must show 2-bit ≥ 4-bit throughput.
         let (dout, din) = QWEN3[5].qproj_dims();
         let g = gpu("A100");
-        let k2 = ktokens_per_sec(g, dout, din, &QuantSpec::new(2, 32), Mode::AwqMarlin, 64.0);
-        let k4 = ktokens_per_sec(g, dout, din, &QuantSpec::new(4, 32), Mode::AwqMarlin, 64.0);
+        let k2 =
+            ktokens_per_sec(g, dout, din, &QuantSpec::new(2, 32), &DecodeMode::awq_marlin(), 64.0);
+        let k4 =
+            ktokens_per_sec(g, dout, din, &QuantSpec::new(4, 32), &DecodeMode::awq_marlin(), 64.0);
         assert!(k2 > k4);
     }
 
@@ -226,7 +299,19 @@ mod tests {
         // FP16 0.6B on A40 should land within ~2x of the paper's 57.58
         // k tokens/s (we claim shape, not absolutes — but stay on-scale).
         let (dout, din) = QWEN3[0].qproj_dims();
-        let k = ktokens_per_sec(gpu("A40"), dout, din, &spec4(), Mode::Fp16, 64.0);
+        let k = ktokens_per_sec(gpu("A40"), dout, din, &spec4(), &DecodeMode::fp16(), 64.0);
         assert!(k > 25.0 && k < 120.0, "FP16 0.6B A40: {k}");
+    }
+
+    #[test]
+    fn registry_methods_map_to_modes() {
+        // any registered method can become a runtime-table row
+        let nf = DecodeMode::for_method(MethodSpec::parse("nf:4").unwrap());
+        assert_eq!(nf.kernel, Kernel::MarlinGemm);
+        let fp = DecodeMode::for_method(MethodSpec::parse("fp").unwrap());
+        assert_eq!(fp.kernel, Kernel::Fp16Gemv);
+        let (dout, din) = QWEN3[2].qproj_dims();
+        let k = ktokens_per_sec(gpu("L40"), dout, din, &spec4(), &nf, 64.0);
+        assert!(k.is_finite() && k > 0.0);
     }
 }

@@ -29,9 +29,11 @@ impl QuantSpec {
         QuantSpec { bits, group, format: QdqFormat::Asymmetric }
     }
 
+    /// `2^bits − 1` — delegates to [`crate::quant::qmax`], the single
+    /// source of truth for the convention.
     #[inline]
     pub fn qmax(&self) -> f32 {
-        ((1u64 << self.bits) - 1) as f32
+        super::qmax(self.bits)
     }
 
     /// Bytes to store one weight element + amortized group params, the

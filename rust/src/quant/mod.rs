@@ -5,16 +5,25 @@
 //! weight (a group may span row boundaries — exactly the paper's App. B
 //! pseudo-code, which `reshape(-1, g)`s the whole matrix).
 //!
+//! * [`registry`] — the unified method surface: the [`Quantizer`] trait
+//!   (plan/execute split via [`StatsRequirement`]), the [`MethodSpec`]
+//!   selector, and the [`MethodRegistry`] building methods from spec
+//!   strings (`"ttq:r=16"`, `"nf:4"`, ...). Every layer above dispatches
+//!   through this.
 //! * [`rtn`] — groupwise round-to-nearest QDQ (Eq. 1).
 //! * [`awq`] — activation-aware diagonal scaling (Eq. 19-20).
 //! * [`ttq`] — the contribution: online per-prompt quantization (§2),
 //!   with optional low-rank residual decomposition (App. E).
 //! * [`gptq`] — greedy OBS baseline with Cholesky (App. C).
+//! * [`nf`] — NormalFloat codebook QDQ (App. D, NF4-style).
+//! * [`prune`] — test-time activation-aware pruning (§3, μ-MoE).
 //! * [`lowrank`] — truncated-SVD factors + alternating refinement.
 //! * [`formats`] — QDQ format variants (App. D): asymmetric/symmetric,
 //!   range expansion ν, the G/G′ representations.
 //! * [`pack`] — integer bit-packing + the memory-traffic accounting that
 //!   feeds the GPU roofline model (Tables 4-8).
+//! * [`online_pca`] — Oja streaming subspace tracker (future
+//!   [`StatsRequirement::StreamingActivations`] methods).
 
 pub mod awq;
 pub mod formats;
@@ -22,8 +31,9 @@ pub mod gptq;
 pub mod lowrank;
 pub mod nf;
 pub mod online_pca;
-pub mod prune;
 pub mod pack;
+pub mod prune;
+pub mod registry;
 pub mod rtn;
 pub mod ttq;
 
@@ -33,41 +43,21 @@ pub use gptq::gptq_quantize;
 pub use lowrank::{alternating_refine, lowrank_init, LowRank};
 pub use nf::{nf_codebook, nf_quantize, norm_ppf};
 pub use online_pca::OjaTracker;
-pub use prune::{measured_sparsity, prune, prune_then_quantize, Sparsity};
 pub use pack::{fp16_bytes, pack, packed_matmul, unpack, unpack_at, weight_bytes, Packed};
+pub use prune::{measured_sparsity, prune, prune_then_quantize, Sparsity};
+pub use registry::{
+    AwqQuantizer, FpQuantizer, GptqQuantizer, LayerStats, MethodEntry, MethodRegistry,
+    MethodSpec, NfQuantizer, PruneQuantizer, Quantizer, RtnQuantizer, StatsRequirement,
+    TtqQuantizer,
+};
 pub use rtn::{rtn_dequantize, rtn_quantize, rtn_quantize_int, QuantizedInt};
 pub use ttq::{
     overhead_ratio, ttq_quantize, ttq_quantize_from_stats, ttq_quantize_lowrank,
     ttq_quantize_lowrank_from_stats, TtqHyper, TtqQuantized,
 };
 
-/// Which quantization method to apply — the rows of the paper's tables.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Method {
-    /// Plain round-to-nearest (Eq. 1) — the weakest baseline.
-    Rtn,
-    /// Offline activation-aware (Fig. 1a) with a *fixed* calibration
-    /// diagonal; susceptible to domain shift.
-    Awq,
-    /// Online test-time quantization (Fig. 1b) with rank-r low-rank
-    /// compensation (r = 0 disables it).
-    Ttq { rank: usize },
-    /// Greedy OBS baseline (needs the full correlation; O(d³)).
-    Gptq,
-}
-
-impl Method {
-    pub fn label(&self) -> String {
-        match self {
-            Method::Rtn => "RTN".into(),
-            Method::Awq => "AWQ".into(),
-            Method::Ttq { rank } => format!("TTQ (r = {rank})"),
-            Method::Gptq => "GPTQ".into(),
-        }
-    }
-}
-
 /// `2^bits − 1` as f32 — the qmax convention shared with the L1 kernels.
+/// Single source of truth; [`QuantSpec::qmax`] delegates here.
 #[inline]
 pub fn qmax(bits: u32) -> f32 {
     ((1u64 << bits) - 1) as f32
@@ -87,8 +77,9 @@ mod tests {
     }
 
     #[test]
-    fn method_labels_match_paper_rows() {
-        assert_eq!(Method::Rtn.label(), "RTN");
-        assert_eq!(Method::Ttq { rank: 16 }.label(), "TTQ (r = 16)");
+    fn quantspec_qmax_delegates() {
+        for bits in [2u32, 3, 4, 5, 8] {
+            assert_eq!(QuantSpec::new(bits, 32).qmax(), qmax(bits));
+        }
     }
 }

@@ -1,0 +1,1038 @@
+//! The unified method surface: one [`Quantizer`] trait plus a
+//! [`MethodRegistry`] that builds methods from spec strings.
+//!
+//! Every compression method in the paper's tables — RTN (Eq. 1), AWQ
+//! (Eq. 19-20), TTQ (§2), GPTQ (App. C), NormalFloat (App. D) and
+//! test-time pruning (§3 / μ-MoE) — implements the same two-step
+//! contract:
+//!
+//! 1. **plan**: [`Quantizer::requirement`] declares which activation
+//!    statistics the method consumes, so callers collect exactly what is
+//!    needed (nothing for RTN/NF, diagonal norm sums for AWQ/TTQ/prune,
+//!    the full correlation for GPTQ) instead of hand-threading
+//!    `Option<&CollectedStats>` through every layer;
+//! 2. **execute**: [`Quantizer::quantize`] maps one weight matrix plus a
+//!    [`LayerStats`] view of those statistics to the compressed weight.
+//!
+//! [`MethodSpec`] wraps a registry handle together with the optional
+//! offline calibration domain — the one method selector shared by the
+//! eval pipelines, the bench tables, the serving coordinator, the
+//! roofline perf model and the CLI. Spec strings look like `"rtn"`,
+//! `"awq:calib=wt2s"`, `"ttq:r=16"`, `"gptq:damp=0.01"`, `"nf:4"` and
+//! `"prune:0.5"`; [`MethodSpec::spec_string`] round-trips through
+//! [`MethodRegistry::parse`].
+
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::awq::{awq_quantize, diag_from_norm_sums, ActStats};
+use super::formats::QuantSpec;
+use super::gptq::gptq_quantize;
+use super::lowrank::{lowrank_init, LowRank};
+use super::nf::nf_quantize;
+use super::prune::{prune, prune_then_quantize, Sparsity};
+use super::rtn::rtn_quantize;
+use super::ttq::TtqHyper;
+use crate::linalg::Mat;
+
+/// Which activation statistics a method consumes — the *plan* half of
+/// the plan/execute split. Callers query this instead of matching on
+/// concrete method types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatsRequirement {
+    /// Weight-only (RTN, NF, FP): no activation pass at all.
+    None,
+    /// Per-channel norm sums Σ|x_i|^p from the `stats` artifact
+    /// (AWQ, TTQ, test-time pruning).
+    DiagonalNorms,
+    /// The full input correlation C = XXᵀ from the `corr` artifact
+    /// (GPTQ's inverse-Hessian; O(d²) memory, O(d³) solve).
+    FullCorrelation,
+    /// Raw activation vectors streamed sample-by-sample (reserved for
+    /// [`super::online_pca::OjaTracker`]-style subspace methods).
+    StreamingActivations,
+}
+
+/// Borrowed per-layer statistics handed to [`Quantizer::quantize`].
+///
+/// Only the fields named by the method's [`StatsRequirement`] must be
+/// populated; `diag` short-circuits the norm-sum reduction when the
+/// caller (the serving coordinator) already owns a committed diagonal,
+/// and `lowrank` supplies cached static factors so rank-r methods do
+/// not recompute the SVD per prompt (App. E).
+#[derive(Clone, Copy, Default)]
+pub struct LayerStats<'a> {
+    /// Accumulated norm sums for the layer input.
+    pub act: Option<&'a ActStats>,
+    /// Full input correlation C = XXᵀ.
+    pub corr: Option<&'a Mat>,
+    /// Precomputed activation diagonal D (overrides `act`).
+    pub diag: Option<&'a [f32]>,
+    /// Cached static low-rank factors for this layer.
+    pub lowrank: Option<&'a LowRank>,
+}
+
+impl<'a> LayerStats<'a> {
+    pub fn from_act(act: &'a ActStats) -> Self {
+        LayerStats { act: Some(act), ..Default::default() }
+    }
+
+    pub fn from_diag(diag: &'a [f32]) -> Self {
+        LayerStats { diag: Some(diag), ..Default::default() }
+    }
+
+    /// The activation diagonal D: the precomputed one if present, else
+    /// derived from the norm sums with the method's hyperparameters.
+    fn diagonal(&self, hp: &TtqHyper, who: &str) -> Result<Vec<f32>> {
+        if let Some(d) = self.diag {
+            return Ok(d.to_vec());
+        }
+        let st = self
+            .act
+            .ok_or_else(|| anyhow!("{who} needs activation statistics (stats artifact)"))?;
+        Ok(diag_from_norm_sums(st, hp.p, hp.lam, hp.alpha))
+    }
+}
+
+/// One compression method — a row of the paper's tables.
+///
+/// Implementations are stateless values (hyperparameters only), shared
+/// behind `Arc` by [`MethodSpec`] handles.
+pub trait Quantizer: Send + Sync {
+    /// Registry key, e.g. `"ttq"`.
+    fn name(&self) -> &'static str;
+
+    /// Table-row label, e.g. `"TTQ (r = 16)"` (calibration-domain
+    /// suffixes are added by [`MethodSpec::label`]).
+    fn label(&self) -> String;
+
+    /// Canonical spec string that re-parses to this method, e.g.
+    /// `"ttq:r=16"`.
+    fn spec_string(&self) -> String;
+
+    /// Which statistics [`Quantizer::quantize`] consumes.
+    fn requirement(&self) -> StatsRequirement;
+
+    /// Rank of the static low-rank compensation factors (App. E); 0
+    /// when the method has none. Callers use this to supply cached
+    /// factors through [`LayerStats::lowrank`].
+    fn lowrank_rank(&self) -> usize {
+        0
+    }
+
+    /// Whether the method emits a packed low-bit representation — this
+    /// drives the perf model's weight-traffic accounting. False for the
+    /// FP reference row and for prune-only (dense f16 survivors).
+    fn quantizes(&self) -> bool {
+        true
+    }
+
+    /// True when the method conventionally calibrates offline on a
+    /// named domain split (AWQ, GPTQ — Fig. 1a); false for test-time
+    /// methods that consume the live batch (TTQ, pruning — Fig. 1b).
+    fn offline_by_default(&self) -> bool {
+        false
+    }
+
+    /// The (p, λ, α) diagonal hyperparameters for methods driven by the
+    /// activation diagonal of Eq. 19; `None` otherwise.
+    fn diag_hyper(&self) -> Option<TtqHyper> {
+        None
+    }
+
+    /// Compress one weight matrix given the statistics promised by
+    /// [`Quantizer::requirement`].
+    fn quantize(&self, w: &Mat, stats: &LayerStats, spec: &QuantSpec) -> Result<Mat>;
+}
+
+// ---------------------------------------------------------------------
+// Method implementations
+// ---------------------------------------------------------------------
+
+/// Un-quantized reference (the tables' FP32 header row).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FpQuantizer;
+
+impl Quantizer for FpQuantizer {
+    fn name(&self) -> &'static str {
+        "fp"
+    }
+
+    fn label(&self) -> String {
+        "FP32".into()
+    }
+
+    fn spec_string(&self) -> String {
+        "fp".into()
+    }
+
+    fn requirement(&self) -> StatsRequirement {
+        StatsRequirement::None
+    }
+
+    fn quantizes(&self) -> bool {
+        false
+    }
+
+    fn quantize(&self, w: &Mat, _stats: &LayerStats, _spec: &QuantSpec) -> Result<Mat> {
+        Ok(w.clone())
+    }
+}
+
+/// Plain round-to-nearest groupwise QDQ (Eq. 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RtnQuantizer;
+
+impl Quantizer for RtnQuantizer {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+
+    fn label(&self) -> String {
+        "RTN".into()
+    }
+
+    fn spec_string(&self) -> String {
+        "rtn".into()
+    }
+
+    fn requirement(&self) -> StatsRequirement {
+        StatsRequirement::None
+    }
+
+    fn quantize(&self, w: &Mat, _stats: &LayerStats, spec: &QuantSpec) -> Result<Mat> {
+        Ok(rtn_quantize(w, spec))
+    }
+}
+
+/// Activation-aware scaled QDQ (Eq. 19-20), conventionally calibrated
+/// offline on a named domain (Fig. 1a).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AwqQuantizer {
+    pub hyper: TtqHyper,
+}
+
+impl Quantizer for AwqQuantizer {
+    fn name(&self) -> &'static str {
+        "awq"
+    }
+
+    fn label(&self) -> String {
+        "AWQ".into()
+    }
+
+    fn spec_string(&self) -> String {
+        spec_join("awq", &hyper_args(&self.hyper))
+    }
+
+    fn requirement(&self) -> StatsRequirement {
+        StatsRequirement::DiagonalNorms
+    }
+
+    fn offline_by_default(&self) -> bool {
+        true
+    }
+
+    fn diag_hyper(&self) -> Option<TtqHyper> {
+        Some(self.hyper)
+    }
+
+    fn quantize(&self, w: &Mat, stats: &LayerStats, spec: &QuantSpec) -> Result<Mat> {
+        let d = stats.diagonal(&self.hyper, "AWQ")?;
+        Ok(awq_quantize(w, &d, spec))
+    }
+}
+
+/// Online test-time quantization (§2) with optional rank-r low-rank
+/// compensation (App. E).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TtqQuantizer {
+    pub rank: usize,
+    pub hyper: TtqHyper,
+}
+
+impl Quantizer for TtqQuantizer {
+    fn name(&self) -> &'static str {
+        "ttq"
+    }
+
+    fn label(&self) -> String {
+        format!("TTQ (r = {})", self.rank)
+    }
+
+    fn spec_string(&self) -> String {
+        let mut args = vec![format!("r={}", self.rank)];
+        args.extend(hyper_args(&self.hyper));
+        spec_join("ttq", &args)
+    }
+
+    fn requirement(&self) -> StatsRequirement {
+        StatsRequirement::DiagonalNorms
+    }
+
+    fn lowrank_rank(&self) -> usize {
+        self.rank
+    }
+
+    fn diag_hyper(&self) -> Option<TtqHyper> {
+        Some(self.hyper)
+    }
+
+    fn quantize(&self, w: &Mat, stats: &LayerStats, spec: &QuantSpec) -> Result<Mat> {
+        let d = stats.diagonal(&self.hyper, "TTQ")?;
+        if self.rank == 0 {
+            return Ok(awq_quantize(w, &d, spec));
+        }
+        // Static factors are cached by the caller (App. E: recomputing
+        // the SVD per prompt would defeat the negligible-overhead
+        // claim); fall back to a fresh SVD for standalone use.
+        let owned;
+        let lr = match stats.lowrank {
+            Some(lr) => lr,
+            None => {
+                owned = lowrank_init(w, self.rank);
+                &owned
+            }
+        };
+        let ba = lr.product();
+        let wq = awq_quantize(&w.sub(&ba), &d, spec);
+        Ok(wq.add(&ba))
+    }
+}
+
+/// Greedy OBS baseline (App. C) over the full input correlation.
+#[derive(Clone, Copy, Debug)]
+pub struct GptqQuantizer {
+    pub damp: f64,
+}
+
+impl Default for GptqQuantizer {
+    fn default() -> Self {
+        GptqQuantizer { damp: 0.01 }
+    }
+}
+
+impl Quantizer for GptqQuantizer {
+    fn name(&self) -> &'static str {
+        "gptq"
+    }
+
+    fn label(&self) -> String {
+        "GPTQ".into()
+    }
+
+    fn spec_string(&self) -> String {
+        if self.damp == Self::default().damp {
+            "gptq".into()
+        } else {
+            format!("gptq:damp={}", self.damp)
+        }
+    }
+
+    fn requirement(&self) -> StatsRequirement {
+        StatsRequirement::FullCorrelation
+    }
+
+    fn offline_by_default(&self) -> bool {
+        true
+    }
+
+    fn quantize(&self, w: &Mat, stats: &LayerStats, spec: &QuantSpec) -> Result<Mat> {
+        let c = stats
+            .corr
+            .ok_or_else(|| anyhow!("GPTQ needs the input correlation (corr artifact)"))?;
+        Ok(gptq_quantize(w, c, spec, self.damp))
+    }
+}
+
+/// NormalFloat codebook QDQ (App. D's NF4, Dettmers et al. 2023).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NfQuantizer {
+    /// Codebook bit-width override; `None` follows the [`QuantSpec`].
+    pub bits: Option<u32>,
+}
+
+impl Quantizer for NfQuantizer {
+    fn name(&self) -> &'static str {
+        "nf"
+    }
+
+    fn label(&self) -> String {
+        match self.bits {
+            Some(b) => format!("NF{b}"),
+            None => "NF".into(),
+        }
+    }
+
+    fn spec_string(&self) -> String {
+        match self.bits {
+            Some(b) => format!("nf:{b}"),
+            None => "nf".into(),
+        }
+    }
+
+    fn requirement(&self) -> StatsRequirement {
+        StatsRequirement::None
+    }
+
+    fn quantize(&self, w: &Mat, _stats: &LayerStats, spec: &QuantSpec) -> Result<Mat> {
+        Ok(nf_quantize(w, self.bits.unwrap_or(spec.bits), spec.group))
+    }
+}
+
+/// Test-time activation-aware pruning (§3 / μ-MoE), by default composed
+/// with scaled QDQ of the survivors — one stats pass feeds both.
+#[derive(Clone, Copy, Debug)]
+pub struct PruneQuantizer {
+    pub sparsity: Sparsity,
+    /// Also QDQ the surviving weights (the §3 prune-then-quantize
+    /// pipeline). `false` prunes only.
+    pub requantize: bool,
+    pub hyper: TtqHyper,
+}
+
+impl Quantizer for PruneQuantizer {
+    fn name(&self) -> &'static str {
+        "prune"
+    }
+
+    fn label(&self) -> String {
+        let base = match self.sparsity {
+            Sparsity::Unstructured { ratio } => format!("Prune ({:.0}%)", ratio * 100.0),
+            Sparsity::NofM { n, m } => format!("Prune ({n}:{m})"),
+        };
+        if self.requantize {
+            format!("{base} + Q")
+        } else {
+            base
+        }
+    }
+
+    fn spec_string(&self) -> String {
+        let mut args = match self.sparsity {
+            Sparsity::Unstructured { ratio } => vec![format!("{ratio}")],
+            Sparsity::NofM { n, m } => vec![format!("n={n}"), format!("m={m}")],
+        };
+        if !self.requantize {
+            args.push("quant=false".into());
+        }
+        args.extend(hyper_args(&self.hyper));
+        spec_join("prune", &args)
+    }
+
+    fn requirement(&self) -> StatsRequirement {
+        StatsRequirement::DiagonalNorms
+    }
+
+    fn quantizes(&self) -> bool {
+        // prune-only leaves the survivors dense f16 — no packed traffic
+        self.requantize
+    }
+
+    fn diag_hyper(&self) -> Option<TtqHyper> {
+        Some(self.hyper)
+    }
+
+    fn quantize(&self, w: &Mat, stats: &LayerStats, spec: &QuantSpec) -> Result<Mat> {
+        let d = stats.diagonal(&self.hyper, "prune")?;
+        Ok(if self.requantize {
+            prune_then_quantize(w, &d, self.sparsity, spec)
+        } else {
+            prune(w, &d, self.sparsity)
+        })
+    }
+}
+
+fn spec_join(name: &str, args: &[String]) -> String {
+    if args.is_empty() {
+        name.into()
+    } else {
+        format!("{}:{}", name, args.join(","))
+    }
+}
+
+/// Non-default (p, λ, α) overrides in canonical key=value form.
+fn hyper_args(hp: &TtqHyper) -> Vec<String> {
+    let d = TtqHyper::default();
+    let mut out = Vec::new();
+    if hp.p != d.p {
+        out.push(format!("p={}", hp.p));
+    }
+    if hp.lam != d.lam {
+        out.push(format!("lam={}", hp.lam));
+    }
+    if hp.alpha != d.alpha {
+        out.push(format!("alpha={}", hp.alpha));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// MethodSpec — the one method selector shared by every layer
+// ---------------------------------------------------------------------
+
+/// A registry handle plus the optional offline calibration domain: the
+/// single method selector for eval, bench, coordinator, perf model and
+/// CLI (replaces the former `quant::Method` / `eval::MethodSpec` twins).
+#[derive(Clone)]
+pub struct MethodSpec {
+    quantizer: Arc<dyn Quantizer>,
+    calib_domain: Option<String>,
+}
+
+impl MethodSpec {
+    pub fn from_quantizer(quantizer: Arc<dyn Quantizer>) -> Self {
+        MethodSpec { quantizer, calib_domain: None }
+    }
+
+    /// Parse a spec string (`"rtn"`, `"awq:calib=wt2s"`, `"ttq:r=16"`,
+    /// `"nf:4"`, `"prune:0.5"`, ...) via the global registry.
+    pub fn parse(spec: &str) -> Result<Self> {
+        MethodRegistry::global().parse(spec)
+    }
+
+    // -- convenience constructors for the built-in methods ------------
+
+    pub fn fp() -> Self {
+        Self::from_quantizer(Arc::new(FpQuantizer))
+    }
+
+    pub fn rtn() -> Self {
+        Self::from_quantizer(Arc::new(RtnQuantizer))
+    }
+
+    /// Offline AWQ calibrated on `calib_domain`'s calib split.
+    pub fn awq(calib_domain: &str) -> Self {
+        Self::from_quantizer(Arc::new(AwqQuantizer::default())).with_calib(calib_domain)
+    }
+
+    /// Online TTQ with rank-r low-rank compensation (r = 0 disables it).
+    pub fn ttq(rank: usize) -> Self {
+        Self::from_quantizer(Arc::new(TtqQuantizer { rank, ..Default::default() }))
+    }
+
+    /// Offline GPTQ calibrated on `calib_domain` (corr artifact).
+    pub fn gptq(calib_domain: &str) -> Self {
+        Self::from_quantizer(Arc::new(GptqQuantizer::default())).with_calib(calib_domain)
+    }
+
+    pub fn nf(bits: u32) -> Self {
+        Self::from_quantizer(Arc::new(NfQuantizer { bits: Some(bits) }))
+    }
+
+    /// NormalFloat at the bit-width of the governing [`QuantSpec`] —
+    /// the right row for bit-sweep tables.
+    pub fn nf_auto() -> Self {
+        Self::from_quantizer(Arc::new(NfQuantizer { bits: None }))
+    }
+
+    /// Test-time unstructured prune (+ QDQ) at the given sparsity ratio.
+    pub fn prune(ratio: f64) -> Self {
+        Self::from_quantizer(Arc::new(PruneQuantizer {
+            sparsity: Sparsity::Unstructured { ratio },
+            requantize: true,
+            hyper: TtqHyper::default(),
+        }))
+    }
+
+    // -- accessors ----------------------------------------------------
+
+    pub fn with_calib(mut self, domain: &str) -> Self {
+        self.calib_domain = Some(domain.to_string());
+        self
+    }
+
+    pub fn quantizer(&self) -> &dyn Quantizer {
+        self.quantizer.as_ref()
+    }
+
+    pub fn calib_domain(&self) -> Option<&str> {
+        self.calib_domain.as_deref()
+    }
+
+    pub fn requirement(&self) -> StatsRequirement {
+        self.quantizer.requirement()
+    }
+
+    /// Does this method consume activation statistics at all?
+    pub fn needs_stats(&self) -> bool {
+        self.requirement() != StatsRequirement::None
+    }
+
+    /// Does the stats pass need the full correlation (corr artifact)?
+    pub fn needs_corr(&self) -> bool {
+        self.requirement() == StatsRequirement::FullCorrelation
+    }
+
+    /// Offline: statistics come from a named domain's calibration split,
+    /// once (Fig. 1a) — the path exposed to domain shift.
+    pub fn is_offline(&self) -> bool {
+        self.needs_stats() && self.calib_domain.is_some()
+    }
+
+    /// Online: statistics come from the live batch itself, per prompt
+    /// (Fig. 1b) — the test-time path.
+    pub fn is_online(&self) -> bool {
+        self.needs_stats() && self.calib_domain.is_none()
+    }
+
+    /// Table-row label, e.g. `"AWQ (C4S Calib)"` / `"TTQ (r = 16)"`.
+    pub fn label(&self) -> String {
+        match &self.calib_domain {
+            Some(d) => format!("{} ({} Calib)", self.quantizer.label(), d.to_uppercase()),
+            None => self.quantizer.label(),
+        }
+    }
+
+    /// Canonical spec string; `parse(spec_string())` reproduces `self`.
+    pub fn spec_string(&self) -> String {
+        let base = self.quantizer.spec_string();
+        match &self.calib_domain {
+            None => base,
+            Some(d) if base.contains(':') => format!("{base},calib={d}"),
+            Some(d) => format!("{base}:calib={d}"),
+        }
+    }
+}
+
+impl PartialEq for MethodSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.spec_string() == other.spec_string()
+    }
+}
+
+impl fmt::Debug for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MethodSpec({})", self.spec_string())
+    }
+}
+
+impl fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.spec_string())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Parsed `key=value` / positional arguments of a method spec string.
+pub struct SpecArgs {
+    kv: Vec<(String, String, bool)>,
+    pos: Vec<(String, bool)>,
+}
+
+impl SpecArgs {
+    fn new(s: &str) -> Self {
+        let mut kv = Vec::new();
+        let mut pos = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match tok.split_once('=') {
+                Some((k, v)) => kv.push((k.trim().to_string(), v.trim().to_string(), false)),
+                None => pos.push((tok.to_string(), false)),
+            }
+        }
+        SpecArgs { kv, pos }
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        for (k, v, used) in self.kv.iter_mut() {
+            if k.as_str() == key && !*used {
+                *used = true;
+                return Some(v.clone());
+            }
+        }
+        None
+    }
+
+    fn take_pos(&mut self) -> Option<String> {
+        for (v, used) in self.pos.iter_mut() {
+            if !*used {
+                *used = true;
+                return Some(v.clone());
+            }
+        }
+        None
+    }
+
+    pub fn take_f64(&mut self, key: &str) -> Result<Option<f64>> {
+        self.take(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| anyhow!("method arg {key}={v} is not a number"))
+            })
+            .transpose()
+    }
+
+    pub fn take_usize(&mut self, key: &str) -> Result<Option<usize>> {
+        self.take(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| anyhow!("method arg {key}={v} is not an integer"))
+            })
+            .transpose()
+    }
+
+    pub fn take_u32(&mut self, key: &str) -> Result<Option<u32>> {
+        self.take(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| anyhow!("method arg {key}={v} is not an integer"))
+            })
+            .transpose()
+    }
+
+    pub fn take_bool(&mut self, key: &str) -> Result<Option<bool>> {
+        self.take(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| anyhow!("method arg {key}={v} is not true/false"))
+            })
+            .transpose()
+    }
+
+    /// Error out on arguments no builder consumed (catches typos).
+    fn finish(&self, method: &str) -> Result<()> {
+        for (k, v, used) in &self.kv {
+            if !used {
+                bail!("method '{method}': unknown argument {k}={v}");
+            }
+        }
+        for (v, used) in &self.pos {
+            if !used {
+                bail!("method '{method}': unexpected argument '{v}'");
+            }
+        }
+        Ok(())
+    }
+}
+
+type Builder = fn(&mut SpecArgs) -> Result<Arc<dyn Quantizer>>;
+
+/// One registered method family.
+pub struct MethodEntry {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Canonical example spec (used in help text and round-trip tests).
+    pub example: &'static str,
+    builder: Builder,
+}
+
+/// Name → constructor table for every compression method. New methods
+/// register here once and become CLI/table rows everywhere.
+pub struct MethodRegistry {
+    entries: Vec<MethodEntry>,
+}
+
+fn hyper_from_args(args: &mut SpecArgs) -> Result<TtqHyper> {
+    let mut hp = TtqHyper::default();
+    if let Some(p) = args.take_f64("p")? {
+        hp.p = p;
+    }
+    if let Some(lam) = args.take_f64("lam")? {
+        hp.lam = lam;
+    }
+    if let Some(alpha) = args.take_f64("alpha")? {
+        hp.alpha = alpha;
+    }
+    Ok(hp)
+}
+
+impl MethodRegistry {
+    /// The process-wide registry of built-in methods.
+    pub fn global() -> &'static MethodRegistry {
+        static REG: OnceLock<MethodRegistry> = OnceLock::new();
+        REG.get_or_init(MethodRegistry::builtin)
+    }
+
+    /// All built-in methods (one entry per paper-table method family).
+    pub fn builtin() -> Self {
+        MethodRegistry {
+            entries: vec![
+                MethodEntry {
+                    name: "fp",
+                    summary: "un-quantized FP32 reference",
+                    example: "fp",
+                    builder: |_| Ok(Arc::new(FpQuantizer)),
+                },
+                MethodEntry {
+                    name: "rtn",
+                    summary: "round-to-nearest groupwise QDQ (Eq. 1)",
+                    example: "rtn",
+                    builder: |_| Ok(Arc::new(RtnQuantizer)),
+                },
+                MethodEntry {
+                    name: "awq",
+                    summary: "activation-aware scaled QDQ, offline calib (Eq. 19-20)",
+                    example: "awq:calib=wt2s",
+                    builder: |args| {
+                        Ok(Arc::new(AwqQuantizer { hyper: hyper_from_args(args)? }))
+                    },
+                },
+                MethodEntry {
+                    name: "ttq",
+                    summary: "online test-time quantization, rank-r compensation (§2)",
+                    example: "ttq:r=16",
+                    builder: |args| {
+                        let rank = match args.take_usize("r")? {
+                            Some(r) => r,
+                            None => match args.take_pos() {
+                                Some(v) => v
+                                    .parse()
+                                    .map_err(|_| anyhow!("ttq rank '{v}' is not an integer"))?,
+                                None => 0,
+                            },
+                        };
+                        Ok(Arc::new(TtqQuantizer { rank, hyper: hyper_from_args(args)? }))
+                    },
+                },
+                MethodEntry {
+                    name: "gptq",
+                    summary: "greedy OBS baseline over the full correlation (App. C)",
+                    example: "gptq",
+                    builder: |args| {
+                        let damp = args.take_f64("damp")?.unwrap_or(0.01);
+                        if damp < 0.0 {
+                            bail!("gptq damp must be >= 0, got {damp}");
+                        }
+                        Ok(Arc::new(GptqQuantizer { damp }))
+                    },
+                },
+                MethodEntry {
+                    name: "nf",
+                    summary: "NormalFloat codebook QDQ (App. D, NF4-style)",
+                    example: "nf:4",
+                    builder: |args| {
+                        let bits = match args.take_u32("bits")? {
+                            Some(b) => Some(b),
+                            None => match args.take_pos() {
+                                Some(v) => Some(
+                                    v.parse()
+                                        .map_err(|_| anyhow!("nf bits '{v}' is not an integer"))?,
+                                ),
+                                None => None,
+                            },
+                        };
+                        if let Some(b) = bits {
+                            if !(1..=8).contains(&b) {
+                                bail!("nf bits must be in 1..=8, got {b}");
+                            }
+                        }
+                        Ok(Arc::new(NfQuantizer { bits }))
+                    },
+                },
+                MethodEntry {
+                    name: "prune",
+                    summary: "test-time activation-aware pruning + QDQ (§3, μ-MoE)",
+                    example: "prune:0.5",
+                    builder: |args| {
+                        let hyper = hyper_from_args(args)?;
+                        let requantize = args.take_bool("quant")?.unwrap_or(true);
+                        let n = args.take_usize("n")?;
+                        let m = args.take_usize("m")?;
+                        let sparsity = match (n, m) {
+                            (Some(n), Some(m)) => {
+                                if m == 0 || n > m {
+                                    bail!("prune N:M needs 0 < m and n <= m, got {n}:{m}");
+                                }
+                                Sparsity::NofM { n, m }
+                            }
+                            (None, None) => {
+                                let v = args.take_pos().ok_or_else(|| {
+                                    anyhow!("prune needs a ratio (prune:0.5) or n=/m= (prune:n=2,m=4)")
+                                })?;
+                                let ratio: f64 = v
+                                    .parse()
+                                    .map_err(|_| anyhow!("prune ratio '{v}' is not a number"))?;
+                                if !(0.0..=1.0).contains(&ratio) {
+                                    bail!("prune ratio must be in [0, 1], got {ratio}");
+                                }
+                                Sparsity::Unstructured { ratio }
+                            }
+                            _ => bail!("prune: n= and m= must be given together"),
+                        };
+                        Ok(Arc::new(PruneQuantizer { sparsity, requantize, hyper }))
+                    },
+                },
+            ],
+        }
+    }
+
+    pub fn entries(&self) -> &[MethodEntry] {
+        &self.entries
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// One help line per method, for CLI usage text.
+    pub fn help(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| format!("  {:<18} {}", e.example, e.summary))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Build a [`MethodSpec`] from `name[:arg,arg=val,...]`. A
+    /// `calib=DOMAIN` argument attaches the offline calibration domain
+    /// and is accepted by every statistics-consuming method.
+    pub fn parse(&self, spec: &str) -> Result<MethodSpec> {
+        let spec = spec.trim();
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n.trim(), r),
+            None => (spec, ""),
+        };
+        let entry = self
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                anyhow!("unknown method '{name}' — known methods: {}", self.names().join(", "))
+            })?;
+        let mut args = SpecArgs::new(rest);
+        let calib = args.take("calib");
+        let quantizer = (entry.builder)(&mut args)?;
+        args.finish(name)?;
+        let mut method = MethodSpec::from_quantizer(quantizer);
+        if let Some(c) = calib {
+            if method.requirement() == StatsRequirement::None {
+                bail!("method '{name}' uses no activation statistics — calib={c} is meaningless");
+            }
+            method = method.with_calib(&c);
+        }
+        Ok(method)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_paper_rows() {
+        assert_eq!(MethodSpec::rtn().label(), "RTN");
+        assert_eq!(MethodSpec::ttq(16).label(), "TTQ (r = 16)");
+        assert_eq!(MethodSpec::awq("c4s").label(), "AWQ (C4S Calib)");
+        assert_eq!(MethodSpec::gptq("wt2s").label(), "GPTQ (WT2S Calib)");
+        assert_eq!(MethodSpec::fp().label(), "FP32");
+        assert_eq!(MethodSpec::nf(4).label(), "NF4");
+        assert_eq!(MethodSpec::prune(0.5).label(), "Prune (50%) + Q");
+    }
+
+    #[test]
+    fn parse_matches_constructors() {
+        assert_eq!(MethodSpec::parse("fp").unwrap(), MethodSpec::fp());
+        assert_eq!(MethodSpec::parse("rtn").unwrap(), MethodSpec::rtn());
+        assert_eq!(
+            MethodSpec::parse("awq:calib=c4s").unwrap(),
+            MethodSpec::awq("c4s")
+        );
+        assert_eq!(MethodSpec::parse("ttq:r=16").unwrap(), MethodSpec::ttq(16));
+        assert_eq!(MethodSpec::parse("ttq:16").unwrap(), MethodSpec::ttq(16));
+        assert_eq!(MethodSpec::parse("ttq").unwrap(), MethodSpec::ttq(0));
+        assert_eq!(
+            MethodSpec::parse("gptq:calib=wt2s").unwrap(),
+            MethodSpec::gptq("wt2s")
+        );
+        assert_eq!(MethodSpec::parse("nf:4").unwrap(), MethodSpec::nf(4));
+        assert_eq!(MethodSpec::parse("prune:0.5").unwrap(), MethodSpec::prune(0.5));
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for spec in [
+            "fp",
+            "rtn",
+            "awq:calib=wt2s",
+            "awq:alpha=0.75,calib=c4s",
+            "ttq:r=0",
+            "ttq:r=16",
+            "ttq:r=16,lam=0.1",
+            "gptq",
+            "gptq:damp=0.05,calib=ptbs",
+            "nf:4",
+            "nf",
+            "prune:0.5",
+            "prune:n=2,m=4",
+            "prune:0.25,quant=false",
+        ] {
+            let m = MethodSpec::parse(spec).unwrap();
+            let canon = m.spec_string();
+            let again = MethodSpec::parse(&canon)
+                .unwrap_or_else(|e| panic!("'{canon}' (from '{spec}') must re-parse: {e}"));
+            assert_eq!(m, again, "round-trip of '{spec}' via '{canon}'");
+            assert_eq!(m.label(), again.label());
+        }
+    }
+
+    #[test]
+    fn requirements_drive_planning() {
+        assert_eq!(MethodSpec::fp().requirement(), StatsRequirement::None);
+        assert_eq!(MethodSpec::rtn().requirement(), StatsRequirement::None);
+        assert_eq!(MethodSpec::nf(4).requirement(), StatsRequirement::None);
+        assert_eq!(
+            MethodSpec::awq("c4s").requirement(),
+            StatsRequirement::DiagonalNorms
+        );
+        assert_eq!(
+            MethodSpec::ttq(16).requirement(),
+            StatsRequirement::DiagonalNorms
+        );
+        assert_eq!(
+            MethodSpec::prune(0.5).requirement(),
+            StatsRequirement::DiagonalNorms
+        );
+        assert_eq!(
+            MethodSpec::gptq("wt2s").requirement(),
+            StatsRequirement::FullCorrelation
+        );
+        assert!(MethodSpec::gptq("wt2s").needs_corr());
+        assert!(!MethodSpec::ttq(0).needs_corr());
+    }
+
+    #[test]
+    fn online_offline_split() {
+        assert!(MethodSpec::awq("c4s").is_offline());
+        assert!(MethodSpec::ttq(0).is_online());
+        // AWQ with no calib domain collects from live traffic — the
+        // "online AWQ" degenerate of TTQ r=0.
+        let online_awq = MethodSpec::parse("awq").unwrap();
+        assert!(online_awq.is_online() && !online_awq.is_offline());
+        // no-stats methods are neither
+        assert!(!MethodSpec::rtn().is_online() && !MethodSpec::rtn().is_offline());
+        assert!(!MethodSpec::fp().quantizer().quantizes());
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(MethodSpec::parse("awqq").is_err());
+        assert!(MethodSpec::parse("rtn:calib=c4s").is_err(), "rtn takes no calib");
+        assert!(MethodSpec::parse("ttq:rank=16").is_err(), "unknown key");
+        assert!(MethodSpec::parse("ttq:r=abc").is_err());
+        assert!(MethodSpec::parse("prune").is_err(), "prune needs a ratio");
+        assert!(MethodSpec::parse("prune:1.5").is_err());
+        assert!(MethodSpec::parse("prune:n=3,m=2").is_err());
+        assert!(MethodSpec::parse("nf:9").is_err());
+    }
+
+    #[test]
+    fn lowrank_rank_exposed() {
+        assert_eq!(MethodSpec::ttq(16).quantizer().lowrank_rank(), 16);
+        assert_eq!(MethodSpec::ttq(0).quantizer().lowrank_rank(), 0);
+        assert_eq!(MethodSpec::awq("c4s").quantizer().lowrank_rank(), 0);
+    }
+
+    #[test]
+    fn registry_lists_all_builtins() {
+        let names = MethodRegistry::global().names();
+        for want in ["fp", "rtn", "awq", "ttq", "gptq", "nf", "prune"] {
+            assert!(names.contains(&want), "{want} missing from registry");
+        }
+        assert!(MethodRegistry::global().help().contains("ttq:r=16"));
+    }
+}

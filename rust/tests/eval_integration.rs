@@ -21,7 +21,6 @@ fn fast_cfg(bits: u32, group: usize) -> EvalConfig {
         eval_batches: 4,
         calib_batches: 6,
         spec: QuantSpec::new(bits, group),
-        ..Default::default()
     }
 }
 
@@ -30,7 +29,7 @@ fn trained_model_beats_uniform() {
     let Some(rt) = runtime() else { return };
     let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
     let ppl = ev
-        .perplexity(&MethodSpec::Fp, "wt2s", &fast_cfg(4, 32))
+        .perplexity(&MethodSpec::fp(), "wt2s", &fast_cfg(4, 32))
         .unwrap();
     assert!(ppl < 512.0 * 0.5, "fp ppl {ppl} — training failed?");
     assert!(ppl > 1.0);
@@ -43,9 +42,9 @@ fn five_bit_close_to_fp() {
     let Some(rt) = runtime() else { return };
     let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
     let cfg = fast_cfg(5, 32);
-    let fp = ev.perplexity(&MethodSpec::Fp, "wt2s", &cfg).unwrap();
+    let fp = ev.perplexity(&MethodSpec::fp(), "wt2s", &cfg).unwrap();
     let ttq = ev
-        .perplexity(&MethodSpec::Ttq { rank: 0 }, "wt2s", &cfg)
+        .perplexity(&MethodSpec::ttq(0), "wt2s", &cfg)
         .unwrap();
     assert!(ttq < fp * 1.10, "5-bit TTQ {ttq} vs fp {fp}");
 }
@@ -60,10 +59,10 @@ fn rtn_degrades_at_2_bits_ttq_less() {
     let Some(rt) = runtime() else { return };
     let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
     let cfg = fast_cfg(2, 32);
-    let fp = ev.perplexity(&MethodSpec::Fp, "wt2s", &cfg).unwrap();
-    let rtn = ev.perplexity(&MethodSpec::Rtn, "wt2s", &cfg).unwrap();
+    let fp = ev.perplexity(&MethodSpec::fp(), "wt2s", &cfg).unwrap();
+    let rtn = ev.perplexity(&MethodSpec::rtn(), "wt2s", &cfg).unwrap();
     let ttq = ev
-        .perplexity(&MethodSpec::Ttq { rank: 16 }, "wt2s", &cfg)
+        .perplexity(&MethodSpec::ttq(16), "wt2s", &cfg)
         .unwrap();
     assert!(rtn > fp * 1.05, "2-bit RTN should visibly degrade: {rtn} vs {fp}");
     assert!(ttq < rtn, "TTQ(r=16) {ttq} must beat RTN {rtn}");
@@ -78,14 +77,10 @@ fn ttq_at_least_matches_mismatched_awq_at_3_bits() {
     let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
     let cfg = fast_cfg(3, 32);
     let awq_shifted = ev
-        .perplexity(
-            &MethodSpec::Awq { calib_domain: "c4s".into() },
-            "ptbs",
-            &cfg,
-        )
+        .perplexity(&MethodSpec::awq("c4s"), "ptbs", &cfg)
         .unwrap();
     let ttq = ev
-        .perplexity(&MethodSpec::Ttq { rank: 0 }, "ptbs", &cfg)
+        .perplexity(&MethodSpec::ttq(0), "ptbs", &cfg)
         .unwrap();
     assert!(
         ttq <= awq_shifted * 1.05,
@@ -99,10 +94,10 @@ fn lowrank_compensation_helps_at_2_bits() {
     let mut ev = Evaluator::new(&rt, "opt-mini").unwrap();
     let cfg = fast_cfg(2, 32);
     let r0 = ev
-        .perplexity(&MethodSpec::Ttq { rank: 0 }, "wt2s", &cfg)
+        .perplexity(&MethodSpec::ttq(0), "wt2s", &cfg)
         .unwrap();
     let r16 = ev
-        .perplexity(&MethodSpec::Ttq { rank: 16 }, "wt2s", &cfg)
+        .perplexity(&MethodSpec::ttq(16), "wt2s", &cfg)
         .unwrap();
     assert!(
         r16 < r0 * 1.02,
@@ -116,13 +111,9 @@ fn gptq_beats_rtn() {
     let mut ev = Evaluator::new(&rt, "opt-micro").unwrap();
     let mut cfg = fast_cfg(2, 32);
     cfg.calib_batches = 4; // corr pass is heavier
-    let rtn = ev.perplexity(&MethodSpec::Rtn, "wt2s", &cfg).unwrap();
+    let rtn = ev.perplexity(&MethodSpec::rtn(), "wt2s", &cfg).unwrap();
     let gptq = ev
-        .perplexity(
-            &MethodSpec::Gptq { calib_domain: "wt2s".into() },
-            "wt2s",
-            &cfg,
-        )
+        .perplexity(&MethodSpec::gptq("wt2s"), "wt2s", &cfg)
         .unwrap();
     assert!(gptq < rtn, "GPTQ {gptq} must beat RTN {rtn} at 2 bits");
 }
@@ -133,9 +124,9 @@ fn restore_recovers_fp_exactly() {
     let Some(rt) = runtime() else { return };
     let mut ev = Evaluator::new(&rt, "opt-micro").unwrap();
     let cfg = fast_cfg(2, 32);
-    let fp1 = ev.perplexity(&MethodSpec::Fp, "wt2s", &cfg).unwrap();
-    let _ = ev.perplexity(&MethodSpec::Rtn, "wt2s", &cfg).unwrap();
-    let fp2 = ev.perplexity(&MethodSpec::Fp, "wt2s", &cfg).unwrap();
+    let fp1 = ev.perplexity(&MethodSpec::fp(), "wt2s", &cfg).unwrap();
+    let _ = ev.perplexity(&MethodSpec::rtn(), "wt2s", &cfg).unwrap();
+    let fp2 = ev.perplexity(&MethodSpec::fp(), "wt2s", &cfg).unwrap();
     assert!((fp1 - fp2).abs() < 1e-6, "restore leaked state: {fp1} vs {fp2}");
 }
 
@@ -144,8 +135,8 @@ fn accuracy_pipeline_runs_and_fp_is_best_ballpark() {
     let Some(rt) = runtime() else { return };
     let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
     let cfg = fast_cfg(2, 32);
-    let fp = ev.accuracy(&MethodSpec::Fp, "vqas", &cfg).unwrap();
-    let rtn = ev.accuracy(&MethodSpec::Rtn, "vqas", &cfg).unwrap();
+    let fp = ev.accuracy(&MethodSpec::fp(), "vqas", &cfg).unwrap();
+    let rtn = ev.accuracy(&MethodSpec::rtn(), "vqas", &cfg).unwrap();
     assert!(fp > 0.2, "fp accuracy {fp} too low — model undertrained?");
     assert!(rtn <= fp + 0.02, "2-bit RTN {rtn} should not beat FP {fp}");
 }

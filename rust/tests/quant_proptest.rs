@@ -6,7 +6,8 @@ use ttq_serve::linalg::Mat;
 use ttq_serve::prop_assert;
 use ttq_serve::quant::{
     awq_quantize, diag_from_x, pack, rtn_dequantize, rtn_quantize,
-    rtn_quantize_int, unpack, QdqFormat, QuantSpec,
+    rtn_quantize_int, unpack, ActStats, LayerStats, MethodRegistry, MethodSpec,
+    QdqFormat, QuantSpec,
 };
 use ttq_serve::util::propcheck::{check, Config};
 
@@ -156,6 +157,118 @@ fn prop_formats_all_produce_valid_qdq() {
         for v in &q.data {
             prop_assert!(v.is_finite(), "non-finite output");
             prop_assert!(v.abs() <= 2.5 * wmax + 1.0, "runaway value {v}");
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------
+// Method registry invariants
+// ------------------------------------------------------------------
+
+#[test]
+fn registry_examples_roundtrip() {
+    // every registered method: example parses, canonical spec string
+    // re-parses to an equal method with a stable label
+    for entry in MethodRegistry::global().entries() {
+        let m = MethodSpec::parse(entry.example)
+            .unwrap_or_else(|e| panic!("example '{}' must parse: {e}", entry.example));
+        assert_eq!(m.quantizer().name(), entry.name);
+        assert!(!m.label().is_empty(), "{}: empty label", entry.name);
+        let canon = m.spec_string();
+        let again = MethodSpec::parse(&canon)
+            .unwrap_or_else(|e| panic!("canonical '{canon}' must re-parse: {e}"));
+        assert_eq!(m, again, "round-trip of '{}' via '{canon}'", entry.example);
+        assert_eq!(m.label(), again.label(), "label drift through '{canon}'");
+    }
+}
+
+#[test]
+fn prop_registered_quantizers_bounded_reconstruction() {
+    // Every registered method, fed the statistics its StatsRequirement
+    // names, must produce shape-preserving finite output. The plain-QDQ
+    // methods additionally satisfy their QdqFormat reconstruction
+    // bounds exactly (asymmetric |err| <= S/2 for RTN, the absmax
+    // envelope for NF); diagonal-scaled and error-fed methods get a
+    // generous envelope (they redistribute, not amplify, error).
+    check("registry outputs bounded", &cfg(), |g| {
+        let grp = *g.choose(&[16usize, 32]);
+        let rows = g.usize_in(8, 16);
+        let cols = grp * 2;
+        let t = cols + 16; // T > d keeps the GPTQ correlation well-posed
+        let w = Mat::from_vec(rows, cols, g.vec_f32(rows * cols));
+        let x = Mat::from_vec(cols, t, g.vec_f32(cols * t));
+        let ps = [0.5f64, 1.0, 2.0, 4.0];
+        let mut act = ActStats::new(&ps, cols);
+        let sums: Vec<Vec<f64>> = ps
+            .iter()
+            .map(|&p| {
+                (0..cols)
+                    .map(|i| x.row(i).iter().map(|&v| (v as f64).abs().powf(p)).sum())
+                    .collect()
+            })
+            .collect();
+        act.accumulate(&sums, t as f64);
+        let corr = x.matmul_bt(&x);
+        let spec = QuantSpec::new(g.u32_in(2, 5), grp);
+        let wmax = w.max_abs();
+
+        for entry in MethodRegistry::global().entries() {
+            let m = MethodSpec::parse(entry.example).expect("example parses");
+            let stats = LayerStats { act: Some(&act), corr: Some(&corr), ..Default::default() };
+            let wq = m
+                .quantizer()
+                .quantize(&w, &stats, &spec)
+                .map_err(|e| format!("{}: quantize failed: {e}", entry.name))?;
+            prop_assert!(
+                wq.rows == w.rows && wq.cols == w.cols,
+                "{}: shape {}x{}",
+                entry.name,
+                wq.rows,
+                wq.cols
+            );
+            for v in &wq.data {
+                prop_assert!(v.is_finite(), "{}: non-finite output", entry.name);
+            }
+            match entry.name {
+                "fp" => prop_assert!(wq.data == w.data, "fp must be the identity"),
+                "rtn" => {
+                    let qmax = spec.qmax();
+                    for (cw, cq) in w.data.chunks(grp).zip(wq.data.chunks(grp)) {
+                        let mx = cw.iter().cloned().fold(f32::MIN, f32::max);
+                        let mn = cw.iter().cloned().fold(f32::MAX, f32::min);
+                        let s = ((mx - mn) / qmax).max(0.0);
+                        for (a, b) in cw.iter().zip(cq) {
+                            prop_assert!(
+                                (a - b).abs() <= s / 2.0 + 1e-4 * s.max(1.0),
+                                "rtn err {} > S/2 = {}",
+                                (a - b).abs(),
+                                s / 2.0
+                            );
+                        }
+                    }
+                }
+                "nf" => {
+                    for (cw, cq) in w.data.chunks(grp).zip(wq.data.chunks(grp)) {
+                        let amax = cw.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                        for b in cq {
+                            prop_assert!(
+                                b.abs() <= amax * (1.0 + 1e-5) + 1e-6,
+                                "nf value {b} outside absmax envelope {amax}"
+                            );
+                        }
+                    }
+                }
+                _ => {
+                    for v in &wq.data {
+                        prop_assert!(
+                            v.abs() <= 16.0 * wmax + 1.0,
+                            "{}: runaway value {v} (wmax {wmax})",
+                            entry.name
+                        );
+                    }
+                }
+            }
         }
         Ok(())
     });

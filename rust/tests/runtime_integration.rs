@@ -100,7 +100,7 @@ fn fused_ttq_artifact_close_to_two_pass_pipeline() {
 
     let collected = ev.collect(&toks, 4, false).unwrap();
     ev.apply_quantization(
-        &ttq_serve::eval::MethodSpec::Ttq { rank: 0 },
+        &ttq_serve::eval::MethodSpec::ttq(0),
         Some(&collected),
         &ttq_serve::eval::EvalConfig {
             spec: ttq_serve::quant::QuantSpec::new(3, 32),
