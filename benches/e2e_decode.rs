@@ -1,70 +1,115 @@
 //! End-to-end decode throughput through the full stack: coordinator →
-//! quantized weights → PJRT executor. The L3 counterpart of the paper's
-//! App. H runtime benchmark, at miniature scale.
+//! quantized weights → execution backend. The L3 counterpart of the
+//! paper's App. H runtime benchmark, at miniature scale.
 //!
-//! Run: `cargo bench --bench e2e_decode` (needs `make artifacts`)
-//!
-//! Reports tokens/sec for FP vs TTQ(r=0) vs TTQ(r=16) serving and the
-//! share of time spent on online quantization (must be small — Eq. 3).
+//! Run: `cargo bench --bench e2e_decode` — needs **no** artifacts: the
+//! native backend serves deterministic synthetic weights, and the
+//! packed-W4 execution mode turns "TTQ speedup" into a measured
+//! wall-clock number (fp32 dense matmul vs grouped int-matmul over the
+//! packed codes). With `make artifacts` the PJRT serving section runs
+//! too.
 
 use std::time::{Duration, Instant};
 
+use ttq_serve::backend::{ExecBackend, NativeBackend};
 use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
 use ttq_serve::corpus::{CorpusStream, Split, BOS};
 use ttq_serve::eval::{Evaluator, MethodSpec};
 use ttq_serve::quant::QuantSpec;
 use ttq_serve::runtime::Runtime;
 
-fn main() {
-    if !ttq_serve::artifacts_ready() {
-        eprintln!("skipping e2e_decode: run `make artifacts` first");
-        return;
-    }
-    let rt = Runtime::new(&ttq_serve::artifacts_dir()).unwrap();
-    let model = "qwen-micro";
-    let requests = 48;
-
-    println!("== e2e serving throughput, {model}, {requests} requests ==");
-    for (label, rank, bits) in [
-        ("TTQ q=4 r=0", 0usize, 4u32),
-        ("TTQ q=4 r=16", 16, 4),
-        ("TTQ q=2 r=0", 0, 2),
-    ] {
-        let mut cfg = ServerConfig::new(model).with_method(MethodSpec::ttq(rank));
-        cfg.spec = QuantSpec::new(bits, 32);
-        cfg.policy = BatchPolicy {
-            buckets: vec![1, 4],
-            linger: Duration::ZERO,
-        };
-        let mut server = Server::new(&rt, cfg).unwrap();
-        let seq = server.seq();
-        let mut s = CorpusStream::new("wt2s", Split::Eval);
-        let t0 = Instant::now();
-        for _ in 0..requests {
-            let mut toks = vec![BOS; seq];
-            for t in toks.iter_mut().skip(1) {
-                *t = s.next_token();
-            }
-            server.submit(toks);
-            server.step(Instant::now()).unwrap();
+/// Serve `requests` prompts through the coordinator; print tok/s and
+/// the online-quantization share of wall-clock (must be small — Eq. 3).
+fn serve_once(backend: &dyn ExecBackend, label: &str, model: &str, requests: usize) {
+    let mut cfg = ServerConfig::new(model).with_method(MethodSpec::ttq(0));
+    cfg.spec = QuantSpec::new(4, 32);
+    cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
+    let mut server = Server::new(backend, cfg).unwrap();
+    let seq = server.seq();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let t0 = Instant::now();
+    for _ in 0..requests {
+        let mut toks = vec![BOS; seq];
+        for t in toks.iter_mut().skip(1) {
+            *t = s.next_token();
         }
-        server.drain().unwrap();
+        server.submit(toks);
+        server.step(Instant::now()).unwrap();
+    }
+    server.drain().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    use std::sync::atomic::Ordering::Relaxed;
+    let toks = server.metrics.tokens.load(Relaxed);
+    let quant_ms = server.metrics.quant_us.load(Relaxed) as f64 / 1e3;
+    println!(
+        "{label:<22} wall {wall:>6.2}s  {:>8.0} tok/s  quant {quant_ms:>7.1}ms \
+         ({:.1}% of wall)  generations {}",
+        toks as f64 / wall,
+        100.0 * quant_ms / (wall * 1e3),
+        server.weight_generation(),
+    );
+}
+
+fn main() {
+    let dir = ttq_serve::artifacts_dir();
+    let model = "qwen-micro";
+    let requests = 32;
+
+    // -- the acceptance measurement: fp32 vs packed-W4 native decode --
+    println!("== native decode wall-clock, {model}, batch 1 ==");
+    let fp = NativeBackend::new(&dir);
+    let weights = fp.load_model(model).unwrap();
+    let seq = weights.manifest.config.seq;
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let prompt = s.batch(1, seq);
+    let iters = 12;
+    let mut baseline = 0.0f64;
+    for (label, backend) in [
+        ("fp32 dense", NativeBackend::new(&dir)),
+        ("W4 packed", NativeBackend::new(&dir).with_exec_quant(QuantSpec::new(4, 32))),
+        ("W2 packed", NativeBackend::new(&dir).with_exec_quant(QuantSpec::new(2, 32))),
+    ] {
+        // warm once (packs the weights outside the timed loop)
+        backend.logits(&weights, &prompt, 1).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            backend.logits(&weights, &prompt, 1).unwrap();
+        }
         let wall = t0.elapsed().as_secs_f64();
-        use std::sync::atomic::Ordering::Relaxed;
-        let toks = server.metrics.tokens.load(Relaxed);
-        let quant_ms = server.metrics.quant_us.load(Relaxed) as f64 / 1e3;
+        let tps = (iters * seq) as f64 / wall;
+        if baseline == 0.0 {
+            baseline = wall;
+        }
         println!(
-            "{label:<14} wall {wall:>6.2}s  {:>8.0} tok/s  quant {quant_ms:>7.1}ms \
-             ({:.1}% of wall)  generations {}",
-            toks as f64 / wall,
-            100.0 * quant_ms / (wall * 1e3),
-            server.weight_generation(),
+            "{label:<12} {:>8.1} ms/decode  {tps:>9.0} tok/s  ({:.2}x vs fp32)",
+            wall * 1e3 / iters as f64,
+            baseline / wall
         );
     }
 
+    // -- full serving loop on the native backend (always available) --
+    println!("\n== e2e serving throughput (native), {model}, {requests} requests ==");
+    serve_once(&NativeBackend::new(&dir), "native fp32", model, requests);
+    serve_once(
+        &NativeBackend::new(&dir).with_exec_quant(QuantSpec::new(4, 32)),
+        "native W4 packed",
+        model,
+        requests,
+    );
+
+    // -- PJRT serving + eval pipeline (only with compiled artifacts) --
+    if !ttq_serve::artifacts_ready() {
+        println!("\n(pjrt sections skipped: run `make artifacts` for the AOT path)");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let pjrt = ttq_serve::backend::PjrtBackend::new(rt);
+    println!("\n== e2e serving throughput (pjrt), {model}, {requests} requests ==");
+    serve_once(&pjrt, "pjrt TTQ q=4", model, requests);
+
     // per-batch eval-pipeline throughput (the Table 1-3 workhorse)
-    println!("\n== eval pipeline batch throughput ==");
-    let mut ev = Evaluator::new(&rt, model).unwrap();
+    println!("\n== eval pipeline batch throughput (pjrt) ==");
+    let mut ev = Evaluator::new(&pjrt, model).unwrap();
     let seq = ev.weights.manifest.config.seq;
     let mut s = CorpusStream::new("wt2s", Split::Eval);
     for (label, method) in [

@@ -8,21 +8,21 @@
 //! ```bash
 //! cargo run --release --example domain_shift
 //! ```
+//!
+//! Runs on any backend; the diagonal-vs-off-diagonal *gap* is only
+//! meaningful with trained artifacts (`make artifacts`).
 
 use anyhow::Result;
+use ttq_serve::backend::default_backend;
 use ttq_serve::corpus::LM_DOMAINS;
 use ttq_serve::eval::{EvalConfig, Evaluator, MethodSpec};
 use ttq_serve::quant::QuantSpec;
-use ttq_serve::runtime::Runtime;
 
 fn main() -> Result<()> {
-    if !ttq_serve::artifacts_ready() {
-        eprintln!("run `make artifacts` first");
-        return Ok(());
-    }
-    let rt = Runtime::new(&ttq_serve::artifacts_dir())?;
+    let backend = default_backend()?;
     let model = "qwen-mini";
-    let mut ev = Evaluator::new(&rt, model)?;
+    let mut ev = Evaluator::new(backend.as_ref(), model)?;
+    println!("execution backend: {}", backend.name());
     let cfg = EvalConfig {
         spec: QuantSpec::new(3, 32),
         eval_batches: 6,

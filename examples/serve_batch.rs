@@ -9,28 +9,28 @@
 //! ```bash
 //! cargo run --release --example serve_batch
 //! ```
+//!
+//! Works with zero artifacts: the native backend serves deterministic
+//! synthetic weights through the very same loop.
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+use ttq_serve::backend::default_backend;
 use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
 use ttq_serve::corpus::{CorpusStream, Split, BOS};
 use ttq_serve::quant::QuantSpec;
-use ttq_serve::runtime::Runtime;
 
 fn main() -> Result<()> {
-    if !ttq_serve::artifacts_ready() {
-        eprintln!("run `make artifacts` first");
-        return Ok(());
-    }
-    let rt = Runtime::new(&ttq_serve::artifacts_dir())?;
+    let backend = default_backend()?;
+    println!("execution backend: {}\n", backend.name());
     let mut cfg = ServerConfig::new("qwen-micro");
     cfg.spec = QuantSpec::new(4, 32);
     cfg.policy = BatchPolicy {
         buckets: vec![1, 4],
         linger: Duration::from_millis(1),
     };
-    let mut server = Server::new(&rt, cfg)?;
+    let mut server = Server::new(backend.as_ref(), cfg)?;
     let seq = server.seq();
 
     let phases = [("ptbs", 24usize), ("c4s", 24), ("ptbs", 12)];

@@ -1,0 +1,109 @@
+//! Execution backends — where forward passes actually run.
+//!
+//! The evaluator and the serving coordinator consume four model-level
+//! operations (the artifact variants of `python/compile/aot.py`): full
+//! `logits`, summed `nll`, the per-linear activation `stats` pass, and
+//! the fused single-pass TTQ kernel. [`ExecBackend`] abstracts those
+//! four behind one trait with two implementations:
+//!
+//! * [`PjrtBackend`] — the original path: AOT-compiled HLO-text
+//!   artifacts executed through the PJRT CPU client (needs
+//!   `make artifacts` and the real `xla` crate).
+//! * [`NativeBackend`] — a pure-Rust transformer forward pass over
+//!   [`crate::linalg::Mat`], driven directly by the
+//!   [`crate::models::Manifest`] contract (opt/qwen/gemma families).
+//!   Runs anywhere a Rust toolchain exists — no artifacts, no PJRT —
+//!   and additionally offers a packed-W4 *execution* mode in which
+//!   every quantizable linear is evaluated by a grouped int-matmul
+//!   kernel over [`crate::quant::Packed`] weights.
+//!
+//! [`testmodel`] generates deterministic seeded synthetic models
+//! (manifest + weights) mirroring `python/compile/model.py::CONFIGS`,
+//! so the whole eval/serving stack runs end-to-end with zero build
+//! artifacts — the integration suite falls back to it automatically.
+
+pub mod native;
+pub mod pjrt;
+pub mod testmodel;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+use crate::models::ModelWeights;
+use crate::quant::ActStats;
+
+/// Result of one activation-statistics pass over a batch.
+pub struct BatchStats {
+    /// Sum of next-token NLL over the batch (the stats artifact emits
+    /// it alongside the taps; callers may ignore it).
+    pub nll_sum: f64,
+    /// Token count behind `nll_sum` (batch × (seq − 1)).
+    pub nll_count: f64,
+    /// Per-linear accumulated norm sums, in manifest `linears` order,
+    /// each already `accumulate`d with batch × seq tokens.
+    pub stats: Vec<ActStats>,
+    /// Per-linear input correlations XᵀX; empty unless requested.
+    pub corr: Vec<Mat>,
+}
+
+/// One execution engine for the three model-level artifact variants.
+///
+/// All methods take the weights explicitly: quantization state lives in
+/// the caller ([`crate::eval::Evaluator`] substitutes quantized linears
+/// into its `ModelWeights`), the backend only executes.
+pub trait ExecBackend: Send + Sync {
+    /// Short identifier for logs/CLI (`"pjrt"` / `"native"`).
+    fn name(&self) -> &'static str;
+
+    /// Directory holding `<model>.manifest.json` + `<model>.weights.bin`.
+    fn models_dir(&self) -> &Path;
+
+    /// Load a model's weights. The native backend falls back to the
+    /// deterministic [`testmodel`] generator when the files are absent.
+    fn load_model(&self, model: &str) -> Result<ModelWeights> {
+        ModelWeights::load(self.models_dir(), model)
+    }
+
+    /// Full logits, flat `(batch × seq × vocab)` row-major.
+    fn logits(&self, weights: &ModelWeights, tokens: &[i32], batch: usize) -> Result<Vec<f32>>;
+
+    /// Summed next-token NLL: returns `(nll_sum, token_count)`.
+    fn nll(&self, weights: &ModelWeights, tokens: &[i32], batch: usize) -> Result<(f64, f64)>;
+
+    /// Activation-statistics pass: per-linear norm sums (and the full
+    /// input correlation when `with_corr`).
+    fn stats(
+        &self,
+        weights: &ModelWeights,
+        tokens: &[i32],
+        batch: usize,
+        with_corr: bool,
+    ) -> Result<BatchStats>;
+
+    /// Fused single-pass TTQ forward (Fig. 1b, L1 kernel): every
+    /// quantizable linear is re-quantized from the live batch's own
+    /// activation diagonal inside the forward. Returns `(nll_sum, count)`.
+    fn nll_fused_ttq(
+        &self,
+        weights: &ModelWeights,
+        tokens: &[i32],
+        batch: usize,
+        bits: u32,
+    ) -> Result<(f64, f64)>;
+}
+
+/// The backend the CLI/examples/benches pick when not told otherwise:
+/// PJRT when `make artifacts` has run, the native path everywhere else.
+pub fn default_backend() -> Result<Box<dyn ExecBackend>> {
+    if crate::artifacts_ready() {
+        let rt = crate::runtime::Runtime::new(&crate::artifacts_dir())?;
+        Ok(Box::new(PjrtBackend::new(rt)))
+    } else {
+        Ok(Box::new(NativeBackend::new(&crate::artifacts_dir())))
+    }
+}

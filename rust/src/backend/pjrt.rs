@@ -1,0 +1,131 @@
+//! [`ExecBackend`] over the PJRT runtime — the original artifact path.
+//!
+//! Thin adapter: each trait method picks the matching AOT artifact
+//! (`logits` / `nll` / `stats` / `corr` / `ttq`), feeds the weights
+//! positionally in manifest order, and parses the returned tuple. The
+//! semantics are exactly the pre-trait `Evaluator` code paths.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::{BatchStats, ExecBackend};
+use crate::linalg::Mat;
+use crate::models::ModelWeights;
+use crate::quant::ActStats;
+use crate::runtime::{
+    literal_f32_vec, literal_scalar_f32, model_inputs, ArtifactKey, Runtime,
+};
+
+/// AOT-compiled HLO artifacts executed through the PJRT CPU client.
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Runtime) -> Self {
+        PjrtBackend { rt }
+    }
+
+    /// The wrapped runtime (platform probes, artifact cache stats).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    fn run_variant(
+        &self,
+        weights: &ModelWeights,
+        variant: &str,
+        tokens: &[i32],
+        batch: usize,
+        qmax: Option<f32>,
+    ) -> Result<Vec<xla::Literal>> {
+        let key = ArtifactKey::new(&weights.manifest.name, variant, batch);
+        let exe = self.rt.load(&key)?;
+        let inputs = model_inputs(weights, tokens, batch, qmax)?;
+        self.rt.run(&exe, &inputs)
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn models_dir(&self) -> &Path {
+        self.rt.artifacts_dir()
+    }
+
+    fn logits(&self, weights: &ModelWeights, tokens: &[i32], batch: usize) -> Result<Vec<f32>> {
+        let outs = self.run_variant(weights, "logits", tokens, batch, None)?;
+        literal_f32_vec(&outs[0])
+    }
+
+    fn nll(&self, weights: &ModelWeights, tokens: &[i32], batch: usize) -> Result<(f64, f64)> {
+        let outs = self.run_variant(weights, "nll", tokens, batch, None)?;
+        Ok((
+            literal_scalar_f32(&outs[0])? as f64,
+            literal_scalar_f32(&outs[1])? as f64,
+        ))
+    }
+
+    fn stats(
+        &self,
+        weights: &ModelWeights,
+        tokens: &[i32],
+        batch: usize,
+        with_corr: bool,
+    ) -> Result<BatchStats> {
+        let variant = if with_corr { "corr" } else { "stats" };
+        let outs = self.run_variant(weights, variant, tokens, batch, None)?;
+        let linears = &weights.manifest.linears;
+        let ps = &weights.manifest.norm_ps;
+        let seq = weights.manifest.config.seq;
+        let nll_sum = literal_scalar_f32(&outs[0])? as f64;
+        let nll_count = literal_scalar_f32(&outs[1])? as f64;
+        let n_tokens = (batch * seq) as f64;
+        let mut stats = Vec::with_capacity(linears.len());
+        for (i, lin) in linears.iter().enumerate() {
+            let raw = literal_f32_vec(&outs[2 + i])?;
+            if raw.len() != ps.len() * lin.d_in {
+                return Err(anyhow!(
+                    "stats shape mismatch for {}: {} vs {}x{}",
+                    lin.name,
+                    raw.len(),
+                    ps.len(),
+                    lin.d_in
+                ));
+            }
+            let mut st = ActStats::new(ps, lin.d_in);
+            let sums: Vec<Vec<f64>> = raw
+                .chunks(lin.d_in)
+                .map(|row| row.iter().map(|&v| v as f64).collect())
+                .collect();
+            st.accumulate(&sums, n_tokens);
+            stats.push(st);
+        }
+        let mut corr = Vec::new();
+        if with_corr {
+            for (i, lin) in linears.iter().enumerate() {
+                let raw = literal_f32_vec(&outs[2 + linears.len() + i])?;
+                corr.push(Mat::from_vec(lin.d_in, lin.d_in, raw));
+            }
+        }
+        Ok(BatchStats { nll_sum, nll_count, stats, corr })
+    }
+
+    fn nll_fused_ttq(
+        &self,
+        weights: &ModelWeights,
+        tokens: &[i32],
+        batch: usize,
+        bits: u32,
+    ) -> Result<(f64, f64)> {
+        let qmax = crate::quant::qmax(bits);
+        let outs = self.run_variant(weights, "ttq", tokens, batch, Some(qmax))?;
+        Ok((
+            literal_scalar_f32(&outs[0])? as f64,
+            literal_scalar_f32(&outs[1])? as f64,
+        ))
+    }
+}

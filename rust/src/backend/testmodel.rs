@@ -1,0 +1,345 @@
+//! Deterministic synthetic models — manifest + weights without
+//! `make artifacts`.
+//!
+//! Mirrors `python/compile/model.py::CONFIGS` (dims) and `init_params`
+//! (initialization scheme): fan-in-scaled projections, 0.02-σ
+//! embeddings, unit (gemma: zero) norm weights. Weights are seeded from
+//! the model name through [`crate::linalg::Rng`], so every process —
+//! tests, benches, the CLI native backend — sees bit-identical tensors.
+//!
+//! These models are *architecturally* faithful but untrained: they
+//! exercise the full eval/serving pipeline (forward, stats, calibrator,
+//! quantization) without making language-quality claims.
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::{rng::splitmix64, Mat, Rng};
+use crate::models::{
+    LinearInfo, Manifest, ModelDims, ModelWeights, TensorInfo, TtqDefaults,
+};
+
+/// Dimension set for one synthetic model (mirror of python ModelConfig).
+#[derive(Clone, Copy, Debug)]
+pub struct TestConfig {
+    pub name: &'static str,
+    pub family: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_mlp: usize,
+    pub max_seq: usize,
+}
+
+impl TestConfig {
+    pub fn d_attn(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+}
+
+const fn cfg(
+    name: &'static str,
+    family: &'static str,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    d_mlp: usize,
+) -> TestConfig {
+    TestConfig {
+        name,
+        family,
+        vocab: 512,
+        d_model,
+        n_layers,
+        n_heads,
+        n_kv_heads,
+        head_dim,
+        d_mlp,
+        max_seq: 64,
+    }
+}
+
+/// The 7-model registry, dimension-identical to the python CONFIGS.
+pub const CONFIGS: [TestConfig; 7] = [
+    cfg("opt-micro", "opt", 64, 2, 4, 4, 16, 256),
+    cfg("opt-mini", "opt", 128, 4, 8, 8, 16, 512),
+    cfg("opt-small", "opt", 192, 6, 8, 8, 24, 768),
+    cfg("qwen-micro", "qwen", 64, 2, 4, 2, 16, 192),
+    cfg("qwen-mini", "qwen", 128, 4, 8, 2, 16, 384),
+    cfg("gemma-micro", "gemma", 64, 2, 4, 1, 32, 256),
+    cfg("gemma-mini", "gemma", 128, 4, 4, 1, 32, 512),
+];
+
+pub fn config(name: &str) -> Option<&'static TestConfig> {
+    CONFIGS.iter().find(|c| c.name == name)
+}
+
+/// Ordered (name, (rows, cols)) tensor schema — the manifest order
+/// contract (1-D tensors are (1, n)).
+fn param_schema(c: &TestConfig) -> Vec<(String, (usize, usize))> {
+    let d = c.d_model;
+    let mut out: Vec<(String, (usize, usize))> =
+        vec![("embed".into(), (c.vocab, d))];
+    if c.family == "opt" {
+        out.push(("pos_embed".into(), (c.max_seq, d)));
+    }
+    for i in 0..c.n_layers {
+        let p = format!("l{i}.");
+        out.push((format!("{p}ln1"), (1, d)));
+        if c.family == "opt" {
+            out.push((format!("{p}ln1b"), (1, d)));
+        }
+        out.push((format!("{p}wq"), (c.d_attn(), d)));
+        out.push((format!("{p}wk"), (c.d_kv(), d)));
+        out.push((format!("{p}wv"), (c.d_kv(), d)));
+        out.push((format!("{p}wo"), (d, c.d_attn())));
+        if c.family == "qwen" {
+            out.push((format!("{p}qnorm"), (1, c.head_dim)));
+            out.push((format!("{p}knorm"), (1, c.head_dim)));
+        }
+        out.push((format!("{p}ln2"), (1, d)));
+        if c.family == "opt" {
+            out.push((format!("{p}ln2b"), (1, d)));
+        }
+        if c.family == "opt" {
+            out.push((format!("{p}up"), (c.d_mlp, d)));
+            out.push((format!("{p}down"), (d, c.d_mlp)));
+        } else {
+            out.push((format!("{p}gate"), (c.d_mlp, d)));
+            out.push((format!("{p}up"), (c.d_mlp, d)));
+            out.push((format!("{p}down"), (d, c.d_mlp)));
+        }
+    }
+    out.push(("lnf".into(), (1, d)));
+    if c.family == "opt" {
+        out.push(("lnfb".into(), (1, d)));
+    }
+    out
+}
+
+fn linear_schema(c: &TestConfig) -> Vec<LinearInfo> {
+    let d = c.d_model;
+    let mut out = Vec::new();
+    for i in 0..c.n_layers {
+        let p = format!("l{i}.");
+        out.push(LinearInfo { name: format!("{p}wq"), d_in: d, d_out: c.d_attn() });
+        out.push(LinearInfo { name: format!("{p}wk"), d_in: d, d_out: c.d_kv() });
+        out.push(LinearInfo { name: format!("{p}wv"), d_in: d, d_out: c.d_kv() });
+        out.push(LinearInfo { name: format!("{p}wo"), d_in: c.d_attn(), d_out: d });
+        if c.family != "opt" {
+            out.push(LinearInfo { name: format!("{p}gate"), d_in: d, d_out: c.d_mlp });
+        }
+        out.push(LinearInfo { name: format!("{p}up"), d_in: d, d_out: c.d_mlp });
+        out.push(LinearInfo { name: format!("{p}down"), d_in: c.d_mlp, d_out: d });
+    }
+    out
+}
+
+/// Manifest for a synthetic model (offsets/numels in schema order).
+pub fn manifest(c: &TestConfig) -> Manifest {
+    let mut tensors = Vec::new();
+    let mut offset = 0usize;
+    for (name, (rows, cols)) in param_schema(c) {
+        let numel = rows * cols;
+        let shape = if rows == 1 { vec![cols] } else { vec![rows, cols] };
+        tensors.push(TensorInfo { name, shape, offset, numel });
+        offset += numel;
+    }
+    Manifest {
+        name: c.name.to_string(),
+        family: c.family.to_string(),
+        config: ModelDims {
+            vocab: c.vocab,
+            d_model: c.d_model,
+            n_layers: c.n_layers,
+            n_heads: c.n_heads,
+            n_kv_heads: c.n_kv_heads,
+            head_dim: c.head_dim,
+            d_mlp: c.d_mlp,
+            max_seq: c.max_seq,
+            seq: c.max_seq,
+        },
+        tensors,
+        linears: linear_schema(c),
+        norm_ps: vec![0.5, 1.0, 2.0, 4.0],
+        ttq_defaults: TtqDefaults { g: 32, p: 2.0, lam: 0.4, alpha: 0.5 },
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    let mut h = 0x7751_2026u64;
+    for b in name.bytes() {
+        h = splitmix64(h ^ b as u64);
+    }
+    h
+}
+
+/// Build a synthetic model entirely in memory (deterministic per name).
+pub fn build(name: &str) -> Result<ModelWeights> {
+    let c = config(name).ok_or_else(|| {
+        anyhow!("no synthetic config for model '{name}' (known: registry names)")
+    })?;
+    build_config(c)
+}
+
+/// Build from an explicit config (custom shapes for tests).
+pub fn build_config(c: &TestConfig) -> Result<ModelWeights> {
+    let man = manifest(c);
+    let mut rng = Rng::new(name_seed(c.name));
+    let residual_scale = 1.0 / (2.0 * c.n_layers as f64).sqrt();
+    let mut tensors: Vec<(String, Mat)> = Vec::with_capacity(man.tensors.len());
+    for (tname, (rows, cols)) in param_schema(c) {
+        let base = tname.rsplit('.').next().unwrap_or(&tname);
+        let numel = rows * cols;
+        let data: Vec<f32> = match base {
+            "ln1" | "ln2" | "lnf" | "qnorm" | "knorm" => {
+                let v = if c.family == "gemma" { 0.0 } else { 1.0 };
+                vec![v; numel]
+            }
+            "ln1b" | "ln2b" | "lnfb" => vec![0.0; numel],
+            "embed" => (0..numel).map(|_| (rng.normal() * 0.02) as f32).collect(),
+            "pos_embed" => (0..numel).map(|_| (rng.normal() * 0.01) as f32).collect(),
+            _ => {
+                // projection: fan-in-scaled normal, residual outputs damped
+                let fan_in = cols as f64;
+                let mut s = fan_in.powf(-0.5);
+                if base == "wo" || base == "down" {
+                    s *= residual_scale;
+                }
+                (0..numel).map(|_| (rng.normal() * s) as f32).collect()
+            }
+        };
+        tensors.push((tname, Mat::from_vec(rows, cols, data)));
+    }
+    ModelWeights::from_parts(man, tensors)
+}
+
+/// Manifest serialized to the on-disk JSON contract (round-trips
+/// through [`Manifest::parse`]); exposed for tooling/tests.
+pub fn manifest_json(c: &TestConfig) -> String {
+    let m = manifest(c);
+    let tensors: Vec<String> = m
+        .tensors
+        .iter()
+        .map(|t| {
+            let shape: Vec<String> = t.shape.iter().map(|s| s.to_string()).collect();
+            format!(
+                r#"{{"name": "{}", "shape": [{}], "offset": {}, "numel": {}}}"#,
+                t.name,
+                shape.join(", "),
+                t.offset,
+                t.numel
+            )
+        })
+        .collect();
+    let linears: Vec<String> = m
+        .linears
+        .iter()
+        .map(|l| {
+            format!(
+                r#"{{"name": "{}", "d_in": {}, "d_out": {}}}"#,
+                l.name, l.d_in, l.d_out
+            )
+        })
+        .collect();
+    let cfgv = &m.config;
+    format!(
+        r#"{{
+  "name": "{}", "family": "{}",
+  "config": {{"vocab": {}, "d_model": {}, "n_layers": {}, "n_heads": {},
+             "n_kv_heads": {}, "head_dim": {}, "d_mlp": {}, "max_seq": {}, "seq": {}}},
+  "tensors": [{}],
+  "linears": [{}],
+  "norm_ps": [0.5, 1, 2, 4],
+  "ttq_defaults": {{"g": {}, "p": {}, "lam": {}, "alpha": {}}}
+}}"#,
+        m.name,
+        m.family,
+        cfgv.vocab,
+        cfgv.d_model,
+        cfgv.n_layers,
+        cfgv.n_heads,
+        cfgv.n_kv_heads,
+        cfgv.head_dim,
+        cfgv.d_mlp,
+        cfgv.max_seq,
+        cfgv.seq,
+        tensors.join(", "),
+        linears.join(", "),
+        m.ttq_defaults.g,
+        m.ttq_defaults.p,
+        m.ttq_defaults.lam,
+        m.ttq_defaults.alpha
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_registry_models_build() {
+        for c in &CONFIGS {
+            let w = build(c.name).unwrap();
+            assert_eq!(w.manifest.name, c.name);
+            assert!(w.param_count() > 10_000, "{} too small", c.name);
+            let expected_linears =
+                c.n_layers * if c.family == "opt" { 6 } else { 7 };
+            assert_eq!(w.manifest.linears.len(), expected_linears);
+            // every linear exists with the declared shape
+            for lin in &w.manifest.linears {
+                let t = w.get(&lin.name).expect("linear tensor");
+                assert_eq!((t.rows, t.cols), (lin.d_out, lin.d_in), "{}", lin.name);
+            }
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let a = build("qwen-micro").unwrap();
+        let b = build("qwen-micro").unwrap();
+        for name in a.tensor_names() {
+            assert_eq!(a.get(name).unwrap().data, b.get(name).unwrap().data);
+        }
+    }
+
+    #[test]
+    fn models_differ_by_name() {
+        let a = build("qwen-micro").unwrap();
+        let b = build("gemma-micro").unwrap();
+        assert_ne!(a.get("embed").unwrap().data, b.get("embed").unwrap().data);
+    }
+
+    #[test]
+    fn manifest_json_round_trips() {
+        for c in &CONFIGS {
+            let parsed = Manifest::parse(&manifest_json(c)).unwrap();
+            let m = manifest(c);
+            assert_eq!(parsed.name, m.name);
+            assert_eq!(parsed.family, m.family);
+            assert_eq!(parsed.tensors.len(), m.tensors.len());
+            assert_eq!(parsed.linears.len(), m.linears.len());
+            assert_eq!(parsed.norm_ps, m.norm_ps);
+            assert_eq!(parsed.config.d_mlp, m.config.d_mlp);
+            assert_eq!(parsed.ttq_defaults.g, m.ttq_defaults.g);
+        }
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let m = manifest(config("opt-micro").unwrap());
+        let mut expect = 0usize;
+        for t in &m.tensors {
+            assert_eq!(t.offset, expect, "{}", t.name);
+            expect += t.numel;
+        }
+    }
+}

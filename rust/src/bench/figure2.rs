@@ -12,10 +12,10 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use super::Report;
+use crate::backend::ExecBackend;
 use crate::corpus::{CorpusStream, Split};
 use crate::eval::Evaluator;
 use crate::quant::{awq_quantize, diag_from_norm_sums, QuantSpec};
-use crate::runtime::Runtime;
 
 pub const ALPHAS: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
 pub const LAMBDAS: [f64; 4] = [0.01, 0.1, 0.4, 1.0];
@@ -24,12 +24,12 @@ pub const PS: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
 /// Grid-search one model at one bit-width; returns the 5 best
 /// (alpha, lam, p) triples by summed activation loss.
 pub fn top5_for(
-    rt: &Runtime,
+    backend: &dyn ExecBackend,
     model: &str,
     bits: u32,
     fast: bool,
 ) -> Result<Vec<(f64, f64, f64)>> {
-    let ev = Evaluator::new(rt, model)?;
+    let ev = Evaluator::new(backend, model)?;
     // one stats+corr-free pass on eval traffic for the norm sums, plus
     // a synthetic X per linear rebuilt from a fresh eval stream to score
     // the loss. We approximate X's effect through the stats artifact:
@@ -88,14 +88,14 @@ pub fn top5_for(
 }
 
 /// Full Figure 2: histograms of top-5 winners across models × bits.
-pub fn figure2(rt: &Runtime, models: &[String], fast: bool) -> Result<Report> {
+pub fn figure2(backend: &dyn ExecBackend, models: &[String], fast: bool) -> Result<Report> {
     let bits_list: Vec<u32> = if fast { vec![2, 4] } else { vec![2, 3, 4, 5] };
     let mut hist_a: HashMap<String, usize> = HashMap::new();
     let mut hist_l: HashMap<String, usize> = HashMap::new();
     let mut hist_p: HashMap<String, usize> = HashMap::new();
     for model in models {
         for &bits in &bits_list {
-            for (a, l, p) in top5_for(rt, model, bits, fast)? {
+            for (a, l, p) in top5_for(backend, model, bits, fast)? {
                 *hist_a.entry(format!("{a}")).or_default() += 1;
                 *hist_l.entry(format!("{l}")).or_default() += 1;
                 *hist_p.entry(format!("{p}")).or_default() += 1;

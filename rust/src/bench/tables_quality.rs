@@ -8,10 +8,11 @@
 use anyhow::Result;
 
 use super::{fmt_ppl, Report};
+use crate::backend::ExecBackend;
 use crate::corpus::{CorpusStream, Split, LM_DOMAINS, VLA_SUITES};
 use crate::eval::{EvalConfig, Evaluator, MethodSpec};
 use crate::quant::QuantSpec;
-use crate::runtime::{literal_f32_vec, model_inputs, ArtifactKey, Runtime};
+use crate::util::argmax;
 
 /// Scale knob: `fast` shrinks batch counts ~4x for smoke runs.
 pub fn cfg(bits: u32, group: usize, fast: bool) -> EvalConfig {
@@ -38,9 +39,9 @@ fn or_default(methods: &[MethodSpec], default: Vec<MethodSpec>) -> Vec<MethodSpe
 /// down to 2^8..2^14 tokens (miniature corpus). Offline methods sweep
 /// the calibration length; online methods get a single "0 tokens" row,
 /// weight-only methods a "-" row.
-pub fn table1(rt: &Runtime, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
+pub fn table1(backend: &dyn ExecBackend, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
     let model = "opt-mini";
-    let mut ev = Evaluator::new(rt, model)?;
+    let mut ev = Evaluator::new(backend, model)?;
     let base = cfg(3, 32, fast);
     let seq = ev.weights.manifest.config.seq;
     let methods = or_default(
@@ -75,9 +76,9 @@ pub fn table1(rt: &Runtime, fast: bool, methods: &[MethodSpec]) -> Result<Report
 ///
 /// Paper: micro-scaling helps everyone; RTN collapses at large g; TTQ
 /// tolerates ~2x larger groups than AWQ.
-pub fn table2(rt: &Runtime, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
+pub fn table2(backend: &dyn ExecBackend, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
     let model = "qwen-mini";
-    let mut ev = Evaluator::new(rt, model)?;
+    let mut ev = Evaluator::new(backend, model)?;
     let groups: Vec<usize> = if fast {
         vec![16, 64, 256, 1024]
     } else {
@@ -118,7 +119,7 @@ pub fn table2(rt: &Runtime, fast: bool, methods: &[MethodSpec]) -> Result<Report
 /// The default row set now includes the NormalFloat codebook and
 /// test-time pruning as first-class methods.
 pub fn table3(
-    rt: &Runtime,
+    backend: &dyn ExecBackend,
     models: &[String],
     fast: bool,
     methods: &[MethodSpec],
@@ -141,7 +142,7 @@ pub fn table3(
     );
     let mut reports = Vec::new();
     for model in models {
-        let mut ev = Evaluator::new(rt, model)?;
+        let mut ev = Evaluator::new(backend, model)?;
         // un-compressed reference row
         let base = cfg(4, 32, fast);
         let mut ref_ppls = Vec::new();
@@ -176,7 +177,7 @@ pub fn table3(
 /// Table 12 — VLM proxy: next-token accuracy on the vqas domain under
 /// quantization, with AWQ calibrated on four different domains.
 pub fn table12(
-    rt: &Runtime,
+    backend: &dyn ExecBackend,
     models: &[String],
     fast: bool,
     methods: &[MethodSpec],
@@ -196,7 +197,7 @@ pub fn table12(
     );
     let mut out = Vec::new();
     for model in models {
-        let mut ev = Evaluator::new(rt, model)?;
+        let mut ev = Evaluator::new(backend, model)?;
         let base = cfg(4, 32, fast);
         let ref_acc = ev.accuracy(&MethodSpec::fp(), "vqas", &base)? * 100.0;
         let mut header = vec!["method".to_string()];
@@ -222,7 +223,7 @@ pub fn table12(
 /// Table 13 — VLA proxy: episode success rate over four suites at
 /// q=2, g=64. An episode succeeds when `horizon` greedy continuations
 /// all match the ground-truth stream (exact match, like LIBERO).
-pub fn table13(rt: &Runtime, model: &str, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
+pub fn table13(backend: &dyn ExecBackend, model: &str, fast: bool, methods: &[MethodSpec]) -> Result<Report> {
     let episodes = if fast { 20 } else { 100 };
     let methods = or_default(
         methods,
@@ -243,12 +244,12 @@ pub fn table13(rt: &Runtime, model: &str, fast: bool, methods: &[MethodSpec]) ->
         &format!("Table 13 (VLA proxy): {model}, q=2 g=64, success rate over {episodes} episodes"),
         &header.iter().map(String::as_str).collect::<Vec<_>>(),
     );
-    let mut ev = Evaluator::new(rt, model)?;
+    let mut ev = Evaluator::new(backend, model)?;
     for m in &methods {
         let mut cells = vec![m.label()];
         let mut acc = 0.0;
         for &(_, stream_id, horizon) in &VLA_SUITES {
-            let r = vla_success_rate(rt, &mut ev, m, stream_id, horizon, episodes, fast)?;
+            let r = vla_success_rate(&mut ev, m, stream_id, horizon, episodes, fast)?;
             acc += r;
             cells.push(format!("{:.1}%", r * 100.0));
         }
@@ -261,7 +262,6 @@ pub fn table13(rt: &Runtime, model: &str, fast: bool, methods: &[MethodSpec]) ->
 /// Success rate: fraction of episodes whose `horizon` greedy decodes
 /// all match the corpus ground truth.
 fn vla_success_rate(
-    rt: &Runtime,
     ev: &mut Evaluator,
     method: &MethodSpec,
     stream_id: u64,
@@ -288,8 +288,6 @@ fn vla_success_rate(
         ev.quantize_static(method, &c)?;
     }
 
-    let key = ArtifactKey::new(ev.model_name(), "logits", 1);
-    let exe = rt.load(&key)?;
     let mut stream = CorpusStream::with_stream("acts", Split::Eval, stream_id);
     let mut successes = 0usize;
     let prefix = seq - horizon - 1;
@@ -313,17 +311,9 @@ fn vla_success_rate(
         let mut ok = true;
         for (h, &want) in truth.iter().enumerate() {
             let pos = prefix + h; // predict token at pos+1 from prefix..=pos
-            let inputs = model_inputs(&ev.weights, &toks, 1, None)?;
-            let outs = rt.run(&exe, &inputs)?;
-            let logits = literal_f32_vec(&outs[0])?;
+            let logits = ev.backend.logits(&ev.weights, &toks, 1)?;
             let off = pos * vocab;
-            let row = &logits[off..off + vocab];
-            let mut best = 0usize;
-            for (i, &v) in row.iter().enumerate() {
-                if v > row[best] {
-                    best = i;
-                }
-            }
+            let best = argmax(&logits[off..off + vocab]);
             if best as i32 != want {
                 ok = false;
                 break;

@@ -35,9 +35,26 @@ pub struct Batch {
 }
 
 impl Batch {
+    /// A released batch must carry at least one real request (padding
+    /// rows are synthesized in [`Batch::tokens`], never stored).
+    pub fn new(bucket: usize, requests: Vec<Request>) -> Self {
+        debug_assert!(!requests.is_empty(), "batch released with zero requests");
+        debug_assert!(
+            requests.len() <= bucket,
+            "{} requests for bucket {bucket}",
+            requests.len()
+        );
+        Batch { bucket, requests }
+    }
+
     /// Flat (bucket × seq) token block; padding rows clone the last
     /// real request so the executable always sees a full batch.
     pub fn tokens(&self, seq: usize) -> Vec<i32> {
+        // Defensive: an empty batch would underflow `len() - 1` below.
+        assert!(
+            !self.requests.is_empty(),
+            "Batch::tokens on a batch with zero requests"
+        );
         let mut out = Vec::with_capacity(self.bucket * seq);
         for i in 0..self.bucket {
             let r = &self.requests[i.min(self.requests.len() - 1)];
@@ -121,7 +138,7 @@ impl Batcher {
         if self.queue.len() >= max_bucket {
             let requests: Vec<Request> =
                 self.queue.drain(..max_bucket).collect();
-            return Some(Batch { bucket: max_bucket, requests });
+            return Some(Batch::new(max_bucket, requests));
         }
         let oldest = self.queue.front().unwrap().arrived;
         if now.duration_since(oldest) >= self.policy.linger {
@@ -143,7 +160,7 @@ impl Batcher {
                 }
             };
             let requests: Vec<Request> = self.queue.drain(..take).collect();
-            return Some(Batch { bucket, requests });
+            return Some(Batch::new(bucket, requests));
         }
         None
     }
@@ -232,6 +249,15 @@ mod tests {
         let batch = b.poll(Instant::now()).unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero requests")]
+    fn empty_batch_tokens_panics_descriptively() {
+        // Construct the pathological batch directly (poll never emits
+        // one): `tokens` must fail loudly, not underflow `len() - 1`.
+        let b = Batch { bucket: 4, requests: Vec::new() };
+        let _ = b.tokens(8);
     }
 
     #[test]

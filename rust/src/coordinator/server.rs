@@ -1,4 +1,4 @@
-//! The serving engine: batcher + online calibrator + PJRT executor.
+//! The serving engine: batcher + online calibrator + executor backend.
 //!
 //! Request lifecycle (one `step`):
 //!
@@ -25,9 +25,10 @@ use anyhow::{bail, Result};
 use super::batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
 use super::calibrator::{CalibratorConfig, OnlineCalibrator};
 use super::metrics::Metrics;
+use crate::backend::ExecBackend;
 use crate::eval::{EvalConfig, Evaluator};
 use crate::quant::{MethodSpec, QuantSpec};
-use crate::runtime::{literal_f32_vec, model_inputs, ArtifactKey, Runtime};
+use crate::util::argmax;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -67,9 +68,9 @@ pub struct ServeReply {
     pub weight_generation: u64,
 }
 
-pub struct Server<'rt> {
+pub struct Server<'b> {
     cfg: ServerConfig,
-    ev: Evaluator<'rt>,
+    ev: Evaluator<'b>,
     batcher: Batcher,
     calibrator: OnlineCalibrator,
     pub metrics: Metrics,
@@ -78,8 +79,8 @@ pub struct Server<'rt> {
     static_applied: bool,
 }
 
-impl<'rt> Server<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: ServerConfig) -> Result<Self> {
+impl<'b> Server<'b> {
+    pub fn new(backend: &'b dyn ExecBackend, cfg: ServerConfig) -> Result<Self> {
         if cfg.method.needs_corr() {
             bail!(
                 "method {} needs the full correlation — unsupported by the serving path",
@@ -93,7 +94,7 @@ impl<'rt> Server<'rt> {
                 cfg.method.label()
             );
         }
-        let ev = Evaluator::new(rt, &cfg.model)?;
+        let ev = Evaluator::new(backend, &cfg.model)?;
         let man = &ev.weights.manifest;
         let d_ins: Vec<usize> = man.linears.iter().map(|l| l.d_in).collect();
         // Keep the calibrator's diagonal consistent with the method,
@@ -179,12 +180,11 @@ impl<'rt> Server<'rt> {
 
         // 3. forward with the current quantized generation
         let t0 = Instant::now();
-        let key = ArtifactKey::new(&self.cfg.model, "logits", bucket);
-        let exe = self.ev.rt.load(&key)?;
-        let inputs = model_inputs(&self.ev.weights, &tokens, bucket, None)?;
-        let outs = self.ev.rt.run(&exe, &inputs)?;
+        let logits = self
+            .ev
+            .backend
+            .logits(&self.ev.weights, &tokens, bucket)?;
         let exec = t0.elapsed();
-        let logits = literal_f32_vec(&outs[0])?;
         let vocab = self.ev.weights.manifest.config.vocab;
 
         let n_real = batch.requests.len();
@@ -193,13 +193,7 @@ impl<'rt> Server<'rt> {
         let mut replies = Vec::with_capacity(n_real);
         for (row, req) in batch.requests.iter().enumerate() {
             let off = (row * seq + (seq - 1)) * vocab;
-            let slice = &logits[off..off + vocab];
-            let mut best = 0usize;
-            for (i, &v) in slice.iter().enumerate() {
-                if v > slice[best] {
-                    best = i;
-                }
-            }
+            let best = argmax(&logits[off..off + vocab]);
             self.metrics.record_latency(req.arrived.elapsed());
             replies.push(ServeReply {
                 id: req.id,

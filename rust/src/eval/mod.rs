@@ -3,9 +3,13 @@
 //!
 //! All methods share one two-pass pipeline (DESIGN.md §7):
 //!
-//!   pass 1  `stats`/`corr` artifact → per-linear activation statistics
+//!   pass 1  backend `stats` pass → per-linear activation statistics
 //!   rust    quantize each linear with the chosen method
-//!   pass 2  `nll`/`logits` artifact with the substituted weights
+//!   pass 2  backend `nll`/`logits` pass with the substituted weights
+//!
+//! Execution is backend-agnostic: the [`Evaluator`] drives any
+//! [`crate::backend::ExecBackend`] — the PJRT artifact path or the
+//! pure-Rust native forward — and owns all quantization state itself.
 //!
 //! Method dispatch goes through the [`crate::quant::Quantizer`] trait:
 //! the evaluator
@@ -19,13 +23,12 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::ExecBackend;
 use crate::corpus::{CorpusStream, Split};
 use crate::linalg::Mat;
 use crate::models::ModelWeights;
 use crate::quant::{lowrank_init, LayerStats, LowRank, QuantSpec, StatsRequirement};
-use crate::runtime::{
-    literal_f32_vec, literal_scalar_f32, model_inputs, ArtifactKey, Runtime,
-};
+use crate::util::argmax;
 
 // The unified method selector lives in the quant layer; re-exported
 // here because eval call sites are where methods are most often named.
@@ -56,12 +59,12 @@ impl Default for EvalConfig {
 /// Per-linear activation statistics from one or more stats passes.
 pub struct CollectedStats {
     pub stats: Vec<ActStats>,
-    pub corr: Vec<Mat>, // empty unless collected via the corr artifact
+    pub corr: Vec<Mat>, // empty unless collected with correlations
 }
 
-/// Evaluation driver bound to one model's artifacts.
-pub struct Evaluator<'rt> {
-    pub rt: &'rt Runtime,
+/// Evaluation driver bound to one model on one execution backend.
+pub struct Evaluator<'b> {
+    pub backend: &'b dyn ExecBackend,
     pub weights: ModelWeights,
     /// Pristine copies of the quantizable linears ("the original
     /// full-precision weights *are* recoverable" — paper's point (3)).
@@ -70,11 +73,16 @@ pub struct Evaluator<'rt> {
     lowrank_cache: HashMap<(String, usize), LowRank>,
 }
 
-impl<'rt> Evaluator<'rt> {
-    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
-        let weights = ModelWeights::load(rt.artifacts_dir(), model)?;
+impl<'b> Evaluator<'b> {
+    pub fn new(backend: &'b dyn ExecBackend, model: &str) -> Result<Self> {
+        let weights = backend.load_model(model)?;
+        Ok(Self::with_weights(backend, weights))
+    }
+
+    /// Bind to already-loaded (e.g. synthetic) weights.
+    pub fn with_weights(backend: &'b dyn ExecBackend, weights: ModelWeights) -> Self {
         let originals = weights.linear_weights();
-        Ok(Evaluator { rt, weights, originals, lowrank_cache: HashMap::new() })
+        Evaluator { backend, weights, originals, lowrank_cache: HashMap::new() }
     }
 
     pub fn model_name(&self) -> &str {
@@ -85,68 +93,23 @@ impl<'rt> Evaluator<'rt> {
         self.weights.manifest.config.seq
     }
 
-    /// Run the `nll` artifact; returns (nll_sum, token_count).
+    /// Backend `nll` pass; returns (nll_sum, token_count).
     pub fn nll(&self, tokens: &[i32], batch: usize) -> Result<(f64, f64)> {
-        let key = ArtifactKey::new(self.model_name(), "nll", batch);
-        let exe = self.rt.load(&key)?;
-        let inputs = model_inputs(&self.weights, tokens, batch, None)?;
-        let outs = self.rt.run(&exe, &inputs)?;
-        Ok((
-            literal_scalar_f32(&outs[0])? as f64,
-            literal_scalar_f32(&outs[1])? as f64,
-        ))
+        self.backend.nll(&self.weights, tokens, batch)
     }
 
-    /// Run the fused single-pass `ttq` artifact (Fig. 1b, L1 kernel).
+    /// Fused single-pass TTQ (Fig. 1b, L1 kernel semantics).
     pub fn nll_fused_ttq(&self, tokens: &[i32], batch: usize, bits: u32) -> Result<(f64, f64)> {
-        let key = ArtifactKey::new(self.model_name(), "ttq", batch);
-        let exe = self.rt.load(&key)?;
-        let inputs =
-            model_inputs(&self.weights, tokens, batch, Some(crate::quant::qmax(bits)))?;
-        let outs = self.rt.run(&exe, &inputs)?;
-        Ok((
-            literal_scalar_f32(&outs[0])? as f64,
-            literal_scalar_f32(&outs[1])? as f64,
-        ))
+        self.backend
+            .nll_fused_ttq(&self.weights, tokens, batch, bits)
     }
 
-    /// Run `stats` (or `corr`) and parse per-linear statistics.
+    /// One stats pass, parsed into per-linear statistics.
     pub fn collect(&self, tokens: &[i32], batch: usize, with_corr: bool) -> Result<CollectedStats> {
-        let variant = if with_corr { "corr" } else { "stats" };
-        let key = ArtifactKey::new(self.model_name(), variant, batch);
-        let exe = self.rt.load(&key)?;
-        let inputs = model_inputs(&self.weights, tokens, batch, None)?;
-        let outs = self.rt.run(&exe, &inputs)?;
-        let linears = &self.weights.manifest.linears;
-        let ps = &self.weights.manifest.norm_ps;
-        let count = literal_scalar_f32(&outs[1])? as f64;
-        let n_tokens = (batch * self.seq()) as f64;
-        let mut stats = Vec::with_capacity(linears.len());
-        for (i, lin) in linears.iter().enumerate() {
-            let raw = literal_f32_vec(&outs[2 + i])?;
-            if raw.len() != ps.len() * lin.d_in {
-                return Err(anyhow!(
-                    "stats shape mismatch for {}: {} vs {}x{}",
-                    lin.name, raw.len(), ps.len(), lin.d_in
-                ));
-            }
-            let mut st = ActStats::new(ps, lin.d_in);
-            let sums: Vec<Vec<f64>> = raw
-                .chunks(lin.d_in)
-                .map(|row| row.iter().map(|&v| v as f64).collect())
-                .collect();
-            st.accumulate(&sums, n_tokens);
-            stats.push(st);
-        }
-        let mut corr = Vec::new();
-        if with_corr {
-            for (i, lin) in linears.iter().enumerate() {
-                let raw = literal_f32_vec(&outs[2 + linears.len() + i])?;
-                corr.push(Mat::from_vec(lin.d_in, lin.d_in, raw));
-            }
-        }
-        let _ = count;
-        Ok(CollectedStats { stats, corr })
+        let got = self
+            .backend
+            .stats(&self.weights, tokens, batch, with_corr)?;
+        Ok(CollectedStats { stats: got.stats, corr: got.corr })
     }
 
     /// Accumulate stats over many batches of a stream.
@@ -338,8 +301,6 @@ impl<'rt> Evaluator<'rt> {
         let vocab = self.weights.manifest.config.vocab;
         let seq = self.seq();
         self.quantize_static(method, cfg)?;
-        let key = ArtifactKey::new(self.model_name(), "logits", cfg.batch);
-        let exe = self.rt.load(&key)?;
         let mut stream = CorpusStream::new(domain, Split::Eval);
         let (mut hits, mut total) = (0usize, 0usize);
         for _ in 0..cfg.eval_batches {
@@ -347,19 +308,11 @@ impl<'rt> Evaluator<'rt> {
             if method.is_online() {
                 self.requantize_online(method, &toks, cfg)?;
             }
-            let inputs = model_inputs(&self.weights, &toks, cfg.batch, None)?;
-            let outs = self.rt.run(&exe, &inputs)?;
-            let logits = literal_f32_vec(&outs[0])?;
+            let logits = self.backend.logits(&self.weights, &toks, cfg.batch)?;
             for b in 0..cfg.batch {
                 for s in 0..seq - 1 {
                     let off = (b * seq + s) * vocab;
-                    let row = &logits[off..off + vocab];
-                    let mut best = 0usize;
-                    for (v, &x) in row.iter().enumerate() {
-                        if x > row[best] {
-                            best = v;
-                        }
-                    }
+                    let best = argmax(&logits[off..off + vocab]);
                     if best as i32 == toks[b * seq + s + 1] {
                         hits += 1;
                     }

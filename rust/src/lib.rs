@@ -22,6 +22,10 @@
 //!   the VQA/VLA proxies (bit-identical to `python/compile/corpus.py`).
 //! * [`models`] — model registry + weight-manifest loader (interchange
 //!   contract with `python/compile/aot.py`).
+//! * [`backend`] — execution engines behind the [`backend::ExecBackend`]
+//!   trait: [`backend::PjrtBackend`] (AOT artifacts) and
+//!   [`backend::NativeBackend`] (pure-Rust forward with a packed-W4
+//!   execution mode), plus [`backend::testmodel`] synthetic models.
 //! * [`runtime`] — PJRT artifact loader / executor (xla crate; an
 //!   in-tree stub keeps offline builds green).
 //! * [`coordinator`] — serving layer: shape-bucketed dynamic batcher,
@@ -33,6 +37,7 @@
 //! * [`bench`] — table/figure regeneration harness (`ttq-serve table N`),
 //!   method rows swappable via `--methods`.
 
+pub mod backend;
 pub mod bench;
 pub mod coordinator;
 pub mod corpus;

@@ -12,11 +12,19 @@
 //! ttq-serve serve --model qwen-micro --requests 64 [--method M] [--bits Q]
 //! ttq-serve info
 //! ```
+//!
+//! Every forward-pass command accepts `--backend {pjrt,native}`. The
+//! default is `pjrt` when `make artifacts` has been run and `native`
+//! otherwise — the native backend executes a pure-Rust forward pass and
+//! falls back to deterministic synthetic models, so the whole CLI works
+//! on a bare Rust toolchain (untrained weights: pipeline-shape numbers,
+//! not paper numbers).
 
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use ttq_serve::backend::{ExecBackend, NativeBackend, PjrtBackend};
 use ttq_serve::bench::{
     figure2, sweep_formats, sweep_lowrank_init, sweep_nf, sweep_prune,
     table1, table12, table13, table2, table3, tables_runtime,
@@ -35,18 +43,68 @@ ttq-serve — TTQ test-time quantization serving stack
 USAGE:
   ttq-serve eval [--model M] [--method SPEC] [--bits Q] [--group G]
                  [--rank R] [--domain D] [--calib D] [--fast]
-  ttq-serve table <N> [--fast] [--models M1 M2 ...]
+                 [--backend pjrt|native] [--exec-quant Q]
+  ttq-serve table <N> [--fast] [--models M1 M2 ...] [--backend B]
+                      [--exec-quant Q]
                       [--methods SPEC1 SPEC2 ...]   (N: 1,2,3,4..8,12,13)
-  ttq-serve figure2 [--fast] [--models ...]
+  ttq-serve figure2 [--fast] [--models ...] [--backend B] [--exec-quant Q]
   ttq-serve sweep <formats|lowrank-init|nf|prune>
   ttq-serve serve [--model M] [--requests N] [--method SPEC] [--bits Q]
-                  [--rank R] [--domains d1,d2]
+                  [--rank R] [--domains d1,d2] [--backend B] [--exec-quant Q]
   ttq-serve info
+
+BACKENDS:
+  pjrt     AOT HLO artifacts via the PJRT client (needs `make artifacts`)
+  native   pure-Rust forward pass; synthetic models when artifacts are
+           absent (default when artifacts are missing)
+  --exec-quant Q (native only) additionally executes every quantizable
+  linear through the packed Q-bit grouped int-matmul — it composes ON TOP
+  of the selected --method, so eval/table numbers reflect method + W{Q}
+  execution, not the method alone
 
 METHOD SPECS (ttq-serve eval/table/serve --method(s)):";
 
 fn usage() -> String {
     format!("{USAGE}\n{}", MethodRegistry::global().help())
+}
+
+/// Build the execution backend from `--backend` (default: pjrt when
+/// artifacts exist, native otherwise). `--exec-quant BITS` puts the
+/// native backend into packed-int execution at the given bit-width.
+fn make_backend(a: &Args) -> Result<Box<dyn ExecBackend>> {
+    let default = if artifacts_ready() { "pjrt" } else { "native" };
+    match a.get_or("backend", default) {
+        "pjrt" => {
+            if a.get("exec-quant").is_some() {
+                bail!(
+                    "--exec-quant is a native-backend execution mode; it would be \
+                     silently ignored on pjrt — add --backend native"
+                );
+            }
+            if !artifacts_ready() {
+                bail!(
+                    "--backend pjrt needs compiled artifacts — run `make artifacts` \
+                     first ({:?}), or use --backend native",
+                    artifacts_dir()
+                );
+            }
+            Ok(Box::new(PjrtBackend::new(Runtime::new(&artifacts_dir())?)))
+        }
+        "native" => {
+            let mut nb = NativeBackend::new(&artifacts_dir());
+            if let Some(bits) = a.get("exec-quant") {
+                let bits: u32 = bits
+                    .parse()
+                    .map_err(|_| anyhow!("--exec-quant takes a bit-width (2..=8)"))?;
+                if !(2..=8).contains(&bits) {
+                    bail!("--exec-quant bit-width must be in 2..=8, got {bits}");
+                }
+                nb = nb.with_exec_quant(QuantSpec::new(bits, 32));
+            }
+            Ok(Box::new(nb))
+        }
+        other => bail!("unknown backend '{other}' (pjrt|native)"),
+    }
 }
 
 /// Parse a method spec; offline-by-default methods (awq, gptq) given
@@ -87,20 +145,10 @@ fn default_models(models: Vec<String>) -> Vec<String> {
     }
 }
 
-fn need_artifacts() -> Result<Runtime> {
-    if !artifacts_ready() {
-        bail!(
-            "artifacts not built — run `make artifacts` first ({:?})",
-            artifacts_dir()
-        );
-    }
-    Runtime::new(&artifacts_dir())
-}
-
 fn cmd_eval(a: &Args) -> Result<()> {
-    let rt = need_artifacts()?;
+    let backend = make_backend(a)?;
     let model = a.get_or("model", "qwen-micro").to_string();
-    let mut ev = Evaluator::new(&rt, &model)?;
+    let mut ev = Evaluator::new(backend.as_ref(), &model)?;
     let fast = a.has("fast");
     let m = parse_method(&method_arg(a, "ttq"), a.get_or("calib", "c4s"))?;
     let cfg = EvalConfig {
@@ -113,10 +161,11 @@ fn cmd_eval(a: &Args) -> Result<()> {
     let t0 = Instant::now();
     let ppl = ev.perplexity(&m, domain, &cfg)?;
     println!(
-        "{model} {} q={} g={} on {domain}: ppl {ppl:.3} ({:.1}s)",
+        "{model} {} q={} g={} on {domain} [{}]: ppl {ppl:.3} ({:.1}s)",
         m.label(),
         cfg.spec.bits,
         cfg.spec.group,
+        backend.name(),
         t0.elapsed().as_secs_f64()
     );
     Ok(())
@@ -132,11 +181,11 @@ fn cmd_table(a: &Args) -> Result<()> {
     let models = a.get_many("models");
     let methods = parse_methods(a)?;
     match n {
-        1 => table1(&need_artifacts()?, fast, &methods)?.print(),
-        2 => table2(&need_artifacts()?, fast, &methods)?.print(),
+        1 => table1(make_backend(a)?.as_ref(), fast, &methods)?.print(),
+        2 => table2(make_backend(a)?.as_ref(), fast, &methods)?.print(),
         3 => {
-            let rt = need_artifacts()?;
-            for r in table3(&rt, &default_models(models), fast, &methods)? {
+            let backend = make_backend(a)?;
+            for r in table3(backend.as_ref(), &default_models(models), fast, &methods)? {
                 r.print();
             }
         }
@@ -151,23 +200,23 @@ fn cmd_table(a: &Args) -> Result<()> {
             }
         }
         12 => {
-            let rt = need_artifacts()?;
+            let backend = make_backend(a)?;
             let ms = if models.is_empty() {
                 vec!["qwen-micro".into(), "qwen-mini".into()]
             } else {
                 models
             };
-            for r in table12(&rt, &ms, fast, &methods)? {
+            for r in table12(backend.as_ref(), &ms, fast, &methods)? {
                 r.print();
             }
         }
         13 => {
-            let rt = need_artifacts()?;
+            let backend = make_backend(a)?;
             let model = models
                 .first()
                 .cloned()
                 .unwrap_or_else(|| "qwen-mini".into());
-            table13(&rt, &model, fast, &methods)?.print();
+            table13(backend.as_ref(), &model, fast, &methods)?.print();
         }
         _ => bail!("no table {n} among the paper's exhibits"),
     }
@@ -175,7 +224,7 @@ fn cmd_table(a: &Args) -> Result<()> {
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {
-    let rt = need_artifacts()?;
+    let backend = make_backend(a)?;
     let model = a.get_or("model", "qwen-micro");
     // serving methods are online by definition — no calib default
     let method = MethodSpec::parse(&method_arg(a, "ttq"))?;
@@ -183,7 +232,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
     cfg.spec = QuantSpec::new(a.get_u32("bits", 4), 32);
     cfg.policy = BatchPolicy::default();
     let requests = a.get_usize("requests", 64);
-    let mut server = Server::new(&rt, cfg)?;
+    let mut server = Server::new(backend.as_ref(), cfg)?;
     let seq = server.seq();
     let domains = a.get_or("domains", "wt2s,c4s").to_string();
     let domain_list: Vec<&str> = domains.split(',').collect();
@@ -207,8 +256,9 @@ fn cmd_serve(a: &Args) -> Result<()> {
     }
     replies += server.drain()?.len();
     println!(
-        "served {replies}/{requests} requests in {:.2}s",
-        t0.elapsed().as_secs_f64()
+        "served {replies}/{requests} requests in {:.2}s on the {} backend",
+        t0.elapsed().as_secs_f64(),
+        backend.name()
     );
     println!("{}", server.metrics.summary());
     println!("weight generations: {}", server.weight_generation());
@@ -218,20 +268,29 @@ fn cmd_serve(a: &Args) -> Result<()> {
 fn cmd_info() -> Result<()> {
     println!("artifacts dir: {:?}", artifacts_dir());
     println!("artifacts ready: {}", artifacts_ready());
+    println!(
+        "default backend: {}",
+        if artifacts_ready() { "pjrt" } else { "native (synthetic models)" }
+    );
     println!("models: {:?}", ttq_serve::models::MODEL_NAMES);
     println!("methods:\n{}", MethodRegistry::global().help());
-    if artifacts_ready() {
+    // one backend (and one PJRT client, when artifacts exist) for both
+    // the platform line and the per-model listing
+    let backend: Box<dyn ExecBackend> = if artifacts_ready() {
         let rt = Runtime::new(&artifacts_dir())?;
         println!("PJRT platform: {}", rt.platform());
-        for name in ttq_serve::models::MODEL_NAMES {
-            if let Ok(ev) = Evaluator::new(&rt, name) {
-                println!(
-                    "  {name}: {} params, {} linears, family {}",
-                    ev.weights.param_count(),
-                    ev.weights.manifest.linears.len(),
-                    ev.weights.manifest.family
-                );
-            }
+        Box::new(PjrtBackend::new(rt))
+    } else {
+        Box::new(NativeBackend::new(&artifacts_dir()))
+    };
+    for name in ttq_serve::models::MODEL_NAMES {
+        if let Ok(ev) = Evaluator::new(backend.as_ref(), name) {
+            println!(
+                "  {name}: {} params, {} linears, family {}",
+                ev.weights.param_count(),
+                ev.weights.manifest.linears.len(),
+                ev.weights.manifest.family
+            );
         }
     }
     Ok(())
@@ -243,7 +302,7 @@ fn main() -> Result<()> {
         Some("eval") => cmd_eval(&a),
         Some("table") => cmd_table(&a),
         Some("figure2") => {
-            let rt = need_artifacts()?;
+            let backend = make_backend(&a)?;
             let ms = {
                 let m = a.get_many("models");
                 if m.is_empty() {
@@ -256,7 +315,7 @@ fn main() -> Result<()> {
                     m
                 }
             };
-            figure2(&rt, &ms, a.has("fast"))?.print();
+            figure2(backend.as_ref(), &ms, a.has("fast"))?.print();
             Ok(())
         }
         Some("sweep") => match a.positional.get(1).map(String::as_str) {

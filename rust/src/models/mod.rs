@@ -169,6 +169,17 @@ pub struct ModelWeights {
     pub manifest: Manifest,
     tensors: HashMap<String, Mat>,
     order: Vec<String>,
+    /// Globally unique content version: refreshed on every [`Self::set`]
+    /// so caches of derived representations (packed weights in the
+    /// native backend) can detect staleness without hashing tensors.
+    version: u64,
+}
+
+/// Monotonic version source shared by all `ModelWeights` instances.
+fn next_version() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    COUNTER.fetch_add(1, Ordering::Relaxed)
 }
 
 impl ModelWeights {
@@ -198,7 +209,52 @@ impl ModelWeights {
             tensors.insert(t.name.clone(), Mat::from_vec(rows, cols, data));
             order.push(t.name.clone());
         }
-        Ok(ModelWeights { manifest, tensors, order })
+        Ok(ModelWeights { manifest, tensors, order, version: next_version() })
+    }
+
+    /// Assemble a model from already-built tensors (the synthetic
+    /// [`crate::backend::testmodel`] path). Tensors must arrive in
+    /// manifest order and match the declared shapes.
+    pub fn from_parts(manifest: Manifest, parts: Vec<(String, Mat)>) -> Result<Self> {
+        if parts.len() != manifest.tensors.len() {
+            return Err(anyhow!(
+                "{} tensors supplied for a {}-tensor manifest",
+                parts.len(),
+                manifest.tensors.len()
+            ));
+        }
+        let mut tensors = HashMap::new();
+        let mut order = Vec::with_capacity(parts.len());
+        for (info, (name, m)) in manifest.tensors.iter().zip(parts) {
+            if info.name != name {
+                return Err(anyhow!(
+                    "tensor order mismatch: got '{name}', manifest says '{}'",
+                    info.name
+                ));
+            }
+            let expect = match info.shape.as_slice() {
+                [n] => (1usize, *n),
+                [r, c] => (*r, *c),
+                s => return Err(anyhow!("unsupported rank for {name}: {s:?}")),
+            };
+            if (m.rows, m.cols) != expect {
+                return Err(anyhow!(
+                    "tensor '{name}': {}x{} vs manifest shape {:?}",
+                    m.rows,
+                    m.cols,
+                    info.shape
+                ));
+            }
+            order.push(name.clone());
+            tensors.insert(name, m);
+        }
+        Ok(ModelWeights { manifest, tensors, order, version: next_version() })
+    }
+
+    /// Content version — changes on every [`Self::set`]; never reused
+    /// by another instance.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     pub fn get(&self, name: &str) -> Option<&Mat> {
@@ -209,6 +265,7 @@ impl ModelWeights {
         let old = self.tensors.get(name).expect("unknown tensor");
         assert_eq!((old.rows, old.cols), (m.rows, m.cols), "shape change");
         self.tensors.insert(name.to_string(), m);
+        self.version = next_version();
     }
 
     /// Tensors in manifest order — the positional inputs of every HLO

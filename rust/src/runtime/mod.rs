@@ -95,7 +95,11 @@ impl Runtime {
         let bufs = exe
             .execute::<xla::Literal>(inputs)
             .map_err(|e| anyhow!("execute: {e}"))?;
-        let out = bufs[0][0]
+        let first = bufs
+            .first()
+            .and_then(|device| device.first())
+            .ok_or_else(|| anyhow!("execute returned no output buffers"))?;
+        let out = first
             .to_literal_sync()
             .map_err(|e| anyhow!("to_literal: {e}"))?;
         // All our artifacts lower with return_tuple=True.

@@ -14,3 +14,32 @@ pub mod benchkit;
 pub mod cli;
 pub mod json;
 pub mod propcheck;
+
+/// Index of the largest element, first occurrence winning ties (the
+/// greedy-decode convention shared by the eval accuracy path and the
+/// server's reply loop). Returns 0 for an empty slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+        // ties: first occurrence wins (strict > comparison)
+        assert_eq!(argmax(&[2.0, 7.0, 7.0]), 1);
+        // NaN never beats an existing max under strict >
+        assert_eq!(argmax(&[1.0, f32::NAN, 3.0]), 2);
+    }
+}

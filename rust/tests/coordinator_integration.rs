@@ -1,19 +1,27 @@
-//! Coordinator integration: the serving engine over real artifacts —
-//! batching, online self-calibration, requantization on domain shift.
+//! Coordinator integration: the serving engine — batching, online
+//! self-calibration, requantization on domain shift — over whichever
+//! backend is available (PJRT with artifacts, native with synthetic
+//! weights otherwise).
 
 use std::time::{Duration, Instant};
 
+use ttq_serve::backend::{ExecBackend, NativeBackend, PjrtBackend};
 use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
 use ttq_serve::corpus::{CorpusStream, Split, BOS};
 use ttq_serve::quant::QuantSpec;
 use ttq_serve::runtime::Runtime;
 
-fn runtime() -> Option<Runtime> {
-    if !ttq_serve::artifacts_ready() {
-        eprintln!("skipping: artifacts not built");
-        return None;
+fn backend() -> Box<dyn ExecBackend> {
+    if ttq_serve::artifacts_ready() {
+        let rt = Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client");
+        Box::new(PjrtBackend::new(rt))
+    } else {
+        Box::new(NativeBackend::new(&ttq_serve::artifacts_dir()))
     }
-    Some(Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client"))
+}
+
+fn trained() -> bool {
+    ttq_serve::artifacts_ready()
 }
 
 fn prompt(stream: &mut CorpusStream, seq: usize) -> Vec<i32> {
@@ -26,10 +34,10 @@ fn prompt(stream: &mut CorpusStream, seq: usize) -> Vec<i32> {
 
 #[test]
 fn serves_all_requests_with_batching() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut cfg = ServerConfig::new("qwen-micro");
     cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
-    let mut server = Server::new(&rt, cfg).unwrap();
+    let mut server = Server::new(be.as_ref(), cfg).unwrap();
     let seq = server.seq();
     let mut s = CorpusStream::new("wt2s", Split::Eval);
     let n = 10;
@@ -52,8 +60,8 @@ fn serves_all_requests_with_batching() {
 
 #[test]
 fn first_batch_triggers_initial_quantization() {
-    let Some(rt) = runtime() else { return };
-    let mut server = Server::new(&rt, ServerConfig::new("opt-micro")).unwrap();
+    let be = backend();
+    let mut server = Server::new(be.as_ref(), ServerConfig::new("opt-micro")).unwrap();
     assert_eq!(server.weight_generation(), 0);
     let seq = server.seq();
     let mut s = CorpusStream::new("ptbs", Split::Eval);
@@ -66,32 +74,41 @@ fn first_batch_triggers_initial_quantization() {
 
 #[test]
 fn stable_traffic_does_not_thrash_requantization() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut cfg = ServerConfig::new("qwen-micro");
     cfg.policy = BatchPolicy { buckets: vec![4], linger: Duration::ZERO };
-    let mut server = Server::new(&rt, cfg).unwrap();
+    let mut server = Server::new(be.as_ref(), cfg).unwrap();
     let seq = server.seq();
     let mut s = CorpusStream::new("wt2s", Split::Eval);
-    for _ in 0..6 {
+    let rounds = 6;
+    for _ in 0..rounds {
         for _ in 0..4 {
             server.submit(prompt(&mut s, seq));
         }
         server.drain().unwrap();
     }
     let gens = server.weight_generation();
+    // trained activations settle fast; untrained synthetic profiles are
+    // flatter/noisier, so only forbid per-batch thrashing there
+    let bound = if trained() { 3 } else { rounds - 1 };
     assert!(
-        gens <= 3,
+        gens <= bound,
         "same-domain traffic requantized {gens} times (thrashing)"
     );
 }
 
 #[test]
 fn domain_shift_triggers_requantization() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     let mut cfg = ServerConfig::new("qwen-micro");
     cfg.policy = BatchPolicy { buckets: vec![4], linger: Duration::ZERO };
     cfg.spec = QuantSpec::new(3, 32);
-    let mut server = Server::new(&rt, cfg).unwrap();
+    if !trained() {
+        // untrained models have weaker channel structure; lower the
+        // drift bar so the *mechanism* is still exercised end-to-end
+        cfg.calib.drift_threshold = 0.01;
+    }
+    let mut server = Server::new(be.as_ref(), cfg).unwrap();
     let seq = server.seq();
     let mut a = CorpusStream::new("ptbs", Split::Eval);
     for _ in 0..4 {
@@ -117,8 +134,8 @@ fn domain_shift_triggers_requantization() {
 
 #[test]
 fn metrics_accumulate() {
-    let Some(rt) = runtime() else { return };
-    let mut server = Server::new(&rt, ServerConfig::new("opt-micro")).unwrap();
+    let be = backend();
+    let mut server = Server::new(be.as_ref(), ServerConfig::new("opt-micro")).unwrap();
     let seq = server.seq();
     let mut s = CorpusStream::new("wt2s", Split::Eval);
     for _ in 0..4 {

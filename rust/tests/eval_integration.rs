@@ -1,18 +1,32 @@
-//! End-to-end evaluation invariants over real artifacts — the paper's
-//! qualitative claims at miniature scale. These are the most important
-//! tests in the repo: they assert the *shape* of the results the
-//! benches then report quantitatively.
+//! End-to-end evaluation invariants — the paper's qualitative claims at
+//! miniature scale. These are the most important tests in the repo:
+//! they assert the *shape* of the results the benches then report
+//! quantitatively.
+//!
+//! The pipeline tests run on whichever backend is available: PJRT over
+//! trained artifacts when `make artifacts` has run, the native backend
+//! over deterministic synthetic weights otherwise. Quality-ordering
+//! assertions (trained-model claims) additionally require the trained
+//! artifacts and skip on synthetic weights.
 
+use ttq_serve::backend::{ExecBackend, NativeBackend, PjrtBackend};
 use ttq_serve::eval::{EvalConfig, Evaluator, MethodSpec};
 use ttq_serve::quant::QuantSpec;
 use ttq_serve::runtime::Runtime;
 
-fn runtime() -> Option<Runtime> {
-    if !ttq_serve::artifacts_ready() {
-        eprintln!("skipping: artifacts not built");
-        return None;
+fn backend() -> Box<dyn ExecBackend> {
+    if ttq_serve::artifacts_ready() {
+        let rt = Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client");
+        Box::new(PjrtBackend::new(rt))
+    } else {
+        Box::new(NativeBackend::new(&ttq_serve::artifacts_dir()))
     }
-    Some(Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client"))
+}
+
+/// Trained artifacts present? (Quality-ordering claims need training;
+/// the synthetic fallback only validates pipeline mechanics.)
+fn trained() -> bool {
+    ttq_serve::artifacts_ready()
 }
 
 fn fast_cfg(bits: u32, group: usize) -> EvalConfig {
@@ -25,9 +39,26 @@ fn fast_cfg(bits: u32, group: usize) -> EvalConfig {
 }
 
 #[test]
+fn fp_perplexity_is_finite_and_sane() {
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
+    let ppl = ev
+        .perplexity(&MethodSpec::fp(), "wt2s", &fast_cfg(4, 32))
+        .unwrap();
+    assert!(ppl.is_finite() && ppl > 1.0, "fp ppl {ppl}");
+    // an untrained model sits near the uniform bound; nothing sits above
+    // vocab by more than numerical noise
+    assert!(ppl < 512.0 * 1.5, "fp ppl {ppl} above uniform bound");
+}
+
+#[test]
 fn trained_model_beats_uniform() {
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    if !trained() {
+        eprintln!("skipping: needs trained artifacts");
+        return;
+    }
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
     let ppl = ev
         .perplexity(&MethodSpec::fp(), "wt2s", &fast_cfg(4, 32))
         .unwrap();
@@ -38,9 +69,10 @@ fn trained_model_beats_uniform() {
 #[test]
 fn five_bit_close_to_fp() {
     // Paper: "5-bit quantization achieves nearly un-quantized
-    // performance for most cases."
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    // performance for most cases." Holds for any fixed model — 5-bit
+    // QDQ is a small perturbation — so it runs on both backends.
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
     let cfg = fast_cfg(5, 32);
     let fp = ev.perplexity(&MethodSpec::fp(), "wt2s", &cfg).unwrap();
     let ttq = ev
@@ -56,8 +88,12 @@ fn rtn_degrades_at_2_bits_ttq_less() {
     // outlier activation channels of billion-param LLMs; our miniature
     // models are intrinsically robust, so the reproduction target is
     // the *ordering* plus visible degradation (EXPERIMENTS.md §Scope).
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    if !trained() {
+        eprintln!("skipping: ordering claims need trained artifacts");
+        return;
+    }
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
     let cfg = fast_cfg(2, 32);
     let fp = ev.perplexity(&MethodSpec::fp(), "wt2s", &cfg).unwrap();
     let rtn = ev.perplexity(&MethodSpec::rtn(), "wt2s", &cfg).unwrap();
@@ -73,8 +109,12 @@ fn rtn_degrades_at_2_bits_ttq_less() {
 fn ttq_at_least_matches_mismatched_awq_at_3_bits() {
     // Domain-shift claim (Fig. 1): AWQ calibrated on a *different*
     // domain must not beat TTQ calibrated online on the eval domain.
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+    if !trained() {
+        eprintln!("skipping: ordering claims need trained artifacts");
+        return;
+    }
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
     let cfg = fast_cfg(3, 32);
     let awq_shifted = ev
         .perplexity(&MethodSpec::awq("c4s"), "ptbs", &cfg)
@@ -90,8 +130,12 @@ fn ttq_at_least_matches_mismatched_awq_at_3_bits() {
 
 #[test]
 fn lowrank_compensation_helps_at_2_bits() {
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "opt-mini").unwrap();
+    if !trained() {
+        eprintln!("skipping: ordering claims need trained artifacts");
+        return;
+    }
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "opt-mini").unwrap();
     let cfg = fast_cfg(2, 32);
     let r0 = ev
         .perplexity(&MethodSpec::ttq(0), "wt2s", &cfg)
@@ -107,8 +151,12 @@ fn lowrank_compensation_helps_at_2_bits() {
 
 #[test]
 fn gptq_beats_rtn() {
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "opt-micro").unwrap();
+    if !trained() {
+        eprintln!("skipping: ordering claims need trained artifacts");
+        return;
+    }
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "opt-micro").unwrap();
     let mut cfg = fast_cfg(2, 32);
     cfg.calib_batches = 4; // corr pass is heavier
     let rtn = ev.perplexity(&MethodSpec::rtn(), "wt2s", &cfg).unwrap();
@@ -119,10 +167,26 @@ fn gptq_beats_rtn() {
 }
 
 #[test]
+fn gptq_pipeline_runs_on_any_backend() {
+    // The corr pass → Cholesky → greedy OBS path must *execute* even on
+    // synthetic weights (quality claims live in `gptq_beats_rtn`).
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "opt-micro").unwrap();
+    let mut cfg = fast_cfg(3, 32);
+    cfg.calib_batches = 2;
+    cfg.eval_batches = 2;
+    let p = ev
+        .perplexity(&MethodSpec::gptq("wt2s"), "wt2s", &cfg)
+        .unwrap();
+    assert!(p.is_finite() && p > 1.0, "gptq ppl {p}");
+}
+
+#[test]
 fn restore_recovers_fp_exactly() {
-    // Paper point (3): the original weights stay recoverable.
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "opt-micro").unwrap();
+    // Paper point (3): the original weights stay recoverable. Holds for
+    // any weights — trained or synthetic.
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "opt-micro").unwrap();
     let cfg = fast_cfg(2, 32);
     let fp1 = ev.perplexity(&MethodSpec::fp(), "wt2s", &cfg).unwrap();
     let _ = ev.perplexity(&MethodSpec::rtn(), "wt2s", &cfg).unwrap();
@@ -131,12 +195,16 @@ fn restore_recovers_fp_exactly() {
 }
 
 #[test]
-fn accuracy_pipeline_runs_and_fp_is_best_ballpark() {
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+fn accuracy_pipeline_runs_and_is_a_rate() {
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
     let cfg = fast_cfg(2, 32);
     let fp = ev.accuracy(&MethodSpec::fp(), "vqas", &cfg).unwrap();
     let rtn = ev.accuracy(&MethodSpec::rtn(), "vqas", &cfg).unwrap();
-    assert!(fp > 0.2, "fp accuracy {fp} too low — model undertrained?");
-    assert!(rtn <= fp + 0.02, "2-bit RTN {rtn} should not beat FP {fp}");
+    assert!((0.0..=1.0).contains(&fp), "fp accuracy {fp}");
+    assert!((0.0..=1.0).contains(&rtn), "rtn accuracy {rtn}");
+    if trained() {
+        assert!(fp > 0.2, "fp accuracy {fp} too low — model undertrained?");
+        assert!(rtn <= fp + 0.02, "2-bit RTN {rtn} should not beat FP {fp}");
+    }
 }

@@ -1,38 +1,53 @@
-//! Runtime integration: load real AOT artifacts through PJRT, execute,
-//! and validate numerics against model invariants. Skips gracefully
-//! when `make artifacts` has not run.
+//! Backend integration: execute forwards and validate numerics against
+//! model invariants. The structural tests run on whichever backend is
+//! available (PJRT over real artifacts, else the native backend over
+//! synthetic weights); PJRT-specific artifact-cache tests and trained-
+//! model bounds skip gracefully without `make artifacts`.
 
-use ttq_serve::eval::Evaluator;
-use ttq_serve::runtime::{
-    literal_f32_vec, model_inputs, ArtifactKey, Runtime,
-};
+use ttq_serve::backend::{ExecBackend, NativeBackend, PjrtBackend};
 use ttq_serve::corpus::{CorpusStream, Split};
+use ttq_serve::eval::Evaluator;
+use ttq_serve::runtime::{ArtifactKey, Runtime};
 
-fn runtime() -> Option<Runtime> {
-    if !ttq_serve::artifacts_ready() {
-        eprintln!("skipping: artifacts not built");
-        return None;
+fn backend() -> Box<dyn ExecBackend> {
+    if ttq_serve::artifacts_ready() {
+        let rt = Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client");
+        Box::new(PjrtBackend::new(rt))
+    } else {
+        Box::new(NativeBackend::new(&ttq_serve::artifacts_dir()))
     }
-    Some(Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client"))
+}
+
+fn trained() -> bool {
+    ttq_serve::artifacts_ready()
 }
 
 #[test]
-fn nll_artifact_executes_and_is_finite() {
-    let Some(rt) = runtime() else { return };
-    let ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+fn nll_executes_and_is_finite() {
+    let be = backend();
+    let ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
     let seq = ev.weights.manifest.config.seq;
     let mut s = CorpusStream::new("wt2s", Split::Eval);
     let toks = s.batch(1, seq);
     let (nll, count) = ev.nll(&toks, 1).unwrap();
     assert!(nll.is_finite() && nll > 0.0, "nll {nll}");
     assert_eq!(count as usize, seq - 1);
-    // a trained model beats the uniform bound log(512) ≈ 6.24
-    assert!(nll / count < 6.0, "per-token nll {}", nll / count);
+    if trained() {
+        // a trained model beats the uniform bound log(512) ≈ 6.24
+        assert!(nll / count < 6.0, "per-token nll {}", nll / count);
+    } else {
+        // synthetic weights sit near the uniform bound, not above 2x
+        assert!(nll / count < 2.0 * (512f64).ln(), "per-token nll {}", nll / count);
+    }
 }
 
 #[test]
 fn executable_cache_compiles_once() {
-    let Some(rt) = runtime() else { return };
+    if !trained() {
+        eprintln!("skipping: PJRT artifact cache needs `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client");
     let key = ArtifactKey::new("opt-micro", "nll", 1);
     let a = rt.load(&key).unwrap();
     let n = rt.compiled_count();
@@ -42,9 +57,9 @@ fn executable_cache_compiles_once() {
 }
 
 #[test]
-fn stats_artifact_matches_manifest_arity() {
-    let Some(rt) = runtime() else { return };
-    let ev = Evaluator::new(&rt, "opt-micro").unwrap();
+fn stats_pass_matches_manifest_arity() {
+    let be = backend();
+    let ev = Evaluator::new(be.as_ref(), "opt-micro").unwrap();
     let seq = ev.weights.manifest.config.seq;
     let mut s = CorpusStream::new("ptbs", Split::Eval);
     let toks = s.batch(4, seq);
@@ -59,9 +74,9 @@ fn stats_artifact_matches_manifest_arity() {
 }
 
 #[test]
-fn corr_artifact_returns_psd_gram_matrices() {
-    let Some(rt) = runtime() else { return };
-    let ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+fn corr_pass_returns_psd_gram_matrices() {
+    let be = backend();
+    let ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
     let seq = ev.weights.manifest.config.seq;
     let mut s = CorpusStream::new("c4s", Split::Eval);
     let toks = s.batch(4, seq);
@@ -87,12 +102,14 @@ fn corr_artifact_returns_psd_gram_matrices() {
 }
 
 #[test]
-fn fused_ttq_artifact_close_to_two_pass_pipeline() {
-    // The L1 fused kernel (single-pass, per-batch D) and the rust
-    // two-pass path implement the same math; per-token NLL must agree
-    // closely (both quantize with D from the same batch).
-    let Some(rt) = runtime() else { return };
-    let mut ev = Evaluator::new(&rt, "qwen-micro").unwrap();
+fn fused_ttq_close_to_two_pass_pipeline() {
+    // The fused kernel (single-pass, per-batch D) and the rust two-pass
+    // path implement the same math; per-token NLL must agree. The fused
+    // path sees each layer's *quantized-prefix* activations while the
+    // two-pass D comes from the fp forward, so the tolerance is looser
+    // on untrained synthetic weights (flatter activation profiles).
+    let be = backend();
+    let mut ev = Evaluator::new(be.as_ref(), "qwen-micro").unwrap();
     let seq = ev.weights.manifest.config.seq;
     let mut s = CorpusStream::new("wt2s", Split::Eval);
     let toks = s.batch(4, seq);
@@ -113,32 +130,33 @@ fn fused_ttq_artifact_close_to_two_pass_pipeline() {
     assert_eq!(c1, c2);
     let a = fused_nll / c1;
     let b = two_pass_nll / c2;
+    let tol = if trained() { 0.05 } else { 0.25 };
     assert!(
-        (a - b).abs() < 0.05,
+        (a - b).abs() < tol,
         "fused {a} vs two-pass {b} per-token nll"
     );
 }
 
 #[test]
-fn logits_artifact_shape_and_finiteness() {
-    let Some(rt) = runtime() else { return };
-    let ev = Evaluator::new(&rt, "gemma-micro").unwrap();
+fn logits_shape_and_finiteness() {
+    let be = backend();
+    let ev = Evaluator::new(be.as_ref(), "gemma-micro").unwrap();
     let man = &ev.weights.manifest;
     let (seq, vocab) = (man.config.seq, man.config.vocab);
     let mut s = CorpusStream::new("wt2s", Split::Eval);
     let toks = s.batch(1, seq);
-    let key = ArtifactKey::new("gemma-micro", "logits", 1);
-    let exe = rt.load(&key).unwrap();
-    let inputs = model_inputs(&ev.weights, &toks, 1, None).unwrap();
-    let outs = rt.run(&exe, &inputs).unwrap();
-    let logits = literal_f32_vec(&outs[0]).unwrap();
+    let logits = be.logits(&ev.weights, &toks, 1).unwrap();
     assert_eq!(logits.len(), seq * vocab);
     assert!(logits.iter().all(|v| v.is_finite()));
 }
 
 #[test]
 fn standalone_kernel_artifact_loads() {
-    let Some(rt) = runtime() else { return };
+    if !trained() {
+        eprintln!("skipping: kernel artifact needs `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(&ttq_serve::artifacts_dir()).expect("PJRT client");
     let exe = rt.load_path_rel("kernels/ttq_linear.hlo.txt");
     assert!(
         exe.is_ok(),
@@ -149,9 +167,9 @@ fn standalone_kernel_artifact_loads() {
 
 #[test]
 fn all_models_load_and_report_params() {
-    let Some(rt) = runtime() else { return };
+    let be = backend();
     for name in ttq_serve::models::MODEL_NAMES {
-        let ev = Evaluator::new(&rt, name).unwrap();
+        let ev = Evaluator::new(be.as_ref(), name).unwrap();
         assert!(ev.weights.param_count() > 10_000, "{name} too small");
         assert!(!ev.weights.manifest.linears.is_empty());
     }
