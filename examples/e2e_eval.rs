@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 use ttq_serve::backend::default_backend;
-use ttq_serve::coordinator::{Server, ServerConfig};
+use ttq_serve::coordinator::{ServeEvent, Server, ServerConfig};
 use ttq_serve::corpus::{CorpusStream, Split, BOS, LM_DOMAINS};
 use ttq_serve::eval::{EvalConfig, Evaluator, MethodSpec};
 use ttq_serve::quant::QuantSpec;
@@ -83,21 +83,30 @@ fn main() -> Result<()> {
         fused / c
     );
 
-    // 4. serve a batched stream through the coordinator
-    let mut server = Server::new(backend.as_ref(), ServerConfig::new("qwen-micro"))?;
-    let seq = server.seq();
+    // 4. serve a streamed request batch through the decode engine
+    let mut scfg = ServerConfig::new("qwen-micro");
+    scfg.max_new_tokens = 4;
+    let mut server = Server::new(backend.as_ref(), scfg)?;
+    let prompt_len = server.max_seq() / 2;
     let mut stream = CorpusStream::new("wt2s", Split::Eval);
+    let mut done = 0usize;
+    let mut count = |evs: &[ServeEvent]| {
+        done += evs
+            .iter()
+            .filter(|e| matches!(e, ServeEvent::Done { .. }))
+            .count();
+    };
     for _ in 0..32 {
-        let mut toks = vec![BOS; seq];
+        let mut toks = vec![BOS; prompt_len];
         for t in toks.iter_mut().skip(1) {
             *t = stream.next_token();
         }
         server.submit(toks);
-        server.step(Instant::now())?;
+        count(&server.step(Instant::now())?);
     }
-    let n = server.drain()?.len();
+    count(&server.drain()?);
     println!("\nserved batched stream: {}", server.metrics.summary());
-    assert!(n <= 32);
+    assert_eq!(done, 32);
 
     println!(
         "\nE2E complete in {:.1}s on the {} backend — fused TTQ path, \

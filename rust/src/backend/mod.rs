@@ -21,6 +21,14 @@
 //! (manifest + weights) mirroring `python/compile/model.py::CONFIGS`,
 //! so the whole eval/serving stack runs end-to-end with zero build
 //! artifacts — the integration suite falls back to it automatically.
+//!
+//! Since the decode-engine split, the trait also carries the
+//! autoregressive pair [`ExecBackend::prefill`] /
+//! [`ExecBackend::decode_step`]: a cached forward over a
+//! [`crate::kvcache::KvCache`] whose decode step computes one token per
+//! sequence instead of re-running the whole prefix — the memory-bound
+//! phase where packed low-bit weights actually buy wall-clock. Only the
+//! native backend implements it (PJRT artifacts are fixed-shape).
 
 pub mod native;
 pub mod pjrt;
@@ -31,8 +39,9 @@ pub use pjrt::PjrtBackend;
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::kvcache::{KvCache, SeqId};
 use crate::linalg::Mat;
 use crate::models::ModelWeights;
 use crate::quant::ActStats;
@@ -49,6 +58,18 @@ pub struct BatchStats {
     pub stats: Vec<ActStats>,
     /// Per-linear input correlations XᵀX; empty unless requested.
     pub corr: Vec<Mat>,
+}
+
+/// Output of one cached-forward step ([`ExecBackend::prefill`] /
+/// [`ExecBackend::decode_step`]).
+pub struct StepOut {
+    /// Last-position logits per sequence, flat `(n_seqs × vocab)`.
+    pub logits: Vec<f32>,
+    /// Per-linear activation statistics tapped *inside* the step (in
+    /// manifest `linears` order), when requested — this is what lets
+    /// the online calibrator keep observing during decode, so drift can
+    /// trigger requantization mid-generation.
+    pub stats: Option<Vec<ActStats>>,
 }
 
 /// One execution engine for the three model-level artifact variants.
@@ -95,6 +116,52 @@ pub trait ExecBackend: Send + Sync {
         batch: usize,
         bits: u32,
     ) -> Result<(f64, f64)>;
+
+    // -- the prefill/decode split (autoregressive serving) -------------
+
+    /// Prefill: run the prompt(s) through the model once, writing every
+    /// layer's K/V into the cache, and return the **last-position**
+    /// logits per sequence. `tokens` is `(ids.len() × prompt_len)`
+    /// row-major; all sequences in one call share a prompt length (the
+    /// scheduler groups by length). With `with_stats`, per-linear
+    /// activation norms over all prompt tokens ride along for the
+    /// online calibrator.
+    ///
+    /// Backends without an incremental attention path (PJRT artifacts
+    /// are compiled for fixed full-sequence shapes) return a clear
+    /// unsupported error.
+    fn prefill(
+        &self,
+        _weights: &ModelWeights,
+        _tokens: &[i32],
+        _cache: &mut KvCache,
+        _ids: &[SeqId],
+        _with_stats: bool,
+    ) -> Result<StepOut> {
+        bail!(
+            "backend '{}' does not support cached prefill/decode — use the native backend",
+            self.name()
+        );
+    }
+
+    /// One decode step: advance every sequence by exactly one token
+    /// (`last_tokens[i]` appended to sequence `ids[i]`), attending over
+    /// the cached K/V, and return next-token logits `(ids.len() ×
+    /// vocab)`. Sequences may be at different positions — this is the
+    /// continuous-batching hot path.
+    fn decode_step(
+        &self,
+        _weights: &ModelWeights,
+        _last_tokens: &[i32],
+        _cache: &mut KvCache,
+        _ids: &[SeqId],
+        _with_stats: bool,
+    ) -> Result<StepOut> {
+        bail!(
+            "backend '{}' does not support cached prefill/decode — use the native backend",
+            self.name()
+        );
+    }
 }
 
 /// The backend the CLI/examples/benches pick when not told otherwise:

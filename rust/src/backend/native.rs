@@ -26,7 +26,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{BatchStats, ExecBackend};
+use super::{BatchStats, ExecBackend, StepOut};
+use crate::kvcache::{KvCache, SeqId};
 use crate::linalg::Mat;
 use crate::models::{Manifest, ModelWeights};
 use crate::quant::{
@@ -278,8 +279,11 @@ enum ExecMode<'a> {
     Packed(&'a HashMap<String, Packed>),
 }
 
+/// Per-linear `[n_p][d_in]` channel norm sums tapped during a forward.
+type TapNorms = Vec<Vec<Vec<f64>>>;
+
 struct Taps {
-    norms: Vec<Vec<Vec<f64>>>,
+    norms: TapNorms,
     corr: Vec<Mat>,
 }
 
@@ -339,9 +343,15 @@ fn forward(
 ) -> Result<ForwardOut> {
     let man: &Manifest = &weights.manifest;
     let cfg = &man.config;
-    let (seq, d, vocab) = (cfg.seq, cfg.d_model, cfg.vocab);
-    if tokens.len() != batch * seq {
-        bail!("token block is {} elements, expected {batch}x{seq}", tokens.len());
+    let (d, vocab) = (cfg.d_model, cfg.vocab);
+    // The sequence length is derived, not fixed: any 1..=max_seq works
+    // (the full-recompute decode baseline re-runs a growing prefix).
+    if batch == 0 || tokens.is_empty() || tokens.len() % batch != 0 {
+        bail!("token block is {} elements, not divisible into {batch} rows", tokens.len());
+    }
+    let seq = tokens.len() / batch;
+    if seq > cfg.max_seq {
+        bail!("sequence length {seq} exceeds model max_seq {}", cfg.max_seq);
     }
     let family = man.family.as_str();
     let (n_heads, n_kv, hd) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim);
@@ -499,6 +509,292 @@ fn forward(
     Ok(ForwardOut { logits, taps })
 }
 
+/// Rotary embedding for one row at an absolute position. The angle is
+/// computed once per frequency into `trig` (len ≥ head_dim/2) and
+/// shared across heads — this sits on the decode hot path. The trig
+/// expression is exactly [`rope_inplace`]'s, so the cached incremental
+/// forward stays bit-identical to the full one.
+fn rope_row(row: &mut [f32], pos: usize, head_dim: usize, freqs: &[f32], trig: &mut [(f32, f32)]) {
+    let half = head_dim / 2;
+    for (t, &f) in trig.iter_mut().zip(freqs) {
+        *t = (pos as f32 * f).sin_cos();
+    }
+    for head in row.chunks_mut(head_dim) {
+        for i in 0..half {
+            let (sin, cos) = trig[i];
+            let (x1, x2) = (head[i], head[half + i]);
+            head[i] = x1 * cos - x2 * sin;
+            head[half + i] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+/// Projection for the cached forward: optional stats tap on the input
+/// (manifest `linears` order — one push per quantizable projection, in
+/// call order), then the projection in the active execution mode. The
+/// tap is independent of the mode, so the calibrator keeps observing
+/// during packed-W4 decode — that is what lets drift-triggered
+/// requantization fire mid-generation.
+fn cproj(
+    weights: &ModelWeights,
+    mode: &ExecMode,
+    taps: Option<&mut TapNorms>,
+    threads: usize,
+    name: &str,
+    x: &Mat,
+) -> Result<Mat> {
+    if let Some(taps) = taps {
+        taps.push(norm_sums(x, &weights.manifest.norm_ps));
+    }
+    let mut unused = Taps { norms: Vec::new(), corr: Vec::new() };
+    proj(weights, mode, &mut unused, threads, name, x)
+}
+
+/// Incremental forward over cached K/V — the decode engine's kernel.
+///
+/// `tokens` is `(ids.len() × new_len)` row-major: `new_len` fresh
+/// tokens per sequence (prefill runs the whole prompt, decode exactly
+/// one token). Every layer's fresh K/V rows are written into `cache`
+/// at the sequence's current length, attention reads the cached prefix
+/// plus the fresh rows (causal by construction — position `p` only
+/// ever sees rows `0..=p`), and the function returns **last-position**
+/// logits `(ids.len(), vocab)`. Sequences may sit at different
+/// positions — that is the continuous-batching decode batch.
+///
+/// Every per-row operation (norms, projections, rotary angles, softmax
+/// accumulation order) matches [`forward`] exactly, which makes cached
+/// decode bit-identical to re-running the full prefix — pinned by the
+/// decode-engine golden tests.
+///
+/// Returns the logits plus the tapped per-linear norm sums (empty
+/// unless `with_stats`).
+fn forward_cached(
+    weights: &ModelWeights,
+    tokens: &[i32],
+    cache: &mut KvCache,
+    ids: &[SeqId],
+    mode: &ExecMode,
+    with_stats: bool,
+    threads: usize,
+) -> Result<(Mat, TapNorms)> {
+    let man: &Manifest = &weights.manifest;
+    let cfg = &man.config;
+    let family = man.family.as_str();
+    let (d, vocab) = (cfg.d_model, cfg.vocab);
+    let (n_heads, n_kv, hd) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim);
+    if n_kv == 0 || n_heads % n_kv != 0 {
+        bail!("n_heads {} not divisible by n_kv_heads {}", n_heads, n_kv);
+    }
+    let d_attn = n_heads * hd;
+    let rep = n_heads / n_kv;
+    let n_seqs = ids.len();
+    if n_seqs == 0 || tokens.is_empty() || tokens.len() % n_seqs != 0 {
+        bail!(
+            "token block is {} elements, not divisible into {n_seqs} sequences",
+            tokens.len()
+        );
+    }
+    let new_len = tokens.len() / n_seqs;
+    let kc_cfg = cache.config();
+    if kc_cfg.n_layers != cfg.n_layers || kc_cfg.d_kv != n_kv * hd {
+        bail!(
+            "cache geometry ({} layers, d_kv {}) does not match model ({} layers, d_kv {})",
+            kc_cfg.n_layers,
+            kc_cfg.d_kv,
+            cfg.n_layers,
+            n_kv * hd
+        );
+    }
+    let starts: Vec<usize> = ids.iter().map(|&id| cache.len(id)).collect();
+    for (si, &start) in starts.iter().enumerate() {
+        if start + new_len > cfg.max_seq {
+            bail!(
+                "sequence {si} at position {start} + {new_len} new tokens exceeds max_seq {}",
+                cfg.max_seq
+            );
+        }
+    }
+    let n = n_seqs * new_len;
+    // same frequency ladder as `rope_inplace`
+    let half = hd / 2;
+    let freqs: Vec<f32> = (0..half)
+        .map(|i| 1.0 / 10000f32.powf(i as f32 / half as f32))
+        .collect();
+    let mut trig = vec![(0.0f32, 0.0f32); half];
+    let mut taps: TapNorms = Vec::new();
+    let cp = |taps: &mut TapNorms, name: &str, x: &Mat| {
+        cproj(weights, mode, with_stats.then_some(taps), threads, name, x)
+    };
+
+    // embedding (+ family-specific input treatment)
+    let embed = need(weights, "embed")?;
+    if (embed.rows, embed.cols) != (vocab, d) {
+        bail!("embed shape {}x{} vs config {vocab}x{d}", embed.rows, embed.cols);
+    }
+    let mut h = Mat::zeros(n, d);
+    for (r, &t) in tokens.iter().enumerate() {
+        let t = t as usize;
+        if t >= vocab {
+            bail!("token {t} out of vocab range {vocab}");
+        }
+        h.row_mut(r).copy_from_slice(embed.row(t));
+    }
+    if family == "gemma" {
+        let s = (d as f32).sqrt();
+        for v in h.data.iter_mut() {
+            *v *= s;
+        }
+    }
+    if family == "opt" {
+        let pos_embed = need(weights, "pos_embed")?;
+        for r in 0..n {
+            let pos = starts[r / new_len] + r % new_len;
+            let row = h.row_mut(r);
+            let prow = pos_embed.row(pos);
+            for (a, b) in row.iter_mut().zip(prow) {
+                *a += b;
+            }
+        }
+    }
+
+    for i in 0..cfg.n_layers {
+        let p = format!("l{i}.");
+        // -- attention block ------------------------------------------
+        let x = match family {
+            "opt" => layernorm(
+                &h,
+                need(weights, &format!("{p}ln1"))?.row(0),
+                need(weights, &format!("{p}ln1b"))?.row(0),
+                NORM_EPS,
+            ),
+            _ => rmsnorm(
+                &h,
+                need(weights, &format!("{p}ln1"))?.row(0),
+                NORM_EPS,
+                family == "gemma",
+            ),
+        };
+        let mut q = cp(&mut taps, &format!("{p}wq"), &x)?;
+        let mut k_new = cp(&mut taps, &format!("{p}wk"), &x)?;
+        let v_new = cp(&mut taps, &format!("{p}wv"), &x)?;
+        if family == "qwen" {
+            headnorm_inplace(&mut q, hd, need(weights, &format!("{p}qnorm"))?.row(0), NORM_EPS);
+            headnorm_inplace(
+                &mut k_new,
+                hd,
+                need(weights, &format!("{p}knorm"))?.row(0),
+                NORM_EPS,
+            );
+        }
+        if family != "opt" {
+            for r in 0..n {
+                let pos = starts[r / new_len] + r % new_len;
+                rope_row(q.row_mut(r), pos, hd, &freqs, &mut trig);
+                rope_row(k_new.row_mut(r), pos, hd, &freqs, &mut trig);
+            }
+        }
+        // write the fresh K/V rows, then attend over cache + fresh
+        for r in 0..n {
+            let (si, j) = (r / new_len, r % new_len);
+            cache.append_row(ids[si], i, starts[si] + j, k_new.row(r), v_new.row(r));
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut o = Mat::zeros(n, d_attn);
+        let mut scores = vec![0.0f32; cfg.max_seq];
+        for si in 0..n_seqs {
+            let (kc, vc) = cache.layer(ids[si], i);
+            for head in 0..n_heads {
+                let kvh = head / rep;
+                for j in 0..new_len {
+                    let pos = starts[si] + j;
+                    let qrow = &q.row(si * new_len + j)[head * hd..(head + 1) * hd];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (t, sc) in scores.iter_mut().enumerate().take(pos + 1) {
+                        let krow = &kc.row(t)[kvh * hd..(kvh + 1) * hd];
+                        let mut acc = 0.0f32;
+                        for jj in 0..hd {
+                            acc += qrow[jj] * krow[jj];
+                        }
+                        *sc = acc * scale;
+                        mx = mx.max(*sc);
+                    }
+                    let mut denom = 0.0f32;
+                    for sc in scores.iter_mut().take(pos + 1) {
+                        *sc = (*sc - mx).exp();
+                        denom += *sc;
+                    }
+                    let inv = 1.0 / denom;
+                    let orow = &mut o.row_mut(si * new_len + j)[head * hd..(head + 1) * hd];
+                    for (t, &sc) in scores.iter().enumerate().take(pos + 1) {
+                        let wgt = sc * inv;
+                        let vrow = &vc.row(t)[kvh * hd..(kvh + 1) * hd];
+                        for jj in 0..hd {
+                            orow[jj] += wgt * vrow[jj];
+                        }
+                    }
+                }
+            }
+        }
+        let attn_out = cp(&mut taps, &format!("{p}wo"), &o)?;
+        add_inplace(&mut h, &attn_out);
+
+        // -- MLP block ------------------------------------------------
+        let x = match family {
+            "opt" => layernorm(
+                &h,
+                need(weights, &format!("{p}ln2"))?.row(0),
+                need(weights, &format!("{p}ln2b"))?.row(0),
+                NORM_EPS,
+            ),
+            _ => rmsnorm(
+                &h,
+                need(weights, &format!("{p}ln2"))?.row(0),
+                NORM_EPS,
+                family == "gemma",
+            ),
+        };
+        let m = if family == "opt" {
+            let mut up = cp(&mut taps, &format!("{p}up"), &x)?;
+            for v in up.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+            up
+        } else {
+            let gate = cp(&mut taps, &format!("{p}gate"), &x)?;
+            let up = cp(&mut taps, &format!("{p}up"), &x)?;
+            let mut m = up;
+            for (mv, &gv) in m.data.iter_mut().zip(&gate.data) {
+                let act = if family == "qwen" { silu(gv) } else { gelu(gv) };
+                *mv *= act;
+            }
+            m
+        };
+        let mlp_out = cp(&mut taps, &format!("{p}down"), &m)?;
+        add_inplace(&mut h, &mlp_out);
+    }
+
+    let hf = match family {
+        "opt" => layernorm(
+            &h,
+            need(weights, "lnf")?.row(0),
+            need(weights, "lnfb")?.row(0),
+            NORM_EPS,
+        ),
+        _ => rmsnorm(&h, need(weights, "lnf")?.row(0), NORM_EPS, family == "gemma"),
+    };
+    // commit the fresh positions across all layers
+    for &id in ids {
+        cache.advance(id, new_len)?;
+    }
+    // tied LM head over the *last* position of each sequence only —
+    // the decode payoff: one vocab GEMV per sequence, not per token
+    let mut last = Mat::zeros(n_seqs, d);
+    for si in 0..n_seqs {
+        last.row_mut(si).copy_from_slice(hf.row((si + 1) * new_len - 1));
+    }
+    Ok((matmul_bt_mt(&last, embed, threads), taps))
+}
+
 /// Sum next-token NLL + count from `(batch × seq, vocab)` logits.
 fn nll_from_logits(logits: &Mat, tokens: &[i32], batch: usize, seq: usize) -> (f64, f64) {
     let vocab = logits.cols;
@@ -621,6 +917,55 @@ impl NativeBackend {
             None => forward(weights, tokens, batch, ExecMode::Plain, self.threads),
         }
     }
+
+    /// Cached forward in the backend's execution mode, with the tapped
+    /// norms folded into per-linear [`ActStats`] when requested. Note
+    /// the taps measure activations *as executed* (packed mode taps the
+    /// quantized-execution activations) — exactly what the online
+    /// calibrator should track for the weights actually being served.
+    fn cached_step(
+        &self,
+        weights: &ModelWeights,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        ids: &[SeqId],
+        with_stats: bool,
+    ) -> Result<StepOut> {
+        let (logits, tap_norms) = match &self.exec_spec {
+            Some(spec) => {
+                let packed = self.packed_for(weights, spec)?;
+                let mode = ExecMode::Packed(packed.as_ref());
+                forward_cached(weights, tokens, cache, ids, &mode, with_stats, self.threads)?
+            }
+            None => {
+                let mode = ExecMode::Plain;
+                forward_cached(weights, tokens, cache, ids, &mode, with_stats, self.threads)?
+            }
+        };
+        let stats = if with_stats {
+            let linears = &weights.manifest.linears;
+            if tap_norms.len() != linears.len() {
+                bail!("{} stats taps for {} linears", tap_norms.len(), linears.len());
+            }
+            let ps = &weights.manifest.norm_ps;
+            let n_tokens = tokens.len() as f64;
+            Some(
+                tap_norms
+                    .iter()
+                    .zip(linears)
+                    .map(|(sums, lin)| {
+                        debug_assert_eq!(sums[0].len(), lin.d_in);
+                        let mut st = ActStats::new(ps, lin.d_in);
+                        st.accumulate(sums, n_tokens);
+                        st
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        Ok(StepOut { logits: logits.data, stats })
+    }
 }
 
 impl ExecBackend for NativeBackend {
@@ -652,7 +997,7 @@ impl ExecBackend for NativeBackend {
 
     fn nll(&self, weights: &ModelWeights, tokens: &[i32], batch: usize) -> Result<(f64, f64)> {
         let out = self.exec_forward(weights, tokens, batch)?;
-        Ok(nll_from_logits(&out.logits, tokens, batch, weights.manifest.config.seq))
+        Ok(nll_from_logits(&out.logits, tokens, batch, tokens.len() / batch))
     }
 
     fn stats(
@@ -665,7 +1010,7 @@ impl ExecBackend for NativeBackend {
         // stats always run dense f32: the taps measure the model's true
         // activations, exactly like the stats artifact.
         let out = forward(weights, tokens, batch, ExecMode::Stats { with_corr }, self.threads)?;
-        let seq = weights.manifest.config.seq;
+        let seq = tokens.len() / batch;
         let linears = &weights.manifest.linears;
         if out.taps.norms.len() != linears.len() {
             bail!(
@@ -702,7 +1047,46 @@ impl ExecBackend for NativeBackend {
             ExecMode::FusedTtq { spec: QuantSpec::new(bits, g) },
             self.threads,
         )?;
-        Ok(nll_from_logits(&out.logits, tokens, batch, weights.manifest.config.seq))
+        Ok(nll_from_logits(&out.logits, tokens, batch, tokens.len() / batch))
+    }
+
+    fn prefill(
+        &self,
+        weights: &ModelWeights,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        ids: &[SeqId],
+        with_stats: bool,
+    ) -> Result<StepOut> {
+        for &id in ids {
+            if cache.len(id) != 0 {
+                bail!("prefill into a non-empty sequence (len {})", cache.len(id));
+            }
+        }
+        self.cached_step(weights, tokens, cache, ids, with_stats)
+    }
+
+    fn decode_step(
+        &self,
+        weights: &ModelWeights,
+        last_tokens: &[i32],
+        cache: &mut KvCache,
+        ids: &[SeqId],
+        with_stats: bool,
+    ) -> Result<StepOut> {
+        if last_tokens.len() != ids.len() {
+            bail!(
+                "{} last tokens for {} sequences in decode batch",
+                last_tokens.len(),
+                ids.len()
+            );
+        }
+        for &id in ids {
+            if cache.len(id) == 0 {
+                bail!("decode_step on an unprefilled sequence");
+            }
+        }
+        self.cached_step(weights, last_tokens, cache, ids, with_stats)
     }
 }
 

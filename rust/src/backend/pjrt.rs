@@ -9,7 +9,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use super::{BatchStats, ExecBackend};
+use super::{BatchStats, ExecBackend, StepOut};
+use crate::kvcache::{KvCache, SeqId};
 use crate::linalg::Mat;
 use crate::models::ModelWeights;
 use crate::quant::ActStats;
@@ -126,6 +127,36 @@ impl ExecBackend for PjrtBackend {
         Ok((
             literal_scalar_f32(&outs[0])? as f64,
             literal_scalar_f32(&outs[1])? as f64,
+        ))
+    }
+
+    fn prefill(
+        &self,
+        _weights: &ModelWeights,
+        _tokens: &[i32],
+        _cache: &mut KvCache,
+        _ids: &[SeqId],
+        _with_stats: bool,
+    ) -> Result<StepOut> {
+        Err(anyhow!(
+            "the pjrt backend has no KV-cache artifact variant: AOT executables are \
+             compiled for fixed full-sequence shapes — serve with --backend native \
+             for cached prefill/decode"
+        ))
+    }
+
+    fn decode_step(
+        &self,
+        _weights: &ModelWeights,
+        _last_tokens: &[i32],
+        _cache: &mut KvCache,
+        _ids: &[SeqId],
+        _with_stats: bool,
+    ) -> Result<StepOut> {
+        Err(anyhow!(
+            "the pjrt backend has no KV-cache artifact variant: AOT executables are \
+             compiled for fixed full-sequence shapes — serve with --backend native \
+             for cached prefill/decode"
         ))
     }
 }

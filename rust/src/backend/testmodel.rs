@@ -334,6 +334,22 @@ mod tests {
     }
 
     #[test]
+    fn kv_cache_geometry_derives_from_every_config() {
+        // The decode engine sizes its per-layer K/V blocks from the
+        // manifest; the width must be the *KV* head count (GQA/MQA),
+        // not the query head count, for every registry family.
+        use crate::kvcache::KvCacheConfig;
+        for c in &CONFIGS {
+            let man = manifest(c);
+            let kc = KvCacheConfig::from_manifest(&man, 2);
+            assert_eq!(kc.d_kv, c.d_kv(), "{}", c.name);
+            assert_eq!(kc.n_layers, c.n_layers, "{}", c.name);
+            assert_eq!(kc.max_seq, c.max_seq, "{}", c.name);
+            assert!(kc.d_kv <= c.d_attn(), "{}: KV wider than attention", c.name);
+        }
+    }
+
+    #[test]
     fn offsets_are_contiguous() {
         let m = manifest(config("opt-micro").unwrap());
         let mut expect = 0usize;

@@ -17,7 +17,10 @@ pub type RequestId = u64;
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: RequestId,
-    pub tokens: Vec<i32>, // length == seq of the model (BOS-padded rows)
+    /// BOS-led prompt, `1..=max_seq` tokens (the decode engine admits
+    /// variable-length prompts; [`Batch::tokens`] still requires
+    /// fixed-`seq` rows for the legacy full-batch executable path).
+    pub tokens: Vec<i32>,
     pub arrived: Instant,
 }
 
@@ -103,6 +106,13 @@ impl Batcher {
         self.queue.push_back(r);
     }
 
+    /// Put a request back at the *front* of the queue (admission
+    /// backpressure: the server re-queues batch members it could not
+    /// get a KV-cache slot for, preserving FIFO order).
+    pub fn requeue(&mut self, r: Request) {
+        self.queue.push_front(r);
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -142,27 +152,48 @@ impl Batcher {
         }
         let oldest = self.queue.front().unwrap().arrived;
         if now.duration_since(oldest) >= self.policy.linger {
-            let n = self.queue.len();
-            // Exact bucket: take it. Otherwise trade padded rows vs
-            // extra launches: pad up to the covering bucket when the
-            // waste is at most half the bucket (one launch clears the
-            // queue); else drain the largest full bucket and let the
-            // remainder fire on the next poll.
-            let (bucket, take) = if self.policy.buckets.contains(&n) {
-                (n, n)
-            } else {
-                let covering = self.bucket_covering(n);
-                if covering >= n && covering - n <= covering / 2 {
-                    (covering, n)
-                } else {
-                    let b = self.bucket_for(n);
-                    (b, b.min(n))
-                }
-            };
-            let requests: Vec<Request> = self.queue.drain(..take).collect();
-            return Some(Batch::new(bucket, requests));
+            return Some(self.release_partial());
         }
         None
+    }
+
+    /// Release queued requests immediately, ignoring the linger
+    /// deadline — the drain/shutdown path. Same bucket selection as a
+    /// linger-expired [`Self::poll`], with no fabricated clock.
+    pub fn force_flush(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let max_bucket = *self.policy.buckets.last().unwrap();
+        if self.queue.len() >= max_bucket {
+            let requests: Vec<Request> =
+                self.queue.drain(..max_bucket).collect();
+            return Some(Batch::new(max_bucket, requests));
+        }
+        Some(self.release_partial())
+    }
+
+    /// Fire a partial batch (queue shorter than the largest bucket).
+    /// Exact bucket: take it. Otherwise trade padded rows vs extra
+    /// launches: pad up to the covering bucket when the waste is at
+    /// most half the bucket (one launch clears the queue); else drain
+    /// the largest full bucket and let the remainder fire next poll.
+    fn release_partial(&mut self) -> Batch {
+        let n = self.queue.len();
+        debug_assert!(n > 0);
+        let (bucket, take) = if self.policy.buckets.contains(&n) {
+            (n, n)
+        } else {
+            let covering = self.bucket_covering(n);
+            if covering >= n && covering - n <= covering / 2 {
+                (covering, n)
+            } else {
+                let b = self.bucket_for(n);
+                (b, b.min(n))
+            }
+        };
+        let requests: Vec<Request> = self.queue.drain(..take).collect();
+        Batch::new(bucket, requests)
     }
 }
 
@@ -258,6 +289,48 @@ mod tests {
         // one): `tokens` must fail loudly, not underflow `len() - 1`.
         let b = Batch { bucket: 4, requests: Vec::new() };
         let _ = b.tokens(8);
+    }
+
+    #[test]
+    fn force_flush_fires_without_waiting() {
+        let mut b = mk(vec![1, 4], 1000);
+        b.push(req(0));
+        assert!(b.poll(Instant::now()).is_none(), "linger not expired");
+        let batch = b.force_flush().expect("flush ignores linger");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(b.pending(), 0);
+        assert!(b.force_flush().is_none(), "empty queue flushes nothing");
+    }
+
+    #[test]
+    fn force_flush_drains_full_buckets_first() {
+        let mut b = mk(vec![1, 4], 1000);
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let b1 = b.force_flush().unwrap();
+        assert_eq!(b1.bucket, 4);
+        let b2 = b.force_flush().unwrap();
+        assert_eq!(b2.requests.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn requeue_restores_fifo_front() {
+        let mut b = mk(vec![1, 4], 0);
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        let batch = b.force_flush().unwrap();
+        // admission failed for the last two: requeue in reverse order
+        let mut rs = batch.requests;
+        let r2 = rs.pop().unwrap();
+        let r1 = rs.pop().unwrap();
+        b.requeue(r2);
+        b.requeue(r1);
+        let again = b.force_flush().unwrap();
+        let ids: Vec<u64> = again.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2], "requeued requests keep their order");
     }
 
     #[test]

@@ -9,9 +9,11 @@
 //! * [`calibrator`] — the TTQ-specific contribution: per-session online
 //!   activation statistics with exponential decay ("on-device
 //!   self-calibration", Fig. 1b) deciding when weights are re-quantized.
-//! * [`server`] — the engine loop tying batcher + calibrator + runtime
-//!   together; owns quantized weight generations.
-//! * [`metrics`] — lock-free counters for the runtime benches.
+//! * [`server`] — the decode engine: batched prefill, a continuous-
+//!   batching decode scheduler over the [`crate::kvcache::KvCache`],
+//!   streaming [`server::ServeEvent`] replies, and mid-generation
+//!   drift-triggered requantization; owns quantized weight generations.
+//! * [`metrics`] — lock-free counters, split by prefill/decode phase.
 
 pub mod batcher;
 pub mod calibrator;
@@ -21,4 +23,4 @@ pub mod server;
 pub use batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
 pub use calibrator::{CalibratorConfig, OnlineCalibrator};
 pub use metrics::Metrics;
-pub use server::{Server, ServerConfig, ServeReply};
+pub use server::{ServeEvent, Server, ServerConfig};

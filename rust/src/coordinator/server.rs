@@ -1,20 +1,30 @@
-//! The serving engine: batcher + online calibrator + executor backend.
+//! The serving engine: continuous-batching decode scheduler + online
+//! calibrator over the prefill/decode execution split.
 //!
-//! Request lifecycle (one `step`):
+//! Request lifecycle:
 //!
-//!   submit → [Batcher bucket fires] → stats pass on the batch
-//!          → calibrator.observe → (drift? requantize weight generation)
-//!          → logits pass with the quantized weights
-//!          → greedy next-token reply per request
+//!   submit → [Batcher bucket fires, KV slot free] → batched prefill
+//!          (stats tapped on *real* rows only) → calibrator.observe
+//!          → first token streamed (`ServeEvent::Token`)
+//!          → joins the running decode batch
+//!   each step: one `decode_step` over every running sequence
+//!          → per-step stats → observe → (drift? requantize mid-stream)
+//!          → one `ServeEvent::Token` per sequence
+//!   stop (max_new_tokens / EOS / context full) → `ServeEvent::Done`,
+//!          KV slot recycled
 //!
-//! This is the paper's Fig. 1(b) loop made concrete: quantization state
-//! is owned by the server, recomputed *from the live traffic* whenever
-//! the activation statistics drift — never from offline calibration.
+//! This is the paper's Fig. 1(b) loop in its natural habitat: the
+//! memory-bound decode phase is where low-bit weights buy wall-clock,
+//! and because activation statistics keep accumulating *per generated
+//! token*, drift-triggered requantization can fire mid-generation —
+//! the weight-generation bump is visible in the subsequent `Token`
+//! events. Offline-calibrated methods cannot do this; that is the
+//! paper's whole argument.
 //!
 //! The compression method is a [`MethodSpec`] registry handle. Methods
 //! that consume the activation diagonal (TTQ, online AWQ, test-time
 //! pruning) ride the calibrator's observe→drift→commit loop; weight-only
-//! methods (RTN, NF) quantize once at the first batch; correlation
+//! methods (RTN, NF) quantize once before the first prefill; correlation
 //! methods (GPTQ) are rejected up front — the serving path has no corr
 //! artifact.
 
@@ -27,6 +37,7 @@ use super::calibrator::{CalibratorConfig, OnlineCalibrator};
 use super::metrics::Metrics;
 use crate::backend::ExecBackend;
 use crate::eval::{EvalConfig, Evaluator};
+use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, SeqId};
 use crate::quant::{MethodSpec, QuantSpec};
 use crate::util::argmax;
 
@@ -41,6 +52,15 @@ pub struct ServerConfig {
     /// hyperparameters are re-derived from `method` at [`Server::new`],
     /// so the calibrator's D always matches the method that consumes it.
     pub calib: CalibratorConfig,
+    /// Generation budget per request. The effective budget is clamped
+    /// to the context room: a full-`max_seq` prompt yields exactly one
+    /// token (the pre-decode-engine behavior).
+    pub max_new_tokens: usize,
+    /// Optional stop token ending a generation early.
+    pub eos: Option<i32>,
+    /// Concurrently resident sequences in the KV cache (admission
+    /// backpressure beyond this: requests stay queued).
+    pub cache_slots: usize,
 }
 
 impl ServerConfig {
@@ -51,6 +71,9 @@ impl ServerConfig {
             method: MethodSpec::ttq(0),
             policy: BatchPolicy::default(),
             calib: CalibratorConfig::default(),
+            max_new_tokens: 16,
+            eos: None,
+            cache_slots: 16,
         }
     }
 
@@ -58,14 +81,61 @@ impl ServerConfig {
         self.method = method;
         self
     }
+
+    pub fn with_max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = n.max(1);
+        self
+    }
 }
 
-/// Reply for one request: greedy next token after the prompt.
+/// Streamed serving reply. One `Token` per generated token (in
+/// generation order), closed by exactly one `Done` per request.
 #[derive(Clone, Debug)]
-pub struct ServeReply {
-    pub id: RequestId,
-    pub next_token: i32,
-    pub weight_generation: u64,
+pub enum ServeEvent {
+    Token {
+        id: RequestId,
+        token: i32,
+        /// 0-based position in the generated suffix.
+        index: usize,
+        /// Quantized weight generation that *produced* this token. A
+        /// mid-stream requantization shows up as a bump between
+        /// consecutive tokens of the same request.
+        weight_generation: u64,
+    },
+    Done {
+        id: RequestId,
+        /// The full generated suffix (prompt not included).
+        tokens: Vec<i32>,
+        prompt_len: usize,
+    },
+}
+
+impl ServeEvent {
+    pub fn id(&self) -> RequestId {
+        match self {
+            ServeEvent::Token { id, .. } | ServeEvent::Done { id, .. } => *id,
+        }
+    }
+}
+
+/// One in-flight generation: KV residency + progress + stop condition.
+struct SequenceState {
+    id: RequestId,
+    kv: SeqId,
+    prompt_len: usize,
+    /// Most recent token (input to the next decode step).
+    last_token: i32,
+    generated: Vec<i32>,
+    /// Effective budget (config clamped to context room).
+    max_new: usize,
+    arrived: Instant,
+}
+
+impl SequenceState {
+    fn finished(&self, eos: Option<i32>) -> bool {
+        self.generated.len() >= self.max_new
+            || eos.is_some_and(|e| self.generated.last() == Some(&e))
+    }
 }
 
 pub struct Server<'b> {
@@ -73,9 +143,11 @@ pub struct Server<'b> {
     ev: Evaluator<'b>,
     batcher: Batcher,
     calibrator: OnlineCalibrator,
+    cache: KvCache,
+    running: Vec<SequenceState>,
     pub metrics: Metrics,
     next_id: RequestId,
-    /// Weight-only methods quantize once; set after the first batch.
+    /// Weight-only methods quantize once; set before the first prefill.
     static_applied: bool,
 }
 
@@ -102,11 +174,14 @@ impl<'b> Server<'b> {
         let calib_cfg = cfg.calib.clone().for_method(&cfg.method);
         let calibrator = OnlineCalibrator::new(calib_cfg, &man.norm_ps, &d_ins);
         let batcher = Batcher::new(cfg.policy.clone());
+        let cache = KvCache::new(KvCacheConfig::from_manifest(man, cfg.cache_slots));
         Ok(Server {
             cfg,
             ev,
             batcher,
             calibrator,
+            cache,
+            running: Vec::new(),
             metrics: Metrics::new(),
             next_id: 0,
             static_applied: false,
@@ -117,60 +192,106 @@ impl<'b> Server<'b> {
         self.ev.weights.manifest.config.seq
     }
 
+    pub fn max_seq(&self) -> usize {
+        self.ev.weights.manifest.config.max_seq
+    }
+
     pub fn weight_generation(&self) -> u64 {
         self.calibrator.generation()
     }
 
-    /// Enqueue a prompt (must be exactly `seq` tokens, BOS-led).
+    /// The online calibrator (read access for diagnostics/tests).
+    pub fn calibrator(&self) -> &OnlineCalibrator {
+        &self.calibrator
+    }
+
+    /// KV-cache occupancy snapshot.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Enqueue a BOS-led prompt of `1..=max_seq` in-vocabulary tokens.
     pub fn submit(&mut self, tokens: Vec<i32>) -> RequestId {
+        assert!(
+            !tokens.is_empty() && tokens.len() <= self.max_seq(),
+            "prompt must be 1..={} tokens, got {}",
+            self.max_seq(),
+            tokens.len()
+        );
+        // reject bad ids at the door: a prefill failure mid-batch is
+        // far more disruptive than a submit panic at the call site
+        let vocab = self.ev.weights.manifest.config.vocab as i32;
+        assert!(
+            tokens.iter().all(|&t| (0..vocab).contains(&t)),
+            "prompt contains out-of-vocab token (vocab {vocab})"
+        );
         let id = self.next_id;
         self.next_id += 1;
         self.batcher.push(Request::new(id, tokens));
         id
     }
 
+    /// Requests queued, not yet prefilled.
     pub fn pending(&self) -> usize {
         self.batcher.pending()
     }
 
-    /// Drive the engine once; returns replies if a batch fired.
-    pub fn step(&mut self, now: Instant) -> Result<Vec<ServeReply>> {
-        let Some(batch) = self.batcher.poll(now) else {
-            return Ok(Vec::new());
-        };
-        self.run_batch(batch)
+    /// Sequences currently in the decode batch.
+    pub fn running(&self) -> usize {
+        self.running.len()
     }
 
-    /// Drain everything queued (test/bench convenience).
-    pub fn drain(&mut self) -> Result<Vec<ServeReply>> {
-        let mut out = Vec::new();
-        while self.batcher.pending() > 0 {
-            let far = Instant::now() + self.cfg.policy.linger * 2;
-            out.extend(self.step(far)?);
+    /// Drive the engine once: admit newly-fired batches into the decode
+    /// batch (prefill), then advance every running sequence by one
+    /// token. Returns the events this step produced.
+    pub fn step(&mut self, now: Instant) -> Result<Vec<ServeEvent>> {
+        let mut events = Vec::new();
+        while self.cache.free_slots() > 0 {
+            let Some(batch) = self.batcher.poll(now) else { break };
+            self.admit(batch, &mut events)?;
         }
-        Ok(out)
+        self.decode_once(&mut events)?;
+        Ok(events)
     }
 
-    fn run_batch(&mut self, batch: Batch) -> Result<Vec<ServeReply>> {
-        let seq = self.seq();
-        let bucket = batch.bucket;
-        let tokens = batch.tokens(seq);
-
-        if self.cfg.method.needs_stats() {
-            // 1. stats pass on the live batch (the O[dT] term of Eq. 3)
-            let collected = self.ev.collect(&tokens, bucket, false)?;
-            self.calibrator.observe(&collected.stats);
-
-            // 2. requantize only when the activation statistics drifted
-            if self.calibrator.needs_requant() {
-                let t0 = Instant::now();
-                let diags = self.calibrator.commit();
-                self.ev
-                    .apply_diags(&diags, &self.cfg.method, &self.cfg.spec)?;
-                self.metrics.record_requant(t0.elapsed());
+    /// Run everything queued to completion (test/bench convenience).
+    /// Queued arrivals are force-flushed past the linger gate — no
+    /// fabricated far-future clock involved.
+    pub fn drain(&mut self) -> Result<Vec<ServeEvent>> {
+        let mut events = Vec::new();
+        while self.batcher.pending() > 0 || !self.running.is_empty() {
+            while self.cache.free_slots() > 0 {
+                let Some(batch) = self.batcher.force_flush() else { break };
+                self.admit(batch, &mut events)?;
             }
-        } else if !self.static_applied {
-            // weight-only method: one quantization pass, ever
+            self.decode_once(&mut events)?;
+        }
+        Ok(events)
+    }
+
+    /// Prefill a fired batch and join it into the decode batch.
+    ///
+    /// Only *real* requests are executed and observed — bucket padding
+    /// never reaches the model, so the calibrator sees each request's
+    /// activations exactly once (the padded-row double-counting of the
+    /// pre-decode-engine loop is structurally impossible).
+    fn admit(&mut self, batch: Batch, events: &mut Vec<ServeEvent>) -> Result<()> {
+        let bucket_slack = batch.padding_rows();
+        let mut requests = batch.requests;
+        // admission backpressure: requeue what the cache can't hold
+        let free = self.cache.free_slots();
+        if requests.len() > free {
+            for r in requests.drain(free..).rev() {
+                self.batcher.requeue(r);
+            }
+        }
+        if requests.is_empty() {
+            return Ok(());
+        }
+        self.metrics.record_admitted(requests.len(), bucket_slack);
+
+        // weight-only methods: one quantization pass before any forward
+        if !self.cfg.method.needs_stats() && !self.static_applied {
             let t0 = Instant::now();
             let cfg = EvalConfig { spec: self.cfg.spec.clone(), ..Default::default() };
             self.ev.apply_quantization(&self.cfg.method, None, &cfg)?;
@@ -178,29 +299,160 @@ impl<'b> Server<'b> {
             self.metrics.record_requant(t0.elapsed());
         }
 
-        // 3. forward with the current quantized generation
+        // one prefill forward per prompt-length group (insertion order)
+        let mut groups: Vec<(usize, Vec<Request>)> = Vec::new();
+        for r in requests {
+            match groups.iter_mut().find(|(l, _)| *l == r.tokens.len()) {
+                Some((_, g)) => g.push(r),
+                None => groups.push((r.tokens.len(), vec![r])),
+            }
+        }
+        for (prompt_len, group) in groups {
+            self.prefill_group(prompt_len, group, events)?;
+        }
+        Ok(())
+    }
+
+    fn prefill_group(
+        &mut self,
+        prompt_len: usize,
+        group: Vec<Request>,
+        events: &mut Vec<ServeEvent>,
+    ) -> Result<()> {
+        let n = group.len();
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            // admission checked free_slots up front
+            ids.push(self.cache.alloc().expect("admission exceeded cache slots"));
+        }
+        let mut tokens = Vec::with_capacity(n * prompt_len);
+        for r in &group {
+            tokens.extend_from_slice(&r.tokens);
+        }
+        let with_stats = self.cfg.method.needs_stats();
         let t0 = Instant::now();
-        let logits = self
+        let res = self
             .ev
             .backend
-            .logits(&self.ev.weights, &tokens, bucket)?;
-        let exec = t0.elapsed();
-        let vocab = self.ev.weights.manifest.config.vocab;
+            .prefill(&self.ev.weights, &tokens, &mut self.cache, &ids, with_stats);
+        let out = match res {
+            Ok(out) => out,
+            Err(e) => {
+                // don't leak the slots of a failed group — the server
+                // stays serviceable for subsequent requests
+                for id in ids {
+                    self.cache.release(id);
+                }
+                return Err(e);
+            }
+        };
+        self.metrics.record_prefill(tokens.len(), t0.elapsed());
+        // sample occupancy *before* any release below — this is the peak
+        self.metrics.record_cache_used(self.cache.used_tokens());
 
-        let n_real = batch.requests.len();
-        self.metrics
-            .record_batch(n_real, batch.padding_rows(), bucket * seq, exec);
-        let mut replies = Vec::with_capacity(n_real);
-        for (row, req) in batch.requests.iter().enumerate() {
-            let off = (row * seq + (seq - 1)) * vocab;
-            let best = argmax(&logits[off..off + vocab]);
-            self.metrics.record_latency(req.arrived.elapsed());
-            replies.push(ServeReply {
+        // the generation that produced these logits (pre-observe)
+        let gen = self.calibrator.generation();
+        self.observe_and_maybe_requant(out.stats.as_deref())?;
+
+        let vocab = self.ev.weights.manifest.config.vocab;
+        let room = self.max_seq() - prompt_len + 1;
+        for (row, (req, kv)) in group.into_iter().zip(ids).enumerate() {
+            let tok = argmax(&out.logits[row * vocab..(row + 1) * vocab]) as i32;
+            let seq = SequenceState {
                 id: req.id,
-                next_token: best as i32,
-                weight_generation: self.calibrator.generation(),
+                kv,
+                prompt_len,
+                last_token: tok,
+                generated: vec![tok],
+                max_new: self.cfg.max_new_tokens.clamp(1, room),
+                arrived: req.arrived,
+            };
+            events.push(ServeEvent::Token {
+                id: seq.id,
+                token: tok,
+                index: 0,
+                weight_generation: gen,
+            });
+            if seq.finished(self.cfg.eos) {
+                self.finish(seq, events);
+            } else {
+                self.running.push(seq);
+            }
+        }
+        Ok(())
+    }
+
+    /// One decode step over the whole running batch.
+    fn decode_once(&mut self, events: &mut Vec<ServeEvent>) -> Result<()> {
+        if self.running.is_empty() {
+            return Ok(());
+        }
+        let last: Vec<i32> = self.running.iter().map(|s| s.last_token).collect();
+        let ids: Vec<SeqId> = self.running.iter().map(|s| s.kv).collect();
+        let with_stats = self.cfg.method.needs_stats();
+        let t0 = Instant::now();
+        let out = self
+            .ev
+            .backend
+            .decode_step(&self.ev.weights, &last, &mut self.cache, &ids, with_stats)?;
+        self.metrics.record_decode(self.running.len(), t0.elapsed());
+        // peak occupancy: every running sequence just grew by one token
+        self.metrics.record_cache_used(self.cache.used_tokens());
+
+        let gen = self.calibrator.generation();
+        // per-step statistics: this is what makes requantization able
+        // to fire *mid-generation* on drifting traffic
+        self.observe_and_maybe_requant(out.stats.as_deref())?;
+
+        let vocab = self.ev.weights.manifest.config.vocab;
+        for (row, seq) in self.running.iter_mut().enumerate() {
+            let tok = argmax(&out.logits[row * vocab..(row + 1) * vocab]) as i32;
+            seq.generated.push(tok);
+            seq.last_token = tok;
+            events.push(ServeEvent::Token {
+                id: seq.id,
+                token: tok,
+                index: seq.generated.len() - 1,
+                weight_generation: gen,
             });
         }
-        Ok(replies)
+        // retire finished sequences, preserving decode-batch order
+        let eos = self.cfg.eos;
+        let mut still = Vec::with_capacity(self.running.len());
+        for seq in std::mem::take(&mut self.running) {
+            if seq.finished(eos) {
+                self.finish(seq, events);
+            } else {
+                still.push(seq);
+            }
+        }
+        self.running = still;
+        Ok(())
+    }
+
+    fn observe_and_maybe_requant(
+        &mut self,
+        stats: Option<&[crate::quant::ActStats]>,
+    ) -> Result<()> {
+        let Some(stats) = stats else { return Ok(()) };
+        self.calibrator.observe(stats);
+        if self.calibrator.needs_requant() {
+            let t0 = Instant::now();
+            let diags = self.calibrator.commit();
+            self.ev
+                .apply_diags(&diags, &self.cfg.method, &self.cfg.spec)?;
+            self.metrics.record_requant(t0.elapsed());
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, seq: SequenceState, events: &mut Vec<ServeEvent>) {
+        self.cache.release(seq.kv);
+        self.metrics.record_latency(seq.arrived.elapsed());
+        events.push(ServeEvent::Done {
+            id: seq.id,
+            tokens: seq.generated,
+            prompt_len: seq.prompt_len,
+        });
     }
 }

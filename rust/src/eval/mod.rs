@@ -25,6 +25,7 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::ExecBackend;
 use crate::corpus::{CorpusStream, Split};
+use crate::kvcache::{KvCache, KvCacheConfig};
 use crate::linalg::Mat;
 use crate::models::ModelWeights;
 use crate::quant::{lowrank_init, LayerStats, LowRank, QuantSpec, StatsRequirement};
@@ -137,6 +138,42 @@ impl<'b> Evaluator<'b> {
             }
         }
         Ok(agg.expect("n_batches >= 1"))
+    }
+
+    /// Greedy autoregressive generation through the backend's cached
+    /// prefill/decode path (the current — possibly quantized — weight
+    /// substitution applies). Returns the generated suffix; stops at
+    /// `max_new_tokens`, `eos`, or a full context window. Errors on
+    /// backends without a decode path (PJRT).
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        eos: Option<i32>,
+    ) -> Result<Vec<i32>> {
+        let man = &self.weights.manifest;
+        if prompt.is_empty() || prompt.len() > man.config.max_seq {
+            return Err(anyhow!(
+                "prompt must be 1..={} tokens, got {}",
+                man.config.max_seq,
+                prompt.len()
+            ));
+        }
+        let mut cache = KvCache::new(KvCacheConfig::from_manifest(man, 1));
+        let id = cache.alloc().expect("fresh single-slot cache");
+        let step = self
+            .backend
+            .prefill(&self.weights, prompt, &mut cache, &[id], false)?;
+        let mut tok = argmax(&step.logits) as i32;
+        let mut out = vec![tok];
+        while out.len() < max_new_tokens && Some(tok) != eos && cache.remaining(id) > 0 {
+            let step = self
+                .backend
+                .decode_step(&self.weights, &[tok], &mut cache, &[id], false)?;
+            tok = argmax(&step.logits) as i32;
+            out.push(tok);
+        }
+        Ok(out)
     }
 
     /// Low-rank factors for a linear (cached — static per App. E).

@@ -1,0 +1,283 @@
+//! Slab-allocated per-sequence KV cache — the state behind the
+//! prefill/decode split.
+//!
+//! Decode is the phase where TTQ's low-bit weights actually pay off:
+//! each step is a GEMV whose cost is dominated by weight traffic, *if*
+//! the attention keys/values of the prefix are cached instead of
+//! recomputed. This module owns that cache:
+//!
+//! * [`KvCache`] — a fixed pool of sequence slots, each preallocated
+//!   with per-layer K/V blocks of `(max_seq, d_kv)` sized from the
+//!   model [`Manifest`]. Slots are recycled (`alloc`/`free`) without
+//!   reallocation — the slab discipline of paged-attention allocators,
+//!   at one-block-per-sequence granularity.
+//! * [`SeqId`] — an opaque slot handle. The serving layer holds one per
+//!   in-flight sequence and passes them to
+//!   [`crate::backend::ExecBackend::prefill`] /
+//!   [`crate::backend::ExecBackend::decode_step`].
+//! * [`CacheStats`] — capacity accounting (slots, live tokens,
+//!   high-water mark) surfaced by the coordinator's metrics.
+//!
+//! The write protocol is two-phase so a multi-layer forward sees a
+//! stable sequence length throughout: the backend writes rows for every
+//! layer at absolute positions via [`KvCache::append_row`], then bumps
+//! the length once with [`KvCache::advance`] after the full forward.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+use crate::models::Manifest;
+
+/// Cache geometry, derived from the model manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    pub n_layers: usize,
+    /// K/V row width: `n_kv_heads × head_dim` (GQA/MQA-aware).
+    pub d_kv: usize,
+    /// Maximum positions per sequence (prompt + generated).
+    pub max_seq: usize,
+    /// Number of concurrently resident sequences.
+    pub slots: usize,
+}
+
+impl KvCacheConfig {
+    pub fn from_manifest(man: &Manifest, slots: usize) -> Self {
+        let c = &man.config;
+        KvCacheConfig {
+            n_layers: c.n_layers,
+            d_kv: c.n_kv_heads * c.head_dim,
+            max_seq: c.max_seq,
+            slots: slots.max(1),
+        }
+    }
+
+    /// Bytes of K/V storage per slot (f32).
+    pub fn bytes_per_slot(&self) -> usize {
+        self.n_layers * 2 * self.max_seq * self.d_kv * 4
+    }
+}
+
+/// One layer's cached keys and values: `(max_seq, d_kv)` row-major,
+/// rows `0..len` live.
+pub struct LayerKv {
+    pub k: Mat,
+    pub v: Mat,
+}
+
+struct Slot {
+    layers: Vec<LayerKv>,
+    len: usize,
+    in_use: bool,
+}
+
+/// Opaque handle to one allocated sequence slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SeqId(usize);
+
+/// Capacity accounting snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub slots: usize,
+    pub active_seqs: usize,
+    pub capacity_tokens: usize,
+    pub used_tokens: usize,
+    /// Most tokens ever simultaneously resident.
+    pub high_water_tokens: usize,
+}
+
+/// The slab: `slots` preallocated sequences, recycled across requests.
+pub struct KvCache {
+    cfg: KvCacheConfig,
+    pool: Vec<Slot>,
+    free: Vec<usize>,
+    high_water: usize,
+}
+
+impl KvCache {
+    /// Preallocate the whole slab up front — no allocation happens on
+    /// the decode hot path afterwards.
+    pub fn new(cfg: KvCacheConfig) -> Self {
+        let pool: Vec<Slot> = (0..cfg.slots)
+            .map(|_| Slot {
+                layers: (0..cfg.n_layers)
+                    .map(|_| LayerKv {
+                        k: Mat::zeros(cfg.max_seq, cfg.d_kv),
+                        v: Mat::zeros(cfg.max_seq, cfg.d_kv),
+                    })
+                    .collect(),
+                len: 0,
+                in_use: false,
+            })
+            .collect();
+        // pop order: lowest slot index first
+        let free: Vec<usize> = (0..cfg.slots).rev().collect();
+        KvCache { cfg, pool, free, high_water: 0 }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    /// Claim a slot for a new sequence (length reset to 0), or `None`
+    /// when the slab is full — the caller keeps the request queued.
+    pub fn alloc(&mut self) -> Option<SeqId> {
+        let idx = self.free.pop()?;
+        let s = &mut self.pool[idx];
+        s.len = 0;
+        s.in_use = true;
+        Some(SeqId(idx))
+    }
+
+    /// Return a slot to the pool. The K/V contents are left in place
+    /// (rows beyond `len == 0` are unreachable) — no zeroing cost.
+    pub fn release(&mut self, id: SeqId) {
+        let s = &mut self.pool[id.0];
+        assert!(s.in_use, "release of a free slot");
+        s.in_use = false;
+        s.len = 0;
+        self.free.push(id.0);
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Live length (cached positions) of a sequence.
+    pub fn len(&self, id: SeqId) -> usize {
+        debug_assert!(self.pool[id.0].in_use, "len of a free slot");
+        self.pool[id.0].len
+    }
+
+    pub fn is_empty(&self, id: SeqId) -> bool {
+        self.len(id) == 0
+    }
+
+    /// Room left before the sequence hits `max_seq`.
+    pub fn remaining(&self, id: SeqId) -> usize {
+        self.cfg.max_seq - self.len(id)
+    }
+
+    /// A layer's K/V blocks for reading during attention.
+    pub fn layer(&self, id: SeqId, layer: usize) -> (&Mat, &Mat) {
+        let l = &self.pool[id.0].layers[layer];
+        (&l.k, &l.v)
+    }
+
+    /// Write one K row + V row at an absolute position (phase 1 of the
+    /// write protocol; positions become live only after [`Self::advance`]).
+    pub fn append_row(&mut self, id: SeqId, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(pos < self.cfg.max_seq, "position {pos} past max_seq");
+        debug_assert_eq!(k.len(), self.cfg.d_kv);
+        debug_assert_eq!(v.len(), self.cfg.d_kv);
+        let l = &mut self.pool[id.0].layers[layer];
+        l.k.row_mut(pos).copy_from_slice(k);
+        l.v.row_mut(pos).copy_from_slice(v);
+    }
+
+    /// Commit `n` freshly written positions (phase 2) across all layers.
+    pub fn advance(&mut self, id: SeqId, n: usize) -> Result<()> {
+        let len = self.pool[id.0].len;
+        if len + n > self.cfg.max_seq {
+            bail!(
+                "sequence would grow to {} positions, cache max_seq is {}",
+                len + n,
+                self.cfg.max_seq
+            );
+        }
+        self.pool[id.0].len = len + n;
+        let used = self.used_tokens();
+        if used > self.high_water {
+            self.high_water = used;
+        }
+        Ok(())
+    }
+
+    pub fn used_tokens(&self) -> usize {
+        self.pool.iter().filter(|s| s.in_use).map(|s| s.len).sum()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            slots: self.cfg.slots,
+            active_seqs: self.cfg.slots - self.free.len(),
+            capacity_tokens: self.cfg.slots * self.cfg.max_seq,
+            used_tokens: self.used_tokens(),
+            high_water_tokens: self.high_water,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> KvCacheConfig {
+        KvCacheConfig { n_layers: 2, d_kv: 8, max_seq: 16, slots: 3 }
+    }
+
+    #[test]
+    fn alloc_free_recycles_slots() {
+        let mut c = KvCache::new(cfg());
+        assert_eq!(c.free_slots(), 3);
+        let a = c.alloc().unwrap();
+        let b = c.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(c.free_slots(), 1);
+        c.release(a);
+        assert_eq!(c.free_slots(), 2);
+        let c2 = c.alloc().unwrap();
+        // the released slot is reused with a reset length
+        assert_eq!(c2, a);
+        assert_eq!(c.len(c2), 0);
+        let _ = c.alloc().unwrap();
+        assert!(c.alloc().is_none(), "slab over-allocated");
+    }
+
+    #[test]
+    fn write_protocol_and_capacity_accounting() {
+        let mut c = KvCache::new(cfg());
+        let id = c.alloc().unwrap();
+        let row = vec![1.0f32; 8];
+        for layer in 0..2 {
+            for pos in 0..4 {
+                c.append_row(id, layer, pos, &row, &row);
+            }
+        }
+        assert_eq!(c.len(id), 0, "rows live only after advance");
+        c.advance(id, 4).unwrap();
+        assert_eq!(c.len(id), 4);
+        assert_eq!(c.remaining(id), 12);
+        let (k, v) = c.layer(id, 1);
+        assert_eq!(k.row(3), &row[..]);
+        assert_eq!(v.row(0), &row[..]);
+        let st = c.stats();
+        assert_eq!(st.active_seqs, 1);
+        assert_eq!(st.used_tokens, 4);
+        assert_eq!(st.capacity_tokens, 48);
+        assert_eq!(st.high_water_tokens, 4);
+        // high water survives release
+        c.release(id);
+        assert_eq!(c.stats().used_tokens, 0);
+        assert_eq!(c.stats().high_water_tokens, 4);
+    }
+
+    #[test]
+    fn advance_past_max_seq_errors() {
+        let mut c = KvCache::new(cfg());
+        let id = c.alloc().unwrap();
+        c.advance(id, 16).unwrap();
+        assert!(c.advance(id, 1).is_err());
+    }
+
+    #[test]
+    fn config_from_manifest_uses_kv_heads() {
+        let man = crate::backend::testmodel::manifest(
+            crate::backend::testmodel::config("qwen-micro").unwrap(),
+        );
+        let c = KvCacheConfig::from_manifest(&man, 4);
+        assert_eq!(c.n_layers, 2);
+        assert_eq!(c.d_kv, 2 * 16, "GQA cache width is n_kv_heads × head_dim");
+        assert_eq!(c.max_seq, 64);
+        assert_eq!(c.bytes_per_slot(), 2 * 2 * 64 * 32 * 4);
+    }
+}

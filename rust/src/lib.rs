@@ -28,8 +28,12 @@
 //!   execution mode), plus [`backend::testmodel`] synthetic models.
 //! * [`runtime`] — PJRT artifact loader / executor (xla crate; an
 //!   in-tree stub keeps offline builds green).
+//! * [`kvcache`] — slab-allocated per-sequence K/V cache behind the
+//!   prefill/decode split (allocate/append/free, capacity accounting).
 //! * [`coordinator`] — serving layer: shape-bucketed dynamic batcher,
-//!   online calibrator driving any diagonal method, scheduler, metrics.
+//!   online calibrator driving any diagonal method, a continuous-
+//!   batching decode scheduler streaming [`coordinator::ServeEvent`]s,
+//!   metrics.
 //! * [`eval`] — perplexity / accuracy / success-rate pipelines; plans
 //!   stats collection from [`quant::StatsRequirement`].
 //! * [`perfmodel`] — GPU roofline simulator regenerating Tables 4-8;
@@ -42,6 +46,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod corpus;
 pub mod eval;
+pub mod kvcache;
 pub mod linalg;
 pub mod models;
 pub mod perfmodel;

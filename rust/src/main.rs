@@ -29,7 +29,7 @@ use ttq_serve::bench::{
     figure2, sweep_formats, sweep_lowrank_init, sweep_nf, sweep_prune,
     table1, table12, table13, table2, table3, tables_runtime,
 };
-use ttq_serve::coordinator::{BatchPolicy, Server, ServerConfig};
+use ttq_serve::coordinator::{BatchPolicy, ServeEvent, Server, ServerConfig};
 use ttq_serve::corpus::{CorpusStream, Split};
 use ttq_serve::eval::{EvalConfig, Evaluator};
 use ttq_serve::quant::{MethodRegistry, MethodSpec, QuantSpec};
@@ -51,7 +51,16 @@ USAGE:
   ttq-serve sweep <formats|lowrank-init|nf|prune>
   ttq-serve serve [--model M] [--requests N] [--method SPEC] [--bits Q]
                   [--rank R] [--domains d1,d2] [--backend B] [--exec-quant Q]
+                  [--max-new-tokens T] [--prompt-len L] [--cache-slots S]
   ttq-serve info
+
+SERVING (decode engine):
+  Prompts are prefilled once into the KV cache, then generated token by
+  token through the continuous-batching decode scheduler (streaming
+  Token/Done events). --prompt-len defaults to half the model context so
+  there is room to decode; --max-new-tokens bounds each generation
+  (clamped to the context window). Cached decode requires the native
+  backend — pjrt artifacts have no KV-cache variant.
 
 BACKENDS:
   pjrt     AOT HLO artifacts via the PJRT client (needs `make artifacts`)
@@ -231,9 +240,14 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let mut cfg = ServerConfig::new(model).with_method(method);
     cfg.spec = QuantSpec::new(a.get_u32("bits", 4), 32);
     cfg.policy = BatchPolicy::default();
+    cfg.max_new_tokens = a.get_usize("max-new-tokens", 8).max(1);
+    cfg.cache_slots = a.get_usize("cache-slots", 16).max(1);
     let requests = a.get_usize("requests", 64);
     let mut server = Server::new(backend.as_ref(), cfg)?;
-    let seq = server.seq();
+    let max_seq = server.max_seq();
+    let prompt_len = a
+        .get_usize("prompt-len", (max_seq / 2).max(1))
+        .clamp(1, max_seq);
     let domains = a.get_or("domains", "wt2s,c4s").to_string();
     let domain_list: Vec<&str> = domains.split(',').collect();
     let mut streams: Vec<CorpusStream> = domain_list
@@ -241,26 +255,40 @@ fn cmd_serve(a: &Args) -> Result<()> {
         .map(|d| CorpusStream::new(d, Split::Eval))
         .collect();
     let t0 = Instant::now();
-    let mut replies = 0usize;
+    let (mut tokens_streamed, mut done) = (0usize, 0usize);
+    let mut count = |events: &[ServeEvent]| {
+        for e in events {
+            match e {
+                ServeEvent::Token { .. } => tokens_streamed += 1,
+                ServeEvent::Done { .. } => done += 1,
+            }
+        }
+    };
     for i in 0..requests {
         // traffic switches domain partway — the domain-shift scenario
         // TTQ self-calibrates through
         let idx = (i * domain_list.len()) / requests.max(1);
         let s = &mut streams[idx.min(domain_list.len() - 1)];
-        let mut toks = vec![ttq_serve::corpus::BOS; seq];
+        let mut toks = vec![ttq_serve::corpus::BOS; prompt_len];
         for t in toks.iter_mut().skip(1) {
             *t = s.next_token();
         }
         server.submit(toks);
-        replies += server.step(Instant::now())?.len();
+        count(&server.step(Instant::now())?);
     }
-    replies += server.drain()?.len();
+    count(&server.drain()?);
     println!(
-        "served {replies}/{requests} requests in {:.2}s on the {} backend",
+        "served {done}/{requests} requests ({tokens_streamed} streamed tokens, \
+         prompt_len {prompt_len}) in {:.2}s on the {} backend",
         t0.elapsed().as_secs_f64(),
         backend.name()
     );
     println!("{}", server.metrics.summary());
+    let cs = server.cache_stats();
+    println!(
+        "kv cache: {} slots, high-water {}/{} tokens",
+        cs.slots, cs.high_water_tokens, cs.capacity_tokens
+    );
     println!("weight generations: {}", server.weight_generation());
     Ok(())
 }

@@ -189,6 +189,89 @@ pub fn ktokens_per_sec(
     1.0 / t / 1000.0
 }
 
+/// Predicted wall-clock of one *prefill* pass over `prompt_len` prompt
+/// tokens for one linear projection — the compute-bound half of the
+/// prefill/decode split. Unlike decode (a GEMV per token, re-moving the
+/// weights every step), prefill is a GEMM: the weights cross the memory
+/// bus once for the whole prompt while the flop count scales with
+/// `prompt_len` — which is why quantization buys far less wall-clock in
+/// prefill than in decode.
+pub fn prefill_time_s(
+    gpu: &GpuSpec,
+    d_out: usize,
+    d_in: usize,
+    spec: &QuantSpec,
+    mode: &DecodeMode,
+    prompt_len: usize,
+) -> f64 {
+    let q = mode.method.quantizer();
+    let quantized = q.quantizes();
+    let online = quantized && mode.method.is_online();
+    let rank = q.lowrank_rank();
+
+    let n = (d_out * d_in) as f64;
+    let l = prompt_len.max(1) as f64;
+    let bw = gpu.bw_gbps * 1e9;
+    let flops_cap = gpu.fp16_tflops * 1e12;
+    let fp16_bytes = n * 2.0;
+    let packed_bytes = n * spec.bytes_per_element();
+
+    // weights move once per prompt; flops scale with prompt length
+    let bytes = if quantized { packed_bytes } else { fp16_bytes };
+    let flops = 2.0 * n * l;
+    let mut t = (bytes / (bw * mode.kernel.eff(online))).max(flops / flops_cap) + gpu.overhead_s;
+
+    // online find_params runs exactly once, on the prompt itself — the
+    // un-amortized O[dT + 3d'd] pass of Eq. 3
+    if online {
+        t += (fp16_bytes + packed_bytes) / (bw * EFF_TTQ_QUANT);
+    }
+
+    // low-rank epilogue: factors move once, flops scale with the prompt
+    if rank > 0 {
+        let r = rank as f64;
+        let lr_bytes = r * (d_out + d_in) as f64 * 2.0;
+        let lr_flops = 2.0 * r * (d_out + d_in) as f64 * l;
+        t += (lr_bytes / (bw * Kernel::Fp16Gemv.eff(false))).max(lr_flops / flops_cap)
+            + 0.35 * gpu.overhead_s;
+    }
+    t
+}
+
+/// End-to-end generation wall-clock: one prefill over the prompt plus
+/// `new_tokens − 1` decode steps (the first token falls out of the
+/// prefill logits). The online quantization cost is charged once, in
+/// the prefill term — the decode term runs with an infinite amortization
+/// window so it is not double-counted.
+pub fn generation_time_s(
+    gpu: &GpuSpec,
+    d_out: usize,
+    d_in: usize,
+    spec: &QuantSpec,
+    mode: &DecodeMode,
+    prompt_len: usize,
+    new_tokens: usize,
+) -> f64 {
+    let prefill = prefill_time_s(gpu, d_out, d_in, spec, mode, prompt_len);
+    let steps = new_tokens.saturating_sub(1) as f64;
+    let per_step = 1.0 / (ktokens_per_sec(gpu, d_out, d_in, spec, mode, f64::INFINITY) * 1000.0);
+    prefill + steps * per_step
+}
+
+/// Generated tokens per second over a whole prefill + decode generation.
+pub fn generation_tokens_per_sec(
+    gpu: &GpuSpec,
+    d_out: usize,
+    d_in: usize,
+    spec: &QuantSpec,
+    mode: &DecodeMode,
+    prompt_len: usize,
+    new_tokens: usize,
+) -> f64 {
+    new_tokens.max(1) as f64
+        / generation_time_s(gpu, d_out, d_in, spec, mode, prompt_len, new_tokens)
+}
+
 /// Speedup of a mode over the FP16 baseline.
 pub fn speedup(
     gpu: &GpuSpec,
@@ -301,6 +384,58 @@ mod tests {
         let (dout, din) = QWEN3[0].qproj_dims();
         let k = ktokens_per_sec(gpu("A40"), dout, din, &spec4(), &DecodeMode::fp16(), 64.0);
         assert!(k > 25.0 && k < 120.0, "FP16 0.6B A40: {k}");
+    }
+
+    #[test]
+    fn quantization_helps_decode_more_than_prefill() {
+        // The whole point of the prefill/decode split: decode is
+        // memory-bound (weight traffic per token), prefill is compute-
+        // bound at long prompts — so W4 speedup over FP16 must be much
+        // larger in decode than in prefill.
+        let (dout, din) = QWEN3[5].qproj_dims();
+        let g = gpu("A100");
+        let s = spec4();
+        let awq = DecodeMode::awq_marlin();
+        let fp = DecodeMode::fp16();
+        let decode_speedup = ktokens_per_sec(g, dout, din, &s, &awq, 64.0)
+            / ktokens_per_sec(g, dout, din, &s, &fp, 64.0);
+        let prefill_speedup = prefill_time_s(g, dout, din, &s, &fp, 2048)
+            / prefill_time_s(g, dout, din, &s, &awq, 2048);
+        assert!(decode_speedup > 2.0, "decode speedup {decode_speedup}");
+        assert!(
+            prefill_speedup < decode_speedup / 1.5,
+            "prefill speedup {prefill_speedup} should trail decode {decode_speedup}"
+        );
+    }
+
+    #[test]
+    fn prefill_goes_compute_bound_with_prompt_length() {
+        let (dout, din) = QWEN3[3].qproj_dims();
+        let g = gpu("A40");
+        let s = spec4();
+        let short = prefill_time_s(g, dout, din, &s, &DecodeMode::fp16(), 16);
+        let long = prefill_time_s(g, dout, din, &s, &DecodeMode::fp16(), 4096);
+        assert!(long > short * 2.0, "prefill {short} → {long} must scale with L");
+    }
+
+    #[test]
+    fn generation_time_is_prefill_plus_decode_steps() {
+        let (dout, din) = QWEN3[2].qproj_dims();
+        let g = gpu("L40");
+        let s = spec4();
+        let m = DecodeMode::ttq(0);
+        let t1 = generation_time_s(g, dout, din, &s, &m, 256, 1);
+        let t65 = generation_time_s(g, dout, din, &s, &m, 256, 65);
+        // one generated token = pure prefill cost
+        assert!((t1 - prefill_time_s(g, dout, din, &s, &m, 256)).abs() < 1e-12);
+        // 64 extra decode steps at the un-amortized per-step rate
+        let per_step = (t65 - t1) / 64.0;
+        let want = 1.0 / (ktokens_per_sec(g, dout, din, &s, &m, f64::INFINITY) * 1000.0);
+        assert!((per_step - want).abs() / want < 1e-9);
+        // and quantized long generations out-throughput FP16
+        let ttq = generation_tokens_per_sec(g, dout, din, &s, &m, 256, 128);
+        let fp = generation_tokens_per_sec(g, dout, din, &s, &DecodeMode::fp16(), 256, 128);
+        assert!(ttq > fp, "ttq {ttq} vs fp16 {fp} at 128 generated tokens");
     }
 
     #[test]

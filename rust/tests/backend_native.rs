@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use ttq_serve::backend::{testmodel, ExecBackend, NativeBackend};
 use ttq_serve::coordinator::{
-    BatchPolicy, CalibratorConfig, OnlineCalibrator, Server, ServerConfig,
+    BatchPolicy, CalibratorConfig, OnlineCalibrator, ServeEvent, Server, ServerConfig,
 };
 use ttq_serve::corpus::{CorpusStream, Split, BOS};
 use ttq_serve::eval::{EvalConfig, Evaluator, MethodSpec};
@@ -314,25 +314,34 @@ fn eval_pipeline_runs_online_ttq_on_native() {
     assert!(ttq.is_finite() && ttq > 1.0);
 }
 
+fn count_done(events: &[ServeEvent]) -> usize {
+    events
+        .iter()
+        .filter(|e| matches!(e, ServeEvent::Done { .. }))
+        .count()
+}
+
 #[test]
 fn serving_loop_end_to_end_without_artifacts() {
-    // The acceptance path: submit → batch → observe → drift-triggered
-    // requantize → reply, all on the native backend, zero PJRT state.
+    // The acceptance path: submit → batch → prefill/observe → drift-
+    // triggered requantize → streamed decode, all on the native
+    // backend, zero PJRT state.
     let be = native();
     let mut cfg = ServerConfig::new("qwen-micro");
     cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
     cfg.spec = QuantSpec::new(4, 32);
     cfg.calib.drift_threshold = 0.005; // synthetic profiles are flat
+    cfg.max_new_tokens = 4;
     let mut server = Server::new(&be, cfg).unwrap();
-    let seq = server.seq();
+    let prompt_len = server.max_seq() / 2;
 
     // phase 1: one domain
     let mut a = CorpusStream::new("ptbs", Split::Eval);
-    let mut replies = 0usize;
+    let mut done = 0usize;
     for _ in 0..12 {
-        server.submit(prompt(&mut a, seq));
+        server.submit(prompt(&mut a, prompt_len));
     }
-    replies += server.drain().unwrap().len();
+    done += count_done(&server.drain().unwrap());
     assert!(
         server.weight_generation() >= 1,
         "first batch must commit a weight generation"
@@ -343,11 +352,11 @@ fn serving_loop_end_to_end_without_artifacts() {
     let mut b = CorpusStream::new("c4s", Split::Eval);
     for _ in 0..8 {
         for _ in 0..4 {
-            server.submit(prompt(&mut b, seq));
+            server.submit(prompt(&mut b, prompt_len));
         }
-        replies += server.drain().unwrap().len();
+        done += count_done(&server.drain().unwrap());
     }
-    assert_eq!(replies, 12 + 32, "every submitted request must be replied");
+    assert_eq!(done, 12 + 32, "every submitted request must complete");
     assert!(
         server.weight_generation() > gens_before,
         "domain shift did not requantize (gen stuck at {gens_before})"
@@ -355,6 +364,9 @@ fn serving_loop_end_to_end_without_artifacts() {
     use std::sync::atomic::Ordering::Relaxed;
     assert!(server.metrics.batches.load(Relaxed) < 44, "no batching happened");
     assert!(server.metrics.requants.load(Relaxed) >= 1);
+    // the decode phase actually ran: 4 tokens per request, 3 from decode
+    assert_eq!(server.metrics.decode_tokens.load(Relaxed), 44 * 3);
+    assert!(server.cache_stats().high_water_tokens > 0);
 }
 
 #[test]
@@ -364,16 +376,19 @@ fn serving_loop_runs_in_packed_execution_mode() {
     let be = native().with_exec_quant(QuantSpec::new(4, 32));
     let mut cfg = ServerConfig::new("opt-micro");
     cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
+    cfg.max_new_tokens = 3;
     let mut server = Server::new(&be, cfg).unwrap();
-    let seq = server.seq();
+    let prompt_len = server.max_seq() / 2;
     let mut s = CorpusStream::new("wt2s", Split::Eval);
     for _ in 0..8 {
-        server.submit(prompt(&mut s, seq));
+        server.submit(prompt(&mut s, prompt_len));
     }
-    let replies = server.drain().unwrap();
-    assert_eq!(replies.len(), 8);
-    for r in &replies {
-        assert!(r.next_token >= 0 && (r.next_token as usize) < 512);
+    let events = server.drain().unwrap();
+    assert_eq!(count_done(&events), 8);
+    for e in &events {
+        if let ServeEvent::Token { token, .. } = e {
+            assert!(*token >= 0 && (*token as usize) < 512);
+        }
     }
     assert!(server.weight_generation() >= 1);
 }

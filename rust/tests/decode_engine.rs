@@ -1,0 +1,415 @@
+//! Decode-engine correctness suite — runs with ZERO artifacts.
+//!
+//! The acceptance contract: cached incremental decode is **bit-identical**
+//! to full-prefix recompute on every synthetic model family, in both
+//! fp32 and packed-W4 execution. Plus the serving-layer contracts:
+//! streaming event shape, continuous batching at mixed positions,
+//! mid-generation drift→requantize, KV-slot backpressure, and the
+//! padding-row stats regression (bucket slack must never feed the
+//! calibrator).
+
+use std::time::{Duration, Instant};
+
+use ttq_serve::backend::{testmodel, ExecBackend, NativeBackend};
+use ttq_serve::coordinator::{BatchPolicy, ServeEvent, Server, ServerConfig};
+use ttq_serve::corpus::{CorpusStream, Split, BOS};
+use ttq_serve::eval::Evaluator;
+use ttq_serve::kvcache::{KvCache, KvCacheConfig};
+use ttq_serve::quant::QuantSpec;
+use ttq_serve::util::argmax;
+
+fn native() -> NativeBackend {
+    NativeBackend::new(&ttq_serve::artifacts_dir())
+}
+
+fn prompt(stream: &mut CorpusStream, len: usize) -> Vec<i32> {
+    let mut toks = vec![BOS; len];
+    for t in toks.iter_mut().skip(1) {
+        *t = stream.next_token();
+    }
+    toks
+}
+
+// ---------------------------------------------------------------------
+// Golden: cached decode ≡ full recompute, bit for bit
+// ---------------------------------------------------------------------
+
+fn assert_cached_matches_recompute(model: &str, be: &NativeBackend) {
+    let w = testmodel::build(model).unwrap();
+    let (vocab, max_seq) = (w.manifest.config.vocab, w.manifest.config.max_seq);
+    let prompt_len = max_seq / 2;
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let mut toks = prompt(&mut s, prompt_len);
+
+    let mut cache = KvCache::new(KvCacheConfig::from_manifest(&w.manifest, 2));
+    let id = cache.alloc().unwrap();
+    let step = be.prefill(&w, &toks, &mut cache, &[id], false).unwrap();
+    let full = be.logits(&w, &toks, 1).unwrap();
+    assert_eq!(
+        step.logits[..],
+        full[(prompt_len - 1) * vocab..],
+        "{model}: prefill logits differ from the full forward"
+    );
+
+    let mut tok = argmax(&step.logits) as i32;
+    for i in 0..8 {
+        toks.push(tok);
+        let out = be
+            .decode_step(&w, &[tok], &mut cache, &[id], false)
+            .unwrap();
+        let full = be.logits(&w, &toks, 1).unwrap();
+        assert_eq!(
+            out.logits[..],
+            full[(toks.len() - 1) * vocab..],
+            "{model} decode step {i}: cached != full recompute (must be bit-identical)"
+        );
+        tok = argmax(&out.logits) as i32;
+    }
+    assert_eq!(cache.len(id), prompt_len + 8);
+}
+
+#[test]
+fn golden_cached_decode_fp32_all_families() {
+    let be = native();
+    for model in ["opt-micro", "qwen-micro", "gemma-micro"] {
+        assert_cached_matches_recompute(model, &be);
+    }
+}
+
+#[test]
+fn golden_cached_decode_packed_w4_all_families() {
+    let be = native().with_exec_quant(QuantSpec::new(4, 32));
+    for model in ["opt-micro", "qwen-micro", "gemma-micro"] {
+        assert_cached_matches_recompute(model, &be);
+    }
+}
+
+#[test]
+fn batched_decode_matches_solo_at_mixed_positions() {
+    // Continuous batching: sequences at different lengths decoded in one
+    // batch must produce exactly the logits of solo decoding.
+    let be = native();
+    let w = testmodel::build("qwen-micro").unwrap();
+    let mut s = CorpusStream::new("c4s", Split::Eval);
+    let p1 = prompt(&mut s, 20);
+    let p2 = prompt(&mut s, 29);
+
+    // solo reference: per-step logits of each sequence alone
+    let solo = |p: &[i32]| -> Vec<Vec<f32>> {
+        let mut cache = KvCache::new(KvCacheConfig::from_manifest(&w.manifest, 1));
+        let id = cache.alloc().unwrap();
+        let mut out = Vec::new();
+        let step = be.prefill(&w, p, &mut cache, &[id], false).unwrap();
+        let mut tok = argmax(&step.logits) as i32;
+        out.push(step.logits);
+        for _ in 0..6 {
+            let step = be
+                .decode_step(&w, &[tok], &mut cache, &[id], false)
+                .unwrap();
+            tok = argmax(&step.logits) as i32;
+            out.push(step.logits);
+        }
+        out
+    };
+    let ref1 = solo(&p1);
+    let ref2 = solo(&p2);
+
+    // joint: separate prefills (different lengths), joint decode batch
+    let mut cache = KvCache::new(KvCacheConfig::from_manifest(&w.manifest, 2));
+    let a = cache.alloc().unwrap();
+    let b = cache.alloc().unwrap();
+    let s1 = be.prefill(&w, &p1, &mut cache, &[a], false).unwrap();
+    let s2 = be.prefill(&w, &p2, &mut cache, &[b], false).unwrap();
+    assert_eq!(s1.logits, ref1[0]);
+    assert_eq!(s2.logits, ref2[0]);
+    let mut t1 = argmax(&s1.logits) as i32;
+    let mut t2 = argmax(&s2.logits) as i32;
+    let vocab = w.manifest.config.vocab;
+    for i in 1..=6 {
+        let out = be
+            .decode_step(&w, &[t1, t2], &mut cache, &[a, b], false)
+            .unwrap();
+        assert_eq!(out.logits[..vocab], ref1[i][..], "seq 1 step {i}");
+        assert_eq!(out.logits[vocab..], ref2[i][..], "seq 2 step {i}");
+        t1 = argmax(&out.logits[..vocab]) as i32;
+        t2 = argmax(&out.logits[vocab..]) as i32;
+    }
+}
+
+#[test]
+fn evaluator_generate_matches_full_recompute_argmax() {
+    let be = native();
+    let ev = Evaluator::new(&be, "gemma-micro").unwrap();
+    let vocab = ev.weights.manifest.config.vocab;
+    let mut s = CorpusStream::new("ptbs", Split::Eval);
+    let p = prompt(&mut s, 24);
+    let got = ev.generate(&p, 6, None).unwrap();
+    // reference: greedy over full-prefix recompute
+    let mut toks = p.clone();
+    let mut want = Vec::new();
+    for _ in 0..6 {
+        let logits = be.logits(&ev.weights, &toks, 1).unwrap();
+        let tok = argmax(&logits[(toks.len() - 1) * vocab..]) as i32;
+        want.push(tok);
+        toks.push(tok);
+    }
+    assert_eq!(got, want);
+}
+
+// ---------------------------------------------------------------------
+// Serving layer: streaming events, stop conditions, backpressure
+// ---------------------------------------------------------------------
+
+#[test]
+fn event_stream_contract_with_mixed_prompt_lengths() {
+    let be = native();
+    let mut cfg = ServerConfig::new("opt-micro");
+    cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
+    cfg.max_new_tokens = 5;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    // mixed lengths in one fired batch exercise the length grouping
+    let ids = [
+        server.submit(prompt(&mut s, 16)),
+        server.submit(prompt(&mut s, 24)),
+        server.submit(prompt(&mut s, 24)),
+        server.submit(prompt(&mut s, 16)),
+    ];
+    let events = server.drain().unwrap();
+    for rid in ids {
+        let toks: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { id, token, .. } if *id == rid => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(toks.len(), 5, "request {rid} token stream");
+        let indices: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { id, index, .. } if *id == rid => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(indices, vec![0, 1, 2, 3, 4], "indices stream in order");
+        let dones: Vec<&ServeEvent> = events
+            .iter()
+            .filter(|e| matches!(e, ServeEvent::Done { id, .. } if *id == rid))
+            .collect();
+        assert_eq!(dones.len(), 1, "exactly one Done per request");
+        match dones[0] {
+            ServeEvent::Done { tokens, .. } => {
+                assert_eq!(tokens, &toks, "Done carries the streamed tokens")
+            }
+            _ => unreachable!(),
+        }
+    }
+    assert_eq!(server.running(), 0);
+    assert_eq!(server.cache_stats().active_seqs, 0, "slots recycled");
+    assert!(server.cache_stats().high_water_tokens > 0);
+}
+
+#[test]
+fn full_context_prompt_yields_exactly_one_token() {
+    // prompt_len == max_seq leaves no decode room — the engine degrades
+    // to the pre-decode-engine one-shot behavior.
+    let be = native();
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.max_new_tokens = 16;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let max_seq = server.max_seq();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    server.submit(prompt(&mut s, max_seq));
+    let events = server.drain().unwrap();
+    let tokens = events
+        .iter()
+        .filter(|e| matches!(e, ServeEvent::Token { .. }))
+        .count();
+    assert_eq!(tokens, 1);
+    assert!(matches!(
+        events.last().unwrap(),
+        ServeEvent::Done { tokens, .. } if tokens.len() == 1
+    ));
+}
+
+#[test]
+fn eos_token_stops_generation_early() {
+    let be = native();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let p = prompt(&mut s, 24);
+    // discover the deterministic second generated token, then use it as EOS
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.max_new_tokens = 6;
+    let mut probe = Server::new(&be, cfg.clone()).unwrap();
+    probe.submit(p.clone());
+    let events = probe.drain().unwrap();
+    let second = events
+        .iter()
+        .filter_map(|e| match e {
+            ServeEvent::Token { token, index: 1, .. } => Some(*token),
+            _ => None,
+        })
+        .next()
+        .unwrap();
+
+    cfg.eos = Some(second);
+    let mut server = Server::new(&be, cfg).unwrap();
+    server.submit(p);
+    let events = server.drain().unwrap();
+    match events.last().unwrap() {
+        ServeEvent::Done { tokens, .. } => {
+            // stops the moment EOS is emitted (index 1, or 0 if the
+            // first token happens to coincide) — never the full budget
+            assert!(tokens.len() <= 2, "generation ran past EOS: {tokens:?}");
+            assert_eq!(*tokens.last().unwrap(), second);
+        }
+        e => panic!("expected Done, got {e:?}"),
+    }
+}
+
+#[test]
+fn cache_backpressure_requeues_and_serves_everything() {
+    let be = native();
+    let mut cfg = ServerConfig::new("opt-micro");
+    cfg.policy = BatchPolicy { buckets: vec![4], linger: Duration::ZERO };
+    cfg.cache_slots = 2; // smaller than the bucket — forces requeueing
+    cfg.max_new_tokens = 3;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let mut s = CorpusStream::new("c4s", Split::Eval);
+    let n = 6;
+    for _ in 0..n {
+        server.submit(prompt(&mut s, 20));
+    }
+    let events = server.drain().unwrap();
+    let done = events
+        .iter()
+        .filter(|e| matches!(e, ServeEvent::Done { .. }))
+        .count();
+    assert_eq!(done, n, "every request must complete despite 2 KV slots");
+    assert!(server.cache_stats().high_water_tokens <= 2 * server.max_seq());
+}
+
+// ---------------------------------------------------------------------
+// Mid-stream drift → requantize (the TTQ continuous-calibration claim)
+// ---------------------------------------------------------------------
+
+fn assert_midstream_requant(be: &NativeBackend) {
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.policy = BatchPolicy { buckets: vec![1], linger: Duration::ZERO };
+    cfg.max_new_tokens = 10;
+    // hair-trigger drift: every per-token stats observation requantizes
+    cfg.calib.drift_threshold = 1e-9;
+    let mut server = Server::new(be, cfg).unwrap();
+    let prompt_len = server.max_seq() / 2;
+    let mut s = CorpusStream::new("ptbs", Split::Eval);
+    server.submit(prompt(&mut s, prompt_len));
+    let events = server.drain().unwrap();
+    let gens: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            ServeEvent::Token { weight_generation, .. } => Some(*weight_generation),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(gens.len(), 10);
+    assert!(
+        gens.windows(2).all(|w| w[0] <= w[1]),
+        "weight generation must be monotone: {gens:?}"
+    );
+    assert!(
+        gens.last().unwrap() > gens.first().unwrap(),
+        "no mid-stream requantization observed in token events: {gens:?}"
+    );
+    assert!(matches!(events.last().unwrap(), ServeEvent::Done { .. }));
+}
+
+#[test]
+fn midstream_requant_bumps_generation_in_token_events() {
+    assert_midstream_requant(&native());
+}
+
+#[test]
+fn midstream_requant_repacks_w4_execution() {
+    // same loop under packed execution: each weight generation must
+    // repack transparently (version-keyed cache) and keep serving
+    assert_midstream_requant(&native().with_exec_quant(QuantSpec::new(4, 32)));
+}
+
+// ---------------------------------------------------------------------
+// Padding regression: bucket slack must never feed the calibrator
+// ---------------------------------------------------------------------
+
+#[test]
+fn padded_batch_and_unpadded_equivalent_produce_identical_diagonals() {
+    let be = native();
+    let n_linears = testmodel::build("qwen-micro").unwrap().manifest.linears.len();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let prompts: Vec<Vec<i32>> = (0..3).map(|_| prompt(&mut s, 32)).collect();
+
+    let run = |buckets: Vec<usize>| -> (Vec<Vec<f32>>, Vec<i32>, u64) {
+        let mut cfg = ServerConfig::new("qwen-micro");
+        cfg.policy = BatchPolicy { buckets, linger: Duration::ZERO };
+        cfg.max_new_tokens = 3;
+        let mut server = Server::new(&be, cfg).unwrap();
+        for p in &prompts {
+            server.submit(p.clone());
+        }
+        let events = server.drain().unwrap();
+        let toks: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        let diags: Vec<Vec<f32>> =
+            (0..n_linears).map(|i| server.calibrator().diag(i)).collect();
+        let padded = server
+            .metrics
+            .padded_rows
+            .load(std::sync::atomic::Ordering::Relaxed);
+        (diags, toks, padded)
+    };
+
+    // bucket 4 fires a padded batch (3 real + 1 slack row); bucket 3 is
+    // exact — the calibrator state must be bitwise identical either way
+    let (diag_padded, toks_padded, slack) = run(vec![4]);
+    let (diag_exact, toks_exact, no_slack) = run(vec![3]);
+    assert_eq!(slack, 1, "test setup: the bucket-4 batch must carry slack");
+    assert_eq!(no_slack, 0);
+    assert_eq!(toks_padded, toks_exact, "token streams must agree");
+    assert_eq!(
+        diag_padded, diag_exact,
+        "bucket padding leaked into the calibrator diagonals"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Drain uses force_flush (no fabricated clock)
+// ---------------------------------------------------------------------
+
+#[test]
+fn drain_flushes_lingering_requests_immediately() {
+    let be = native();
+    let mut cfg = ServerConfig::new("opt-micro");
+    // a linger long enough that a fabricated-now bug would stall
+    cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::from_secs(3600) };
+    cfg.max_new_tokens = 2;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    server.submit(prompt(&mut s, 16));
+    // a poll-based step does nothing before the linger deadline
+    assert!(server.step(Instant::now()).unwrap().is_empty());
+    assert_eq!(server.pending(), 1);
+    let t0 = Instant::now();
+    let events = server.drain().unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(60), "drain must not wait out linger");
+    assert_eq!(
+        events
+            .iter()
+            .filter(|e| matches!(e, ServeEvent::Done { .. }))
+            .count(),
+        1
+    );
+}
