@@ -1,10 +1,13 @@
 //! Multi-token streaming generation through the decode engine.
 //!
-//! Submits a handful of prompts, then drives the server step by step,
-//! printing each `ServeEvent::Token` as it streams out — the shape of a
-//! real serving integration (SSE/websocket handlers consume exactly
-//! this event stream). Also shows the same generation through the
-//! lower-level `Evaluator::generate` convenience.
+//! Submits a handful of prompts — one of them decoded speculatively
+//! (quantized drafter + fp32 verifier) — then drives the server step by
+//! step, printing each `ServeEvent::Token` as it streams out — the
+//! shape of a real serving integration (SSE/websocket handlers consume
+//! exactly this event stream). Every `Done` reports *why* generation
+//! stopped (`MaxNewTokens` / `Eos` / `ContextFull`). Also shows the
+//! same generation through the lower-level `Evaluator::generate`
+//! convenience.
 //!
 //! ```bash
 //! cargo run --release --example streaming_generate
@@ -32,13 +35,21 @@ fn main() -> Result<()> {
     let prompt_len = server.max_seq() / 2;
     let mut stream = CorpusStream::new("wt2s", Split::Eval);
 
-    for _ in 0..3 {
-        let mut toks = vec![BOS; prompt_len];
+    let mut mk_prompt = |len: usize| {
+        let mut toks = vec![BOS; len];
         for t in toks.iter_mut().skip(1) {
             *t = stream.next_token();
         }
-        server.submit(toks);
+        toks
+    };
+    for _ in 0..2 {
+        server.submit(mk_prompt(prompt_len));
     }
+    // the third request decodes speculatively: the quantized weights
+    // only draft, a full-precision verifier commits every token —
+    // stream quality is exactly the fp32 model's
+    let spec_id = server.submit_speculative(mk_prompt(prompt_len));
+    println!("request {spec_id} decodes speculatively (W4 drafter + fp32 verifier)\n");
 
     // drive the engine until every request is done, streaming tokens
     while server.pending() > 0 || server.running() > 0 {
@@ -47,9 +58,10 @@ fn main() -> Result<()> {
                 ServeEvent::Token { id, token, index, weight_generation } => {
                     println!("req {id}: token[{index}] = {token} (weight gen {weight_generation})");
                 }
-                ServeEvent::Done { id, tokens, prompt_len } => {
+                ServeEvent::Done { id, tokens, prompt_len, stop } => {
                     println!(
-                        "req {id}: DONE — {} tokens generated after a {prompt_len}-token prompt: {tokens:?}",
+                        "req {id}: DONE ({stop:?}) — {} tokens generated after a \
+                         {prompt_len}-token prompt: {tokens:?}",
                         tokens.len()
                     );
                 }
@@ -58,13 +70,15 @@ fn main() -> Result<()> {
     }
 
     println!("\n{}", server.metrics.summary());
+    println!(
+        "speculative acceptance EWMA {:.2}, final draft depth k={}",
+        server.spec_controller().acceptance(),
+        server.spec_controller().k()
+    );
 
     // the same thing without a server, for scripts and evals
     let ev = Evaluator::new(backend.as_ref(), "qwen-micro")?;
-    let mut prompt = vec![BOS; prompt_len];
-    for t in prompt.iter_mut().skip(1) {
-        *t = stream.next_token();
-    }
+    let prompt = mk_prompt(prompt_len);
     let generated = ev.generate(&prompt, 10, None)?;
     println!("\nEvaluator::generate: {generated:?}");
     Ok(())

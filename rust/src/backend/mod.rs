@@ -27,8 +27,13 @@
 //! [`ExecBackend::decode_step`]: a cached forward over a
 //! [`crate::kvcache::KvCache`] whose decode step computes one token per
 //! sequence instead of re-running the whole prefix — the memory-bound
-//! phase where packed low-bit weights actually buy wall-clock. Only the
-//! native backend implements it (PJRT artifacts are fixed-shape).
+//! phase where packed low-bit weights actually buy wall-clock. The
+//! speculative-decoding subsystem ([`crate::specdec`]) adds
+//! [`ExecBackend::verify_step`]: the same cached forward over a k-row
+//! causal window, returning logits at *every* new position so a
+//! full-precision verifier can score a quantized drafter's tokens in
+//! one pass. Only the native backend implements the cached family
+//! (PJRT artifacts are fixed-shape).
 
 pub mod native;
 pub mod pjrt;
@@ -61,9 +66,11 @@ pub struct BatchStats {
 }
 
 /// Output of one cached-forward step ([`ExecBackend::prefill`] /
-/// [`ExecBackend::decode_step`]).
+/// [`ExecBackend::decode_step`] / [`ExecBackend::verify_step`]).
 pub struct StepOut {
-    /// Last-position logits per sequence, flat `(n_seqs × vocab)`.
+    /// Logits, flat row-major. Prefill/decode return the **last**
+    /// position only, `(n_seqs × vocab)`; `verify_step` returns every
+    /// new position, `(n_seqs × new_len × vocab)`.
     pub logits: Vec<f32>,
     /// Per-linear activation statistics tapped *inside* the step (in
     /// manifest `linears` order), when requested — this is what lets
@@ -159,6 +166,33 @@ pub trait ExecBackend: Send + Sync {
     ) -> Result<StepOut> {
         bail!(
             "backend '{}' does not support cached prefill/decode — use the native backend",
+            self.name()
+        );
+    }
+
+    /// Score several new positions per sequence in **one** cached
+    /// forward — the speculative-decoding verifier. `draft_tokens` is
+    /// `(ids.len() × new_len)` row-major: each sequence's last committed
+    /// token followed by its draft tokens. The k-row causal window
+    /// generalizes [`Self::decode_step`]'s one-row attention: position
+    /// `p` attends over the cached prefix plus the fresh rows `0..=p`,
+    /// and the returned logits cover **every** new position
+    /// (`ids.len() × new_len × vocab`), so the caller can accept the
+    /// longest matching draft prefix and roll the cache back with
+    /// [`KvCache::truncate`]. Per-row computation is identical to
+    /// `decode_step`, which makes verification bit-exact against plain
+    /// decode. With `with_stats`, per-linear activation norms over the
+    /// verified tokens ride along for the online calibrator.
+    fn verify_step(
+        &self,
+        _weights: &ModelWeights,
+        _draft_tokens: &[i32],
+        _cache: &mut KvCache,
+        _ids: &[SeqId],
+        _with_stats: bool,
+    ) -> Result<StepOut> {
+        bail!(
+            "backend '{}' does not support speculative verification — use the native backend",
             self.name()
         );
     }

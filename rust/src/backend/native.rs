@@ -566,8 +566,15 @@ fn cproj(
 /// decode bit-identical to re-running the full prefix — pinned by the
 /// decode-engine golden tests.
 ///
+/// `all_positions` selects the LM-head policy: `false` projects only
+/// each sequence's **last** position (prefill/decode — one vocab GEMV
+/// per sequence), `true` projects every fresh position (the
+/// speculative verifier needs logits at all `new_len` rows to score the
+/// drafts).
+///
 /// Returns the logits plus the tapped per-linear norm sums (empty
 /// unless `with_stats`).
+#[allow(clippy::too_many_arguments)]
 fn forward_cached(
     weights: &ModelWeights,
     tokens: &[i32],
@@ -575,6 +582,7 @@ fn forward_cached(
     ids: &[SeqId],
     mode: &ExecMode,
     with_stats: bool,
+    all_positions: bool,
     threads: usize,
 ) -> Result<(Mat, TapNorms)> {
     let man: &Manifest = &weights.manifest;
@@ -786,6 +794,10 @@ fn forward_cached(
     for &id in ids {
         cache.advance(id, new_len)?;
     }
+    if all_positions {
+        // verifier path: logits at every fresh position
+        return Ok((matmul_bt_mt(&hf, embed, threads), taps));
+    }
     // tied LM head over the *last* position of each sequence only —
     // the decode payoff: one vocab GEMV per sequence, not per token
     let mut last = Mat::zeros(n_seqs, d);
@@ -930,17 +942,33 @@ impl NativeBackend {
         cache: &mut KvCache,
         ids: &[SeqId],
         with_stats: bool,
+        all_positions: bool,
     ) -> Result<StepOut> {
         let (logits, tap_norms) = match &self.exec_spec {
             Some(spec) => {
                 let packed = self.packed_for(weights, spec)?;
                 let mode = ExecMode::Packed(packed.as_ref());
-                forward_cached(weights, tokens, cache, ids, &mode, with_stats, self.threads)?
+                forward_cached(
+                    weights,
+                    tokens,
+                    cache,
+                    ids,
+                    &mode,
+                    with_stats,
+                    all_positions,
+                    self.threads,
+                )?
             }
-            None => {
-                let mode = ExecMode::Plain;
-                forward_cached(weights, tokens, cache, ids, &mode, with_stats, self.threads)?
-            }
+            None => forward_cached(
+                weights,
+                tokens,
+                cache,
+                ids,
+                &ExecMode::Plain,
+                with_stats,
+                all_positions,
+                self.threads,
+            )?,
         };
         let stats = if with_stats {
             let linears = &weights.manifest.linears;
@@ -1063,7 +1091,7 @@ impl ExecBackend for NativeBackend {
                 bail!("prefill into a non-empty sequence (len {})", cache.len(id));
             }
         }
-        self.cached_step(weights, tokens, cache, ids, with_stats)
+        self.cached_step(weights, tokens, cache, ids, with_stats, false)
     }
 
     fn decode_step(
@@ -1086,7 +1114,30 @@ impl ExecBackend for NativeBackend {
                 bail!("decode_step on an unprefilled sequence");
             }
         }
-        self.cached_step(weights, last_tokens, cache, ids, with_stats)
+        self.cached_step(weights, last_tokens, cache, ids, with_stats, false)
+    }
+
+    fn verify_step(
+        &self,
+        weights: &ModelWeights,
+        draft_tokens: &[i32],
+        cache: &mut KvCache,
+        ids: &[SeqId],
+        with_stats: bool,
+    ) -> Result<StepOut> {
+        if ids.is_empty() || draft_tokens.is_empty() || draft_tokens.len() % ids.len() != 0 {
+            bail!(
+                "verify_step token block is {} elements, not divisible into {} sequences",
+                draft_tokens.len(),
+                ids.len()
+            );
+        }
+        for &id in ids {
+            if cache.len(id) == 0 {
+                bail!("verify_step on an unprefilled sequence");
+            }
+        }
+        self.cached_step(weights, draft_tokens, cache, ids, with_stats, true)
     }
 }
 

@@ -11,9 +11,14 @@
 //!   self-calibration", Fig. 1b) deciding when weights are re-quantized.
 //! * [`server`] — the decode engine: batched prefill, a continuous-
 //!   batching decode scheduler over the [`crate::kvcache::KvCache`],
-//!   streaming [`server::ServeEvent`] replies, and mid-generation
-//!   drift-triggered requantization; owns quantized weight generations.
-//! * [`metrics`] — lock-free counters, split by prefill/decode phase.
+//!   streaming [`server::ServeEvent`] replies, mid-generation
+//!   drift-triggered requantization, and a per-request decode strategy
+//!   (plain quantized decode vs. self-speculative decode through
+//!   [`crate::specdec`], where the quantized weights draft and a
+//!   full-precision verifier commits); owns quantized weight
+//!   generations.
+//! * [`metrics`] — lock-free counters, split by prefill/decode phase
+//!   plus speculative round accounting.
 
 pub mod batcher;
 pub mod calibrator;
@@ -23,4 +28,4 @@ pub mod server;
 pub use batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
 pub use calibrator::{CalibratorConfig, OnlineCalibrator};
 pub use metrics::Metrics;
-pub use server::{ServeEvent, Server, ServerConfig};
+pub use server::{ServeEvent, Server, ServerConfig, StopReason};

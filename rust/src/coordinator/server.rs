@@ -27,7 +27,28 @@
 //! methods (RTN, NF) quantize once before the first prefill; correlation
 //! methods (GPTQ) are rejected up front — the serving path has no corr
 //! artifact.
+//!
+//! **Per-request decode strategy.** A request enters through
+//! [`Server::submit`] (plain: one cached `decode_step` per engine step,
+//! served by the quantized weights) or
+//! [`Server::submit_speculative`] (self-speculative: the quantized
+//! weights only *draft*; a full-precision verifier commits tokens, so
+//! the stream is token-identical to the fp32 model). Speculative
+//! sequences hold a second KV slot for the drafter, verify all drafts
+//! in one [`crate::backend::ExecBackend::verify_step`], and roll both
+//! caches back at the first rejection. Verifier-side activation stats
+//! keep feeding the calibrator — but only from fully-committed verify
+//! windows, so rejected draft rows can never pollute the statistics
+//! (the same purity rule that keeps bucket padding out) — and a
+//! mid-stream requantization transparently swaps the drafter weights
+//! (the packed cache re-keys on
+//! [`crate::models::ModelWeights::version`]) and resets the
+//! acceptance EWMA that drives the adaptive draft depth. All the
+//! speculative machinery (fp32 snapshot, drafter/verifier backends,
+//! draft KV slab) materializes lazily on the first speculative submit —
+//! plain-only servers pay nothing for it.
 
+use std::collections::HashSet;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -35,10 +56,12 @@ use anyhow::{bail, Result};
 use super::batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
 use super::calibrator::{CalibratorConfig, OnlineCalibrator};
 use super::metrics::Metrics;
-use crate::backend::ExecBackend;
-use crate::eval::{EvalConfig, Evaluator};
+use crate::backend::{ExecBackend, NativeBackend};
+use crate::eval::{EvalConfig, Evaluator, Sampler};
 use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, SeqId};
+use crate::models::ModelWeights;
 use crate::quant::{MethodSpec, QuantSpec};
+use crate::specdec::{spec_round, DraftState, SpecConfig, SpecController, SpecModel};
 use crate::util::argmax;
 
 #[derive(Clone, Debug)]
@@ -61,6 +84,9 @@ pub struct ServerConfig {
     /// Concurrently resident sequences in the KV cache (admission
     /// backpressure beyond this: requests stay queued).
     pub cache_slots: usize,
+    /// Speculative-decoding policy for requests submitted through
+    /// [`Server::submit_speculative`] (draft depth, adaptivity).
+    pub specdec: SpecConfig,
 }
 
 impl ServerConfig {
@@ -74,6 +100,7 @@ impl ServerConfig {
             max_new_tokens: 16,
             eos: None,
             cache_slots: 16,
+            specdec: SpecConfig::default(),
         }
     }
 
@@ -86,6 +113,23 @@ impl ServerConfig {
         self.max_new_tokens = n.max(1);
         self
     }
+
+    pub fn with_specdec(mut self, specdec: SpecConfig) -> Self {
+        self.specdec = specdec;
+        self
+    }
+}
+
+/// Why a generation ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The configured `max_new_tokens` budget was exhausted.
+    MaxNewTokens,
+    /// The configured EOS token was emitted.
+    Eos,
+    /// The context window filled before the budget did (the effective
+    /// budget was clamped to the room left after the prompt).
+    ContextFull,
 }
 
 /// Streamed serving reply. One `Token` per generated token (in
@@ -107,6 +151,8 @@ pub enum ServeEvent {
         /// The full generated suffix (prompt not included).
         tokens: Vec<i32>,
         prompt_len: usize,
+        /// Why this generation stopped.
+        stop: StopReason,
     },
 }
 
@@ -129,6 +175,9 @@ struct SequenceState {
     /// Effective budget (config clamped to context room).
     max_new: usize,
     arrived: Instant,
+    /// Speculative sequences carry the drafter's dual-cache state; plain
+    /// sequences decode one token per step on the serving weights.
+    spec: Option<DraftState>,
 }
 
 impl SequenceState {
@@ -136,6 +185,26 @@ impl SequenceState {
         self.generated.len() >= self.max_new
             || eos.is_some_and(|e| self.generated.last() == Some(&e))
     }
+}
+
+/// Speculative-decoding machinery, materialized lazily on the first
+/// [`Server::submit_speculative`] — a plain-only server never pays the
+/// fp32 weight fork or the second KV slab.
+struct SpecState {
+    /// Full-precision snapshot (pristine linears, fresh version): what
+    /// the verifier executes. Requantization never touches it.
+    verifier_weights: ModelWeights,
+    /// Dense fp32 execution for the verifier (`verify_step` + the
+    /// speculative prefill), regardless of the serving backend's mode.
+    verifier_backend: NativeBackend,
+    /// Packed execution for the drafter at the serving bit-width: runs
+    /// the *serving* weights (`ev.weights`), so every requantization —
+    /// which bumps [`ModelWeights::version`] — transparently swaps the
+    /// drafter through the version-keyed packed cache.
+    drafter_backend: NativeBackend,
+    /// The drafter's own KV slab (dual-cache, never forked from the
+    /// verifier's: the two models disagree about every hidden state).
+    draft_cache: KvCache,
 }
 
 pub struct Server<'b> {
@@ -149,6 +218,15 @@ pub struct Server<'b> {
     next_id: RequestId,
     /// Weight-only methods quantize once; set before the first prefill.
     static_applied: bool,
+    // -- speculative decoding ------------------------------------------
+    /// Lazily-built drafter/verifier pair + draft KV slab.
+    spec_state: Option<SpecState>,
+    /// Adaptive draft depth from the acceptance EWMA; reset on requant.
+    spec_ctrl: SpecController,
+    /// Requests awaiting admission that asked for speculative decode.
+    spec_requests: HashSet<RequestId>,
+    /// Verifier-side token selection (greedy — the exactness mode).
+    sampler: Sampler,
 }
 
 impl<'b> Server<'b> {
@@ -175,6 +253,7 @@ impl<'b> Server<'b> {
         let calibrator = OnlineCalibrator::new(calib_cfg, &man.norm_ps, &d_ins);
         let batcher = Batcher::new(cfg.policy.clone());
         let cache = KvCache::new(KvCacheConfig::from_manifest(man, cfg.cache_slots));
+        let spec_ctrl = SpecController::new(&cfg.specdec);
         Ok(Server {
             cfg,
             ev,
@@ -185,7 +264,34 @@ impl<'b> Server<'b> {
             metrics: Metrics::new(),
             next_id: 0,
             static_applied: false,
+            spec_state: None,
+            spec_ctrl,
+            spec_requests: HashSet::new(),
+            sampler: Sampler::greedy(),
         })
+    }
+
+    /// Build the drafter/verifier pair on first speculative demand.
+    /// [`Evaluator::pristine_weights`] restores the fp32 linears, so the
+    /// snapshot is full-precision even if quantization already ran.
+    fn ensure_spec_state(&mut self) {
+        if self.spec_state.is_some() {
+            return;
+        }
+        let man = &self.ev.weights.manifest;
+        let dir = self.ev.backend.models_dir();
+        self.spec_state = Some(SpecState {
+            verifier_weights: self.ev.pristine_weights(),
+            verifier_backend: NativeBackend::new(dir),
+            drafter_backend: NativeBackend::new(dir).with_exec_quant(self.cfg.spec.clone()),
+            draft_cache: KvCache::new(KvCacheConfig::from_manifest(man, self.cfg.cache_slots)),
+        });
+    }
+
+    /// Tokens resident in the drafter's KV slab (0 when speculative
+    /// decoding has never been used).
+    fn draft_tokens_used(&self) -> usize {
+        self.spec_state.as_ref().map_or(0, |s| s.draft_cache.used_tokens())
     }
 
     pub fn seq(&self) -> usize {
@@ -210,8 +316,30 @@ impl<'b> Server<'b> {
         self.cache.stats()
     }
 
+    /// The adaptive-k speculative controller (read access for
+    /// diagnostics/tests: current depth + acceptance EWMA).
+    pub fn spec_controller(&self) -> &SpecController {
+        &self.spec_ctrl
+    }
+
     /// Enqueue a BOS-led prompt of `1..=max_seq` in-vocabulary tokens.
     pub fn submit(&mut self, tokens: Vec<i32>) -> RequestId {
+        self.submit_inner(tokens)
+    }
+
+    /// Like [`Self::submit`], but decode this request speculatively:
+    /// the quantized serving weights draft, a full-precision verifier
+    /// commits — the token stream is exactly what the fp32 model would
+    /// emit, and the quantized weights only buy decode speed. Requires
+    /// a backend with a cached decode path (native).
+    pub fn submit_speculative(&mut self, tokens: Vec<i32>) -> RequestId {
+        self.ensure_spec_state();
+        let id = self.submit_inner(tokens);
+        self.spec_requests.insert(id);
+        id
+    }
+
+    fn submit_inner(&mut self, tokens: Vec<i32>) -> RequestId {
         assert!(
             !tokens.is_empty() && tokens.len() <= self.max_seq(),
             "prompt must be 1..={} tokens, got {}",
@@ -319,6 +447,32 @@ impl<'b> Server<'b> {
         group: Vec<Request>,
         events: &mut Vec<ServeEvent>,
     ) -> Result<()> {
+        // speculative requests prefill on the verifier (their stream is
+        // fp32-exact); plain ones on the serving weights
+        let (spec, plain): (Vec<Request>, Vec<Request>) = group
+            .into_iter()
+            .partition(|r| self.spec_requests.contains(&r.id));
+        if !plain.is_empty() {
+            self.prefill_subset(prompt_len, plain, events, false)?;
+        }
+        if !spec.is_empty() {
+            self.prefill_subset(prompt_len, spec, events, true)?;
+        }
+        Ok(())
+    }
+
+    fn prefill_subset(
+        &mut self,
+        prompt_len: usize,
+        group: Vec<Request>,
+        events: &mut Vec<ServeEvent>,
+        speculative: bool,
+    ) -> Result<()> {
+        // the group's strategy is decided; clear the markers up front so
+        // a failed prefill cannot leak entries into `spec_requests`
+        for r in &group {
+            self.spec_requests.remove(&r.id);
+        }
         let n = group.len();
         let mut ids = Vec::with_capacity(n);
         for _ in 0..n {
@@ -331,10 +485,20 @@ impl<'b> Server<'b> {
         }
         let with_stats = self.cfg.method.needs_stats();
         let t0 = Instant::now();
-        let res = self
-            .ev
-            .backend
-            .prefill(&self.ev.weights, &tokens, &mut self.cache, &ids, with_stats);
+        let res = if speculative {
+            let st = self.spec_state.as_mut().expect("speculative submit built the state");
+            st.verifier_backend.prefill(
+                &st.verifier_weights,
+                &tokens,
+                &mut self.cache,
+                &ids,
+                with_stats,
+            )
+        } else {
+            self.ev
+                .backend
+                .prefill(&self.ev.weights, &tokens, &mut self.cache, &ids, with_stats)
+        };
         let out = match res {
             Ok(out) => out,
             Err(e) => {
@@ -347,8 +511,41 @@ impl<'b> Server<'b> {
             }
         };
         self.metrics.record_prefill(tokens.len(), t0.elapsed());
+
+        // the drafter builds its own KV state for the prompt (dual
+        // cache — drafter and verifier disagree about hidden states)
+        let draft_ids = if speculative {
+            let st = self.spec_state.as_mut().expect("speculative submit built the state");
+            let mut dids = Vec::with_capacity(n);
+            for _ in 0..n {
+                // the draft slab is sized like the main one and only
+                // speculative sequences draw from it
+                dids.push(st.draft_cache.alloc().expect("draft cache exhausted"));
+            }
+            let t0 = Instant::now();
+            let res = st.drafter_backend.prefill(
+                &self.ev.weights,
+                &tokens,
+                &mut st.draft_cache,
+                &dids,
+                false,
+            );
+            if let Err(e) = res {
+                for id in ids {
+                    self.cache.release(id);
+                }
+                for id in dids {
+                    st.draft_cache.release(id);
+                }
+                return Err(e);
+            }
+            self.metrics.record_prefill(tokens.len(), t0.elapsed());
+            Some(dids)
+        } else {
+            None
+        };
         // sample occupancy *before* any release below — this is the peak
-        self.metrics.record_cache_used(self.cache.used_tokens());
+        self.metrics.record_cache_used(self.cache.used_tokens() + self.draft_tokens_used());
 
         // the generation that produced these logits (pre-observe)
         let gen = self.calibrator.generation();
@@ -366,6 +563,9 @@ impl<'b> Server<'b> {
                 generated: vec![tok],
                 max_new: self.cfg.max_new_tokens.clamp(1, room),
                 arrived: req.arrived,
+                spec: draft_ids
+                    .as_ref()
+                    .map(|dids| DraftState::new(dids[row], tok)),
             };
             events.push(ServeEvent::Token {
                 id: seq.id,
@@ -382,22 +582,34 @@ impl<'b> Server<'b> {
         Ok(())
     }
 
-    /// One decode step over the whole running batch.
+    /// Advance every running sequence: one batched `decode_step` for the
+    /// plain sequences, one draft→verify→rollback round per speculative
+    /// sequence (which may commit up to k+1 tokens).
     fn decode_once(&mut self, events: &mut Vec<ServeEvent>) -> Result<()> {
-        if self.running.is_empty() {
+        self.decode_plain_once(events)?;
+        self.decode_spec_once(events)?;
+        Ok(())
+    }
+
+    /// One decode step over the plain (non-speculative) running batch.
+    fn decode_plain_once(&mut self, events: &mut Vec<ServeEvent>) -> Result<()> {
+        let rows: Vec<usize> = (0..self.running.len())
+            .filter(|&i| self.running[i].spec.is_none())
+            .collect();
+        if rows.is_empty() {
             return Ok(());
         }
-        let last: Vec<i32> = self.running.iter().map(|s| s.last_token).collect();
-        let ids: Vec<SeqId> = self.running.iter().map(|s| s.kv).collect();
+        let last: Vec<i32> = rows.iter().map(|&i| self.running[i].last_token).collect();
+        let ids: Vec<SeqId> = rows.iter().map(|&i| self.running[i].kv).collect();
         let with_stats = self.cfg.method.needs_stats();
         let t0 = Instant::now();
         let out = self
             .ev
             .backend
             .decode_step(&self.ev.weights, &last, &mut self.cache, &ids, with_stats)?;
-        self.metrics.record_decode(self.running.len(), t0.elapsed());
-        // peak occupancy: every running sequence just grew by one token
-        self.metrics.record_cache_used(self.cache.used_tokens());
+        self.metrics.record_decode(rows.len(), t0.elapsed());
+        // peak occupancy: every plain sequence just grew by one token
+        self.metrics.record_cache_used(self.cache.used_tokens() + self.draft_tokens_used());
 
         let gen = self.calibrator.generation();
         // per-step statistics: this is what makes requantization able
@@ -405,7 +617,8 @@ impl<'b> Server<'b> {
         self.observe_and_maybe_requant(out.stats.as_deref())?;
 
         let vocab = self.ev.weights.manifest.config.vocab;
-        for (row, seq) in self.running.iter_mut().enumerate() {
+        for (row, &i) in rows.iter().enumerate() {
+            let seq = &mut self.running[i];
             let tok = argmax(&out.logits[row * vocab..(row + 1) * vocab]) as i32;
             seq.generated.push(tok);
             seq.last_token = tok;
@@ -416,11 +629,117 @@ impl<'b> Server<'b> {
                 weight_generation: gen,
             });
         }
-        // retire finished sequences, preserving decode-batch order
+        // retire finished plain sequences, preserving decode-batch order
         let eos = self.cfg.eos;
         let mut still = Vec::with_capacity(self.running.len());
         for seq in std::mem::take(&mut self.running) {
-            if seq.finished(eos) {
+            if seq.spec.is_none() && seq.finished(eos) {
+                self.finish(seq, events);
+            } else {
+                still.push(seq);
+            }
+        }
+        self.running = still;
+        Ok(())
+    }
+
+    /// One speculative round per speculative sequence: the quantized
+    /// drafter proposes up to `k` tokens (adaptive), the fp32 verifier
+    /// scores all of them in a single cached forward, both caches roll
+    /// back to the first rejection, and every committed token streams
+    /// out as its own `Token` event.
+    ///
+    /// Indexed iteration is deliberate: on an execution error the whole
+    /// sequence table must be restored into `self.running`, which a
+    /// holding iterator borrow would forbid.
+    #[allow(clippy::needless_range_loop)]
+    fn decode_spec_once(&mut self, events: &mut Vec<ServeEvent>) -> Result<()> {
+        if !self.running.iter().any(|s| s.spec.is_some()) {
+            return Ok(());
+        }
+        let with_stats = self.cfg.method.needs_stats();
+        let mut seqs = std::mem::take(&mut self.running);
+        for i in 0..seqs.len() {
+            if seqs[i].spec.is_none() {
+                continue;
+            }
+            // never commit past the generation budget: a round lands at
+            // most k+1 tokens
+            let budget = seqs[i].max_new - seqs[i].generated.len();
+            let k = self.spec_ctrl.k().min(budget.saturating_sub(1));
+            let t0 = Instant::now();
+            let round = {
+                let seq = &mut seqs[i];
+                let ds = seq.spec.as_mut().expect("speculative sequence");
+                let st = self.spec_state.as_mut().expect("speculative submit built the state");
+                let drafter = SpecModel {
+                    backend: &st.drafter_backend,
+                    weights: &self.ev.weights,
+                };
+                let verifier = SpecModel {
+                    backend: &st.verifier_backend,
+                    weights: &st.verifier_weights,
+                };
+                spec_round(
+                    &drafter,
+                    &mut st.draft_cache,
+                    ds,
+                    &verifier,
+                    &mut self.cache,
+                    seq.kv,
+                    k,
+                    &mut self.sampler,
+                    with_stats,
+                )
+            };
+            let r = match round {
+                Ok(r) => r,
+                Err(e) => {
+                    // keep the engine's sequence table intact on failure
+                    self.running = seqs;
+                    return Err(e);
+                }
+            };
+            // committed tokens after an EOS are discarded, never
+            // streamed — account only for what the client will see
+            let streamed = match self.cfg.eos {
+                Some(e) => r
+                    .committed
+                    .iter()
+                    .position(|&t| t == e)
+                    .map_or(r.committed.len(), |p| p + 1),
+                None => r.committed.len(),
+            };
+            self.metrics.record_spec_round(streamed, r.drafted, r.accepted, t0.elapsed());
+            self.metrics.record_cache_used(self.cache.used_tokens() + self.draft_tokens_used());
+            self.spec_ctrl.observe(r.accepted, r.drafted);
+
+            let gen = self.calibrator.generation();
+            // verifier-side stats (present only for fully-committed
+            // windows — see RoundOut) keep feeding the calibrator, so
+            // drift can requantize (and swap) the drafter mid-generation
+            if let Err(e) = self.observe_and_maybe_requant(r.stats.as_deref()) {
+                self.running = seqs;
+                return Err(e);
+            }
+
+            let seq = &mut seqs[i];
+            for &tok in &r.committed[..streamed] {
+                seq.generated.push(tok);
+                seq.last_token = tok;
+                events.push(ServeEvent::Token {
+                    id: seq.id,
+                    token: tok,
+                    index: seq.generated.len() - 1,
+                    weight_generation: gen,
+                });
+            }
+        }
+        // retire finished speculative sequences, preserving order
+        let eos = self.cfg.eos;
+        let mut still = Vec::with_capacity(seqs.len());
+        for seq in seqs {
+            if seq.spec.is_some() && seq.finished(eos) {
                 self.finish(seq, events);
             } else {
                 still.push(seq);
@@ -442,17 +761,37 @@ impl<'b> Server<'b> {
             self.ev
                 .apply_diags(&diags, &self.cfg.method, &self.cfg.spec)?;
             self.metrics.record_requant(t0.elapsed());
+            // the drafter weights just changed generation (version bump
+            // repacks them transparently); the old acceptance history
+            // says nothing about the new drafter
+            self.spec_ctrl.reset();
         }
         Ok(())
     }
 
     fn finish(&mut self, seq: SequenceState, events: &mut Vec<ServeEvent>) {
         self.cache.release(seq.kv);
+        if let Some(ds) = &seq.spec {
+            self.spec_state
+                .as_mut()
+                .expect("speculative sequence implies spec state")
+                .draft_cache
+                .release(ds.kv);
+        }
         self.metrics.record_latency(seq.arrived.elapsed());
+        let stop = if self.cfg.eos.is_some_and(|e| seq.generated.last() == Some(&e)) {
+            StopReason::Eos
+        } else if seq.max_new < self.cfg.max_new_tokens {
+            // the effective budget was the context room, not the config
+            StopReason::ContextFull
+        } else {
+            StopReason::MaxNewTokens
+        };
         events.push(ServeEvent::Done {
             id: seq.id,
             tokens: seq.generated,
             prompt_len: seq.prompt_len,
+            stop,
         });
     }
 }

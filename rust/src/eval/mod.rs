@@ -31,6 +31,10 @@ use crate::models::ModelWeights;
 use crate::quant::{lowrank_init, LayerStats, LowRank, QuantSpec, StatsRequirement};
 use crate::util::argmax;
 
+pub mod sampler;
+
+pub use sampler::Sampler;
+
 // The unified method selector lives in the quant layer; re-exported
 // here because eval call sites are where methods are most often named.
 pub use crate::quant::{ActStats, MethodSpec};
@@ -151,6 +155,20 @@ impl<'b> Evaluator<'b> {
         max_new_tokens: usize,
         eos: Option<i32>,
     ) -> Result<Vec<i32>> {
+        self.generate_with(prompt, max_new_tokens, eos, &mut Sampler::greedy())
+    }
+
+    /// [`Self::generate`] with an explicit [`Sampler`] (greedy /
+    /// temperature / top-k). Exactly one sampler draw per generated
+    /// token, in order — the contract the speculative decoder relies on
+    /// to stay token-identical to this loop under any seeded sampler.
+    pub fn generate_with(
+        &self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        eos: Option<i32>,
+        sampler: &mut Sampler,
+    ) -> Result<Vec<i32>> {
         let man = &self.weights.manifest;
         if prompt.is_empty() || prompt.len() > man.config.max_seq {
             return Err(anyhow!(
@@ -164,13 +182,13 @@ impl<'b> Evaluator<'b> {
         let step = self
             .backend
             .prefill(&self.weights, prompt, &mut cache, &[id], false)?;
-        let mut tok = argmax(&step.logits) as i32;
+        let mut tok = sampler.sample(&step.logits) as i32;
         let mut out = vec![tok];
         while out.len() < max_new_tokens && Some(tok) != eos && cache.remaining(id) > 0 {
             let step = self
                 .backend
                 .decode_step(&self.weights, &[tok], &mut cache, &[id], false)?;
-            tok = argmax(&step.logits) as i32;
+            tok = sampler.sample(&step.logits) as i32;
             out.push(tok);
         }
         Ok(out)
@@ -267,6 +285,18 @@ impl<'b> Evaluator<'b> {
         for (name, w) in self.originals.clone() {
             self.weights.set(&name, w);
         }
+    }
+
+    /// A deep-copied snapshot with every quantizable linear restored to
+    /// its pristine full-precision tensor (fresh content version) —
+    /// correct even after quantization has mutated the live weights.
+    /// The speculative decoder's verifier is built from this.
+    pub fn pristine_weights(&self) -> ModelWeights {
+        let mut w = self.weights.fork();
+        for (name, orig) in &self.originals {
+            w.set(name, orig.clone());
+        }
+        w
     }
 
     /// Offline calibration (Fig. 1a) for methods with a calib domain:

@@ -1,0 +1,161 @@
+//! Token samplers for autoregressive generation.
+//!
+//! One small dispatch point shared by every generation path — plain
+//! cached decode ([`crate::eval::Evaluator::generate_with`]) and the
+//! speculative verifier ([`crate::specdec`]) — so the two paths consume
+//! randomness identically: **exactly one draw per committed token, in
+//! generation order**. That discipline is what keeps speculative
+//! decoding token-identical to plain decoding not just for greedy but
+//! for any seeded sampler (the verifier samples from the same logits
+//! rows, in the same order, with the same RNG stream).
+//!
+//! Seeding goes through [`crate::linalg::Rng`] (SplitMix64), the same
+//! deterministic core that drives the corpus engine and test matrices.
+
+use crate::linalg::Rng;
+use crate::util::argmax;
+
+/// Greedy / temperature / top-k next-token selection.
+#[derive(Clone, Debug)]
+pub enum Sampler {
+    /// Deterministic argmax — the paper's evaluation mode, and the mode
+    /// under which speculative verification is exactly lossless.
+    Greedy,
+    /// Softmax at `temp` over the full vocabulary.
+    Temperature { temp: f32, rng: Rng },
+    /// Softmax at `temp` restricted to the `k` highest-logit tokens.
+    TopK { k: usize, temp: f32, rng: Rng },
+}
+
+impl Sampler {
+    pub fn greedy() -> Self {
+        Sampler::Greedy
+    }
+
+    /// Temperature sampling; `temp <= 0` degenerates to greedy.
+    pub fn temperature(temp: f32, seed: u64) -> Self {
+        Sampler::Temperature { temp, rng: Rng::new(seed) }
+    }
+
+    /// Top-k sampling at `temp`; `k == 0` is treated as `k == 1`.
+    pub fn top_k(k: usize, temp: f32, seed: u64) -> Self {
+        Sampler::TopK { k: k.max(1), temp, rng: Rng::new(seed) }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        matches!(self, Sampler::Greedy)
+    }
+
+    /// Select the next token from one row of logits. Consumes exactly
+    /// one RNG draw for the stochastic modes, zero for greedy.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        match self {
+            Sampler::Greedy => argmax(logits),
+            Sampler::Temperature { temp, rng } => softmax_draw(logits, *temp, usize::MAX, rng),
+            Sampler::TopK { k, temp, rng } => softmax_draw(logits, *temp, *k, rng),
+        }
+    }
+}
+
+/// One inverse-CDF draw from softmax(logits / temp) over the top-k
+/// tokens. Ties break toward the lower token id, so the ordering is
+/// fully deterministic for a given logits row.
+fn softmax_draw(logits: &[f32], temp: f32, k: usize, rng: &mut Rng) -> usize {
+    assert!(!logits.is_empty(), "sampling from empty logits");
+    if temp <= 0.0 {
+        return argmax(logits);
+    }
+    if k >= logits.len() {
+        // temperature mode: no ordering needed — one O(V) stable
+        // softmax pass, walking the CDF in token-id order
+        let mx = logits[argmax(logits)];
+        let weights: Vec<f64> = logits
+            .iter()
+            .map(|&l| (((l - mx) / temp) as f64).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = rng.u01() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if u < *w {
+                return i;
+            }
+            u -= w;
+        }
+        return argmax(logits);
+    }
+    let mut order: Vec<usize> = (0..logits.len()).collect();
+    order.sort_unstable_by(|&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let top = &order[..k];
+    // numerically stable softmax at temperature over the kept set
+    let mx = logits[top[0]];
+    let weights: Vec<f64> = top
+        .iter()
+        .map(|&i| (((logits[i] - mx) / temp) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.u01() * total;
+    for (&i, w) in top.iter().zip(&weights) {
+        if u < *w {
+            return i;
+        }
+        u -= w;
+    }
+    // numerical slack: fall back to the most likely kept token
+    top[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = [0.1f32, 2.0, -1.0, 1.9];
+        assert_eq!(Sampler::greedy().sample(&logits), 1);
+        assert!(Sampler::greedy().is_greedy());
+    }
+
+    #[test]
+    fn top1_matches_greedy_for_any_seed() {
+        let logits = [0.3f32, -0.5, 4.0, 3.9, 0.0];
+        for seed in 0..20 {
+            let mut s = Sampler::top_k(1, 1.0, seed);
+            assert_eq!(s.sample(&logits), 2, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn near_zero_temperature_concentrates_on_argmax() {
+        let logits = [0.0f32, 1.0, 0.5];
+        let mut s = Sampler::temperature(1e-4, 7);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+        // temp <= 0 degenerates to greedy outright
+        assert_eq!(Sampler::temperature(0.0, 7).sample(&logits), 1);
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let logits = [0.0f32, 0.1, 0.2, 0.3, 0.15];
+        let mut a = Sampler::temperature(2.0, 42);
+        let mut b = Sampler::temperature(2.0, 42);
+        for _ in 0..100 {
+            assert_eq!(a.sample(&logits), b.sample(&logits));
+        }
+    }
+
+    #[test]
+    fn high_temperature_explores_and_topk_restricts() {
+        let logits = [1.0f32, 0.9, -50.0, 0.8];
+        let mut seen = [0usize; 4];
+        let mut s = Sampler::top_k(3, 5.0, 3);
+        for _ in 0..300 {
+            seen[s.sample(&logits)] += 1;
+        }
+        assert_eq!(seen[2], 0, "token outside top-3 must never be drawn");
+        assert!(seen[0] > 0 && seen[1] > 0 && seen[3] > 0, "high temp explores: {seen:?}");
+    }
+}

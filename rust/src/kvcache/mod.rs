@@ -22,6 +22,12 @@
 //! stable sequence length throughout: the backend writes rows for every
 //! layer at absolute positions via [`KvCache::append_row`], then bumps
 //! the length once with [`KvCache::advance`] after the full forward.
+//!
+//! Speculative decoding adds the third verb: [`KvCache::truncate`]
+//! rolls a sequence back to a shorter length after the verifier rejects
+//! draft tokens — the rows beyond the new length become unreachable and
+//! are fully overwritten by the next `append_row`/`advance` cycle, so a
+//! rollback is bit-identical to never having appended.
 
 use anyhow::{bail, Result};
 
@@ -118,18 +124,26 @@ impl KvCache {
         &self.cfg
     }
 
-    /// Claim a slot for a new sequence (length reset to 0), or `None`
-    /// when the slab is full — the caller keeps the request queued.
+    /// Claim a slot for a new sequence, or `None` when the slab is full
+    /// — the caller keeps the request queued. The slot is guaranteed
+    /// empty: length 0 *and* zeroed K/V blocks, so a recycled slot is
+    /// indistinguishable from a fresh one (zeroing happens here, on the
+    /// admission path, never on the decode hot path).
     pub fn alloc(&mut self) -> Option<SeqId> {
         let idx = self.free.pop()?;
         let s = &mut self.pool[idx];
+        for l in &mut s.layers {
+            l.k.data.fill(0.0);
+            l.v.data.fill(0.0);
+        }
         s.len = 0;
         s.in_use = true;
         Some(SeqId(idx))
     }
 
     /// Return a slot to the pool. The K/V contents are left in place
-    /// (rows beyond `len == 0` are unreachable) — no zeroing cost.
+    /// (rows beyond `len == 0` are unreachable); [`Self::alloc`] zeroes
+    /// them before the slot is handed out again.
     pub fn release(&mut self, id: SeqId) {
         let s = &mut self.pool[id.0];
         assert!(s.in_use, "release of a free slot");
@@ -189,6 +203,25 @@ impl KvCache {
         if used > self.high_water {
             self.high_water = used;
         }
+        Ok(())
+    }
+
+    /// Roll a sequence back to `new_len` live positions — the
+    /// speculative-decoding rejection path. Rows beyond `new_len`
+    /// become unreachable immediately; the next
+    /// [`Self::append_row`]/[`Self::advance`] cycle overwrites them in
+    /// full, so truncate-then-reappend is bit-identical to never having
+    /// appended. Never grows a sequence (that would expose stale rows).
+    pub fn truncate(&mut self, id: SeqId, new_len: usize) -> Result<()> {
+        let s = &mut self.pool[id.0];
+        assert!(s.in_use, "truncate of a free slot");
+        if new_len > s.len {
+            bail!(
+                "truncate to {new_len} would grow a sequence of length {} (stale rows)",
+                s.len
+            );
+        }
+        s.len = new_len;
         Ok(())
     }
 
@@ -259,6 +292,58 @@ mod tests {
         c.release(id);
         assert_eq!(c.stats().used_tokens, 0);
         assert_eq!(c.stats().high_water_tokens, 4);
+    }
+
+    #[test]
+    fn truncate_rolls_back_and_never_grows() {
+        let mut c = KvCache::new(cfg());
+        let id = c.alloc().unwrap();
+        let row = vec![2.0f32; 8];
+        for layer in 0..2 {
+            for pos in 0..6 {
+                c.append_row(id, layer, pos, &row, &row);
+            }
+        }
+        c.advance(id, 6).unwrap();
+        c.truncate(id, 4).unwrap();
+        assert_eq!(c.len(id), 4);
+        assert_eq!(c.remaining(id), 12);
+        assert_eq!(c.stats().used_tokens, 4, "rollback frees capacity accounting");
+        // growing via truncate would expose stale rows — refused
+        assert!(c.truncate(id, 5).is_err());
+        // truncate to the current length is a no-op
+        c.truncate(id, 4).unwrap();
+        assert_eq!(c.len(id), 4);
+        // the rolled-back positions are writable again
+        let row2 = vec![-1.0f32; 8];
+        c.append_row(id, 0, 4, &row2, &row2);
+        c.advance(id, 1).unwrap();
+        assert_eq!(c.layer(id, 0).0.row(4), &row2[..]);
+    }
+
+    #[test]
+    fn recycled_slot_is_guaranteed_empty() {
+        // regression: a released slot's K/V contents used to linger
+        // until overwritten — alloc must now hand out a zeroed slot so
+        // no stale rows from the previous occupant can ever be read.
+        let mut c = KvCache::new(cfg());
+        let id = c.alloc().unwrap();
+        let row = vec![7.0f32; 8];
+        for layer in 0..2 {
+            for pos in 0..16 {
+                c.append_row(id, layer, pos, &row, &row);
+            }
+        }
+        c.advance(id, 16).unwrap();
+        c.release(id);
+        let id2 = c.alloc().unwrap();
+        assert_eq!(id2, id, "free list recycles the same slot");
+        assert_eq!(c.len(id2), 0);
+        for layer in 0..2 {
+            let (k, v) = c.layer(id2, layer);
+            assert!(k.data.iter().all(|&x| x == 0.0), "stale K rows survived recycle");
+            assert!(v.data.iter().all(|&x| x == 0.0), "stale V rows survived recycle");
+        }
     }
 
     #[test]

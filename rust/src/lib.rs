@@ -34,8 +34,15 @@
 //!   online calibrator driving any diagonal method, a continuous-
 //!   batching decode scheduler streaming [`coordinator::ServeEvent`]s,
 //!   metrics.
+//! * [`specdec`] — self-speculative decoding: a quantized drafter
+//!   proposes `k` tokens per round, the full-precision verifier scores
+//!   all `k+1` positions in one [`backend::ExecBackend::verify_step`],
+//!   and both KV caches roll back to the first rejection — greedy
+//!   output stays token-identical to the fp32 model while decode rides
+//!   the cheap drafter. Adaptive draft depth from an acceptance EWMA.
 //! * [`eval`] — perplexity / accuracy / success-rate pipelines; plans
-//!   stats collection from [`quant::StatsRequirement`].
+//!   stats collection from [`quant::StatsRequirement`]; token
+//!   [`eval::Sampler`]s (greedy / temperature / top-k).
 //! * [`perfmodel`] — GPU roofline simulator regenerating Tables 4-8;
 //!   rows are registry methods priced through the trait.
 //! * [`bench`] — table/figure regeneration harness (`ttq-serve table N`),
@@ -52,6 +59,7 @@ pub mod models;
 pub mod perfmodel;
 pub mod quant;
 pub mod runtime;
+pub mod specdec;
 pub mod util;
 
 /// Repo-relative artifacts directory (overridable via `TTQ_ARTIFACTS`).

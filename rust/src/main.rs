@@ -52,6 +52,7 @@ USAGE:
   ttq-serve serve [--model M] [--requests N] [--method SPEC] [--bits Q]
                   [--rank R] [--domains d1,d2] [--backend B] [--exec-quant Q]
                   [--max-new-tokens T] [--prompt-len L] [--cache-slots S]
+                  [--speculative] [--spec-k K]
   ttq-serve info
 
 SERVING (decode engine):
@@ -61,6 +62,10 @@ SERVING (decode engine):
   there is room to decode; --max-new-tokens bounds each generation
   (clamped to the context window). Cached decode requires the native
   backend — pjrt artifacts have no KV-cache variant.
+  --speculative decodes every request self-speculatively: the quantized
+  serving weights draft up to K tokens per round (--spec-k, adaptive by
+  default) and a full-precision verifier commits them in one batched
+  cached forward — the streamed tokens are exactly the fp32 model's.
 
 BACKENDS:
   pjrt     AOT HLO artifacts via the PJRT client (needs `make artifacts`)
@@ -242,6 +247,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
     cfg.policy = BatchPolicy::default();
     cfg.max_new_tokens = a.get_usize("max-new-tokens", 8).max(1);
     cfg.cache_slots = a.get_usize("cache-slots", 16).max(1);
+    let speculative = a.has("speculative");
+    cfg.specdec = ttq_serve::specdec::SpecConfig::new(a.get_usize("spec-k", 4));
     let requests = a.get_usize("requests", 64);
     let mut server = Server::new(backend.as_ref(), cfg)?;
     let max_seq = server.max_seq();
@@ -273,7 +280,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
         for t in toks.iter_mut().skip(1) {
             *t = s.next_token();
         }
-        server.submit(toks);
+        if speculative {
+            server.submit_speculative(toks);
+        } else {
+            server.submit(toks);
+        }
         count(&server.step(Instant::now())?);
     }
     count(&server.drain()?);
@@ -290,6 +301,13 @@ fn cmd_serve(a: &Args) -> Result<()> {
         cs.slots, cs.high_water_tokens, cs.capacity_tokens
     );
     println!("weight generations: {}", server.weight_generation());
+    if speculative {
+        println!(
+            "specdec: acceptance EWMA {:.2}, final draft depth k={}",
+            server.spec_controller().acceptance(),
+            server.spec_controller().k()
+        );
+    }
     Ok(())
 }
 

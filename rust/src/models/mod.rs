@@ -257,6 +257,20 @@ impl ModelWeights {
         self.version
     }
 
+    /// Deep copy with a **fresh** content version. The speculative
+    /// decoder uses this to hold a full-precision verifier snapshot
+    /// next to the (mutating) quantized drafter weights; the fresh
+    /// version guarantees backend caches never alias the two once
+    /// either diverges.
+    pub fn fork(&self) -> Self {
+        ModelWeights {
+            manifest: self.manifest.clone(),
+            tensors: self.tensors.clone(),
+            order: self.order.clone(),
+            version: next_version(),
+        }
+    }
+
     pub fn get(&self, name: &str) -> Option<&Mat> {
         self.tensors.get(name)
     }

@@ -20,6 +20,12 @@
 //! quantize *online* (the amortized `find_params` pass of Eq. 3), what
 //! low-rank epilogue does it carry — instead of matching on a private
 //! mode enum.
+//!
+//! The speculative extension prices the [`crate::specdec`] round:
+//! expected committed tokens per round is a closed form of
+//! (acceptance, k) ([`expected_tokens_per_round`]), the drafter pays k
+//! sequential quantized GEMVs, and the verifier pays one prefill-priced
+//! pass over the k+1-token window ([`speculative_ktokens_per_sec`]).
 
 use crate::quant::{MethodSpec, QuantSpec};
 
@@ -272,6 +278,87 @@ pub fn generation_tokens_per_sec(
         / generation_time_s(gpu, d_out, d_in, spec, mode, prompt_len, new_tokens)
 }
 
+// ---------------------------------------------------------------------
+// Speculative decoding
+// ---------------------------------------------------------------------
+
+/// Expected tokens committed per speculative round with i.i.d.
+/// per-draft acceptance probability `acceptance` and draft depth `k`:
+/// `Σ_{i=0}^{k} αⁱ = (1 − α^{k+1}) / (1 − α)` — the accepted prefix is
+/// geometrically distributed and every round commits one verifier
+/// token past it (correction or bonus).
+pub fn expected_tokens_per_round(acceptance: f64, k: usize) -> f64 {
+    let a = acceptance.clamp(0.0, 1.0);
+    if (1.0 - a) < 1e-12 {
+        return (k + 1) as f64;
+    }
+    (1.0 - a.powi(k as i32 + 1)) / (1.0 - a)
+}
+
+/// Predicted self-speculative decode throughput, thousand tokens/sec:
+/// `k` sequential drafter GEMVs plus **one** verifier forward over the
+/// `k+1`-token causal window. The verify pass prices like a tiny
+/// prefill — the verifier's weights cross the memory bus once for all
+/// `k+1` positions, which is exactly why batched verification is cheap
+/// on decode-bound hardware. Expected committed tokens per round come
+/// from [`expected_tokens_per_round`]; the drafter runs with an
+/// infinite amortization window (its quantization cost is charged to
+/// the serving loop's calibrator, not to the round).
+#[allow(clippy::too_many_arguments)]
+pub fn speculative_ktokens_per_sec(
+    gpu: &GpuSpec,
+    d_out: usize,
+    d_in: usize,
+    spec: &QuantSpec,
+    drafter: &DecodeMode,
+    verifier: &DecodeMode,
+    acceptance: f64,
+    k: usize,
+) -> f64 {
+    let t_draft = 1.0 / (ktokens_per_sec(gpu, d_out, d_in, spec, drafter, f64::INFINITY) * 1000.0);
+    let t_verify = prefill_time_s(gpu, d_out, d_in, spec, verifier, k + 1);
+    expected_tokens_per_round(acceptance, k) / (k as f64 * t_draft + t_verify) / 1000.0
+}
+
+/// Speedup of speculative decode over plain decode on the *verifier*
+/// mode (the quality-equivalent baseline: both emit the verifier's
+/// tokens).
+#[allow(clippy::too_many_arguments)]
+pub fn speculative_speedup(
+    gpu: &GpuSpec,
+    d_out: usize,
+    d_in: usize,
+    spec: &QuantSpec,
+    drafter: &DecodeMode,
+    verifier: &DecodeMode,
+    acceptance: f64,
+    k: usize,
+) -> f64 {
+    speculative_ktokens_per_sec(gpu, d_out, d_in, spec, drafter, verifier, acceptance, k)
+        / ktokens_per_sec(gpu, d_out, d_in, spec, verifier, f64::INFINITY)
+}
+
+/// Draft depth maximizing predicted speculative throughput at a given
+/// acceptance rate — the fixed point the adaptive-k controller hunts.
+#[allow(clippy::too_many_arguments)]
+pub fn optimal_k(
+    gpu: &GpuSpec,
+    d_out: usize,
+    d_in: usize,
+    spec: &QuantSpec,
+    drafter: &DecodeMode,
+    verifier: &DecodeMode,
+    acceptance: f64,
+    k_max: usize,
+) -> usize {
+    let tps = |k: usize| {
+        speculative_ktokens_per_sec(gpu, d_out, d_in, spec, drafter, verifier, acceptance, k)
+    };
+    (0..=k_max)
+        .max_by(|&a, &b| tps(a).partial_cmp(&tps(b)).unwrap_or(std::cmp::Ordering::Equal))
+        .unwrap_or(0)
+}
+
 /// Speedup of a mode over the FP16 baseline.
 pub fn speedup(
     gpu: &GpuSpec,
@@ -436,6 +523,78 @@ mod tests {
         let ttq = generation_tokens_per_sec(g, dout, din, &s, &m, 256, 128);
         let fp = generation_tokens_per_sec(g, dout, din, &s, &DecodeMode::fp16(), 256, 128);
         assert!(ttq > fp, "ttq {ttq} vs fp16 {fp} at 128 generated tokens");
+    }
+
+    #[test]
+    fn expected_tokens_closed_form() {
+        // α = 0: every draft rejected → exactly the 1 verifier token
+        assert!((expected_tokens_per_round(0.0, 4) - 1.0).abs() < 1e-12);
+        // α = 1: clean sweep → k drafts + the bonus token
+        assert!((expected_tokens_per_round(1.0, 4) - 5.0).abs() < 1e-12);
+        // α = 0.5, k = 2: 1 + 0.5 + 0.25
+        assert!((expected_tokens_per_round(0.5, 2) - 1.75).abs() < 1e-12);
+        // monotone in both acceptance and depth
+        assert!(expected_tokens_per_round(0.8, 4) > expected_tokens_per_round(0.6, 4));
+        assert!(expected_tokens_per_round(0.8, 6) > expected_tokens_per_round(0.8, 4));
+    }
+
+    #[test]
+    fn speculative_beats_plain_fp16_at_high_acceptance() {
+        // The tentpole claim: a W4 drafter (≈3× faster GEMV) + one
+        // batched fp16 verify per round out-throughputs plain fp16
+        // decode once drafts mostly land — with zero quality loss,
+        // since the committed stream is the verifier's.
+        let (dout, din) = QWEN3[5].qproj_dims();
+        let s = spec4();
+        let drafter = DecodeMode::ttq(0);
+        let verifier = DecodeMode::fp16();
+        for g in &GPUS {
+            let sp = speculative_speedup(g, dout, din, &s, &drafter, &verifier, 0.8, 4);
+            assert!(sp > 1.3, "{}: speculative speedup {sp} at α=0.8, k=4", g.name);
+        }
+    }
+
+    #[test]
+    fn speculative_degrades_gracefully_at_low_acceptance() {
+        // α → 0: every round pays k wasted drafts + the verify pass for
+        // one token — strictly worse than plain decode. The adaptive-k
+        // controller exists precisely to exit this regime.
+        let (dout, din) = QWEN3[4].qproj_dims();
+        let g = gpu("A100");
+        let s = spec4();
+        let sp =
+            speculative_speedup(g, dout, din, &s, &DecodeMode::ttq(0), &DecodeMode::fp16(), 0.0, 4);
+        assert!(sp < 1.0, "speculation must not pay at α=0: {sp}");
+        // and throughput is monotone in acceptance
+        let mut last = 0.0;
+        for a in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let t = speculative_ktokens_per_sec(
+                g,
+                dout,
+                din,
+                &s,
+                &DecodeMode::ttq(0),
+                &DecodeMode::fp16(),
+                a,
+                4,
+            );
+            assert!(t > last, "throughput must grow with acceptance: {t} at α={a}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn optimal_k_grows_with_acceptance() {
+        let (dout, din) = QWEN3[5].qproj_dims();
+        let g = gpu("RTX4090");
+        let s = spec4();
+        let d = DecodeMode::ttq(0);
+        let v = DecodeMode::fp16();
+        let k_low = optimal_k(g, dout, din, &s, &d, &v, 0.2, 16);
+        let k_high = optimal_k(g, dout, din, &s, &d, &v, 0.95, 16);
+        assert!(k_high > k_low, "k* {k_low} (α=0.2) vs {k_high} (α=0.95)");
+        // at α≈1 a deeper window is always better within the cap
+        assert!(k_high >= 8, "near-certain acceptance wants a deep window, got {k_high}");
     }
 
     #[test]

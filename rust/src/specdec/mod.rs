@@ -1,0 +1,566 @@
+//! Self-speculative decoding: quantized drafter + full-precision
+//! verifier with KV rollback.
+//!
+//! TTQ's core asset — an activation-aware quantized model produced on
+//! the fly from online calibration — is exactly the cheap drafter that
+//! speculative decoding needs. The same model therefore plays both
+//! roles:
+//!
+//! * **drafter** — the quantized weights (packed W4, or any registry
+//!   method) run `k` cheap cached [`ExecBackend::decode_step`]s,
+//!   proposing tokens `d₁..d_k`;
+//! * **verifier** — the full-precision weights score all `k+1`
+//!   positions (`[last, d₁..d_k]`) in **one** batched cached forward
+//!   ([`ExecBackend::verify_step`]), accept the longest prefix of
+//!   drafts that match what the verifier itself would have emitted, and
+//!   always commit one verifier token past it (the correction on a
+//!   rejection, the bonus token on a clean sweep);
+//! * **rollback** — both KV caches are rolled back to the first
+//!   rejection with [`KvCache::truncate`]; the caches are *dual* (one
+//!   slot per role, never forked) because drafter and verifier disagree
+//!   about every hidden state.
+//!
+//! Under greedy decoding the committed stream is **token-identical** to
+//! plain full-precision generation — acceptance only trades speed. With
+//! a seeded stochastic [`Sampler`] the guarantee still holds, because a
+//! draft is accepted only when it equals the token the sampler draws
+//! from the verifier's own logits (one draw per committed token, in
+//! order — the same RNG stream plain generation consumes).
+//!
+//! The drafting depth adapts: [`SpecController`] tracks a running
+//! acceptance-rate EWMA and widens `k` while drafts keep landing,
+//! narrowing it when traffic drifts away from the drafter's
+//! calibration. That closes the paper's feedback loop — when the online
+//! calibrator requantizes the drafter mid-stream, acceptance (and with
+//! it the realized speedup) is the observable that says whether the new
+//! calibration fits the traffic. The EWMA is reset at every
+//! requantization so the signal speaks about the *current* drafter
+//! generation.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::ExecBackend;
+use crate::eval::Sampler;
+use crate::kvcache::{KvCache, KvCacheConfig, SeqId};
+use crate::models::ModelWeights;
+use crate::quant::{lowrank_init, LayerStats, MethodSpec, QuantSpec, StatsRequirement};
+use crate::util::argmax;
+
+// ---------------------------------------------------------------------
+// Policy
+// ---------------------------------------------------------------------
+
+/// Speculative-decoding policy: drafting depth, drafter method, and
+/// whether the depth adapts to the observed acceptance rate.
+#[derive(Clone, Debug)]
+pub struct SpecConfig {
+    /// Initial (and, with `adaptive: false`, fixed) draft depth.
+    pub k: usize,
+    /// Registry method used to quantize a standalone drafter (see
+    /// [`drafter_weights`]). The serving loop ignores this field — its
+    /// drafter is whatever the online calibrator last committed.
+    pub method: MethodSpec,
+    /// Adapt `k` from the acceptance EWMA (see [`SpecController`]).
+    pub adaptive: bool,
+}
+
+impl SpecConfig {
+    pub fn new(k: usize) -> Self {
+        SpecConfig { k: k.max(1), method: MethodSpec::rtn(), adaptive: true }
+    }
+
+    pub fn with_method(mut self, method: MethodSpec) -> Self {
+        self.method = method;
+        self
+    }
+
+    pub fn with_adaptive(mut self, adaptive: bool) -> Self {
+        self.adaptive = adaptive;
+        self
+    }
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig::new(4)
+    }
+}
+
+/// Exponentially-weighted acceptance rate (per-draft granularity).
+#[derive(Clone, Debug)]
+pub struct AcceptanceEwma {
+    decay: f64,
+    rate: f64,
+    seen: bool,
+}
+
+impl AcceptanceEwma {
+    /// `decay` is the weight of history per observation, in `[0, 1)`.
+    pub fn new(decay: f64) -> Self {
+        AcceptanceEwma { decay: decay.clamp(0.0, 0.999), rate: 0.0, seen: false }
+    }
+
+    /// Fold in one round's outcome (`accepted` of `drafted` landed).
+    pub fn observe(&mut self, accepted: usize, drafted: usize) {
+        if drafted == 0 {
+            return;
+        }
+        let sample = accepted as f64 / drafted as f64;
+        self.rate = if self.seen {
+            self.decay * self.rate + (1.0 - self.decay) * sample
+        } else {
+            sample
+        };
+        self.seen = true;
+    }
+
+    /// Current estimate; optimistic 1.0 before any observation (a fresh
+    /// drafter gets the benefit of the doubt at full depth).
+    pub fn rate(&self) -> f64 {
+        if self.seen {
+            self.rate
+        } else {
+            1.0
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.rate = 0.0;
+        self.seen = false;
+    }
+}
+
+/// Acceptance EWMA above this widens the draft window…
+const K_RAISE_AT: f64 = 0.8;
+/// …below this narrows it.
+const K_LOWER_AT: f64 = 0.4;
+/// History weight of the acceptance EWMA.
+const EWMA_DECAY: f64 = 0.8;
+
+/// Adaptive-k controller: one per drafter generation (the serving loop
+/// resets it whenever requantization swaps the drafter weights).
+#[derive(Clone, Debug)]
+pub struct SpecController {
+    k: usize,
+    k_init: usize,
+    k_max: usize,
+    adaptive: bool,
+    ewma: AcceptanceEwma,
+}
+
+impl SpecController {
+    pub fn new(cfg: &SpecConfig) -> Self {
+        let k_init = cfg.k.max(1);
+        SpecController {
+            k: k_init,
+            k_init,
+            k_max: (2 * k_init).max(2),
+            adaptive: cfg.adaptive,
+            ewma: AcceptanceEwma::new(EWMA_DECAY),
+        }
+    }
+
+    /// Draft depth for the next round.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Current acceptance-rate estimate.
+    pub fn acceptance(&self) -> f64 {
+        self.ewma.rate()
+    }
+
+    /// Fold in a round's outcome and (when adaptive) retune `k`:
+    /// sustained high acceptance earns a deeper window, sustained
+    /// rejection shrinks it toward a plain verified step.
+    pub fn observe(&mut self, accepted: usize, drafted: usize) {
+        if drafted == 0 {
+            return;
+        }
+        self.ewma.observe(accepted, drafted);
+        if !self.adaptive {
+            return;
+        }
+        let r = self.ewma.rate();
+        if r >= K_RAISE_AT {
+            self.k = (self.k + 1).min(self.k_max);
+        } else if r <= K_LOWER_AT {
+            self.k = self.k.saturating_sub(1).max(1);
+        }
+    }
+
+    /// Back to the initial depth with a cleared EWMA — called when the
+    /// drafter weights are swapped (requantization): the old acceptance
+    /// history says nothing about the new drafter.
+    pub fn reset(&mut self) {
+        self.k = self.k_init;
+        self.ewma.reset();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-sequence state
+// ---------------------------------------------------------------------
+
+/// One model role (weights + the backend that executes them). The
+/// drafter typically pairs quantized weights with a packed-execution
+/// backend; the verifier pairs full-precision weights with a dense one.
+#[derive(Clone, Copy)]
+pub struct SpecModel<'a> {
+    pub backend: &'a dyn ExecBackend,
+    pub weights: &'a ModelWeights,
+}
+
+/// Fork-free dual-cache state for one speculative sequence: the
+/// drafter's own KV slot plus the committed tokens the drafter has not
+/// yet consumed (`pending`, oldest first; the last element is always
+/// the newest committed token). The verifier's slot is the sequence's
+/// ordinary KV slot — the two caches are never copied into each other.
+pub struct DraftState {
+    pub kv: SeqId,
+    pending: Vec<i32>,
+}
+
+impl DraftState {
+    /// State for a freshly prefetched sequence: the drafter has seen the
+    /// prompt (its own prefill), and `first_token` — the verifier's
+    /// first committed token — is pending.
+    pub fn new(kv: SeqId, first_token: i32) -> Self {
+        DraftState { kv, pending: vec![first_token] }
+    }
+
+    /// Committed tokens the drafter has not yet consumed.
+    pub fn pending(&self) -> &[i32] {
+        &self.pending
+    }
+}
+
+/// Outcome of one draft→verify→rollback round.
+pub struct RoundOut {
+    /// Tokens committed this round (1..=k+1): the accepted draft prefix
+    /// plus one verifier token.
+    pub committed: Vec<i32>,
+    /// Drafts that matched the verifier.
+    pub accepted: usize,
+    /// Drafts proposed (`k` after clamping; 0 for a plain verified step).
+    pub drafted: usize,
+    /// Verifier-side activation stats (when requested) — full-precision
+    /// activations for the online calibrator. Only present when every
+    /// row of the verify window was a *committed* token (full
+    /// acceptance, or a plain `k == 0` verified step): the norm taps
+    /// aggregate over all rows, so a partially-rejected window would
+    /// leak drafter-hallucinated activations into the calibrator — the
+    /// same stats-pollution class the padding-row fix eliminated.
+    pub stats: Option<Vec<crate::quant::ActStats>>,
+}
+
+// ---------------------------------------------------------------------
+// The round
+// ---------------------------------------------------------------------
+
+/// One speculative round for one sequence.
+///
+/// Draft `k` tokens with the drafter (catching up on `pending` first,
+/// in a single multi-token cached forward), verify all `k+1` positions
+/// with one [`ExecBackend::verify_step`] on the verifier, commit the
+/// longest matching prefix plus one verifier token, and roll both
+/// caches back to the first rejection.
+///
+/// `k` is clamped to the verifier's cache room; at `k == 0` the round
+/// degenerates to a plain verified decode step (1 committed token).
+#[allow(clippy::too_many_arguments)]
+pub fn spec_round(
+    drafter: &SpecModel,
+    dcache: &mut KvCache,
+    draft: &mut DraftState,
+    verifier: &SpecModel,
+    vcache: &mut KvCache,
+    vid: SeqId,
+    k: usize,
+    sampler: &mut Sampler,
+    with_stats: bool,
+) -> Result<RoundOut> {
+    let vocab = verifier.weights.manifest.config.vocab;
+    let room = vcache.remaining(vid);
+    if room == 0 {
+        bail!("speculative round with no verifier cache room");
+    }
+    // k+1 rows go into the verifier cache this round
+    let k = k.min(room - 1);
+
+    // -- draft: catch up on pending tokens, then propose k tokens -----
+    let mut drafts: Vec<i32> = Vec::with_capacity(k);
+    if k > 0 {
+        debug_assert!(!draft.pending.is_empty(), "speculative sequence with empty pending");
+        let p = draft.pending.len();
+        let out = drafter
+            .backend
+            .verify_step(drafter.weights, &draft.pending, dcache, &[draft.kv], false)?;
+        let mut tok = argmax(&out.logits[(p - 1) * vocab..p * vocab]) as i32;
+        drafts.push(tok);
+        for _ in 1..k {
+            let out = drafter
+                .backend
+                .decode_step(drafter.weights, &[tok], dcache, &[draft.kv], false)?;
+            tok = argmax(&out.logits) as i32;
+            drafts.push(tok);
+        }
+    }
+
+    // -- verify: one cached forward over [last, d₁..d_k] ---------------
+    let mut vtokens = Vec::with_capacity(k + 1);
+    vtokens.push(*draft.pending.last().expect("pending holds the newest committed token"));
+    vtokens.extend_from_slice(&drafts);
+    let out = verifier
+        .backend
+        .verify_step(verifier.weights, &vtokens, vcache, &[vid], with_stats)?;
+
+    // -- accept the longest matching prefix ----------------------------
+    // Exactly one sampler draw per committed token, in order: a draft
+    // is accepted only when it equals the token the sampler picks from
+    // the verifier's logits at that position, so the committed stream
+    // is what plain generation with this sampler would have produced.
+    let mut committed = Vec::with_capacity(k + 1);
+    let mut accepted = 0usize;
+    for i in 0..=k {
+        let tok = sampler.sample(&out.logits[i * vocab..(i + 1) * vocab]) as i32;
+        committed.push(tok);
+        if i < k && drafts[i] == tok {
+            accepted += 1;
+        } else {
+            break;
+        }
+    }
+
+    // -- rollback to the first rejection -------------------------------
+    let c = committed.len(); // accepted + 1
+    let vlen = vcache.len(vid);
+    vcache.truncate(vid, vlen - (k + 1) + c)?;
+    if k > 0 {
+        // the drafter cached [pending…, d₁..d_{k-1}]; keep only the
+        // accepted drafts (d_k was proposed but never cached)
+        let base = dcache.len(draft.kv) - (k - 1);
+        let keep = accepted.min(k - 1);
+        dcache.truncate(draft.kv, base + keep)?;
+        draft.pending = committed[keep..].to_vec();
+    } else {
+        // plain verified step: the drafter just falls further behind
+        draft.pending.extend_from_slice(&committed);
+    }
+
+    // stats purity: the tap aggregated over all k+1 rows, so they are
+    // only safe to report when every row was committed (see RoundOut)
+    let stats = if accepted == k { out.stats } else { None };
+    Ok(RoundOut { committed, accepted, drafted: k, stats })
+}
+
+// ---------------------------------------------------------------------
+// Standalone generator (eval / bench / golden tests)
+// ---------------------------------------------------------------------
+
+/// Aggregate speculative statistics over one generation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecStats {
+    pub rounds: usize,
+    pub drafted: usize,
+    pub accepted: usize,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the verifier accepted.
+    pub fn acceptance(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Self-contained drafter/verifier pair for one-shot generations — the
+/// serving loop drives [`spec_round`] directly against its own caches
+/// instead.
+pub struct SpecGenerator<'a> {
+    drafter: SpecModel<'a>,
+    verifier: SpecModel<'a>,
+    ctrl: SpecController,
+}
+
+impl<'a> SpecGenerator<'a> {
+    pub fn new(drafter: SpecModel<'a>, verifier: SpecModel<'a>, cfg: &SpecConfig) -> Result<Self> {
+        let dm = &drafter.weights.manifest;
+        let vm = &verifier.weights.manifest;
+        if dm.config.vocab != vm.config.vocab
+            || dm.config.n_layers != vm.config.n_layers
+            || dm.config.max_seq != vm.config.max_seq
+        {
+            bail!("drafter and verifier manifests disagree — self-speculation needs one model");
+        }
+        Ok(SpecGenerator { drafter, verifier, ctrl: SpecController::new(cfg) })
+    }
+
+    /// The adaptive-k controller (read access for diagnostics/tests).
+    pub fn controller(&self) -> &SpecController {
+        &self.ctrl
+    }
+
+    /// Speculative generation: token-identical to
+    /// [`crate::eval::Evaluator::generate_with`] on the verifier
+    /// weights, with the drafter only accelerating. Returns the
+    /// generated suffix plus acceptance statistics.
+    pub fn generate(
+        &mut self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+        eos: Option<i32>,
+        sampler: &mut Sampler,
+    ) -> Result<(Vec<i32>, SpecStats)> {
+        let man = &self.verifier.weights.manifest;
+        if prompt.is_empty() || prompt.len() > man.config.max_seq {
+            return Err(anyhow!(
+                "prompt must be 1..={} tokens, got {}",
+                man.config.max_seq,
+                prompt.len()
+            ));
+        }
+        let mut vcache = KvCache::new(KvCacheConfig::from_manifest(man, 1));
+        let vid = vcache.alloc().expect("fresh single-slot cache");
+        let mut dcache = KvCache::new(KvCacheConfig::from_manifest(man, 1));
+        let did = dcache.alloc().expect("fresh single-slot cache");
+
+        // dual prefill: each role builds its own KV state for the prompt
+        let step = self
+            .verifier
+            .backend
+            .prefill(self.verifier.weights, prompt, &mut vcache, &[vid], false)?;
+        self.drafter
+            .backend
+            .prefill(self.drafter.weights, prompt, &mut dcache, &[did], false)?;
+
+        let first = sampler.sample(&step.logits) as i32;
+        let mut out = vec![first];
+        let mut draft = DraftState::new(did, first);
+        let mut stats = SpecStats::default();
+        'outer: while out.len() < max_new_tokens
+            && out.last() != eos.as_ref()
+            && vcache.remaining(vid) > 0
+        {
+            // never commit past the generation budget
+            let budget = max_new_tokens - out.len();
+            let k = self.ctrl.k().min(budget.saturating_sub(1));
+            let r = spec_round(
+                &self.drafter,
+                &mut dcache,
+                &mut draft,
+                &self.verifier,
+                &mut vcache,
+                vid,
+                k,
+                sampler,
+                false,
+            )?;
+            self.ctrl.observe(r.accepted, r.drafted);
+            stats.rounds += 1;
+            stats.drafted += r.drafted;
+            stats.accepted += r.accepted;
+            for &tok in &r.committed {
+                out.push(tok);
+                if eos == Some(tok) {
+                    break 'outer;
+                }
+            }
+        }
+        Ok((out, stats))
+    }
+}
+
+/// Quantize a standalone drafter copy of `weights` with a registry
+/// method — the offline analogue of what the serving loop's calibrator
+/// maintains online. Diagonal methods get a uniform activation diagonal
+/// (no calibration traffic has been seen yet); correlation methods are
+/// rejected (no corr pass on this path).
+pub fn drafter_weights(
+    weights: &ModelWeights,
+    method: &MethodSpec,
+    spec: &QuantSpec,
+) -> Result<ModelWeights> {
+    if method.needs_corr() {
+        bail!(
+            "method {} needs the full correlation — unsupported as a drafter",
+            method.label()
+        );
+    }
+    let mut out = weights.fork();
+    let rank = method.quantizer().lowrank_rank();
+    for lin in &weights.manifest.linears {
+        let w = weights
+            .get(&lin.name)
+            .ok_or_else(|| anyhow!("linear '{}' missing from weights", lin.name))?;
+        let lowrank = (rank > 0).then(|| lowrank_init(w, rank));
+        let uniform = vec![1.0f32; lin.d_in];
+        let mut stats = match method.requirement() {
+            StatsRequirement::None => LayerStats::default(),
+            _ => LayerStats::from_diag(&uniform),
+        };
+        stats.lowrank = lowrank.as_ref();
+        let wq = method.quantizer().quantize(w, &stats, spec)?;
+        out.set(&lin.name, wq);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_tracks_and_resets() {
+        let mut e = AcceptanceEwma::new(0.5);
+        assert!((e.rate() - 1.0).abs() < 1e-12, "optimistic before data");
+        e.observe(4, 4);
+        assert!((e.rate() - 1.0).abs() < 1e-12);
+        e.observe(0, 4);
+        assert!((e.rate() - 0.5).abs() < 1e-12);
+        e.observe(0, 0); // no drafts → no update
+        assert!((e.rate() - 0.5).abs() < 1e-12);
+        e.reset();
+        assert!((e.rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn controller_widens_on_acceptance_and_narrows_on_rejection() {
+        let mut c = SpecController::new(&SpecConfig::new(4));
+        assert_eq!(c.k(), 4);
+        for _ in 0..10 {
+            c.observe(4, 4);
+        }
+        assert_eq!(c.k(), 8, "sustained acceptance must widen k to the cap");
+        for _ in 0..20 {
+            c.observe(0, 8);
+        }
+        assert_eq!(c.k(), 1, "sustained rejection must narrow k to the floor");
+        c.reset();
+        assert_eq!(c.k(), 4);
+        assert!((c.acceptance() - 1.0).abs() < 1e-12, "reset clears the EWMA");
+    }
+
+    #[test]
+    fn fixed_k_ignores_acceptance() {
+        let mut c = SpecController::new(&SpecConfig::new(3).with_adaptive(false));
+        for _ in 0..10 {
+            c.observe(0, 3);
+        }
+        assert_eq!(c.k(), 3);
+        assert!(c.acceptance() < 0.1, "EWMA still tracks under fixed k");
+    }
+
+    #[test]
+    fn spec_config_defaults() {
+        let c = SpecConfig::default();
+        assert_eq!(c.k, 4);
+        assert!(c.adaptive);
+        assert_eq!(c.method.quantizer().name(), "rtn");
+        let c = SpecConfig::new(0);
+        assert_eq!(c.k, 1, "draft depth floor");
+    }
+}

@@ -1,0 +1,429 @@
+//! Speculative-decoding correctness suite — runs with ZERO artifacts.
+//!
+//! The acceptance contract, on every synthetic model family:
+//!
+//! * `KvCache::truncate` then re-append/advance is **bit-identical** to
+//!   never having appended (fp32 and packed-W4 execution);
+//! * `verify_step` row 0 equals `decode_step` bit-for-bit (the
+//!   exactness keystone: batched verification *is* plain decode);
+//! * speculative greedy generation (W4 drafter × fp32 verifier) is
+//!   token-identical to plain greedy generation — and stays identical
+//!   under a seeded stochastic sampler, because acceptance is defined
+//!   as "draft equals what the sampler draws from the verifier";
+//! * the serving integration: speculative requests stream fp32-exact
+//!   tokens even while drift-triggered requantization swaps the drafter
+//!   mid-generation, plain and speculative requests coexist, and
+//!   `ServeEvent::Done` reports why each generation stopped.
+
+use std::time::Duration;
+
+use ttq_serve::backend::{testmodel, ExecBackend, NativeBackend};
+use ttq_serve::coordinator::{BatchPolicy, ServeEvent, Server, ServerConfig, StopReason};
+use ttq_serve::corpus::{CorpusStream, Split, BOS};
+use ttq_serve::eval::{Evaluator, Sampler};
+use ttq_serve::kvcache::{KvCache, KvCacheConfig};
+use ttq_serve::quant::QuantSpec;
+use ttq_serve::specdec::{drafter_weights, SpecConfig, SpecGenerator, SpecModel};
+use ttq_serve::util::argmax;
+
+const FAMILIES: [&str; 3] = ["opt-micro", "qwen-micro", "gemma-micro"];
+
+fn native() -> NativeBackend {
+    NativeBackend::new(&ttq_serve::artifacts_dir())
+}
+
+fn native_w4() -> NativeBackend {
+    native().with_exec_quant(QuantSpec::new(4, 32))
+}
+
+fn prompt(stream: &mut CorpusStream, len: usize) -> Vec<i32> {
+    let mut toks = vec![BOS; len];
+    for t in toks.iter_mut().skip(1) {
+        *t = stream.next_token();
+    }
+    toks
+}
+
+// ---------------------------------------------------------------------
+// truncate: rollback is bit-identical to never having appended
+// ---------------------------------------------------------------------
+
+fn assert_truncate_roundtrip(model: &str, be: &NativeBackend) {
+    let w = testmodel::build(model).unwrap();
+    let vocab = w.manifest.config.vocab;
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let p = prompt(&mut s, w.manifest.config.max_seq / 2);
+    let mut cache = KvCache::new(KvCacheConfig::from_manifest(&w.manifest, 1));
+    let id = cache.alloc().unwrap();
+    let step = be.prefill(&w, &p, &mut cache, &[id], false).unwrap();
+    let base_len = cache.len(id);
+    let tok = argmax(&step.logits) as i32;
+
+    // reference: one decode step from the pristine prefill state
+    let first = be.decode_step(&w, &[tok], &mut cache, &[id], false).unwrap();
+    let next = argmax(&first.logits) as i32;
+
+    // rollback, then re-append the same token: bit-identical logits
+    cache.truncate(id, base_len).unwrap();
+    let again = be.decode_step(&w, &[tok], &mut cache, &[id], false).unwrap();
+    assert_eq!(
+        first.logits, again.logits,
+        "{model}: truncate+re-append diverged from the original append"
+    );
+
+    // deeper: a 3-token verify window, rolled all the way back, must
+    // leave the sequence exactly where it started
+    cache.truncate(id, base_len).unwrap();
+    let v = be
+        .verify_step(&w, &[tok, next, next], &mut cache, &[id], false)
+        .unwrap();
+    assert_eq!(cache.len(id), base_len + 3);
+    assert_eq!(
+        v.logits[..vocab],
+        first.logits[..],
+        "{model}: verify_step row 0 must equal decode_step bit-for-bit"
+    );
+    cache.truncate(id, base_len).unwrap();
+    let rewound = be.decode_step(&w, &[tok], &mut cache, &[id], false).unwrap();
+    assert_eq!(
+        first.logits, rewound.logits,
+        "{model}: rollback across a verify window is not bit-identical"
+    );
+}
+
+#[test]
+fn truncate_reappend_bit_identical_fp32_all_families() {
+    let be = native();
+    for model in FAMILIES {
+        assert_truncate_roundtrip(model, &be);
+    }
+}
+
+#[test]
+fn truncate_reappend_bit_identical_w4_all_families() {
+    let be = native_w4();
+    for model in FAMILIES {
+        assert_truncate_roundtrip(model, &be);
+    }
+}
+
+#[test]
+fn verify_step_matches_sequential_decode_positions() {
+    // all k rows of one verify forward equal k sequential decode steps
+    let be = native();
+    let w = testmodel::build("qwen-micro").unwrap();
+    let vocab = w.manifest.config.vocab;
+    let mut s = CorpusStream::new("c4s", Split::Eval);
+    let p = prompt(&mut s, 20);
+
+    let mut seq_cache = KvCache::new(KvCacheConfig::from_manifest(&w.manifest, 1));
+    let sid = seq_cache.alloc().unwrap();
+    let step = be.prefill(&w, &p, &mut seq_cache, &[sid], false).unwrap();
+    let mut tok = argmax(&step.logits) as i32;
+    let mut window = vec![tok];
+    let mut want = Vec::new();
+    for _ in 0..4 {
+        let out = be.decode_step(&w, &[tok], &mut seq_cache, &[sid], false).unwrap();
+        want.extend_from_slice(&out.logits);
+        tok = argmax(&out.logits) as i32;
+        window.push(tok);
+    }
+    window.pop(); // the last sampled token was never fed back
+
+    let mut ver_cache = KvCache::new(KvCacheConfig::from_manifest(&w.manifest, 1));
+    let vid = ver_cache.alloc().unwrap();
+    be.prefill(&w, &p, &mut ver_cache, &[vid], false).unwrap();
+    let v = be
+        .verify_step(&w, &window, &mut ver_cache, &[vid], false)
+        .unwrap();
+    assert_eq!(v.logits.len(), 4 * vocab);
+    assert_eq!(v.logits, want, "k-row causal window != k sequential decode steps");
+}
+
+// ---------------------------------------------------------------------
+// Golden: speculative ≡ plain, token for token
+// ---------------------------------------------------------------------
+
+#[test]
+fn speculative_greedy_equals_plain_greedy_all_families() {
+    // fp32 verifier × W4 drafter on every family: the committed stream
+    // must be exactly the plain fp32 greedy stream, while real drafting
+    // happened (drafted > 0).
+    let fp = native();
+    let w4 = native_w4();
+    for model in FAMILIES {
+        let weights = fp.load_model(model).unwrap();
+        let ev = Evaluator::with_weights(&fp, fp.load_model(model).unwrap());
+        let mut s = CorpusStream::new("wt2s", Split::Eval);
+        let p = prompt(&mut s, weights.manifest.config.max_seq / 2);
+        let max_new = weights.manifest.config.max_seq / 2;
+
+        let plain = ev.generate(&p, max_new, None).unwrap();
+        let drafter = SpecModel { backend: &w4, weights: &weights };
+        let verifier = SpecModel { backend: &fp, weights: &weights };
+        let mut gen = SpecGenerator::new(drafter, verifier, &SpecConfig::new(4)).unwrap();
+        let mut sampler = Sampler::greedy();
+        let (spec, stats) = gen.generate(&p, max_new, None, &mut sampler).unwrap();
+        assert_eq!(spec, plain, "{model}: speculative greedy diverged from plain greedy");
+        assert_eq!(spec.len(), max_new);
+        assert!(stats.rounds > 0 && stats.drafted > 0, "{model}: no drafting happened");
+    }
+}
+
+#[test]
+fn speculative_matches_plain_under_seeded_sampler() {
+    // beyond greedy: with one sampler draw per committed token, the
+    // speculative stream equals the plain stream for any seeded sampler
+    let fp = native();
+    let w4 = native_w4();
+    let weights = fp.load_model("gemma-micro").unwrap();
+    let ev = Evaluator::with_weights(&fp, fp.load_model("gemma-micro").unwrap());
+    let mut s = CorpusStream::new("ptbs", Split::Eval);
+    let p = prompt(&mut s, 24);
+    for seed in [3u64, 17] {
+        let plain = ev
+            .generate_with(&p, 12, None, &mut Sampler::top_k(8, 0.9, seed))
+            .unwrap();
+        let drafter = SpecModel { backend: &w4, weights: &weights };
+        let verifier = SpecModel { backend: &fp, weights: &weights };
+        let mut gen = SpecGenerator::new(drafter, verifier, &SpecConfig::new(3)).unwrap();
+        let (spec, _) = gen
+            .generate(&p, 12, None, &mut Sampler::top_k(8, 0.9, seed))
+            .unwrap();
+        assert_eq!(spec, plain, "seed {seed}: sampled speculative stream diverged");
+    }
+}
+
+#[test]
+fn speculative_honors_eos_and_budget_like_plain() {
+    let fp = native();
+    let w4 = native_w4();
+    let weights = fp.load_model("opt-micro").unwrap();
+    let ev = Evaluator::with_weights(&fp, fp.load_model("opt-micro").unwrap());
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let p = prompt(&mut s, 16);
+    // use the 3rd plain token as EOS so both paths must stop early
+    let plain_full = ev.generate(&p, 10, None).unwrap();
+    let eos = plain_full[2];
+    let plain = ev.generate(&p, 10, Some(eos)).unwrap();
+    let drafter = SpecModel { backend: &w4, weights: &weights };
+    let verifier = SpecModel { backend: &fp, weights: &weights };
+    let mut gen = SpecGenerator::new(drafter, verifier, &SpecConfig::new(4)).unwrap();
+    let mut sampler = Sampler::greedy();
+    let (spec, _) = gen.generate(&p, 10, Some(eos), &mut sampler).unwrap();
+    assert_eq!(spec, plain, "eos handling diverged");
+    assert_eq!(*spec.last().unwrap(), eos);
+    // budget: a tiny budget still matches exactly
+    let (spec2, _) = gen.generate(&p, 2, None, &mut Sampler::greedy()).unwrap();
+    assert_eq!(spec2, plain_full[..2], "budget clamp diverged");
+}
+
+#[test]
+fn self_drafting_accepts_everything() {
+    // drafter == verifier (same weights, same backend): every draft
+    // must land, and the adaptive controller must widen k to its cap
+    let fp = native();
+    let weights = fp.load_model("qwen-micro").unwrap();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let p = prompt(&mut s, 16);
+    let drafter = SpecModel { backend: &fp, weights: &weights };
+    let verifier = SpecModel { backend: &fp, weights: &weights };
+    let mut gen = SpecGenerator::new(drafter, verifier, &SpecConfig::new(2)).unwrap();
+    let (toks, stats) = gen.generate(&p, 24, None, &mut Sampler::greedy()).unwrap();
+    assert_eq!(toks.len(), 24);
+    assert_eq!(stats.accepted, stats.drafted, "self-drafting must accept every draft");
+    assert!((gen.controller().acceptance() - 1.0).abs() < 1e-9);
+    assert_eq!(gen.controller().k(), 4, "k must widen to the 2×k cap on clean sweeps");
+}
+
+#[test]
+fn drafter_weights_builds_any_registry_method() {
+    use ttq_serve::quant::MethodSpec;
+    let fp = native();
+    let weights = fp.load_model("opt-micro").unwrap();
+    for spec in ["rtn", "ttq:r=0", "nf:4", "prune:0.5"] {
+        let m = MethodSpec::parse(spec).unwrap();
+        let dw = drafter_weights(&weights, &m, &QuantSpec::new(4, 32)).unwrap();
+        assert_ne!(dw.version(), weights.version(), "{spec}: fork must re-version");
+        // quantized drafter still generates (structurally valid weights)
+        let ev = Evaluator::with_weights(&fp, dw);
+        let toks = ev.generate(&[BOS, 1, 2, 3], 4, None).unwrap();
+        assert_eq!(toks.len(), 4, "{spec}");
+    }
+    // correlation methods have no serving-path stats source
+    assert!(drafter_weights(&weights, &MethodSpec::gptq("c4s"), &QuantSpec::new(4, 32)).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Serving integration
+// ---------------------------------------------------------------------
+
+#[test]
+fn server_speculative_stream_is_fp32_exact_across_requants() {
+    // hair-trigger drift: the calibrator requantizes (and thereby swaps
+    // the drafter) repeatedly mid-generation — the speculative stream
+    // must still be exactly the fp32 model's greedy output
+    let be = native();
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.policy = BatchPolicy { buckets: vec![1], linger: Duration::ZERO };
+    cfg.max_new_tokens = 12;
+    cfg.calib.drift_threshold = 1e-9;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let prompt_len = server.max_seq() / 2;
+    let mut s = CorpusStream::new("ptbs", Split::Eval);
+    let p = prompt(&mut s, prompt_len);
+    let rid = server.submit_speculative(p.clone());
+    let events = server.drain().unwrap();
+
+    // reference: plain greedy on pristine fp32 weights
+    let ev = Evaluator::new(&be, "qwen-micro").unwrap();
+    let want = ev.generate(&p, 12, None).unwrap();
+    let got: Vec<i32> = events
+        .iter()
+        .filter_map(|e| match e {
+            ServeEvent::Token { id, token, .. } if *id == rid => Some(*token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(got, want, "speculative serving stream is not fp32-exact");
+    assert!(
+        server.metrics.requants.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "test setup: requantization must fire mid-generation"
+    );
+    assert!(server.metrics.spec_rounds.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    match events.last().unwrap() {
+        ServeEvent::Done { tokens, stop, .. } => {
+            assert_eq!(tokens, &want);
+            assert_eq!(*stop, StopReason::MaxNewTokens);
+        }
+        e => panic!("expected Done, got {e:?}"),
+    }
+}
+
+#[test]
+fn server_mixes_plain_and_speculative_requests() {
+    let be = native();
+    let mut cfg = ServerConfig::new("opt-micro");
+    cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
+    cfg.max_new_tokens = 6;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    let plain_id = server.submit(prompt(&mut s, 20));
+    let spec_id = server.submit_speculative(prompt(&mut s, 20));
+    let plain_id2 = server.submit(prompt(&mut s, 24));
+    let events = server.drain().unwrap();
+    for rid in [plain_id, spec_id, plain_id2] {
+        let toks: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { id, token, .. } if *id == rid => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(toks.len(), 6, "request {rid}");
+        let indices: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { id, index, .. } if *id == rid => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(indices, vec![0, 1, 2, 3, 4, 5], "request {rid} indices in order");
+        assert_eq!(
+            events
+                .iter()
+                .filter(|e| matches!(e, ServeEvent::Done { id, .. } if *id == rid))
+                .count(),
+            1
+        );
+    }
+    assert_eq!(server.running(), 0);
+    assert_eq!(server.cache_stats().active_seqs, 0, "verifier slots recycled");
+    assert!(
+        server.metrics.spec_rounds.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "the speculative request must have run speculative rounds"
+    );
+    assert!(
+        server.metrics.decode_steps.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "the plain requests must have run batched decode steps"
+    );
+}
+
+#[test]
+fn done_reports_stop_reason() {
+    let be = native();
+    // MaxNewTokens: room to spare, budget exhausted
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.max_new_tokens = 3;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let mut s = CorpusStream::new("wt2s", Split::Eval);
+    server.submit(prompt(&mut s, 16));
+    let events = server.drain().unwrap();
+    assert!(matches!(
+        events.last().unwrap(),
+        ServeEvent::Done { stop: StopReason::MaxNewTokens, .. }
+    ));
+
+    // ContextFull: a full-window prompt leaves room for exactly 1 token
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.max_new_tokens = 16;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let max_seq = server.max_seq();
+    server.submit(prompt(&mut s, max_seq));
+    let events = server.drain().unwrap();
+    match events.last().unwrap() {
+        ServeEvent::Done { tokens, stop, .. } => {
+            assert_eq!(tokens.len(), 1);
+            assert_eq!(*stop, StopReason::ContextFull);
+        }
+        e => panic!("expected Done, got {e:?}"),
+    }
+
+    // Eos: probe the second generated token, then stop on it
+    let p = prompt(&mut s, 20);
+    let mut cfg = ServerConfig::new("qwen-micro");
+    cfg.max_new_tokens = 6;
+    let mut probe = Server::new(&be, cfg.clone()).unwrap();
+    probe.submit(p.clone());
+    let second = probe
+        .drain()
+        .unwrap()
+        .iter()
+        .find_map(|e| match e {
+            ServeEvent::Token { token, index: 1, .. } => Some(*token),
+            _ => None,
+        })
+        .unwrap();
+    cfg.eos = Some(second);
+    let mut server = Server::new(&be, cfg).unwrap();
+    server.submit(p);
+    let events = server.drain().unwrap();
+    assert!(matches!(
+        events.last().unwrap(),
+        ServeEvent::Done { stop: StopReason::Eos, .. }
+    ));
+}
+
+#[test]
+fn speculative_backpressure_and_slot_recycling() {
+    // more speculative requests than KV slots: both the verifier slab
+    // and the drafter slab must recycle cleanly
+    let be = native();
+    let mut cfg = ServerConfig::new("opt-micro");
+    cfg.policy = BatchPolicy { buckets: vec![4], linger: Duration::ZERO };
+    cfg.cache_slots = 2;
+    cfg.max_new_tokens = 3;
+    let mut server = Server::new(&be, cfg).unwrap();
+    let mut s = CorpusStream::new("c4s", Split::Eval);
+    let n = 5;
+    for _ in 0..n {
+        server.submit_speculative(prompt(&mut s, 20));
+    }
+    let events = server.drain().unwrap();
+    let done = events
+        .iter()
+        .filter(|e| matches!(e, ServeEvent::Done { .. }))
+        .count();
+    assert_eq!(done, n, "every speculative request must complete with 2 KV slots");
+    assert_eq!(server.cache_stats().active_seqs, 0);
+}
