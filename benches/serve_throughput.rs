@@ -1,0 +1,122 @@
+//! Multi-scenario serving-throughput bench + perf gates.
+//!
+//! Run: `cargo bench --bench serve_throughput [-- --fast] [-- --threads N]`
+//! — needs **no** artifacts (synthetic models). Drives the coordinator
+//! through the workload mix of `bench::throughput::default_scenarios`
+//! (short-prompt chat, long-prefill summarization, mixed-domain drift,
+//! specdec-heavy, W4-vs-fp32 decode) plus a 1/2/N worker-pool thread
+//! sweep, times the pooled kernel against the retained scoped-thread
+//! spawn-per-call baseline, writes `BENCH_throughput.json` (schema:
+//! `docs/BENCHMARKS.md`) and exits non-zero when a gate fails:
+//!
+//! * **pooled ≥ scoped** — the persistent pool must not lose to the old
+//!   spawn-per-matmul kernel on a decode-shaped call stream (this is the
+//!   whole point of the pool);
+//! * **W4 decode ≥ fp32 decode at ≥ 2 threads** — packed decode must
+//!   out-run dense decode in the memory-bound phase. Measured on the
+//!   largest synthetic model so the fp32 weights actually stream from
+//!   memory; on a single-lane host the gate has no parallel traffic to
+//!   measure and reports informationally instead.
+
+use ttq_serve::bench::throughput::{default_scenarios, kernel_baseline, run_scenario};
+use ttq_serve::linalg::pool::WorkerPool;
+use ttq_serve::util::cli::Args;
+
+fn main() {
+    let a = Args::from_env();
+    let fast = a.has("fast");
+    // same sizing policy as every NativeBackend default — one source
+    let threads = a.get_usize("threads", WorkerPool::default_threads()).max(1);
+    let mut gate_ok = true;
+
+    // -- scenario mix at the full thread count ------------------------
+    println!("== serve throughput, {threads} pool lanes, fast={fast} ==");
+    let mut results = Vec::new();
+    for spec in default_scenarios(fast) {
+        let r = run_scenario(&spec, threads).expect("scenario");
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    // -- worker-pool thread sweep on the chat load --------------------
+    println!("\n== thread sweep (short-chat) ==");
+    let chat = default_scenarios(fast).remove(0);
+    let mut sweep = vec![1usize, 2, threads];
+    sweep.sort_unstable();
+    sweep.dedup();
+    for t in sweep {
+        let mut spec = chat.clone();
+        spec.name = format!("short-chat@{t}t");
+        let r = run_scenario(&spec, t).expect("sweep scenario");
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    // -- pooled vs scoped-thread kernel baseline ----------------------
+    println!("\n== pooled vs scoped-thread kernel (decode-shaped stream) ==");
+    let base = kernel_baseline(threads, fast);
+    println!(
+        "pooled {:.2} Gflop/s   scoped {:.2} Gflop/s   speedup {:.2}x",
+        base.pooled_gflops, base.scoped_gflops, base.speedup
+    );
+    // On a single lane both kernels run serial and the comparison is
+    // pure timer noise — the gate only arms where the pool's dispatch
+    // amortization can actually show up.
+    if threads >= 2 && base.pooled_gflops < base.scoped_gflops {
+        eprintln!(
+            "PERF GATE FAILED: pooled kernel {:.2} Gflop/s < scoped-thread baseline {:.2} Gflop/s",
+            base.pooled_gflops, base.scoped_gflops
+        );
+        gate_ok = false;
+    } else if threads < 2 {
+        println!("(pooled-vs-scoped gate informational: single-lane host)");
+    }
+
+    // -- W4 vs fp32 decode gate ---------------------------------------
+    let fp32 = results.iter().find(|r| r.name == "fp32-decode");
+    let w4 = results.iter().find(|r| r.name == "w4-decode");
+    let mut w4_gate: Option<bool> = None;
+    if let (Some(fp32), Some(w4)) = (fp32, w4) {
+        println!(
+            "\nW4 decode {:.0} tok/s vs fp32 decode {:.0} tok/s at {threads} threads",
+            w4.decode_tokens_per_sec, fp32.decode_tokens_per_sec
+        );
+        if threads >= 2 {
+            let ok = w4.decode_tokens_per_sec >= fp32.decode_tokens_per_sec;
+            w4_gate = Some(ok);
+            if !ok {
+                eprintln!(
+                    "PERF GATE FAILED: packed-W4 decode {:.0} tok/s < fp32 decode {:.0} tok/s \
+                     at {threads} (≥2) threads",
+                    w4.decode_tokens_per_sec, fp32.decode_tokens_per_sec
+                );
+                gate_ok = false;
+            }
+        } else {
+            println!("(W4-vs-fp32 gate informational: single-lane host, no parallel decode traffic)");
+        }
+    }
+
+    // -- JSON artifact -------------------------------------------------
+    let rows: Vec<String> = results.iter().map(|r| format!("    {}", r.to_json())).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve_throughput\",\n  \"threads\": {threads},\n  \"fast\": {fast},\n  \
+         \"kernel_baseline\": {{\"threads\": {}, \"pooled_gflops\": {:.3}, \"scoped_gflops\": {:.3}, \"speedup\": {:.3}}},\n  \
+         \"gates\": {{\"pooled_ge_scoped\": {}, \"w4_ge_fp32_decode\": {}}},\n  \
+         \"scenarios\": [\n{}\n  ]\n}}\n",
+        base.threads,
+        base.pooled_gflops,
+        base.scoped_gflops,
+        base.speedup,
+        base.pooled_gflops >= base.scoped_gflops,
+        w4_gate.map_or("null".to_string(), |b| b.to_string()),
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_throughput.json", &json).expect("write BENCH_throughput.json");
+    println!("\nwrote BENCH_throughput.json ({} scenarios)", results.len());
+
+    if !gate_ok {
+        eprintln!("PERF GATE FAILED: see messages above");
+        std::process::exit(1);
+    }
+}

@@ -43,10 +43,12 @@ pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::kvcache::{KvCache, SeqId};
+use crate::linalg::pool::WorkerPool;
 use crate::linalg::Mat;
 use crate::models::ModelWeights;
 use crate::quant::ActStats;
@@ -95,6 +97,16 @@ pub trait ExecBackend: Send + Sync {
     /// deterministic [`testmodel`] generator when the files are absent.
     fn load_model(&self, model: &str) -> Result<ModelWeights> {
         ModelWeights::load(self.models_dir(), model)
+    }
+
+    /// The persistent kernel worker pool this backend executes on, when
+    /// it has one (native). Callers use it to share one pool across
+    /// cooperating backends (the coordinator's speculative
+    /// drafter/verifier) and to read cumulative kernel time
+    /// ([`WorkerPool::kernel_us`]) for per-phase accounting. Backends
+    /// that replay fixed artifacts (PJRT) return `None`.
+    fn worker_pool(&self) -> Option<Arc<WorkerPool>> {
+        None
     }
 
     /// Full logits, flat `(batch × seq × vocab)` row-major.

@@ -17,17 +17,20 @@
 //! over [`crate::quant::Packed`] codes — dequantized group-by-group in
 //! registers, never materializing the f32 weight).
 //!
-//! Dense projections use a scoped-thread row-parallel matmul when the
-//! token block is large enough to pay for the fan-out.
+//! Dense projections and the cached-attention inner loops execute on a
+//! persistent [`crate::linalg::pool::WorkerPool`] — parked worker
+//! threads claim chunked row ranges per kernel call, replacing the
+//! scoped-thread spawn/join every matmul used to pay.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::{BatchStats, ExecBackend, StepOut};
 use crate::kvcache::{KvCache, SeqId};
+use crate::linalg::pool::WorkerPool;
 use crate::linalg::Mat;
 use crate::models::{Manifest, ModelWeights};
 use crate::quant::{
@@ -39,53 +42,100 @@ use crate::quant::{
 const NORM_EPS: f32 = 1e-5;
 
 // ---------------------------------------------------------------------
-// Threaded kernels
+// Pooled kernels
 // ---------------------------------------------------------------------
 
-/// Below this `m·k·n` product the thread fan-out costs more than it
-/// saves; fall back to the single-threaded kernel.
-const MT_FLOP_FLOOR: usize = 1 << 16;
+/// `d_in` tile width of the cache-blocked fp32 kernels. Per output
+/// element, tile-partial sums are accumulated in tile order — a fixed,
+/// shape-independent summation order, so every caller (batched rows,
+/// decode GEMV, serial fallback, any thread count) produces bit-identical
+/// results.
+const K_TILE: usize = 256;
 
-/// `a @ bᵀ` with output rows split across scoped threads.
-pub fn matmul_bt_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+/// One chunk of `a @ bᵀ` output rows, tiled over `d_in` so the streamed
+/// `b` tile stays cache-resident while it is reused across the chunk's
+/// rows. Shared by the pooled and serial paths of [`matmul_bt_mt`].
+fn bt_rows(a: &Mat, b: &Mat, r0: usize, orows: &mut [f32]) {
+    let (k, n) = (a.cols, b.rows);
+    if n == 0 {
+        return;
+    }
+    let rows = orows.len() / n;
+    let mut kt = 0;
+    while kt < k {
+        let ke = (kt + K_TILE).min(k);
+        for rr in 0..rows {
+            let arow = &a.row(r0 + rr)[kt..ke];
+            let orow = &mut orows[rr * n..(rr + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b.row(j)[kt..ke];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o += acc;
+            }
+        }
+        kt = ke;
+    }
+}
+
+/// The `m == 1` twin of [`bt_rows`]: one output row, chunked over the
+/// `d_out` columns (`j0..`) instead of over rows — the only axis a
+/// decode-time GEMV can fan out on. Identical tile-partial accumulation
+/// order, so GEMV results match the batched kernel bit for bit.
+fn gemv_cols(arow: &[f32], b: &Mat, j0: usize, os: &mut [f32]) {
+    let k = arow.len();
+    let mut kt = 0;
+    while kt < k {
+        let ke = (kt + K_TILE).min(k);
+        let at = &arow[kt..ke];
+        for (jj, o) in os.iter_mut().enumerate() {
+            let brow = &b.row(j0 + jj)[kt..ke];
+            let mut acc = 0.0f32;
+            for (av, bv) in at.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o += acc;
+        }
+        kt = ke;
+    }
+}
+
+/// `a @ bᵀ` on the worker pool, cache-blocked over `d_in`.
+///
+/// Batched calls (`m ≥ 2`, prefill/verify) chunk output *rows* across
+/// the pool; a decode-time GEMV (`m == 1`) chunks the single output
+/// row's *columns* (`d_out`) instead, so decode fans out too. The
+/// serial-vs-parallel decision lives in [`WorkerPool::run_rows`]
+/// (one flop-floor check, not one per kernel), and pooled output is
+/// bit-identical to single-threaded output for every shape.
+pub fn matmul_bt_mt(a: &Mat, b: &Mat, pool: &WorkerPool) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_bt_mt dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
-    if threads <= 1 || m < 2 || m * k * n < MT_FLOP_FLOOR {
-        return a.matmul_bt(b);
-    }
     let mut out = Mat::zeros(m, n);
-    let nthreads = threads.min(m);
-    let chunk = m.div_ceil(nthreads);
-    std::thread::scope(|s| {
-        for (ti, orows) in out.data.chunks_mut(chunk * n).enumerate() {
-            s.spawn(move || {
-                let r0 = ti * chunk;
-                let rows = orows.len() / n;
-                for rr in 0..rows {
-                    let arow = a.row(r0 + rr);
-                    let orow = &mut orows[rr * n..(rr + 1) * n];
-                    for (j, o) in orow.iter_mut().enumerate() {
-                        let brow = b.row(j);
-                        let mut acc = 0.0f32;
-                        for p in 0..k {
-                            acc += arow[p] * brow[p];
-                        }
-                        *o = acc;
-                    }
-                }
-            });
-        }
-    });
+    if m == 1 {
+        pool.run_rows(&mut out.data, n, 1, k * n, |j0, os| {
+            gemv_cols(a.row(0), b, j0, os);
+        });
+    } else {
+        pool.run_rows(&mut out.data, m, n, m * k * n, |r0, orows| {
+            bt_rows(a, b, r0, orows);
+        });
+    }
     out
 }
 
 /// Grouped int-matmul over the packed weight: `Y = X Ŵᵀ` with
 /// X `(n, d_in)` row-major tokens and Ŵ the `(d_out, d_in)` packed
-/// tensor. Each weight group is dequantized once into a stack buffer
-/// and streamed across all n token rows (the register-resident dequant
-/// of `marlin_gemm`, CPU edition); output rows are computed transposed
-/// so scoped threads own disjoint slices.
-pub fn packed_matmul_nt(p: &Packed, x: &Mat, threads: usize) -> Mat {
+/// tensor. Each weight group (the `d_in` tile of this kernel) is
+/// dequantized once into a stack buffer and streamed across all n token
+/// rows — the register-resident dequant of `marlin_gemm`, CPU edition.
+/// Output rows are computed transposed so the pool's chunks own disjoint
+/// slices; the chunked axis is `d_out`, which keeps a decode-time GEMV
+/// (`n == 1`) fanning out across weight rows instead of falling back to
+/// serial.
+pub fn packed_matmul_nt(p: &Packed, x: &Mat, pool: &WorkerPool) -> Mat {
     assert_eq!(p.cols, x.cols, "packed_matmul_nt dim mismatch");
     let (n, d_in, d_out) = (x.rows, x.cols, p.rows);
     let g = p.group;
@@ -95,7 +145,7 @@ pub fn packed_matmul_nt(p: &Packed, x: &Mat, threads: usize) -> Mat {
     }
     let groups_per_row = d_in / g;
     let mut yt = Mat::zeros(d_out, n);
-    let run_rows = |r0: usize, yrows: &mut [f32]| {
+    pool.run_rows(&mut yt.data, d_out, n, n * d_in * d_out, |r0, yrows| {
         let mut wbuf = vec![0.0f32; g];
         let rows = yrows.len() / n;
         for rr in 0..rows {
@@ -119,19 +169,7 @@ pub fn packed_matmul_nt(p: &Packed, x: &Mat, threads: usize) -> Mat {
                 }
             }
         }
-    };
-    if threads <= 1 || n < 2 || n * d_in * d_out < MT_FLOP_FLOOR {
-        run_rows(0, &mut yt.data);
-    } else {
-        let nthreads = threads.min(d_out);
-        let chunk = d_out.div_ceil(nthreads);
-        std::thread::scope(|s| {
-            for (ti, yrows) in yt.data.chunks_mut(chunk * n).enumerate() {
-                let run = &run_rows;
-                s.spawn(move || run(ti * chunk, yrows));
-            }
-        });
-    }
+    });
     yt.transpose()
 }
 
@@ -304,7 +342,7 @@ fn proj(
     weights: &ModelWeights,
     mode: &ExecMode,
     taps: &mut Taps,
-    threads: usize,
+    pool: &WorkerPool,
     name: &str,
     x: &Mat,
 ) -> Result<Mat> {
@@ -320,7 +358,7 @@ fn proj(
             let p = map
                 .get(name)
                 .ok_or_else(|| anyhow!("linear '{name}' not packed"))?;
-            Ok(packed_matmul_nt(p, x, threads))
+            Ok(packed_matmul_nt(p, x, pool))
         }
         ExecMode::FusedTtq { spec } => {
             // D from the live batch via the shared quant-layer formula
@@ -328,9 +366,9 @@ fn proj(
             let td = &weights.manifest.ttq_defaults;
             let d = diag_from_x(&x.transpose(), td.p, td.lam, td.alpha);
             let wq = awq_quantize(w, &d, spec);
-            Ok(matmul_bt_mt(x, &wq, threads))
+            Ok(matmul_bt_mt(x, &wq, pool))
         }
-        _ => Ok(matmul_bt_mt(x, w, threads)),
+        _ => Ok(matmul_bt_mt(x, w, pool)),
     }
 }
 
@@ -339,7 +377,7 @@ fn forward(
     tokens: &[i32],
     batch: usize,
     mode: ExecMode,
-    threads: usize,
+    pool: &WorkerPool,
 ) -> Result<ForwardOut> {
     let man: &Manifest = &weights.manifest;
     let cfg = &man.config;
@@ -410,9 +448,9 @@ fn forward(
                 family == "gemma",
             ),
         };
-        let mut q = proj(weights, &mode, &mut taps, threads, &format!("{p}wq"), &x)?;
-        let mut k = proj(weights, &mode, &mut taps, threads, &format!("{p}wk"), &x)?;
-        let v = proj(weights, &mode, &mut taps, threads, &format!("{p}wv"), &x)?;
+        let mut q = proj(weights, &mode, &mut taps, pool, &format!("{p}wq"), &x)?;
+        let mut k = proj(weights, &mode, &mut taps, pool, &format!("{p}wk"), &x)?;
+        let v = proj(weights, &mode, &mut taps, pool, &format!("{p}wv"), &x)?;
         if family == "qwen" {
             headnorm_inplace(&mut q, hd, need(weights, &format!("{p}qnorm"))?.row(0), NORM_EPS);
             headnorm_inplace(&mut k, hd, need(weights, &format!("{p}knorm"))?.row(0), NORM_EPS);
@@ -457,7 +495,7 @@ fn forward(
                 }
             }
         }
-        let attn_out = proj(weights, &mode, &mut taps, threads, &format!("{p}wo"), &o)?;
+        let attn_out = proj(weights, &mode, &mut taps, pool, &format!("{p}wo"), &o)?;
         add_inplace(&mut h, &attn_out);
 
         // -- MLP block ------------------------------------------------
@@ -476,14 +514,14 @@ fn forward(
             ),
         };
         let m = if family == "opt" {
-            let mut up = proj(weights, &mode, &mut taps, threads, &format!("{p}up"), &x)?;
+            let mut up = proj(weights, &mode, &mut taps, pool, &format!("{p}up"), &x)?;
             for v in up.data.iter_mut() {
                 *v = v.max(0.0);
             }
             up
         } else {
-            let gate = proj(weights, &mode, &mut taps, threads, &format!("{p}gate"), &x)?;
-            let up = proj(weights, &mode, &mut taps, threads, &format!("{p}up"), &x)?;
+            let gate = proj(weights, &mode, &mut taps, pool, &format!("{p}gate"), &x)?;
+            let up = proj(weights, &mode, &mut taps, pool, &format!("{p}up"), &x)?;
             let mut m = up;
             for (mv, &gv) in m.data.iter_mut().zip(&gate.data) {
                 let act = if family == "qwen" { silu(gv) } else { gelu(gv) };
@@ -491,7 +529,7 @@ fn forward(
             }
             m
         };
-        let mlp_out = proj(weights, &mode, &mut taps, threads, &format!("{p}down"), &m)?;
+        let mlp_out = proj(weights, &mode, &mut taps, pool, &format!("{p}down"), &m)?;
         add_inplace(&mut h, &mlp_out);
     }
 
@@ -505,7 +543,7 @@ fn forward(
         _ => rmsnorm(&h, need(weights, "lnf")?.row(0), NORM_EPS, family == "gemma"),
     };
     // tied LM head (never quantized — not a manifest linear)
-    let logits = matmul_bt_mt(&hf, embed, threads);
+    let logits = matmul_bt_mt(&hf, embed, pool);
     Ok(ForwardOut { logits, taps })
 }
 
@@ -539,7 +577,7 @@ fn cproj(
     weights: &ModelWeights,
     mode: &ExecMode,
     taps: Option<&mut TapNorms>,
-    threads: usize,
+    pool: &WorkerPool,
     name: &str,
     x: &Mat,
 ) -> Result<Mat> {
@@ -547,7 +585,7 @@ fn cproj(
         taps.push(norm_sums(x, &weights.manifest.norm_ps));
     }
     let mut unused = Taps { norms: Vec::new(), corr: Vec::new() };
-    proj(weights, mode, &mut unused, threads, name, x)
+    proj(weights, mode, &mut unused, pool, name, x)
 }
 
 /// Incremental forward over cached K/V — the decode engine's kernel.
@@ -583,7 +621,7 @@ fn forward_cached(
     mode: &ExecMode,
     with_stats: bool,
     all_positions: bool,
-    threads: usize,
+    pool: &WorkerPool,
 ) -> Result<(Mat, TapNorms)> {
     let man: &Manifest = &weights.manifest;
     let cfg = &man.config;
@@ -631,7 +669,7 @@ fn forward_cached(
     let mut trig = vec![(0.0f32, 0.0f32); half];
     let mut taps: TapNorms = Vec::new();
     let cp = |taps: &mut TapNorms, name: &str, x: &Mat| {
-        cproj(weights, mode, with_stats.then_some(taps), threads, name, x)
+        cproj(weights, mode, with_stats.then_some(taps), pool, name, x)
     };
 
     // embedding (+ family-specific input treatment)
@@ -708,14 +746,29 @@ fn forward_cached(
         }
         let scale = 1.0 / (hd as f32).sqrt();
         let mut o = Mat::zeros(n, d_attn);
-        let mut scores = vec![0.0f32; cfg.max_seq];
-        for si in 0..n_seqs {
-            let (kc, vc) = cache.layer(ids[si], i);
-            for head in 0..n_heads {
-                let kvh = head / rep;
-                for j in 0..new_len {
-                    let pos = starts[si] + j;
-                    let qrow = &q.row(si * new_len + j)[head * hd..(head + 1) * hd];
+        // Cached attention on the pool: every fresh position's output
+        // row is independent (it reads the immutable cached prefix plus
+        // the fresh K/V rows written above), so the row axis of `o`
+        // chunks across worker lanes — a long prefill splits one
+        // sequence's positions, a wide decode batch splits sequences.
+        // Per-(seq, head, pos) arithmetic is exactly the serial loop's,
+        // so chunking keeps the step bit-identical.
+        let cache_ro: &KvCache = cache;
+        let att_flops: usize = starts
+            .iter()
+            .map(|&s0| new_len * (s0 + new_len) * d_attn * 2)
+            .sum();
+        pool.run_rows(&mut o.data, n, d_attn, att_flops, |r0, orows| {
+            let mut scores = vec![0.0f32; cfg.max_seq];
+            let rows = orows.len() / d_attn;
+            for rr in 0..rows {
+                let r = r0 + rr;
+                let (si, j) = (r / new_len, r % new_len);
+                let (kc, vc) = cache_ro.layer(ids[si], i);
+                let pos = starts[si] + j;
+                for head in 0..n_heads {
+                    let kvh = head / rep;
+                    let qrow = &q.row(r)[head * hd..(head + 1) * hd];
                     let mut mx = f32::NEG_INFINITY;
                     for (t, sc) in scores.iter_mut().enumerate().take(pos + 1) {
                         let krow = &kc.row(t)[kvh * hd..(kvh + 1) * hd];
@@ -732,7 +785,7 @@ fn forward_cached(
                         denom += *sc;
                     }
                     let inv = 1.0 / denom;
-                    let orow = &mut o.row_mut(si * new_len + j)[head * hd..(head + 1) * hd];
+                    let orow = &mut orows[rr * d_attn + head * hd..rr * d_attn + (head + 1) * hd];
                     for (t, &sc) in scores.iter().enumerate().take(pos + 1) {
                         let wgt = sc * inv;
                         let vrow = &vc.row(t)[kvh * hd..(kvh + 1) * hd];
@@ -742,7 +795,7 @@ fn forward_cached(
                     }
                 }
             }
-        }
+        });
         let attn_out = cp(&mut taps, &format!("{p}wo"), &o)?;
         add_inplace(&mut h, &attn_out);
 
@@ -796,7 +849,7 @@ fn forward_cached(
     }
     if all_positions {
         // verifier path: logits at every fresh position
-        return Ok((matmul_bt_mt(&hf, embed, threads), taps));
+        return Ok((matmul_bt_mt(&hf, embed, pool), taps));
     }
     // tied LM head over the *last* position of each sequence only —
     // the decode payoff: one vocab GEMV per sequence, not per token
@@ -804,7 +857,7 @@ fn forward_cached(
     for si in 0..n_seqs {
         last.row_mut(si).copy_from_slice(hf.row((si + 1) * new_len - 1));
     }
-    Ok((matmul_bt_mt(&last, embed, threads), taps))
+    Ok((matmul_bt_mt(&last, embed, pool), taps))
 }
 
 /// Sum next-token NLL + count from `(batch × seq, vocab)` logits.
@@ -843,10 +896,16 @@ type PackedEntry = (u64, Arc<HashMap<String, Packed>>);
 /// Pure-Rust execution backend. Construct with the models directory
 /// (missing models fall back to [`super::testmodel`]); call
 /// [`NativeBackend::with_exec_quant`] to run every quantizable linear
-/// through the packed grouped int-matmul instead of dense f32.
+/// through the packed grouped int-matmul instead of dense f32. All
+/// kernels execute on one persistent [`WorkerPool`] — size it with
+/// [`NativeBackend::with_threads`] or share another backend's pool via
+/// [`NativeBackend::with_pool`] (the coordinator wires its speculative
+/// drafter/verifier backends onto the serving pool this way).
 pub struct NativeBackend {
     models_dir: PathBuf,
-    threads: usize,
+    /// Lazily spawned on first use, so builder chains like
+    /// `new().with_threads(t)` never spawn-and-join a pool for nothing.
+    pool: OnceLock<Arc<WorkerPool>>,
     exec_spec: Option<QuantSpec>,
     /// Packed-weight cache keyed by model name. Versions are globally
     /// unique (see [`ModelWeights::version`]), so a stale entry can
@@ -855,14 +914,13 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Backend over `models_dir`; the worker pool is hardware-sized
+    /// ([`WorkerPool::default_threads`]) unless overridden before first
+    /// use, and spawned lazily on the first kernel.
     pub fn new(models_dir: &Path) -> Self {
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(16);
         NativeBackend {
             models_dir: models_dir.to_path_buf(),
-            threads,
+            pool: OnceLock::new(),
             exec_spec: None,
             packed: Mutex::new(HashMap::new()),
         }
@@ -875,9 +933,29 @@ impl NativeBackend {
         self
     }
 
+    /// Use a pool of `threads` lanes (CLI `--threads`; benches use it
+    /// for thread sweeps). A no-op when the pool is already that size.
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        let threads = threads.max(1);
+        if self.pool.get().map_or(true, |p| p.threads() != threads) {
+            self.pool = OnceLock::from(Arc::new(WorkerPool::new(threads)));
+        }
         self
+    }
+
+    /// Share an existing pool instead of owning one — every backend on
+    /// the same pool draws from one set of threads (prefill, decode,
+    /// verify and speculative drafting never oversubscribe the host).
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = OnceLock::from(pool);
+        self
+    }
+
+    /// The kernel worker pool (thread count, cumulative kernel time),
+    /// spawning the hardware-sized default on first use.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        self.pool
+            .get_or_init(|| Arc::new(WorkerPool::with_default_threads()))
     }
 
     /// The packed execution spec, if any.
@@ -924,9 +1002,9 @@ impl NativeBackend {
         match &self.exec_spec {
             Some(spec) => {
                 let packed = self.packed_for(weights, spec)?;
-                forward(weights, tokens, batch, ExecMode::Packed(packed.as_ref()), self.threads)
+                forward(weights, tokens, batch, ExecMode::Packed(packed.as_ref()), self.pool())
             }
-            None => forward(weights, tokens, batch, ExecMode::Plain, self.threads),
+            None => forward(weights, tokens, batch, ExecMode::Plain, self.pool()),
         }
     }
 
@@ -956,7 +1034,7 @@ impl NativeBackend {
                     &mode,
                     with_stats,
                     all_positions,
-                    self.threads,
+                    self.pool(),
                 )?
             }
             None => forward_cached(
@@ -967,7 +1045,7 @@ impl NativeBackend {
                 &ExecMode::Plain,
                 with_stats,
                 all_positions,
-                self.threads,
+                self.pool(),
             )?,
         };
         let stats = if with_stats {
@@ -1005,6 +1083,10 @@ impl ExecBackend for NativeBackend {
         &self.models_dir
     }
 
+    fn worker_pool(&self) -> Option<Arc<WorkerPool>> {
+        Some(self.pool().clone())
+    }
+
     fn load_model(&self, model: &str) -> Result<ModelWeights> {
         // Fall back to synthetic weights only when no manifest exists at
         // all. A present-but-corrupt artifact must surface as an error —
@@ -1037,7 +1119,7 @@ impl ExecBackend for NativeBackend {
     ) -> Result<BatchStats> {
         // stats always run dense f32: the taps measure the model's true
         // activations, exactly like the stats artifact.
-        let out = forward(weights, tokens, batch, ExecMode::Stats { with_corr }, self.threads)?;
+        let out = forward(weights, tokens, batch, ExecMode::Stats { with_corr }, self.pool())?;
         let seq = tokens.len() / batch;
         let linears = &weights.manifest.linears;
         if out.taps.norms.len() != linears.len() {
@@ -1073,7 +1155,7 @@ impl ExecBackend for NativeBackend {
             tokens,
             batch,
             ExecMode::FusedTtq { spec: QuantSpec::new(bits, g) },
-            self.threads,
+            self.pool(),
         )?;
         Ok(nll_from_logits(&out.logits, tokens, batch, tokens.len() / batch))
     }
@@ -1154,10 +1236,8 @@ mod tests {
         let b = Mat::randn(29, 48, &mut rng);
         let st = a.matmul_bt(&b);
         for threads in [1usize, 2, 4, 7] {
-            // force the threaded path by using a scaled-up copy check:
-            // the kernel falls back below the flop floor, so compare on
-            // a matrix big enough to cross it.
-            let got = matmul_bt_mt(&a, &b, threads);
+            let pool = WorkerPool::new(threads);
+            let got = matmul_bt_mt(&a, &b, &pool);
             for (x, y) in got.data.iter().zip(&st.data) {
                 assert!((x - y).abs() < 1e-5);
             }
@@ -1165,10 +1245,74 @@ mod tests {
         let big_a = Mat::randn(96, 64, &mut rng);
         let big_b = Mat::randn(80, 64, &mut rng);
         let want = big_a.matmul_bt(&big_b);
-        let got = matmul_bt_mt(&big_a, &big_b, 4);
+        let got = matmul_bt_mt(&big_a, &big_b, &WorkerPool::new(4));
         for (x, y) in got.data.iter().zip(&want.data) {
             assert!((x - y).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn pooled_matmul_bit_identical_to_single_threaded() {
+        // The pool contract: chunking must never change a single bit,
+        // across odd shapes — m = 1 (GEMV), m < threads, non-divisible
+        // chunk splits, and d_in crossing the K_TILE boundary.
+        let mut rng = Rng::new(11);
+        let serial = WorkerPool::new(1);
+        for (m, k, n) in [
+            (1usize, 64usize, 512usize), // decode GEMV, d_out fan-out
+            (1, 300, 700),               // GEMV with k spanning tiles
+            (3, 64, 512),                // fewer rows than threads
+            (7, 300, 129),               // nothing divides anything
+            (64, 257, 96),               // k just past one tile
+        ] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(n, k, &mut rng);
+            let want = matmul_bt_mt(&a, &b, &serial);
+            for threads in [2usize, 4, 5] {
+                let pool = WorkerPool::new(threads);
+                let got = matmul_bt_mt(&a, &b, &pool);
+                assert_eq!(
+                    got.data, want.data,
+                    "({m},{k},{n}) x {threads} threads: pooled != serial"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_packed_matmul_bit_identical_to_single_threaded() {
+        let mut rng = Rng::new(12);
+        let serial = WorkerPool::new(1);
+        for (n, d_in, d_out) in [(1usize, 128usize, 1024usize), (3, 64, 96), (9, 320, 77)] {
+            let w = Mat::randn(d_out, d_in, &mut rng);
+            let x = Mat::randn(n, d_in, &mut rng);
+            let qi = rtn_quantize_int(&w, &QuantSpec::new(4, 32));
+            let p = pack(&qi);
+            let want = packed_matmul_nt(&p, &x, &serial);
+            for threads in [2usize, 4, 5] {
+                let pool = WorkerPool::new(threads);
+                let got = packed_matmul_nt(&p, &x, &pool);
+                assert_eq!(
+                    got.data, want.data,
+                    "({n},{d_in},{d_out}) x {threads} threads: pooled != serial"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemv_fans_out_on_d_out() {
+        // the n == 1 decode GEMV must take the pooled path when d_out is
+        // large (the old kernel keyed serial fallback on n < 2) — pin
+        // the value equivalence at a shape that crosses the flop floor
+        let mut rng = Rng::new(13);
+        let w = Mat::randn(1024, 96, &mut rng);
+        let x = Mat::randn(1, 96, &mut rng);
+        let qi = rtn_quantize_int(&w, &QuantSpec::new(4, 32));
+        let p = pack(&qi);
+        let want = packed_matmul_nt(&p, &x, &WorkerPool::new(1));
+        let got = packed_matmul_nt(&p, &x, &WorkerPool::new(4));
+        assert_eq!(got.data, want.data, "pooled GEMV != serial GEMV");
     }
 
     #[test]
@@ -1176,12 +1320,14 @@ mod tests {
         let mut rng = Rng::new(2);
         let w = Mat::randn(48, 64, &mut rng);
         let x = Mat::randn(33, 64, &mut rng); // (n, d_in)
+        let serial = WorkerPool::new(1);
         for bits in [2u32, 4, 8] {
             let qi = rtn_quantize_int(&w, &QuantSpec::new(bits, 32));
             let p = pack(&qi);
-            let want = matmul_bt_mt(&x, &rtn_dequantize(&qi), 1);
+            let want = matmul_bt_mt(&x, &rtn_dequantize(&qi), &serial);
             for threads in [1usize, 4] {
-                let got = packed_matmul_nt(&p, &x, threads);
+                let pool = WorkerPool::new(threads);
+                let got = packed_matmul_nt(&p, &x, &pool);
                 assert_eq!((got.rows, got.cols), (33, 48));
                 for (a, b) in got.data.iter().zip(&want.data) {
                     assert!((a - b).abs() < 1e-3, "bits={bits}: {a} vs {b}");
@@ -1199,8 +1345,8 @@ mod tests {
         let x = Mat::randn(5, 24, &mut rng);
         let qi = rtn_quantize_int(&w, &QuantSpec::new(4, 48));
         let p = pack(&qi);
-        let got = packed_matmul_nt(&p, &x, 2);
-        let want = matmul_bt_mt(&x, &rtn_dequantize(&qi), 1);
+        let got = packed_matmul_nt(&p, &x, &WorkerPool::new(2));
+        let want = matmul_bt_mt(&x, &rtn_dequantize(&qi), &WorkerPool::new(1));
         for (a, b) in got.data.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-3);
         }

@@ -24,6 +24,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Wrap a compiled-artifact runtime.
     pub fn new(rt: Runtime) -> Self {
         PjrtBackend { rt }
     }

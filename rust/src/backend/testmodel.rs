@@ -21,23 +21,35 @@ use crate::models::{
 /// Dimension set for one synthetic model (mirror of python ModelConfig).
 #[derive(Clone, Copy, Debug)]
 pub struct TestConfig {
+    /// Model name (mirrors the python registry).
     pub name: &'static str,
+    /// Architecture family (`opt` / `qwen` / `gemma`).
     pub family: &'static str,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual width d.
     pub d_model: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Key/value heads.
     pub n_kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// MLP hidden width.
     pub d_mlp: usize,
+    /// Maximum context positions.
     pub max_seq: usize,
 }
 
 impl TestConfig {
+    /// Attention width `n_heads × head_dim`.
     pub fn d_attn(&self) -> usize {
         self.n_heads * self.head_dim
     }
 
+    /// K/V width `n_kv_heads × head_dim`.
     pub fn d_kv(&self) -> usize {
         self.n_kv_heads * self.head_dim
     }
@@ -78,6 +90,7 @@ pub const CONFIGS: [TestConfig; 7] = [
     cfg("gemma-mini", "gemma", 128, 4, 4, 1, 32, 512),
 ];
 
+/// Look up a synthetic model's dimension set by name.
 pub fn config(name: &str) -> Option<&'static TestConfig> {
     CONFIGS.iter().find(|c| c.name == name)
 }

@@ -17,8 +17,11 @@ use crate::corpus::{CorpusStream, Split};
 use crate::eval::Evaluator;
 use crate::quant::{awq_quantize, diag_from_norm_sums, QuantSpec};
 
+/// α grid of the figure's sweep.
 pub const ALPHAS: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+/// λ grid of the figure's sweep.
 pub const LAMBDAS: [f64; 4] = [0.01, 0.1, 0.4, 1.0];
+/// p grid of the figure's sweep.
 pub const PS: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
 
 /// Grid-search one model at one bit-width; returns the 5 best

@@ -10,20 +10,26 @@ pub mod ablations;
 pub mod figure2;
 pub mod tables_quality;
 pub mod tables_runtime;
+pub mod throughput;
 
 pub use ablations::{sweep_formats, sweep_lowrank_init, sweep_nf, sweep_prune};
 pub use figure2::figure2;
 pub use tables_quality::{table1, table2, table3, table12, table13};
 pub use tables_runtime::runtime_table;
+pub use throughput::{default_scenarios, kernel_baseline, run_scenario};
 
 /// Simple fixed-width table printer shared by all exhibits.
 pub struct Report {
+    /// Heading printed above the table.
     pub title: String,
+    /// Column names.
     pub header: Vec<String>,
+    /// Table body; every row has `header.len()` cells.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Report {
+    /// Empty report with the given title and column names.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Report {
             title: title.to_string(),
@@ -32,11 +38,13 @@ impl Report {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row arity");
         self.rows.push(cells);
     }
 
+    /// Render the aligned fixed-width table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -65,6 +73,7 @@ impl Report {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         println!("{}", self.render());
     }

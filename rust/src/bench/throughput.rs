@@ -1,0 +1,445 @@
+//! Multi-scenario serving-throughput harness — the workload-diverse
+//! evidence behind the worker-pool hot path.
+//!
+//! [`run_scenario`] drives [`crate::coordinator::Server`] as a
+//! closed-loop load generator: every request is submitted up front and
+//! the engine is stepped to completion, measuring streamed tokens/sec,
+//! per-token latency percentiles (p50/p95 over per-step latency
+//! attributed to the tokens that step emitted), requantization count,
+//! speculative acceptance and the pool's kernel-time share.
+//! [`default_scenarios`] describes the serving mix the throughput bench
+//! (`benches/serve_throughput.rs`) sweeps:
+//!
+//! * **short-chat** — many short prompts, decode-dominated (the chat
+//!   regime);
+//! * **long-prefill** — near-context prompts, few generated tokens (the
+//!   summarization regime, compute-bound prefill);
+//! * **mixed-domain-drift** — traffic switches corpus domain mid-stream,
+//!   forcing the online calibrator's drift-triggered requantization (the
+//!   paper's test-time scenario; "On the Impact of Calibration Data…"
+//!   motivates why shifting calibration traffic matters);
+//! * **specdec-heavy** — every request decodes through the W4 drafter +
+//!   fp32 verifier round;
+//! * **fp32-decode / w4-decode** — the same load executed dense vs
+//!   packed on the largest synthetic model, the pair behind the
+//!   W4-vs-fp32 decode perf gate.
+//!
+//! [`kernel_baseline`] times the pooled kernel against
+//! [`scoped_matmul_bt`] — the pre-pool spawn-per-call kernel, retained
+//! verbatim as the regression baseline — on a decode-shaped stream of
+//! small matmuls, where per-call thread spawn/join is the dominant cost
+//! the pool exists to delete.
+//!
+//! Results serialize into `BENCH_throughput.json`; the schema contract
+//! for CI artifact consumers lives in `docs/BENCHMARKS.md`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::backend::native::matmul_bt_mt;
+use crate::backend::NativeBackend;
+use crate::coordinator::{BatchPolicy, ServeEvent, Server, ServerConfig};
+use crate::corpus::{CorpusStream, Split, BOS};
+use crate::linalg::pool::{WorkerPool, MT_FLOP_FLOOR};
+use crate::linalg::{Mat, Rng};
+use crate::quant::{MethodSpec, QuantSpec};
+use crate::specdec::SpecConfig;
+use crate::util::benchkit::{black_box, Bencher};
+
+/// One serving workload: what to submit and how to execute it.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// Scenario name (appears in the report and the JSON).
+    pub name: String,
+    /// Model to serve (synthetic fallback — no artifacts needed).
+    pub model: String,
+    /// Prompt length as a fraction `(num, den)` of the model context.
+    pub prompt_frac: (usize, usize),
+    /// Generation budget per request.
+    pub max_new_tokens: usize,
+    /// Requests submitted (all up front — closed loop).
+    pub requests: usize,
+    /// Corpus domains; the stream switches domain as the request index
+    /// advances, so multi-domain specs exercise drift mid-run.
+    pub domains: Vec<String>,
+    /// Decode every request through the speculative drafter/verifier.
+    pub speculative: bool,
+    /// Packed execution bit-width (`None` = dense fp32 execution).
+    pub exec_bits: Option<u32>,
+}
+
+/// Measured outcome of one scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    /// Scenario name (from [`LoadSpec::name`]).
+    pub name: String,
+    /// Worker-pool lanes the backend ran with.
+    pub threads: usize,
+    /// Execution mode label (`"fp32"` or `"w<bits>"`).
+    pub exec: String,
+    /// Requests completed (always equals the submitted count).
+    pub requests: usize,
+    /// Tokens streamed to clients.
+    pub streamed_tokens: usize,
+    /// Wall-clock of the drive loop, seconds.
+    pub wall_s: f64,
+    /// Streamed tokens per wall-clock second.
+    pub tokens_per_sec: f64,
+    /// Generated tokens per second of decode executor time (the
+    /// memory-bound phase the paper's claims are about).
+    pub decode_tokens_per_sec: f64,
+    /// Median per-token latency, milliseconds.
+    pub p50_token_ms: f64,
+    /// 95th-percentile per-token latency, milliseconds.
+    pub p95_token_ms: f64,
+    /// Mid-run requantizations the drift detector fired.
+    pub requants: u64,
+    /// Draft-acceptance rate (0 for non-speculative scenarios).
+    pub spec_acceptance: f64,
+    /// Fraction of executor time spent in pooled kernel dispatches.
+    pub kernel_share: f64,
+}
+
+impl ScenarioResult {
+    /// One JSON object line for `BENCH_throughput.json`.
+    pub fn to_json(&self) -> String {
+        format!(
+            r#"{{"name": "{}", "threads": {}, "exec": "{}", "requests": {}, "streamed_tokens": {}, "wall_s": {:.4}, "tokens_per_sec": {:.1}, "decode_tokens_per_sec": {:.1}, "p50_token_ms": {:.4}, "p95_token_ms": {:.4}, "requants": {}, "spec_acceptance": {:.3}, "kernel_share": {:.3}}}"#,
+            self.name,
+            self.threads,
+            self.exec,
+            self.requests,
+            self.streamed_tokens,
+            self.wall_s,
+            self.tokens_per_sec,
+            self.decode_tokens_per_sec,
+            self.p50_token_ms,
+            self.p95_token_ms,
+            self.requants,
+            self.spec_acceptance,
+            self.kernel_share,
+        )
+    }
+
+    /// Fixed-width report line for the bench output.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<22} {:>2}t {:<5} {:>7.0} tok/s  decode {:>7.0} tok/s  p50 {:>7.3}ms  p95 {:>7.3}ms  requants {:>2}  kernel {:>3.0}%{}",
+            self.name,
+            self.threads,
+            self.exec,
+            self.tokens_per_sec,
+            self.decode_tokens_per_sec,
+            self.p50_token_ms,
+            self.p95_token_ms,
+            self.requants,
+            100.0 * self.kernel_share,
+            if self.spec_acceptance > 0.0 {
+                format!("  accept {:.2}", self.spec_acceptance)
+            } else {
+                String::new()
+            }
+        )
+    }
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 * q) as usize).min(sorted_ms.len() - 1);
+    sorted_ms[idx]
+}
+
+/// Drive one scenario to completion on a fresh backend with `threads`
+/// pool lanes. Closed loop: all requests are queued up front, then the
+/// engine steps until every generation finishes (admission backpressure
+/// paces the queue through the KV slots).
+pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
+    let dir = crate::artifacts_dir();
+    let backend = match spec.exec_bits {
+        Some(bits) => NativeBackend::new(&dir).with_exec_quant(QuantSpec::new(bits, 32)),
+        None => NativeBackend::new(&dir),
+    }
+    .with_threads(threads);
+
+    let mut cfg = ServerConfig::new(&spec.model).with_method(MethodSpec::ttq(0));
+    cfg.spec = QuantSpec::new(spec.exec_bits.unwrap_or(4), 32);
+    cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
+    cfg.max_new_tokens = spec.max_new_tokens.max(1);
+    cfg.cache_slots = 8;
+    cfg.specdec = SpecConfig::new(4);
+    let mut server = Server::new(&backend, cfg)?;
+    let max_seq = server.max_seq();
+    let (num, den) = spec.prompt_frac;
+    let prompt_len = (max_seq * num / den.max(1)).clamp(1, max_seq);
+
+    let mut streams: Vec<CorpusStream> = spec
+        .domains
+        .iter()
+        .map(|d| CorpusStream::new(d, Split::Eval))
+        .collect();
+    if streams.is_empty() {
+        bail!("scenario {} has no domains", spec.name);
+    }
+    for i in 0..spec.requests {
+        // the stream hops domains as the run progresses — multi-domain
+        // scenarios shift traffic mid-stream and trip the drift detector
+        let di = ((i * streams.len()) / spec.requests.max(1)).min(streams.len() - 1);
+        let s = &mut streams[di];
+        let mut toks = vec![BOS; prompt_len];
+        for t in toks.iter_mut().skip(1) {
+            *t = s.next_token();
+        }
+        if spec.speculative {
+            server.submit_speculative(toks);
+        } else {
+            server.submit(toks);
+        }
+    }
+
+    let t_wall = Instant::now();
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let (mut streamed, mut done) = (0usize, 0usize);
+    while server.pending() > 0 || server.running() > 0 {
+        let t0 = Instant::now();
+        let evs = server.step(Instant::now())?;
+        let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let toks = evs
+            .iter()
+            .filter(|e| matches!(e, ServeEvent::Token { .. }))
+            .count();
+        done += evs
+            .iter()
+            .filter(|e| matches!(e, ServeEvent::Done { .. }))
+            .count();
+        if toks > 0 {
+            // attribute the step's latency evenly to its tokens, one
+            // sample per token so percentiles weight by token count
+            let per = dt_ms / toks as f64;
+            lat_ms.resize(lat_ms.len() + toks, per);
+            streamed += toks;
+        }
+    }
+    let wall_s = t_wall.elapsed().as_secs_f64();
+    if done != spec.requests {
+        bail!("scenario {}: {done} of {} requests completed", spec.name, spec.requests);
+    }
+    lat_ms.sort_by(f64::total_cmp);
+
+    use std::sync::atomic::Ordering::Relaxed;
+    Ok(ScenarioResult {
+        name: spec.name.clone(),
+        threads,
+        exec: spec.exec_bits.map_or_else(|| "fp32".into(), |b| format!("w{b}")),
+        requests: done,
+        streamed_tokens: streamed,
+        wall_s,
+        tokens_per_sec: if wall_s > 0.0 { streamed as f64 / wall_s } else { 0.0 },
+        decode_tokens_per_sec: server.metrics.decode_tokens_per_sec(),
+        p50_token_ms: percentile(&lat_ms, 0.50),
+        p95_token_ms: percentile(&lat_ms, 0.95),
+        requants: server.metrics.requants.load(Relaxed),
+        spec_acceptance: server.metrics.spec_acceptance(),
+        kernel_share: server.metrics.kernel_share(),
+    })
+}
+
+/// The serving mix the throughput bench sweeps (see the module docs).
+/// `fast` shrinks request counts for CI.
+pub fn default_scenarios(fast: bool) -> Vec<LoadSpec> {
+    let r = |full: usize| if fast { full / 3 } else { full };
+    let d = |names: &[&str]| names.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    vec![
+        LoadSpec {
+            name: "short-chat".into(),
+            model: "qwen-micro".into(),
+            prompt_frac: (1, 8),
+            max_new_tokens: 10,
+            requests: r(36),
+            domains: d(&["wt2s"]),
+            speculative: false,
+            exec_bits: Some(4),
+        },
+        LoadSpec {
+            name: "long-prefill".into(),
+            model: "qwen-micro".into(),
+            prompt_frac: (7, 8),
+            max_new_tokens: 4,
+            requests: r(24),
+            domains: d(&["c4s"]),
+            speculative: false,
+            exec_bits: Some(4),
+        },
+        LoadSpec {
+            name: "mixed-domain-drift".into(),
+            model: "qwen-micro".into(),
+            prompt_frac: (1, 2),
+            max_new_tokens: 8,
+            requests: r(36),
+            domains: d(&["wt2s", "c4s", "ptbs"]),
+            speculative: false,
+            exec_bits: Some(4),
+        },
+        LoadSpec {
+            name: "specdec-heavy".into(),
+            model: "qwen-micro".into(),
+            prompt_frac: (1, 2),
+            max_new_tokens: 10,
+            requests: r(18),
+            domains: d(&["wt2s"]),
+            speculative: true,
+            exec_bits: None,
+        },
+        LoadSpec {
+            name: "fp32-decode".into(),
+            model: "opt-small".into(),
+            prompt_frac: (1, 4),
+            max_new_tokens: 12,
+            requests: r(18),
+            domains: d(&["wt2s"]),
+            speculative: false,
+            exec_bits: None,
+        },
+        LoadSpec {
+            name: "w4-decode".into(),
+            model: "opt-small".into(),
+            prompt_frac: (1, 4),
+            max_new_tokens: 12,
+            requests: r(18),
+            domains: d(&["wt2s"]),
+            speculative: false,
+            exec_bits: Some(4),
+        },
+    ]
+}
+
+// ---------------------------------------------------------------------
+// Pooled-vs-scoped kernel baseline
+// ---------------------------------------------------------------------
+
+/// The pre-pool threaded kernel, retained verbatim as the perf-gate
+/// baseline: `a @ bᵀ` with output rows split across **freshly spawned**
+/// scoped threads — one OS thread creation per chunk *per call*, the
+/// cost every matmul paid before [`WorkerPool`] existed.
+pub fn scoped_matmul_bt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols, b.cols, "scoped_matmul_bt dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    if threads <= 1 || m < 2 || m * k * n < MT_FLOP_FLOOR {
+        return a.matmul_bt(b);
+    }
+    let mut out = Mat::zeros(m, n);
+    let nthreads = threads.min(m);
+    let chunk = m.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for (ti, orows) in out.data.chunks_mut(chunk * n).enumerate() {
+            s.spawn(move || {
+                let r0 = ti * chunk;
+                let rows = orows.len() / n;
+                for rr in 0..rows {
+                    let arow = a.row(r0 + rr);
+                    let orow = &mut orows[rr * n..(rr + 1) * n];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let brow = b.row(j);
+                        let mut acc = 0.0f32;
+                        for p in 0..k {
+                            acc += arow[p] * brow[p];
+                        }
+                        *o = acc;
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Pooled-vs-scoped kernel throughput on a decode-shaped stream.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelBaseline {
+    /// Pool lanes / scoped threads compared.
+    pub threads: usize,
+    /// Pooled kernel throughput, Gflop/s (median sample).
+    pub pooled_gflops: f64,
+    /// Scoped spawn-per-call kernel throughput, Gflop/s.
+    pub scoped_gflops: f64,
+    /// `pooled / scoped` — the dispatch-amortization win.
+    pub speedup: f64,
+}
+
+/// Time the pooled kernel against the retained scoped-thread kernel on
+/// a stream of decode-shaped matmuls (a small token block against an
+/// `opt-small`-sized MLP weight, many calls per sample) — the regime
+/// where per-call spawn/join dominates and the persistent pool earns
+/// its keep.
+pub fn kernel_baseline(threads: usize, fast: bool) -> KernelBaseline {
+    let mut rng = Rng::new(42);
+    let a = Mat::randn(8, 192, &mut rng); // one small decode batch
+    let b = Mat::randn(768, 192, &mut rng); // an opt-small MLP weight
+    let calls_per_sample = if fast { 40 } else { 120 };
+    let flops = 2.0 * 8.0 * 192.0 * 768.0 * calls_per_sample as f64;
+    let bencher = if fast { Bencher::quick() } else { Bencher::default() };
+
+    let pool = WorkerPool::new(threads);
+    let pooled = bencher.run_with_items("pooled matmul_bt_mt", flops, || {
+        let mut last = 0.0f32;
+        for _ in 0..calls_per_sample {
+            let y = matmul_bt_mt(&a, &b, &pool);
+            last = y.data[0];
+        }
+        black_box(last)
+    });
+    let scoped = bencher.run_with_items("scoped-thread baseline", flops, || {
+        let mut last = 0.0f32;
+        for _ in 0..calls_per_sample {
+            let y = scoped_matmul_bt(&a, &b, threads);
+            last = y.data[0];
+        }
+        black_box(last)
+    });
+    let pooled_gflops = pooled.throughput().unwrap_or(0.0) / 1e9;
+    let scoped_gflops = scoped.throughput().unwrap_or(0.0) / 1e9;
+    KernelBaseline {
+        threads,
+        pooled_gflops,
+        scoped_gflops,
+        speedup: if scoped_gflops > 0.0 { pooled_gflops / scoped_gflops } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_runs_to_completion() {
+        let spec = LoadSpec {
+            name: "unit".into(),
+            model: "qwen-micro".into(),
+            prompt_frac: (1, 4),
+            max_new_tokens: 3,
+            requests: 4,
+            domains: vec!["wt2s".into()],
+            speculative: false,
+            exec_bits: Some(4),
+        };
+        let r = run_scenario(&spec, 2).unwrap();
+        assert_eq!(r.requests, 4);
+        assert!(r.streamed_tokens >= 4, "at least one token per request");
+        assert!(r.tokens_per_sec > 0.0);
+        assert!(r.p95_token_ms >= r.p50_token_ms);
+    }
+
+    #[test]
+    fn scoped_baseline_matches_pooled_values() {
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(8, 64, &mut rng);
+        let b = Mat::randn(48, 64, &mut rng);
+        let want = scoped_matmul_bt(&a, &b, 2);
+        let got = matmul_bt_mt(&a, &b, &WorkerPool::new(2));
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -11,20 +11,24 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+/// Monotonically increasing server-assigned request identifier.
 pub type RequestId = u64;
 
 /// One inference request: a token prompt for a model.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Server-assigned identifier (echoed in every reply event).
     pub id: RequestId,
     /// BOS-led prompt, `1..=max_seq` tokens (the decode engine admits
     /// variable-length prompts; [`Batch::tokens`] still requires
     /// fixed-`seq` rows for the legacy full-batch executable path).
     pub tokens: Vec<i32>,
+    /// Submission time (drives linger and latency accounting).
     pub arrived: Instant,
 }
 
 impl Request {
+    /// Request arriving now.
     pub fn new(id: RequestId, tokens: Vec<i32>) -> Self {
         Request { id, tokens, arrived: Instant::now() }
     }
@@ -33,7 +37,9 @@ impl Request {
 /// Released batch: bucket size + member requests (≤ bucket).
 #[derive(Debug)]
 pub struct Batch {
+    /// The shape bucket this batch fired at.
     pub bucket: usize,
+    /// Member requests (≤ bucket; the slack is padding headroom).
     pub requests: Vec<Request>,
 }
 
@@ -67,6 +73,7 @@ impl Batch {
         out
     }
 
+    /// Bucket slack: rows the bucket has over the real request count.
     pub fn padding_rows(&self) -> usize {
         self.bucket - self.requests.len()
     }
@@ -95,6 +102,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Empty queue under the given policy (buckets are sorted).
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(!policy.buckets.is_empty());
         let mut p = policy;
@@ -102,6 +110,7 @@ impl Batcher {
         Batcher { policy: p, queue: VecDeque::new() }
     }
 
+    /// Enqueue an arriving request (FIFO).
     pub fn push(&mut self, r: Request) {
         self.queue.push_back(r);
     }
@@ -113,6 +122,7 @@ impl Batcher {
         self.queue.push_front(r);
     }
 
+    /// Requests queued, not yet released in a batch.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

@@ -11,12 +11,14 @@
 
 use crate::quant::{diag_from_norm_sums, ActStats, TtqHyper};
 
+/// Calibrator knobs: statistics decay + requant drift threshold.
 #[derive(Clone, Debug)]
 pub struct CalibratorConfig {
     /// Exponential decay applied to old statistics per update.
     pub decay: f64,
     /// Relative L2 drift of D that triggers requantization.
     pub drift_threshold: f64,
+    /// Diagonal hyperparameters (p, λ, α) D is derived with.
     pub hyper: TtqHyper,
 }
 
@@ -58,6 +60,7 @@ pub struct OnlineCalibrator {
 }
 
 impl OnlineCalibrator {
+    /// Fresh state for layers of the given input widths on the p-grid.
     pub fn new(cfg: CalibratorConfig, ps: &[f64], d_ins: &[usize]) -> Self {
         let layers = d_ins
             .iter()
@@ -66,6 +69,7 @@ impl OnlineCalibrator {
         OnlineCalibrator { cfg, layers, generation: 0 }
     }
 
+    /// Committed weight generations so far (bumped per requant).
     pub fn generation(&self) -> u64 {
         self.generation
     }
@@ -126,6 +130,7 @@ impl OnlineCalibrator {
         diags
     }
 
+    /// Largest per-layer drift (diagnostics/tests).
     pub fn max_drift(&self) -> f64 {
         (0..self.layers.len())
             .map(|i| self.drift(i))

@@ -18,7 +18,8 @@
 //!   full-precision verifier commits); owns quantized weight
 //!   generations.
 //! * [`metrics`] — lock-free counters, split by prefill/decode phase
-//!   plus speculative round accounting.
+//!   plus speculative round accounting and the worker pool's kernel
+//!   time per phase.
 
 pub mod batcher;
 pub mod calibrator;

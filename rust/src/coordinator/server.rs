@@ -49,6 +49,7 @@
 //! plain-only servers pay nothing for it.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -59,17 +60,22 @@ use super::metrics::Metrics;
 use crate::backend::{ExecBackend, NativeBackend};
 use crate::eval::{EvalConfig, Evaluator, Sampler};
 use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, SeqId};
+use crate::linalg::pool::WorkerPool;
 use crate::models::ModelWeights;
 use crate::quant::{MethodSpec, QuantSpec};
 use crate::specdec::{spec_round, DraftState, SpecConfig, SpecController, SpecModel};
 use crate::util::argmax;
 
+/// Serving-engine configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Model to serve.
     pub model: String,
+    /// Bits/groupsize the serving weights are quantized at.
     pub spec: QuantSpec,
     /// Compression method for the serving loop (default: TTQ r=0).
     pub method: MethodSpec,
+    /// Admission batching policy (buckets, linger).
     pub policy: BatchPolicy,
     /// Calibrator knobs (decay, drift threshold). The diagonal
     /// hyperparameters are re-derived from `method` at [`Server::new`],
@@ -90,6 +96,7 @@ pub struct ServerConfig {
 }
 
 impl ServerConfig {
+    /// Defaults: TTQ r=0 at W4 g=32, 16 new tokens, 16 KV slots.
     pub fn new(model: &str) -> Self {
         ServerConfig {
             model: model.into(),
@@ -104,16 +111,19 @@ impl ServerConfig {
         }
     }
 
+    /// Replace the serving compression method.
     pub fn with_method(mut self, method: MethodSpec) -> Self {
         self.method = method;
         self
     }
 
+    /// Set the per-request generation budget (≥ 1).
     pub fn with_max_new_tokens(mut self, n: usize) -> Self {
         self.max_new_tokens = n.max(1);
         self
     }
 
+    /// Set the speculative-decoding policy.
     pub fn with_specdec(mut self, specdec: SpecConfig) -> Self {
         self.specdec = specdec;
         self
@@ -136,8 +146,11 @@ pub enum StopReason {
 /// generation order), closed by exactly one `Done` per request.
 #[derive(Clone, Debug)]
 pub enum ServeEvent {
+    /// One generated token of one request.
     Token {
+        /// The request this token belongs to.
         id: RequestId,
+        /// The generated token id.
         token: i32,
         /// 0-based position in the generated suffix.
         index: usize,
@@ -146,10 +159,13 @@ pub enum ServeEvent {
         /// consecutive tokens of the same request.
         weight_generation: u64,
     },
+    /// A request finished; closes its token stream.
     Done {
+        /// The request that finished.
         id: RequestId,
         /// The full generated suffix (prompt not included).
         tokens: Vec<i32>,
+        /// Length of the prompt that was prefilled.
         prompt_len: usize,
         /// Why this generation stopped.
         stop: StopReason,
@@ -157,6 +173,7 @@ pub enum ServeEvent {
 }
 
 impl ServeEvent {
+    /// The request this event belongs to.
     pub fn id(&self) -> RequestId {
         match self {
             ServeEvent::Token { id, .. } | ServeEvent::Done { id, .. } => *id,
@@ -207,6 +224,7 @@ struct SpecState {
     draft_cache: KvCache,
 }
 
+/// The continuous-batching decode engine (see the module docs).
 pub struct Server<'b> {
     cfg: ServerConfig,
     ev: Evaluator<'b>,
@@ -214,6 +232,7 @@ pub struct Server<'b> {
     calibrator: OnlineCalibrator,
     cache: KvCache,
     running: Vec<SequenceState>,
+    /// Cumulative serving counters (read freely; atomics inside).
     pub metrics: Metrics,
     next_id: RequestId,
     /// Weight-only methods quantize once; set before the first prefill.
@@ -230,6 +249,9 @@ pub struct Server<'b> {
 }
 
 impl<'b> Server<'b> {
+    /// Build the engine: load the model, derive the calibrator from the
+    /// method, preallocate the KV slab. Rejects correlation-dependent
+    /// and offline-calibrated methods (the serving loop is online).
     pub fn new(backend: &'b dyn ExecBackend, cfg: ServerConfig) -> Result<Self> {
         if cfg.method.needs_corr() {
             bail!(
@@ -280,12 +302,29 @@ impl<'b> Server<'b> {
         }
         let man = &self.ev.weights.manifest;
         let dir = self.ev.backend.models_dir();
+        // Drafter and verifier execute on the *serving* backend's worker
+        // pool when it has one: prefill, decode, draft and verify then
+        // share one set of threads instead of oversubscribing the host
+        // with three pools.
+        let pool = self
+            .ev
+            .backend
+            .worker_pool()
+            .unwrap_or_else(|| Arc::new(WorkerPool::with_default_threads()));
         self.spec_state = Some(SpecState {
             verifier_weights: self.ev.pristine_weights(),
-            verifier_backend: NativeBackend::new(dir),
-            drafter_backend: NativeBackend::new(dir).with_exec_quant(self.cfg.spec.clone()),
+            verifier_backend: NativeBackend::new(dir).with_pool(pool.clone()),
+            drafter_backend: NativeBackend::new(dir)
+                .with_pool(pool)
+                .with_exec_quant(self.cfg.spec.clone()),
             draft_cache: KvCache::new(KvCacheConfig::from_manifest(man, self.cfg.cache_slots)),
         });
+    }
+
+    /// Cumulative kernel time of the serving pool, µs (0 without one).
+    /// Phase accounting diffs two snapshots around each executor call.
+    fn kernel_us(&self) -> u64 {
+        self.ev.backend.worker_pool().map_or(0, |p| p.kernel_us())
     }
 
     /// Tokens resident in the drafter's KV slab (0 when speculative
@@ -294,14 +333,17 @@ impl<'b> Server<'b> {
         self.spec_state.as_ref().map_or(0, |s| s.draft_cache.used_tokens())
     }
 
+    /// The model's full-batch-artifact sequence length.
     pub fn seq(&self) -> usize {
         self.ev.weights.manifest.config.seq
     }
 
+    /// The model's context window (prompt + generated).
     pub fn max_seq(&self) -> usize {
         self.ev.weights.manifest.config.max_seq
     }
 
+    /// Current quantized-weight generation (bumped per requant).
     pub fn weight_generation(&self) -> u64 {
         self.calibrator.generation()
     }
@@ -485,6 +527,7 @@ impl<'b> Server<'b> {
         }
         let with_stats = self.cfg.method.needs_stats();
         let t0 = Instant::now();
+        let k0 = self.kernel_us();
         let res = if speculative {
             let st = self.spec_state.as_mut().expect("speculative submit built the state");
             st.verifier_backend.prefill(
@@ -511,10 +554,13 @@ impl<'b> Server<'b> {
             }
         };
         self.metrics.record_prefill(tokens.len(), t0.elapsed());
+        self.metrics
+            .record_prefill_kernel(self.kernel_us().saturating_sub(k0));
 
         // the drafter builds its own KV state for the prompt (dual
         // cache — drafter and verifier disagree about hidden states)
         let draft_ids = if speculative {
+            let k0 = self.kernel_us();
             let st = self.spec_state.as_mut().expect("speculative submit built the state");
             let mut dids = Vec::with_capacity(n);
             for _ in 0..n {
@@ -540,6 +586,8 @@ impl<'b> Server<'b> {
                 return Err(e);
             }
             self.metrics.record_prefill(tokens.len(), t0.elapsed());
+            self.metrics
+                .record_prefill_kernel(self.kernel_us().saturating_sub(k0));
             Some(dids)
         } else {
             None
@@ -603,11 +651,14 @@ impl<'b> Server<'b> {
         let ids: Vec<SeqId> = rows.iter().map(|&i| self.running[i].kv).collect();
         let with_stats = self.cfg.method.needs_stats();
         let t0 = Instant::now();
+        let k0 = self.kernel_us();
         let out = self
             .ev
             .backend
             .decode_step(&self.ev.weights, &last, &mut self.cache, &ids, with_stats)?;
         self.metrics.record_decode(rows.len(), t0.elapsed());
+        self.metrics
+            .record_decode_kernel(self.kernel_us().saturating_sub(k0));
         // peak occupancy: every plain sequence just grew by one token
         self.metrics.record_cache_used(self.cache.used_tokens() + self.draft_tokens_used());
 
@@ -668,6 +719,7 @@ impl<'b> Server<'b> {
             let budget = seqs[i].max_new - seqs[i].generated.len();
             let k = self.spec_ctrl.k().min(budget.saturating_sub(1));
             let t0 = Instant::now();
+            let kern0 = self.kernel_us();
             let round = {
                 let seq = &mut seqs[i];
                 let ds = seq.spec.as_mut().expect("speculative sequence");
@@ -711,6 +763,8 @@ impl<'b> Server<'b> {
                 None => r.committed.len(),
             };
             self.metrics.record_spec_round(streamed, r.drafted, r.accepted, t0.elapsed());
+            self.metrics
+                .record_spec_kernel(self.kernel_us().saturating_sub(kern0));
             self.metrics.record_cache_used(self.cache.used_tokens() + self.draft_tokens_used());
             self.spec_ctrl.observe(r.accepted, r.drafted);
 

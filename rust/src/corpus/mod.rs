@@ -12,7 +12,9 @@
 
 use crate::linalg::rng::splitmix64;
 
+/// Shared vocabulary size across every synthetic domain.
 pub const VOCAB: usize = 512;
+/// Beginning-of-sequence token (row 0 of every batch).
 pub const BOS: i32 = 0;
 
 const C_DOMAIN: u64 = 0x9E37_79B9_7F4A_7C15;
@@ -24,8 +26,11 @@ const BASE_SEED: u64 = 0x7751_2026;
 /// Stream split — same language, independent draws.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Split {
+    /// Training draws (the python model-training pipeline).
     Train,
+    /// Evaluation draws (perplexity/accuracy tables).
     Eval,
+    /// Calibration draws (offline Fig. 1a methods).
     Calib,
 }
 
@@ -37,6 +42,7 @@ impl Split {
             Split::Calib => 2,
         }
     }
+    /// Lowercase split name (artifact filenames).
     pub fn name(self) -> &'static str {
         match self {
             Split::Train => "train",
@@ -49,16 +55,25 @@ impl Split {
 /// Domain statistics spec (mirror of `corpus.DomainSpec`).
 #[derive(Clone, Copy, Debug)]
 pub struct DomainSpec {
+    /// Domain name (`wt2s`, `ptbs`, `c4s`, `vqas`, `acts`).
     pub name: &'static str,
+    /// Seed id separating the domains' languages.
     pub id: u64,
+    /// Tokens of the shared vocabulary this domain uses.
     pub vocab_used: usize,
+    /// Candidate continuations per context.
     pub k: usize,
+    /// Unigram-noise mixture weight.
     pub eps: f64,
+    /// Geometric decay over ranked continuations.
     pub q: f64,
+    /// Context order (1 or 2 previous tokens).
     pub order: u32,
+    /// Zipf exponent of the unigram distribution.
     pub zipf: f64,
 }
 
+/// The five synthetic domains (proxies for WT2/PTB/C4/TextVQA/LIBERO).
 pub const DOMAINS: [DomainSpec; 5] = [
     DomainSpec { name: "wt2s", id: 1, vocab_used: 440, k: 4, eps: 0.05, q: 0.55, order: 2, zipf: 1.1 },
     DomainSpec { name: "ptbs", id: 2, vocab_used: 160, k: 3, eps: 0.02, q: 0.45, order: 2, zipf: 1.3 },
@@ -67,6 +82,7 @@ pub const DOMAINS: [DomainSpec; 5] = [
     DomainSpec { name: "acts", id: 5, vocab_used: 64, k: 2, eps: 0.01, q: 0.35, order: 2, zipf: 1.0 },
 ];
 
+/// Look up a domain by name (panics on unknown names).
 pub fn domain(name: &str) -> &'static DomainSpec {
     DOMAINS
         .iter()
@@ -110,10 +126,12 @@ pub struct CorpusStream {
 }
 
 impl CorpusStream {
+    /// Stream 0 of (domain, split).
     pub fn new(domain_name: &str, split: Split) -> Self {
         Self::with_stream(domain_name, split, 0)
     }
 
+    /// An independent stream of the same (domain, split) language.
     pub fn with_stream(domain_name: &str, split: Split, stream_id: u64) -> Self {
         let spec = domain(domain_name);
         let lang_seed = splitmix64(BASE_SEED ^ spec.id.wrapping_mul(C_DOMAIN));
@@ -130,6 +148,7 @@ impl CorpusStream {
         }
     }
 
+    /// The domain this stream draws from.
     pub fn spec(&self) -> &'static DomainSpec {
         self.spec
     }
@@ -150,6 +169,7 @@ impl CorpusStream {
         splitmix64(h)
     }
 
+    /// Draw the next token (never BOS; 1..VOCAB).
     pub fn next_token(&mut self) -> i32 {
         let spec = self.spec;
         let u = self.rand_u01();
@@ -175,6 +195,7 @@ impl CorpusStream {
         tok
     }
 
+    /// Draw `n` tokens.
     pub fn tokens(&mut self, n: usize) -> Vec<i32> {
         (0..n).map(|_| self.next_token()).collect()
     }

@@ -44,9 +44,13 @@ pub use crate::quant::{ActStats, MethodSpec};
 /// [`crate::quant::MethodRegistry`].
 #[derive(Clone, Debug)]
 pub struct EvalConfig {
+    /// Rows per forward batch.
     pub batch: usize,
+    /// Evaluation batches per metric.
     pub eval_batches: usize,
+    /// Calibration batches for offline methods.
     pub calib_batches: usize,
+    /// Bits/groupsize/format under test.
     pub spec: QuantSpec,
 }
 
@@ -63,13 +67,17 @@ impl Default for EvalConfig {
 
 /// Per-linear activation statistics from one or more stats passes.
 pub struct CollectedStats {
+    /// Per-linear accumulated norm sums, manifest order.
     pub stats: Vec<ActStats>,
-    pub corr: Vec<Mat>, // empty unless collected with correlations
+    /// Per-linear input correlations; empty unless collected.
+    pub corr: Vec<Mat>,
 }
 
 /// Evaluation driver bound to one model on one execution backend.
 pub struct Evaluator<'b> {
+    /// The execution backend forwards run on.
     pub backend: &'b dyn ExecBackend,
+    /// The live (possibly quantized) weights.
     pub weights: ModelWeights,
     /// Pristine copies of the quantizable linears ("the original
     /// full-precision weights *are* recoverable" — paper's point (3)).
@@ -79,6 +87,7 @@ pub struct Evaluator<'b> {
 }
 
 impl<'b> Evaluator<'b> {
+    /// Load `model` through the backend and bind to it.
     pub fn new(backend: &'b dyn ExecBackend, model: &str) -> Result<Self> {
         let weights = backend.load_model(model)?;
         Ok(Self::with_weights(backend, weights))
@@ -90,6 +99,7 @@ impl<'b> Evaluator<'b> {
         Evaluator { backend, weights, originals, lowrank_cache: HashMap::new() }
     }
 
+    /// The bound model's name.
     pub fn model_name(&self) -> &str {
         &self.weights.manifest.name
     }
@@ -149,6 +159,18 @@ impl<'b> Evaluator<'b> {
     /// substitution applies). Returns the generated suffix; stops at
     /// `max_new_tokens`, `eos`, or a full context window. Errors on
     /// backends without a decode path (PJRT).
+    ///
+    /// ```
+    /// use ttq_serve::backend::NativeBackend;
+    /// use ttq_serve::eval::Evaluator;
+    ///
+    /// // No artifacts needed: the native backend falls back to a
+    /// // deterministic synthetic model.
+    /// let backend = NativeBackend::new(std::path::Path::new("artifacts"));
+    /// let ev = Evaluator::new(&backend, "qwen-micro").unwrap();
+    /// let toks = ev.generate(&[0, 7, 9], 4, None).unwrap();
+    /// assert_eq!(toks.len(), 4); // budget-bounded greedy suffix
+    /// ```
     pub fn generate(
         &self,
         prompt: &[i32],

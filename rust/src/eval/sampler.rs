@@ -28,6 +28,7 @@ pub enum Sampler {
 }
 
 impl Sampler {
+    /// Deterministic argmax selection.
     pub fn greedy() -> Self {
         Sampler::Greedy
     }
@@ -42,6 +43,7 @@ impl Sampler {
         Sampler::TopK { k: k.max(1), temp, rng: Rng::new(seed) }
     }
 
+    /// True for the deterministic argmax mode.
     pub fn is_greedy(&self) -> bool {
         matches!(self, Sampler::Greedy)
     }

@@ -37,6 +37,7 @@ use crate::models::Manifest;
 /// Cache geometry, derived from the model manifest.
 #[derive(Clone, Copy, Debug)]
 pub struct KvCacheConfig {
+    /// Transformer layers cached per sequence.
     pub n_layers: usize,
     /// K/V row width: `n_kv_heads × head_dim` (GQA/MQA-aware).
     pub d_kv: usize,
@@ -47,6 +48,7 @@ pub struct KvCacheConfig {
 }
 
 impl KvCacheConfig {
+    /// Geometry for `slots` concurrent sequences of a model.
     pub fn from_manifest(man: &Manifest, slots: usize) -> Self {
         let c = &man.config;
         KvCacheConfig {
@@ -66,7 +68,9 @@ impl KvCacheConfig {
 /// One layer's cached keys and values: `(max_seq, d_kv)` row-major,
 /// rows `0..len` live.
 pub struct LayerKv {
+    /// Cached keys, `(max_seq, d_kv)`.
     pub k: Mat,
+    /// Cached values, `(max_seq, d_kv)`.
     pub v: Mat,
 }
 
@@ -83,9 +87,13 @@ pub struct SeqId(usize);
 /// Capacity accounting snapshot.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
+    /// Total sequence slots in the slab.
     pub slots: usize,
+    /// Slots currently allocated.
     pub active_seqs: usize,
+    /// Token capacity (slots × max_seq).
     pub capacity_tokens: usize,
+    /// Live cached positions across active sequences.
     pub used_tokens: usize,
     /// Most tokens ever simultaneously resident.
     pub high_water_tokens: usize,
@@ -120,6 +128,7 @@ impl KvCache {
         KvCache { cfg, pool, free, high_water: 0 }
     }
 
+    /// The slab geometry.
     pub fn config(&self) -> &KvCacheConfig {
         &self.cfg
     }
@@ -152,6 +161,7 @@ impl KvCache {
         self.free.push(id.0);
     }
 
+    /// Slots available for allocation.
     pub fn free_slots(&self) -> usize {
         self.free.len()
     }
@@ -162,6 +172,7 @@ impl KvCache {
         self.pool[id.0].len
     }
 
+    /// True when the sequence has no live positions.
     pub fn is_empty(&self, id: SeqId) -> bool {
         self.len(id) == 0
     }
@@ -225,10 +236,12 @@ impl KvCache {
         Ok(())
     }
 
+    /// Live cached positions across all active sequences.
     pub fn used_tokens(&self) -> usize {
         self.pool.iter().filter(|s| s.in_use).map(|s| s.len).sum()
     }
 
+    /// Occupancy snapshot (slots, tokens, high-water mark).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             slots: self.cfg.slots,

@@ -11,7 +11,9 @@
 //!
 //! Module map (see DESIGN.md §4 for the full inventory):
 //!
-//! * [`linalg`] — dense matrix substrate: matmul, Cholesky, truncated SVD.
+//! * [`linalg`] — dense matrix substrate: matmul, Cholesky, truncated
+//!   SVD, and the persistent [`linalg::pool::WorkerPool`] every native
+//!   kernel dispatches on.
 //! * [`quant`] — the paper's algorithms behind one dispatch surface: the
 //!   [`quant::Quantizer`] trait + [`quant::MethodRegistry`] (spec strings
 //!   like `"ttq:r=16"`, `"nf:4"`, `"prune:0.5"`), over RTN (Eq. 1), AWQ
@@ -45,8 +47,16 @@
 //!   [`eval::Sampler`]s (greedy / temperature / top-k).
 //! * [`perfmodel`] — GPU roofline simulator regenerating Tables 4-8;
 //!   rows are registry methods priced through the trait.
-//! * [`bench`] — table/figure regeneration harness (`ttq-serve table N`),
-//!   method rows swappable via `--methods`.
+//! * [`bench`] — table/figure regeneration harness (`ttq-serve table N`,
+//!   method rows swappable via `--methods`), plus the multi-scenario
+//!   serving-throughput harness ([`bench::throughput`]) behind
+//!   `benches/serve_throughput.rs`.
+//!
+//! The prose map of how these stack lives in `docs/ARCHITECTURE.md`;
+//! API renames across PRs live in `docs/MIGRATION.md`; bench artifact
+//! schemas in `docs/BENCHMARKS.md`.
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod bench;

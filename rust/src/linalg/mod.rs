@@ -6,31 +6,39 @@
 //! "implement the substrate" rule of the reproduction.
 
 mod cholesky;
+pub mod pool;
 pub mod rng;
 mod svd;
 
 pub use cholesky::{cholesky, cholesky_inverse, solve_lower, solve_upper};
+pub use pool::WorkerPool;
 pub use rng::Rng;
 pub use svd::{truncated_svd, Svd};
 
 /// Row-major f32 matrix. The one dense type used across quant/eval.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns (the row stride of `data`).
     pub cols: usize,
+    /// Row-major elements, `rows * cols` long.
     pub data: Vec<f32>,
 }
 
 impl Mat {
+    /// All-zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap an existing row-major buffer (length must match the shape).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Mat { rows, cols, data }
     }
 
+    /// Build element-wise from `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for r in 0..rows {
@@ -50,30 +58,36 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Identity matrix.
     pub fn eye(n: usize) -> Self {
         Mat::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
     }
 
+    /// Mutable element at `(r, c)`.
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
         &mut self.data[r * self.cols + c]
     }
 
+    /// Row `r` as a slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Row `r` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Materialized transpose.
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -144,6 +158,7 @@ impl Mat {
         out
     }
 
+    /// Copy with column `i` scaled by `scales[i]`.
     pub fn scale_cols(&self, scales: &[f32]) -> Mat {
         assert_eq!(scales.len(), self.cols);
         let mut out = self.clone();
@@ -156,6 +171,7 @@ impl Mat {
         out
     }
 
+    /// Element-wise difference `self − other`.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
@@ -170,6 +186,7 @@ impl Mat {
         }
     }
 
+    /// Element-wise sum `self + other`.
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
@@ -184,10 +201,12 @@ impl Mat {
         }
     }
 
+    /// Squared Frobenius norm (f64 accumulation).
     pub fn frob_sq(&self) -> f64 {
         self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum()
     }
 
+    /// Largest absolute element.
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
     }

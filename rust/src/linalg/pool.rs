@@ -1,0 +1,457 @@
+//! Persistent worker pool — the thread substrate of the native hot path.
+//!
+//! Before this module existed, every threaded kernel call paid a
+//! `std::thread::scope` spawn/join: one OS thread creation *per matmul*,
+//! thousands of times per generated token. A [`WorkerPool`] amortizes
+//! that cost the way deployed inference kernels do — a fixed set of
+//! worker threads is spawned once, parked on a condvar, and woken per
+//! dispatch to claim chunks of a row range from a shared queue.
+//!
+//! Design points:
+//!
+//! * **Chunked row-range queue.** A dispatch splits `rows` output rows
+//!   into one contiguous chunk per thread lane; workers (and the
+//!   dispatching thread itself, which always participates) claim chunk
+//!   indices from an atomic counter. Each chunk owns a disjoint
+//!   `&mut [T]` window of the output buffer, so kernels write without
+//!   locks.
+//! * **Hoisted serial gating.** The threads-vs-serial decision —
+//!   previously re-derived inside every kernel against a raw `m·k·n`
+//!   product — lives in [`WorkerPool::run_rows`]: callers pass a flop
+//!   hint and the pool falls back to a zero-overhead inline call when
+//!   the fan-out cannot pay for itself. Decode-time GEMVs hit exactly
+//!   one branch, not one per kernel.
+//! * **Determinism.** Chunking never changes per-row arithmetic: the
+//!   kernel closure receives `(first_row, window)` and computes each row
+//!   exactly as the single-chunk (serial) call would, so pooled output
+//!   is bit-identical to single-threaded output for any thread count —
+//!   asserted by the unit suite and by the throughput bench.
+//! * **Panic propagation.** A panicking kernel chunk is caught on the
+//!   worker, the remaining chunks still drain (workers never die), and
+//!   the payload is re-thrown on the dispatching thread — the scope-API
+//!   contract, without the scope.
+//! * **Kernel-time accounting.** Every dispatch (serial or pooled) adds
+//!   its wall time to a cumulative counter ([`WorkerPool::kernel_us`]),
+//!   which the serving metrics split per phase (prefill / decode /
+//!   speculative).
+//!
+//! One pool is meant to be shared by everything that executes kernels:
+//! [`crate::backend::NativeBackend`] owns an `Arc<WorkerPool>`, and the
+//! coordinator wires the speculative drafter/verifier backends onto the
+//! *same* pool, so prefill, decode, verify and draft all draw from one
+//! set of threads instead of oversubscribing the host.
+//!
+//! Dispatches are serialized internally (a second concurrent dispatch
+//! waits for the first), and a kernel closure must not dispatch onto
+//! the pool it is running on.
+//!
+//! ```
+//! use ttq_serve::linalg::pool::WorkerPool;
+//!
+//! let pool = WorkerPool::new(4);
+//! let mut data = vec![0u64; 1024];
+//! // flop hint above the floor → the 4 lanes each take a 256-row chunk
+//! pool.run_rows(&mut data, 1024, 1, 1 << 20, |r0, rows| {
+//!     for (i, v) in rows.iter_mut().enumerate() {
+//!         *v = (r0 + i) as u64;
+//!     }
+//! });
+//! assert_eq!(data[777], 777);
+//! ```
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Below this flop hint (`m·k·n` for a matmul) the wake/park round-trip
+/// costs more than the parallelism saves; [`WorkerPool::run_rows`] runs
+/// the kernel inline instead. One floor for every kernel — the decision
+/// lives here, not in each call site.
+pub const MT_FLOP_FLOOR: usize = 1 << 16;
+
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// One posted dispatch: a lifetime-erased task plus the chunk counter
+/// workers claim from. The task reference is only ever called while the
+/// dispatching `run_rows` frame is alive (it does not return until every
+/// worker has finished), which is what makes the erasure sound.
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    n_chunks: usize,
+    next: AtomicUsize,
+    epoch: u64,
+}
+
+struct State {
+    job: Option<Arc<Job>>,
+    /// Bumped once per dispatch; workers track the last epoch they
+    /// served so a job is never double-processed.
+    epoch: u64,
+    /// Workers still to check in on the current epoch.
+    active: usize,
+    shutdown: bool,
+    /// First panic payload caught in any chunk of the current dispatch.
+    panic: Option<PanicPayload>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between dispatches.
+    work: Condvar,
+    /// The dispatcher parks here until `active` drains to zero.
+    done: Condvar,
+}
+
+/// Send/Sync wrapper for the output base pointer handed to workers.
+/// Sound because every chunk derives a *disjoint* row window from it.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen_epoch {
+                    if let Some(job) = st.job.clone() {
+                        break job;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        seen_epoch = job.epoch;
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n_chunks {
+                break;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| (job.task)(i))) {
+                let mut st = shared.state.lock().unwrap();
+                if st.panic.is_none() {
+                    st.panic = Some(p);
+                }
+            }
+        }
+        drop(job);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A fixed set of parked OS threads executing chunked row-range kernels.
+/// See the module docs for the design; see
+/// [`crate::backend::native::matmul_bt_mt`] for the archetypal caller.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serializes dispatches from concurrent callers — the job slot is
+    /// single-occupancy by design.
+    dispatch_gate: Mutex<()>,
+    kernel_us: AtomicU64,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` parallel lanes. The calling thread is lane 0
+    /// and always participates in dispatches, so `threads − 1` worker
+    /// threads are spawned; `threads <= 1` spawns none and every
+    /// dispatch runs inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                active: 0,
+                shutdown: false,
+                panic: None,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("ttq-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            threads,
+            dispatch_gate: Mutex::new(()),
+            kernel_us: AtomicU64::new(0),
+        }
+    }
+
+    /// The hardware-sized lane count: `available_parallelism`, capped
+    /// at 16 (beyond that the miniature models' rows don't split
+    /// usefully). The single sizing policy — benches and backends both
+    /// derive their defaults from here.
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16)
+    }
+
+    /// Pool sized by [`WorkerPool::default_threads`].
+    pub fn with_default_threads() -> Self {
+        WorkerPool::new(Self::default_threads())
+    }
+
+    /// Parallel lanes (including the dispatching thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Cumulative wall time spent inside dispatches (serial and pooled),
+    /// microseconds — the "kernel time" the serving metrics split per
+    /// phase. Monotone; callers diff two snapshots.
+    pub fn kernel_us(&self) -> u64 {
+        self.kernel_us.load(Ordering::Relaxed)
+    }
+
+    /// Run `f` over `rows` logical rows of `data` (each `width`
+    /// elements), splitting the row range across the pool's lanes.
+    ///
+    /// `f(first_row, window)` receives a disjoint contiguous window
+    /// `&mut data[first_row*width .. last_row*width]` and must compute
+    /// rows independently — that independence is what makes the pooled
+    /// result bit-identical to the serial one.
+    ///
+    /// `flops` is the work hint for the serial/parallel decision: below
+    /// [`MT_FLOP_FLOOR`], or when `rows < 2`, or on a single-lane pool,
+    /// `f(0, data)` runs inline with zero dispatch overhead.
+    ///
+    /// Panics from `f` (any chunk, any thread) are re-thrown here after
+    /// all chunks drain; the pool itself survives and stays usable.
+    pub fn run_rows<T: Send>(
+        &self,
+        data: &mut [T],
+        rows: usize,
+        width: usize,
+        flops: usize,
+        f: impl Fn(usize, &mut [T]) + Sync,
+    ) {
+        // hard assert: this invariant guards the unsafe disjoint-window
+        // derivation below — a violation must never reach release builds
+        assert_eq!(data.len(), rows * width, "run_rows shape mismatch");
+        let t0 = Instant::now();
+        let lanes = self.threads.min(rows);
+        if lanes <= 1 || flops < MT_FLOP_FLOOR {
+            f(0, data);
+        } else {
+            let chunk = rows.div_ceil(lanes);
+            let n_chunks = rows.div_ceil(chunk);
+            let base = SendPtr(data.as_mut_ptr());
+            let task = |ci: usize| {
+                let r0 = ci * chunk;
+                let r1 = (r0 + chunk).min(rows);
+                // disjoint by construction: chunk ci owns rows r0..r1
+                let window = unsafe {
+                    std::slice::from_raw_parts_mut(base.0.add(r0 * width), (r1 - r0) * width)
+                };
+                f(r0, window);
+            };
+            self.dispatch(n_chunks, &task);
+        }
+        self.kernel_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Post a job, work through chunks on the calling thread alongside
+    /// the workers, wait for everyone, and re-throw the first panic.
+    fn dispatch(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(n_chunks > 0);
+        // Erase the borrow lifetime: the job cannot outlive this call —
+        // we do not return until every worker has checked out.
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        let gate = self.dispatch_gate.lock().unwrap();
+        let job = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.active = self.handles.len();
+            let job = Arc::new(Job {
+                task,
+                n_chunks,
+                next: AtomicUsize::new(0),
+                epoch: st.epoch,
+            });
+            st.job = Some(job.clone());
+            job
+        };
+        self.shared.work.notify_all();
+        // lane 0 works too — an idle dispatcher would waste a core
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n_chunks {
+                break;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| (job.task)(i))) {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.panic.is_none() {
+                    st.panic = Some(p);
+                }
+            }
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let p = st.panic.take();
+        drop(st);
+        drop(job);
+        // release the gate *before* re-throwing: unwinding through a
+        // held MutexGuard would poison the gate and brick the pool for
+        // every later dispatch (the survival contract of the module)
+        drop(gate);
+        if let Some(p) = p {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Big-enough hint to force the pooled path.
+    const FORCE: usize = MT_FLOP_FLOOR;
+
+    #[test]
+    fn fills_disjoint_chunks() {
+        let pool = WorkerPool::new(4);
+        for rows in [1usize, 2, 3, 7, 64, 1000] {
+            let mut data = vec![0usize; rows * 3];
+            pool.run_rows(&mut data, rows, 3, FORCE, |r0, w| {
+                for (i, v) in w.iter_mut().enumerate() {
+                    *v = r0 * 3 + i;
+                }
+            });
+            let want: Vec<usize> = (0..rows * 3).collect();
+            assert_eq!(data, want, "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn serial_below_floor_matches_pooled() {
+        let pool = WorkerPool::new(4);
+        let mut a = vec![0u64; 128];
+        let mut b = vec![0u64; 128];
+        let f = |r0: usize, w: &mut [u64]| {
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = ((r0 + i) as u64).wrapping_mul(2654435761);
+            }
+        };
+        pool.run_rows(&mut a, 128, 1, 0, f); // below floor → serial
+        pool.run_rows(&mut b, 128, 1, FORCE, f); // pooled
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let pool = WorkerPool::new(8);
+        let mut data = vec![0usize; 3 * 2];
+        pool.run_rows(&mut data, 3, 2, FORCE, |r0, w| {
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = r0 * 2 + i + 1;
+            }
+        });
+        assert_eq!(data, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn survives_many_dispatches() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 64];
+        for round in 0..1000u64 {
+            pool.run_rows(&mut data, 64, 1, FORCE, |r0, w| {
+                for (i, v) in w.iter_mut().enumerate() {
+                    *v = (r0 + i) as u64 + round;
+                }
+            });
+        }
+        assert_eq!(data[10], 10 + 999);
+        assert!(pool.kernel_us() > 0 || data[0] == 999);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0usize; 256];
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_rows(&mut data, 256, 1, FORCE, |r0, _w| {
+                if r0 == 0 {
+                    panic!("kernel chunk exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must propagate to the dispatcher");
+        // the pool is still serviceable after the panic
+        let mut after = vec![0usize; 256];
+        pool.run_rows(&mut after, 256, 1, FORCE, |r0, w| {
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = r0 + i;
+            }
+        });
+        assert_eq!(after[200], 200);
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut data = vec![0usize; 8];
+        pool.run_rows(&mut data, 8, 1, FORCE, |r0, w| {
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = r0 + i;
+            }
+        });
+        assert_eq!(data[7], 7);
+    }
+
+    #[test]
+    fn kernel_time_accumulates() {
+        let pool = WorkerPool::new(2);
+        let before = pool.kernel_us();
+        let mut data = vec![0.0f32; 1 << 12];
+        for _ in 0..50 {
+            pool.run_rows(&mut data, 1 << 12, 1, FORCE, |_r0, w| {
+                for v in w.iter_mut() {
+                    *v += 1.0;
+                }
+            });
+        }
+        assert!(pool.kernel_us() >= before);
+        assert_eq!(data[0], 50.0);
+    }
+}

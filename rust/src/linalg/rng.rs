@@ -22,10 +22,12 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Generator seeded deterministically from `seed`.
     pub fn new(seed: u64) -> Self {
         Rng { seed: splitmix64(seed), ctr: 0, spare_normal: None }
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.ctr += 1;

@@ -10,9 +10,12 @@ use super::{Mat, Rng};
 
 /// Truncated factorization W ≈ U diag(s) Vᵀ with r columns.
 pub struct Svd {
-    pub u: Mat,     // (m, r)
-    pub s: Vec<f32>, // (r,)
-    pub vt: Mat,    // (r, n)
+    /// Left singular vectors, `(m, r)`.
+    pub u: Mat,
+    /// Singular values, length r.
+    pub s: Vec<f32>,
+    /// Right singular vectors, `(r, n)`.
+    pub vt: Mat,
 }
 
 /// Modified Gram–Schmidt orthonormalization of the columns of `q` (in

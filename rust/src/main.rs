@@ -52,7 +52,7 @@ USAGE:
   ttq-serve serve [--model M] [--requests N] [--method SPEC] [--bits Q]
                   [--rank R] [--domains d1,d2] [--backend B] [--exec-quant Q]
                   [--max-new-tokens T] [--prompt-len L] [--cache-slots S]
-                  [--speculative] [--spec-k K]
+                  [--speculative] [--spec-k K] [--threads T]
   ttq-serve info
 
 SERVING (decode engine):
@@ -75,6 +75,9 @@ BACKENDS:
   linear through the packed Q-bit grouped int-matmul — it composes ON TOP
   of the selected --method, so eval/table numbers reflect method + W{Q}
   execution, not the method alone
+  --threads T (native only) sizes the persistent kernel worker pool
+  (default: available cores, capped at 16); prefill, decode, verify and
+  speculative drafting all share the one pool
 
 METHOD SPECS (ttq-serve eval/table/serve --method(s)):";
 
@@ -92,6 +95,12 @@ fn make_backend(a: &Args) -> Result<Box<dyn ExecBackend>> {
             if a.get("exec-quant").is_some() {
                 bail!(
                     "--exec-quant is a native-backend execution mode; it would be \
+                     silently ignored on pjrt — add --backend native"
+                );
+            }
+            if a.get("threads").is_some() {
+                bail!(
+                    "--threads sizes the native kernel worker pool; it would be \
                      silently ignored on pjrt — add --backend native"
                 );
             }
@@ -114,6 +123,15 @@ fn make_backend(a: &Args) -> Result<Box<dyn ExecBackend>> {
                     bail!("--exec-quant bit-width must be in 2..=8, got {bits}");
                 }
                 nb = nb.with_exec_quant(QuantSpec::new(bits, 32));
+            }
+            if let Some(t) = a.get("threads") {
+                let t: usize = t
+                    .parse()
+                    .map_err(|_| anyhow!("--threads takes a positive integer"))?;
+                if t == 0 {
+                    bail!("--threads must be ≥ 1");
+                }
+                nb = nb.with_threads(t);
             }
             Ok(Box::new(nb))
         }

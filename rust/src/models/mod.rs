@@ -18,50 +18,79 @@ use crate::util::json::Value;
 /// One tensor entry of the weights manifest.
 #[derive(Clone, Debug)]
 pub struct TensorInfo {
+    /// Tensor name (e.g. `l0.wq`).
     pub name: String,
+    /// Declared shape (rank 1 or 2).
     pub shape: Vec<usize>,
+    /// Element offset into the f32 blob.
     pub offset: usize,
+    /// Element count.
     pub numel: usize,
 }
 
 /// One quantizable linear layer (stats-output ordering contract).
 #[derive(Clone, Debug)]
 pub struct LinearInfo {
+    /// Weight tensor name.
     pub name: String,
+    /// Input width (the stats-tap channel count).
     pub d_in: usize,
+    /// Output width.
     pub d_out: usize,
 }
 
+/// Architecture dimensions of one model.
 #[derive(Clone, Debug)]
 pub struct ModelDims {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual width d.
     pub d_model: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Attention (query) heads.
     pub n_heads: usize,
+    /// Key/value heads (GQA/MQA when < n_heads).
     pub n_kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// MLP hidden width.
     pub d_mlp: usize,
+    /// Maximum context positions.
     pub max_seq: usize,
+    /// Training / full-batch-artifact sequence length.
     pub seq: usize,
 }
 
+/// Manifest-carried TTQ defaults (the fused-kernel hyperparameters).
 #[derive(Clone, Debug)]
 pub struct TtqDefaults {
+    /// Quantization groupsize.
     pub g: usize,
+    /// Diagonal norm order.
     pub p: f64,
+    /// Additive smoothing λ.
     pub lam: f64,
+    /// Diagonal exponent α.
     pub alpha: f64,
 }
 
 /// Parsed `<name>.manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Model name (artifact file stem).
     pub name: String,
+    /// Architecture family (`opt` / `qwen` / `gemma`).
     pub family: String,
+    /// Architecture dimensions.
     pub config: ModelDims,
+    /// Tensor order/shape/offset table for the weight blob.
     pub tensors: Vec<TensorInfo>,
+    /// Quantizable linears, in stats-tap order.
     pub linears: Vec<LinearInfo>,
+    /// The p-grid the stats artifact taps Σ|x|^p on.
     pub norm_ps: Vec<f64>,
+    /// Fused-kernel TTQ hyperparameters.
     pub ttq_defaults: TtqDefaults,
 }
 
@@ -88,6 +117,7 @@ fn as_str(v: &Value, key: &str) -> Result<String> {
 }
 
 impl Manifest {
+    /// Parse a `<name>.manifest.json` document.
     pub fn parse(doc: &str) -> Result<Manifest> {
         let v = Value::parse(doc).map_err(|e| anyhow!("{e}"))?;
         let cfg = v.field("config").map_err(|e| anyhow!("{e}"))?;
@@ -166,6 +196,7 @@ impl Manifest {
 /// A loaded model: manifest + owned weight tensors (name → Mat; 1-D
 /// tensors are stored as (1, n) matrices).
 pub struct ModelWeights {
+    /// The parsed manifest the tensors were loaded under.
     pub manifest: Manifest,
     tensors: HashMap<String, Mat>,
     order: Vec<String>,
@@ -183,6 +214,7 @@ fn next_version() -> u64 {
 }
 
 impl ModelWeights {
+    /// Load `<name>.manifest.json` + `<name>.weights.bin` from a dir.
     pub fn load(artifacts: &Path, name: &str) -> Result<Self> {
         let man_path = artifacts.join(format!("{name}.manifest.json"));
         let manifest = Manifest::parse(
@@ -271,10 +303,12 @@ impl ModelWeights {
         }
     }
 
+    /// A tensor by name.
     pub fn get(&self, name: &str) -> Option<&Mat> {
         self.tensors.get(name)
     }
 
+    /// Replace a tensor (same shape required); bumps the version.
     pub fn set(&mut self, name: &str, m: Mat) {
         let old = self.tensors.get(name).expect("unknown tensor");
         assert_eq!((old.rows, old.cols), (m.rows, m.cols), "shape change");
@@ -288,6 +322,7 @@ impl ModelWeights {
         self.order.iter().map(|n| &self.tensors[n]).collect()
     }
 
+    /// Tensor names in manifest order.
     pub fn tensor_names(&self) -> &[String] {
         &self.order
     }
@@ -302,6 +337,7 @@ impl ModelWeights {
             .collect()
     }
 
+    /// Total parameter count.
     pub fn param_count(&self) -> usize {
         self.manifest.tensors.iter().map(|t| t.numel).sum()
     }
@@ -336,9 +372,13 @@ pub fn family_of(name: &str) -> &'static str {
 /// Dimensions of one full-scale model (only what the perf model needs).
 #[derive(Clone, Copy, Debug)]
 pub struct PaperModel {
+    /// Published model name (e.g. `Qwen3-32B`).
     pub name: &'static str,
+    /// Residual width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
 }
 

@@ -32,13 +32,17 @@ use crate::quant::{MethodSpec, QuantSpec};
 /// Published card specs (dense FP16 tensor TFLOPs, HBM/GDDR GB/s).
 #[derive(Clone, Copy, Debug)]
 pub struct GpuSpec {
+    /// Card name as the paper's tables print it.
     pub name: &'static str,
+    /// Peak memory bandwidth, GB/s.
     pub bw_gbps: f64,
+    /// Dense fp16 tensor throughput, TFLOP/s.
     pub fp16_tflops: f64,
     /// launch + sync overhead per decode step, seconds (CUDA-graph era)
     pub overhead_s: f64,
 }
 
+/// The five cards of the paper's runtime tables (4-8).
 pub const GPUS: [GpuSpec; 5] = [
     GpuSpec { name: "A40", bw_gbps: 696.0, fp16_tflops: 74.8, overhead_s: 6.0e-6 },
     GpuSpec { name: "A100", bw_gbps: 1555.0, fp16_tflops: 312.0, overhead_s: 6.0e-6 },
@@ -47,6 +51,7 @@ pub const GPUS: [GpuSpec; 5] = [
     GpuSpec { name: "RTX4090", bw_gbps: 1008.0, fp16_tflops: 165.0, overhead_s: 3.0e-6 },
 ];
 
+/// Look up a card by table name (panics on unknown names).
 pub fn gpu(name: &str) -> &'static GpuSpec {
     GPUS.iter().find(|g| g.name == name).expect("unknown GPU")
 }
@@ -69,6 +74,7 @@ pub enum Kernel {
 }
 
 impl Kernel {
+    /// Kernel name as printed in the tables.
     pub fn label(&self) -> &'static str {
         match self {
             Kernel::Fp16Gemv => "fp16",
@@ -97,7 +103,9 @@ impl Kernel {
 /// One row of Tables 4-8: a registry method executed by a kernel class.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DecodeMode {
+    /// The compression method priced.
     pub method: MethodSpec,
+    /// The GEMV kernel class moving its weights.
     pub kernel: Kernel,
 }
 

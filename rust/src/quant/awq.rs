@@ -15,12 +15,16 @@ use crate::linalg::Mat;
 /// L2 stats artifact (`python/compile/model.py::NORM_PS`).
 #[derive(Clone, Debug, Default)]
 pub struct ActStats {
+    /// The p-norm grid the sums are kept for.
     pub ps: Vec<f64>,
+    /// Per-p, per-channel accumulated sums, `[n_p][d_in]`.
     pub norm_sums: Vec<Vec<f64>>, // [n_p][d_in]
-    pub count: f64,               // tokens accumulated
+    /// Tokens accumulated into the sums.
+    pub count: f64,
 }
 
 impl ActStats {
+    /// Zeroed statistics for a `d_in`-channel input on the p-grid.
     pub fn new(ps: &[f64], d_in: usize) -> Self {
         ActStats {
             ps: ps.to_vec(),
@@ -52,6 +56,7 @@ impl ActStats {
         self.count *= factor;
     }
 
+    /// Input channel count the sums cover.
     pub fn d_in(&self) -> usize {
         self.norm_sums.first().map(|v| v.len()).unwrap_or(0)
     }

@@ -19,12 +19,16 @@ pub enum QdqFormat {
 /// Full quantizer configuration (bits + groupsize + format).
 #[derive(Clone, Debug, PartialEq)]
 pub struct QuantSpec {
+    /// Code width in bits (2..=8 for the packed path).
     pub bits: u32,
+    /// Elements sharing one scale/zero pair (flat grouping).
     pub group: usize,
+    /// Scale/zero derivation variant.
     pub format: QdqFormat,
 }
 
 impl QuantSpec {
+    /// Asymmetric-format spec at the given bits/groupsize.
     pub fn new(bits: u32, group: usize) -> Self {
         QuantSpec { bits, group, format: QdqFormat::Asymmetric }
     }

@@ -12,11 +12,14 @@ use crate::linalg::{truncated_svd, Mat};
 /// Static low-rank factors for one linear layer.
 #[derive(Clone, Debug)]
 pub struct LowRank {
-    pub b: Mat, // (d_out, r)
-    pub a: Mat, // (r, d_in)
+    /// Left factor, `(d_out, r)`.
+    pub b: Mat,
+    /// Right factor, `(r, d_in)`.
+    pub a: Mat,
 }
 
 impl LowRank {
+    /// The decomposition rank r.
     pub fn rank(&self) -> usize {
         self.b.cols
     }

@@ -27,10 +27,12 @@ impl OjaTracker {
         t
     }
 
+    /// Tracked subspace rank r.
     pub fn rank(&self) -> usize {
         self.basis.cols
     }
 
+    /// Ambient dimension d.
     pub fn dim(&self) -> usize {
         self.basis.rows
     }

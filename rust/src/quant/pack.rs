@@ -14,13 +14,21 @@ use crate::linalg::Mat;
 /// Bit-packed quantized tensor (row-major element order).
 #[derive(Clone, Debug)]
 pub struct Packed {
+    /// Dense little-endian code words.
     pub words: Vec<u32>,
+    /// Code width in bits.
     pub bits: u32,
-    pub n: usize, // element count
+    /// Element count (codes packed).
+    pub n: usize,
+    /// Per-group scale S.
     pub scales: Vec<f32>,
+    /// Per-group zero Z.
     pub zeros: Vec<f32>,
+    /// Elements per scale/zero group.
     pub group: usize,
+    /// Weight rows (d_out).
     pub rows: usize,
+    /// Weight columns (d_in).
     pub cols: usize,
 }
 

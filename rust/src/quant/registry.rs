@@ -75,10 +75,12 @@ pub struct LayerStats<'a> {
 }
 
 impl<'a> LayerStats<'a> {
+    /// Stats carrying only accumulated norm sums.
     pub fn from_act(act: &'a ActStats) -> Self {
         LayerStats { act: Some(act), ..Default::default() }
     }
 
+    /// Stats carrying a precomputed committed diagonal (serving path).
     pub fn from_diag(diag: &'a [f32]) -> Self {
         LayerStats { diag: Some(diag), ..Default::default() }
     }
@@ -211,6 +213,7 @@ impl Quantizer for RtnQuantizer {
 /// offline on a named domain (Fig. 1a).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AwqQuantizer {
+    /// Diagonal hyperparameters (p, λ, α).
     pub hyper: TtqHyper,
 }
 
@@ -249,7 +252,9 @@ impl Quantizer for AwqQuantizer {
 /// compensation (App. E).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TtqQuantizer {
+    /// Low-rank compensation rank r (0 = none).
     pub rank: usize,
+    /// Diagonal hyperparameters (p, λ, α).
     pub hyper: TtqHyper,
 }
 
@@ -305,6 +310,7 @@ impl Quantizer for TtqQuantizer {
 /// Greedy OBS baseline (App. C) over the full input correlation.
 #[derive(Clone, Copy, Debug)]
 pub struct GptqQuantizer {
+    /// Hessian dampening fraction.
     pub damp: f64,
 }
 
@@ -386,10 +392,12 @@ impl Quantizer for NfQuantizer {
 /// with scaled QDQ of the survivors — one stats pass feeds both.
 #[derive(Clone, Copy, Debug)]
 pub struct PruneQuantizer {
+    /// Target sparsity pattern.
     pub sparsity: Sparsity,
     /// Also QDQ the surviving weights (the §3 prune-then-quantize
     /// pipeline). `false` prunes only.
     pub requantize: bool,
+    /// Diagonal hyperparameters (p, λ, α) for the saliency scores.
     pub hyper: TtqHyper,
 }
 
@@ -483,22 +491,39 @@ pub struct MethodSpec {
 }
 
 impl MethodSpec {
+    /// Wrap an already-built quantizer (no calibration domain).
     pub fn from_quantizer(quantizer: Arc<dyn Quantizer>) -> Self {
         MethodSpec { quantizer, calib_domain: None }
     }
 
     /// Parse a spec string (`"rtn"`, `"awq:calib=wt2s"`, `"ttq:r=16"`,
     /// `"nf:4"`, `"prune:0.5"`, ...) via the global registry.
+    ///
+    /// ```
+    /// use ttq_serve::quant::MethodSpec;
+    ///
+    /// let m = MethodSpec::parse("ttq:r=16").unwrap();
+    /// assert_eq!(m.label(), "TTQ (r = 16)");
+    /// assert!(m.is_online(), "no calib domain => test-time method");
+    ///
+    /// let m = MethodSpec::parse("awq:calib=c4s").unwrap();
+    /// assert!(m.is_offline());
+    /// assert_eq!(m.spec_string(), "awq:calib=c4s"); // round-trips
+    ///
+    /// assert!(MethodSpec::parse("no-such-method").is_err());
+    /// ```
     pub fn parse(spec: &str) -> Result<Self> {
         MethodRegistry::global().parse(spec)
     }
 
     // -- convenience constructors for the built-in methods ------------
 
+    /// The un-quantized FP32 reference row.
     pub fn fp() -> Self {
         Self::from_quantizer(Arc::new(FpQuantizer))
     }
 
+    /// Plain round-to-nearest groupwise QDQ.
     pub fn rtn() -> Self {
         Self::from_quantizer(Arc::new(RtnQuantizer))
     }
@@ -518,6 +543,7 @@ impl MethodSpec {
         Self::from_quantizer(Arc::new(GptqQuantizer::default())).with_calib(calib_domain)
     }
 
+    /// NormalFloat codebook QDQ at a fixed bit-width.
     pub fn nf(bits: u32) -> Self {
         Self::from_quantizer(Arc::new(NfQuantizer { bits: Some(bits) }))
     }
@@ -539,19 +565,23 @@ impl MethodSpec {
 
     // -- accessors ----------------------------------------------------
 
+    /// Attach an offline calibration domain (Fig. 1a path).
     pub fn with_calib(mut self, domain: &str) -> Self {
         self.calib_domain = Some(domain.to_string());
         self
     }
 
+    /// The underlying method implementation.
     pub fn quantizer(&self) -> &dyn Quantizer {
         self.quantizer.as_ref()
     }
 
+    /// The offline calibration domain, if any.
     pub fn calib_domain(&self) -> Option<&str> {
         self.calib_domain.as_deref()
     }
 
+    /// What pass-1 statistics the method consumes.
     pub fn requirement(&self) -> StatsRequirement {
         self.quantizer.requirement()
     }
@@ -658,6 +688,7 @@ impl SpecArgs {
         None
     }
 
+    /// Consume `key` as an f64 (error when present but unparsable).
     pub fn take_f64(&mut self, key: &str) -> Result<Option<f64>> {
         self.take(key)
             .map(|v| {
@@ -667,6 +698,7 @@ impl SpecArgs {
             .transpose()
     }
 
+    /// Consume `key` as a usize (error when present but unparsable).
     pub fn take_usize(&mut self, key: &str) -> Result<Option<usize>> {
         self.take(key)
             .map(|v| {
@@ -676,6 +708,7 @@ impl SpecArgs {
             .transpose()
     }
 
+    /// Consume `key` as a u32 (error when present but unparsable).
     pub fn take_u32(&mut self, key: &str) -> Result<Option<u32>> {
         self.take(key)
             .map(|v| {
@@ -685,6 +718,7 @@ impl SpecArgs {
             .transpose()
     }
 
+    /// Consume `key` as a bool (error when present but unparsable).
     pub fn take_bool(&mut self, key: &str) -> Result<Option<bool>> {
         self.take(key)
             .map(|v| {
@@ -714,7 +748,9 @@ type Builder = fn(&mut SpecArgs) -> Result<Arc<dyn Quantizer>>;
 
 /// One registered method family.
 pub struct MethodEntry {
+    /// Registry key (the spec-string prefix).
     pub name: &'static str,
+    /// One-line help text.
     pub summary: &'static str,
     /// Canonical example spec (used in help text and round-trip tests).
     pub example: &'static str,
@@ -861,10 +897,12 @@ impl MethodRegistry {
         }
     }
 
+    /// All registered method families.
     pub fn entries(&self) -> &[MethodEntry] {
         &self.entries
     }
 
+    /// Registered method names (spec-string prefixes).
     pub fn names(&self) -> Vec<&'static str> {
         self.entries.iter().map(|e| e.name).collect()
     }

@@ -45,14 +45,21 @@ pub fn rtn_quantize_inplace(data: &mut [f32], spec: &QuantSpec) {
 /// consumed by [`super::pack`] (int_matmul kernels in the paper).
 #[derive(Clone, Debug)]
 pub struct QuantizedInt {
-    pub codes: Vec<u8>,    // one code per element (≤ 8 bits)
-    pub scales: Vec<f32>,  // per group
-    pub zeros: Vec<f32>,   // per group
+    /// One code per element (≤ 8 bits each).
+    pub codes: Vec<u8>,
+    /// Per-group scale S.
+    pub scales: Vec<f32>,
+    /// Per-group zero Z.
+    pub zeros: Vec<f32>,
+    /// Weight rows (d_out).
     pub rows: usize,
+    /// Weight columns (d_in).
     pub cols: usize,
+    /// The spec the codes were produced under.
     pub spec: QuantSpec,
 }
 
+/// Quantize to integer codes + group params (no dequantization).
 pub fn rtn_quantize_int(w: &Mat, spec: &QuantSpec) -> QuantizedInt {
     let g = spec.group;
     assert!(spec.bits <= 8, "QuantizedInt stores u8 codes");

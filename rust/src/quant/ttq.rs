@@ -17,8 +17,11 @@ use crate::linalg::Mat;
 /// time (App. F: α ≈ 0.5, λ ≈ 0.4, p = 2).
 #[derive(Clone, Copy, Debug)]
 pub struct TtqHyper {
+    /// Norm order of the activation diagonal.
     pub p: f64,
+    /// Additive smoothing λ.
     pub lam: f64,
+    /// Diagonal exponent α.
     pub alpha: f64,
 }
 

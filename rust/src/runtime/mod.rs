@@ -15,16 +15,21 @@ use crate::linalg::Mat;
 /// Model-variant artifact id: `{model}_{variant}_b{batch}.hlo.txt`.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct ArtifactKey {
+    /// Model name (e.g. `qwen-micro`).
     pub model: String,
+    /// Artifact variant (`logits` / `nll` / `stats` / ...).
     pub variant: String,
+    /// Compiled batch size (the AOT bucket).
     pub batch: usize,
 }
 
 impl ArtifactKey {
+    /// Key for one `{model}_{variant}_b{batch}` artifact.
     pub fn new(model: &str, variant: &str, batch: usize) -> Self {
         ArtifactKey { model: model.into(), variant: variant.into(), batch }
     }
 
+    /// The on-disk artifact filename.
     pub fn filename(&self) -> String {
         format!("{}_{}_b{}.hlo.txt", self.model, self.variant, self.batch)
     }
@@ -38,6 +43,7 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Build the PJRT CPU client over an artifacts directory.
     pub fn new(artifacts: &Path) -> Result<Self> {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
@@ -48,10 +54,12 @@ impl Runtime {
         })
     }
 
+    /// PJRT platform name (diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// The artifacts directory this runtime loads from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.artifacts
     }
@@ -82,6 +90,7 @@ impl Runtime {
         Ok(exe)
     }
 
+    /// Executables compiled so far (cache size).
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
@@ -131,6 +140,7 @@ pub fn mat_literal(m: &Mat, rank1: bool) -> Result<xla::Literal> {
     }
 }
 
+/// Scalar f32 literal.
 pub fn scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }

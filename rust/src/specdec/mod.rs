@@ -65,15 +65,18 @@ pub struct SpecConfig {
 }
 
 impl SpecConfig {
+    /// Adaptive policy starting at draft depth `k` (RTN drafter method).
     pub fn new(k: usize) -> Self {
         SpecConfig { k: k.max(1), method: MethodSpec::rtn(), adaptive: true }
     }
 
+    /// Set the standalone-drafter quantization method.
     pub fn with_method(mut self, method: MethodSpec) -> Self {
         self.method = method;
         self
     }
 
+    /// Enable/disable acceptance-driven depth adaptation.
     pub fn with_adaptive(mut self, adaptive: bool) -> Self {
         self.adaptive = adaptive;
         self
@@ -124,6 +127,7 @@ impl AcceptanceEwma {
         }
     }
 
+    /// Forget all history (fresh drafter generation).
     pub fn reset(&mut self) {
         self.rate = 0.0;
         self.seen = false;
@@ -149,6 +153,7 @@ pub struct SpecController {
 }
 
 impl SpecController {
+    /// Controller at the policy's initial depth (cap 2k, floor 1).
     pub fn new(cfg: &SpecConfig) -> Self {
         let k_init = cfg.k.max(1);
         SpecController {
@@ -207,7 +212,10 @@ impl SpecController {
 /// backend; the verifier pairs full-precision weights with a dense one.
 #[derive(Clone, Copy)]
 pub struct SpecModel<'a> {
+    /// The backend executing this role's forwards.
     pub backend: &'a dyn ExecBackend,
+    /// The role's weights (quantized for the drafter, fp32 for the
+    /// verifier).
     pub weights: &'a ModelWeights,
 }
 
@@ -217,6 +225,7 @@ pub struct SpecModel<'a> {
 /// the newest committed token). The verifier's slot is the sequence's
 /// ordinary KV slot — the two caches are never copied into each other.
 pub struct DraftState {
+    /// The drafter's own KV slot.
     pub kv: SeqId,
     pending: Vec<i32>,
 }
@@ -361,8 +370,11 @@ pub fn spec_round(
 /// Aggregate speculative statistics over one generation.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SpecStats {
+    /// Draft→verify→rollback rounds run.
     pub rounds: usize,
+    /// Tokens the drafter proposed.
     pub drafted: usize,
+    /// Proposals the verifier accepted.
     pub accepted: usize,
 }
 
@@ -387,6 +399,7 @@ pub struct SpecGenerator<'a> {
 }
 
 impl<'a> SpecGenerator<'a> {
+    /// Pair a drafter with a verifier (their manifests must agree).
     pub fn new(drafter: SpecModel<'a>, verifier: SpecModel<'a>, cfg: &SpecConfig) -> Result<Self> {
         let dm = &drafter.weights.manifest;
         let vm = &verifier.weights.manifest;

@@ -5,26 +5,32 @@
 
 use std::time::{Duration, Instant};
 
+/// Collected samples of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name (printed in the report line).
     pub name: String,
+    /// Wall-clock per sample iteration.
     pub samples: Vec<Duration>,
     /// items (e.g. elements, tokens) processed per iteration
     pub items_per_iter: Option<f64>,
 }
 
 impl BenchResult {
+    /// Median sample.
     pub fn median(&self) -> Duration {
         let mut s = self.samples.clone();
         s.sort_unstable();
         s[s.len() / 2]
     }
 
+    /// Mean sample.
     pub fn mean(&self) -> Duration {
         let total: Duration = self.samples.iter().sum();
         total / self.samples.len() as u32
     }
 
+    /// 95th-percentile sample.
     pub fn p95(&self) -> Duration {
         let mut s = self.samples.clone();
         s.sort_unstable();
@@ -32,11 +38,13 @@ impl BenchResult {
         s[idx]
     }
 
+    /// Items per second at the median sample (when items were given).
     pub fn throughput(&self) -> Option<f64> {
         self.items_per_iter
             .map(|n| n / self.median().as_secs_f64())
     }
 
+    /// One aligned report line (median/mean/p95 + throughput).
     pub fn report(&self) -> String {
         let med = self.median();
         let base = format!(
@@ -59,7 +67,9 @@ impl BenchResult {
 /// Benchmark runner: measures `f` (which should perform one logical
 /// iteration and return a value that is black-boxed).
 pub struct Bencher {
+    /// Untimed warmup iterations before sampling.
     pub warmup: usize,
+    /// Timed samples collected.
     pub samples: usize,
 }
 
@@ -76,14 +86,17 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 impl Bencher {
+    /// Low-sample configuration for fast/CI runs.
     pub fn quick() -> Self {
         Bencher { warmup: 1, samples: 5 }
     }
 
+    /// Measure `f` (one logical iteration per call), printing the report.
     pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
         self.run_items(name, None, &mut f)
     }
 
+    /// [`Self::run`] with an items-per-iteration count for throughput.
     pub fn run_with_items<T>(
         &self,
         name: &str,

@@ -5,8 +5,10 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: positionals + `--flag` values.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Non-flag arguments, in order (subcommand first).
     pub positional: Vec<String>,
     flags: BTreeMap<String, Vec<String>>,
 }
@@ -37,15 +39,18 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Args {
         let raw: Vec<String> = std::env::args().skip(1).collect();
         Args::parse(&raw)
     }
 
+    /// True when `--name` appeared (with or without a value).
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
 
+    /// First value of `--name`, if any.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags
             .get(name)
@@ -53,22 +58,26 @@ impl Args {
             .map(String::as_str)
     }
 
+    /// First value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as usize, or `default` (also on parse failure).
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
 
+    /// `--name` parsed as u32, or `default` (also on parse failure).
     pub fn get_u32(&self, name: &str, default: u32) -> u32 {
         self.get(name)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
 
+    /// All values of a repeated flag (`--models a b c`).
     pub fn get_many(&self, name: &str) -> Vec<String> {
         self.flags.get(name).cloned().unwrap_or_default()
     }

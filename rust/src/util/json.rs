@@ -5,19 +5,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (key-sorted).
     Obj(BTreeMap<String, Value>),
 }
 
+/// Parse failure with the byte offset it occurred at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input.
     pub pos: usize,
 }
 
@@ -30,6 +40,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Value {
+    /// Parse a complete JSON document (trailing data is an error).
     pub fn parse(s: &str) -> Result<Value, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -41,6 +52,7 @@ impl Value {
         Ok(v)
     }
 
+    /// Object field lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -56,6 +68,7 @@ impl Value {
         })
     }
 
+    /// The number, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -63,10 +76,12 @@ impl Value {
         }
     }
 
+    /// The number truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|v| v as usize)
     }
 
+    /// The string, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -74,6 +89,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),

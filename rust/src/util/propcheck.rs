@@ -9,7 +9,9 @@ use crate::linalg::Rng;
 /// Configuration for a property run.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Cases generated per property.
     pub cases: usize,
+    /// Base RNG seed (case i derives from it deterministically).
     pub seed: u64,
 }
 
@@ -21,30 +23,37 @@ impl Default for Config {
 
 /// A generated test case plus the generator context.
 pub struct Gen<'a> {
+    /// The case's seeded random source.
     pub rng: &'a mut Rng,
 }
 
 impl<'a> Gen<'a> {
+    /// Uniform usize in `lo..=hi`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.rng.below((hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform u32 in `lo..=hi`.
     pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
         self.usize_in(lo as usize, hi as usize) as u32
     }
 
+    /// Standard-normal f32.
     pub fn f32_normal(&mut self) -> f32 {
         self.rng.normal() as f32
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.u01() * (hi - lo)
     }
 
+    /// Uniformly pick one of `opts`.
     pub fn choose<'t, T>(&mut self, opts: &'t [T]) -> &'t T {
         &opts[self.rng.below(opts.len() as u64) as usize]
     }
 
+    /// `n` standard-normal f32s.
     pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
         (0..n).map(|_| self.f32_normal()).collect()
     }
