@@ -35,6 +35,8 @@
 //! one pass. Only the native backend implements the cached family
 //! (PJRT artifacts are fixed-shape).
 
+#![forbid(unsafe_code)]
+
 pub mod native;
 pub mod pjrt;
 pub mod testmodel;

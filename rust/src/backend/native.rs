@@ -24,7 +24,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex, OnceLock};
+use crate::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -968,7 +968,10 @@ impl NativeBackend {
         weights: &ModelWeights,
         spec: &QuantSpec,
     ) -> Result<Arc<HashMap<String, Packed>>> {
-        let mut cache = self.packed.lock().unwrap();
+        // Poison recovery instead of unwrap (serving-path rule R3): a
+        // panic on another thread mid-insert leaves at worst a missing
+        // cache entry, which the rebuild below repairs.
+        let mut cache = self.packed.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some((ver, packed)) = cache.get(&weights.manifest.name) {
             if *ver == weights.version() {
                 return Ok(packed.clone());

@@ -6,6 +6,8 @@
 //! ratios, crossovers) is the reproduction target and is what
 //! EXPERIMENTS.md records.
 
+#![forbid(unsafe_code)]
+
 pub mod ablations;
 pub mod figure2;
 pub mod tables_quality;

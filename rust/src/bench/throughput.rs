@@ -323,6 +323,7 @@ pub fn default_scenarios(fast: bool) -> Vec<LoadSpec> {
 /// baseline: `a @ bᵀ` with output rows split across **freshly spawned**
 /// scoped threads — one OS thread creation per chunk *per call*, the
 /// cost every matmul paid before [`WorkerPool`] existed.
+#[allow(clippy::disallowed_methods)] // retained spawn-per-call baseline (repo-lint R1 allowlist)
 pub fn scoped_matmul_bt(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.cols, "scoped_matmul_bt dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);

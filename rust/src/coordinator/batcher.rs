@@ -139,14 +139,22 @@ impl Batcher {
             .unwrap_or(&self.policy.buckets[0])
     }
 
+    /// Largest configured bucket. Buckets are non-empty by construction
+    /// (asserted in [`Batcher::new`]); the fallback of 1 degrades to
+    /// single-request batches instead of panicking (repo-lint R3 bans
+    /// `unwrap` on the serving path).
+    fn max_bucket(&self) -> usize {
+        self.policy.buckets.last().copied().unwrap_or(1)
+    }
+
     /// Smallest bucket ≥ n (for padding partial linger batches).
     fn bucket_covering(&self, n: usize) -> usize {
-        *self
-            .policy
+        self.policy
             .buckets
             .iter()
             .find(|&&b| b >= n)
-            .unwrap_or(self.policy.buckets.last().unwrap())
+            .copied()
+            .unwrap_or_else(|| self.max_bucket())
     }
 
     /// Poll for a ready batch at time `now`.
@@ -154,13 +162,13 @@ impl Batcher {
         if self.queue.is_empty() {
             return None;
         }
-        let max_bucket = *self.policy.buckets.last().unwrap();
+        let max_bucket = self.max_bucket();
         if self.queue.len() >= max_bucket {
             let requests: Vec<Request> =
                 self.queue.drain(..max_bucket).collect();
             return Some(Batch::new(max_bucket, requests));
         }
-        let oldest = self.queue.front().unwrap().arrived;
+        let oldest = self.queue.front()?.arrived;
         if now.duration_since(oldest) >= self.policy.linger {
             return Some(self.release_partial());
         }
@@ -174,7 +182,7 @@ impl Batcher {
         if self.queue.is_empty() {
             return None;
         }
-        let max_bucket = *self.policy.buckets.last().unwrap();
+        let max_bucket = self.max_bucket();
         if self.queue.len() >= max_bucket {
             let requests: Vec<Request> =
                 self.queue.drain(..max_bucket).collect();

@@ -21,6 +21,8 @@
 //!   plus speculative round accounting and the worker pool's kernel
 //!   time per phase.
 
+#![forbid(unsafe_code)]
+
 pub mod batcher;
 pub mod calibrator;
 pub mod metrics;
@@ -30,3 +32,47 @@ pub use batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
 pub use calibrator::{CalibratorConfig, OnlineCalibrator};
 pub use metrics::Metrics;
 pub use server::{ServeEvent, Server, ServerConfig, StopReason};
+
+/// Serving-path failures that used to be `expect`s. The serving loop
+/// must degrade by surfacing an error on the offending request, never
+/// by unwinding mid-batch (repo-lint rule R3 bans `unwrap`/`expect`
+/// here); each variant names the internal invariant that broke.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission accepted a sequence but the KV cache had no free slot.
+    CacheExhausted,
+    /// The speculative draft KV cache had no free slot at admission.
+    DraftCacheExhausted,
+    /// A speculative sequence was scheduled but the shared speculative
+    /// state (drafter weights + draft cache) is missing.
+    SpecStateMissing,
+    /// A sequence flagged speculative carries no per-sequence
+    /// speculative bookkeeping.
+    SpecSeqMissing,
+    /// The batching policy has an empty bucket list.
+    NoBuckets,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::CacheExhausted => {
+                write!(f, "admission exceeded KV cache slots")
+            }
+            ServeError::DraftCacheExhausted => {
+                write!(f, "admission exceeded draft KV cache slots")
+            }
+            ServeError::SpecStateMissing => {
+                write!(f, "speculative state missing for a speculative sequence")
+            }
+            ServeError::SpecSeqMissing => {
+                write!(f, "speculative bookkeeping missing on a speculative sequence")
+            }
+            ServeError::NoBuckets => {
+                write!(f, "batch policy has no buckets configured")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

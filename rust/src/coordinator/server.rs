@@ -57,6 +57,7 @@ use anyhow::{bail, Result};
 use super::batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
 use super::calibrator::{CalibratorConfig, OnlineCalibrator};
 use super::metrics::Metrics;
+use super::ServeError;
 use crate::backend::{ExecBackend, NativeBackend};
 use crate::eval::{EvalConfig, Evaluator, Sampler};
 use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, SeqId};
@@ -518,8 +519,9 @@ impl<'b> Server<'b> {
         let n = group.len();
         let mut ids = Vec::with_capacity(n);
         for _ in 0..n {
-            // admission checked free_slots up front
-            ids.push(self.cache.alloc().expect("admission exceeded cache slots"));
+            // admission checked free_slots up front; surface a typed
+            // error (not a panic) if that accounting ever goes wrong
+            ids.push(self.cache.alloc().ok_or(ServeError::CacheExhausted)?);
         }
         let mut tokens = Vec::with_capacity(n * prompt_len);
         for r in &group {
@@ -529,7 +531,7 @@ impl<'b> Server<'b> {
         let t0 = Instant::now();
         let k0 = self.kernel_us();
         let res = if speculative {
-            let st = self.spec_state.as_mut().expect("speculative submit built the state");
+            let st = self.spec_state.as_mut().ok_or(ServeError::SpecStateMissing)?;
             st.verifier_backend.prefill(
                 &st.verifier_weights,
                 &tokens,
@@ -561,12 +563,12 @@ impl<'b> Server<'b> {
         // cache — drafter and verifier disagree about hidden states)
         let draft_ids = if speculative {
             let k0 = self.kernel_us();
-            let st = self.spec_state.as_mut().expect("speculative submit built the state");
+            let st = self.spec_state.as_mut().ok_or(ServeError::SpecStateMissing)?;
             let mut dids = Vec::with_capacity(n);
             for _ in 0..n {
                 // the draft slab is sized like the main one and only
                 // speculative sequences draw from it
-                dids.push(st.draft_cache.alloc().expect("draft cache exhausted"));
+                dids.push(st.draft_cache.alloc().ok_or(ServeError::DraftCacheExhausted)?);
             }
             let t0 = Instant::now();
             let res = st.drafter_backend.prefill(
@@ -722,8 +724,8 @@ impl<'b> Server<'b> {
             let kern0 = self.kernel_us();
             let round = {
                 let seq = &mut seqs[i];
-                let ds = seq.spec.as_mut().expect("speculative sequence");
-                let st = self.spec_state.as_mut().expect("speculative submit built the state");
+                let ds = seq.spec.as_mut().ok_or(ServeError::SpecSeqMissing)?;
+                let st = self.spec_state.as_mut().ok_or(ServeError::SpecStateMissing)?;
                 let drafter = SpecModel {
                     backend: &st.drafter_backend,
                     weights: &self.ev.weights,
@@ -826,11 +828,12 @@ impl<'b> Server<'b> {
     fn finish(&mut self, seq: SequenceState, events: &mut Vec<ServeEvent>) {
         self.cache.release(seq.kv);
         if let Some(ds) = &seq.spec {
-            self.spec_state
-                .as_mut()
-                .expect("speculative sequence implies spec state")
-                .draft_cache
-                .release(ds.kv);
+            // `finish` cannot surface a Result; if the spec state is
+            // somehow gone the draft slot is gone with it, so skipping
+            // the release is the correct degradation (no panic — R3).
+            if let Some(st) = self.spec_state.as_mut() {
+                st.draft_cache.release(ds.kv);
+            }
         }
         self.metrics.record_latency(seq.arrived.elapsed());
         let stop = if self.cfg.eos.is_some_and(|e| seq.generated.last() == Some(&e)) {

@@ -10,6 +10,8 @@
 //! wt2s→WikiText-2, ptbs→PTB, c4s→C4, vqas→TextVQA-proxy,
 //! acts→LIBERO-proxy action streams.
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::rng::splitmix64;
 
 /// Shared vocabulary size across every synthetic domain.

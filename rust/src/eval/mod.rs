@@ -19,6 +19,8 @@
 //! itself (Fig. 1b — that is the definition of test-time quantization),
 //! then hands each linear's [`LayerStats`] to the method.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};

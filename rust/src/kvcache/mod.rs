@@ -29,6 +29,8 @@
 //! are fully overwritten by the next `append_row`/`advance` cycle, so a
 //! rollback is bit-identical to never having appended.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use crate::linalg::Mat;

@@ -36,6 +36,11 @@
 //!   online calibrator driving any diagonal method, a continuous-
 //!   batching decode scheduler streaming [`coordinator::ServeEvent`]s,
 //!   metrics.
+//! * [`sync`] — synchronization shim: `std::sync` re-exports normally,
+//!   the in-tree bounded-exhaustive model checker ([`sync::model`])
+//!   under `--cfg loom`; `linalg::pool` and `backend::native` draw
+//!   every primitive from here so `rust/tests/loom_pool.rs` can
+//!   explore the dispatch protocol's interleavings exhaustively.
 //! * [`specdec`] — self-speculative decoding: a quantized drafter
 //!   proposes `k` tokens per round, the full-precision verifier scores
 //!   all `k+1` positions in one [`backend::ExecBackend::verify_step`],
@@ -70,6 +75,7 @@ pub mod perfmodel;
 pub mod quant;
 pub mod runtime;
 pub mod specdec;
+pub mod sync;
 pub mod util;
 
 /// Repo-relative artifacts directory (overridable via `TTQ_ARTIFACTS`).

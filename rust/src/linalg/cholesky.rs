@@ -5,6 +5,8 @@
 //! cites this as the O(d³) cost that TTQ avoids — we implement it as the
 //! baseline it is.
 
+#![forbid(unsafe_code)]
+
 use super::Mat;
 
 /// Lower-triangular Cholesky factor of a symmetric PSD matrix.

@@ -45,6 +45,14 @@
 //! waits for the first), and a kernel closure must not dispatch onto
 //! the pool it is running on.
 //!
+//! Every synchronization primitive here comes from [`crate::sync`], so
+//! building with `RUSTFLAGS="--cfg loom"` swaps in the instrumented
+//! model-checker versions: `rust/tests/loom_pool.rs` explores the whole
+//! dispatch protocol (chunk claiming, `done` signaling, panic payload
+//! routing, drop/join shutdown) under every bounded interleaving. The
+//! `SAFETY:` comments below name the invariant the corresponding model
+//! checks; `docs/CONCURRENCY.md` is the prose version.
+//!
 //! ```
 //! use ttq_serve::linalg::pool::WorkerPool;
 //!
@@ -59,10 +67,10 @@
 //! assert_eq!(data[777], 777);
 //! ```
 
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Below this flop hint (`m·k·n` for a matmul) the wake/park round-trip
@@ -105,16 +113,38 @@ struct Shared {
 }
 
 /// Send/Sync wrapper for the output base pointer handed to workers.
-/// Sound because every chunk derives a *disjoint* row window from it.
 struct SendPtr<T>(*mut T);
+
+// SAFETY: `SendPtr` is constructed only inside `run_rows`, and every
+// consumer derives its `&mut` window from a chunk index claimed
+// *exactly once* from the job's atomic counter — windows of distinct
+// chunks are disjoint row ranges of one live `&mut [T]`, so no two
+// threads ever hold aliasing `&mut` derived from this pointer. The
+// exactly-once claim is checked by the `chunks_claimed_exactly_once`
+// loom model and the disjoint-cover property test below; `T: Send`
+// keeps the element type itself transferable across threads.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: shared references to the wrapper only expose the raw pointer
+// value; all dereferencing goes through the disjoint-window derivation
+// argued above.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Poison recovery for the pool's internal locks: a panic can never
+/// unwind while one of them is held (kernel panics are caught *outside*
+/// the state lock; the gate is dropped before re-throwing), so a
+/// poisoned lock only means some *other* thread panicked — the
+/// protected state is still consistent and the pool must stay
+/// serviceable (the survival contract of this module). Under
+/// `--cfg loom` the model mutex never poisons and this is a no-op.
+fn relock<T>(r: crate::sync::LockResult<T>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
 
 fn worker_loop(shared: Arc<Shared>) {
     let mut seen_epoch = 0u64;
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = relock(shared.state.lock());
             loop {
                 if st.shutdown {
                     return;
@@ -124,24 +154,34 @@ fn worker_loop(shared: Arc<Shared>) {
                         break job;
                     }
                 }
-                st = shared.work.wait(st).unwrap();
+                st = relock(shared.work.wait(st));
             }
         };
         seen_epoch = job.epoch;
         loop {
+            // Ordering::Relaxed is sufficient for the chunk claim: the
+            // RMW is atomic on a single location, which alone guarantees
+            // every chunk index is handed out exactly once — no cross-
+            // location ordering is needed for uniqueness. Visibility of
+            // the *job itself* (task pointer, n_chunks) is established
+            // by the state-mutex acquire above, not by this counter.
+            // Checked by the `chunks_claimed_exactly_once` loom model
+            // (the model runs SeqCst — see `sync::model` docs — so the
+            // model proves the protocol and this comment carries the
+            // Relaxed-downgrade argument: single-location atomicity).
             let i = job.next.fetch_add(1, Ordering::Relaxed);
             if i >= job.n_chunks {
                 break;
             }
             if let Err(p) = catch_unwind(AssertUnwindSafe(|| (job.task)(i))) {
-                let mut st = shared.state.lock().unwrap();
+                let mut st = relock(shared.state.lock());
                 if st.panic.is_none() {
                     st.panic = Some(p);
                 }
             }
         }
         drop(job);
-        let mut st = shared.state.lock().unwrap();
+        let mut st = relock(shared.state.lock());
         st.active -= 1;
         if st.active == 0 {
             shared.done.notify_all();
@@ -183,10 +223,9 @@ impl WorkerPool {
         let handles = (1..threads)
             .map(|i| {
                 let sh = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("ttq-pool-{i}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn pool worker")
+                crate::sync::thread::spawn_named(&format!("ttq-pool-{i}"), move || {
+                    worker_loop(sh)
+                })
             })
             .collect();
         WorkerPool {
@@ -203,10 +242,7 @@ impl WorkerPool {
     /// usefully). The single sizing policy — benches and backends both
     /// derive their defaults from here.
     pub fn default_threads() -> usize {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(16)
+        crate::sync::thread::parallelism().min(16)
     }
 
     /// Pool sized by [`WorkerPool::default_threads`].
@@ -223,6 +259,12 @@ impl WorkerPool {
     /// microseconds — the "kernel time" the serving metrics split per
     /// phase. Monotone; callers diff two snapshots.
     pub fn kernel_us(&self) -> u64 {
+        // Relaxed: pure monotone metrics counter on a single location —
+        // readers only diff snapshots, nothing branches on its value
+        // relative to other shared state, so no ordering is required.
+        // The `kernel_us_accounting_benign` loom model checks the
+        // benign-race claim (no deadlock, no lost protocol signal, sum
+        // of contributions observed once the dispatch completes).
         self.kernel_us.load(Ordering::Relaxed)
     }
 
@@ -262,7 +304,19 @@ impl WorkerPool {
             let task = |ci: usize| {
                 let r0 = ci * chunk;
                 let r1 = (r0 + chunk).min(rows);
-                // disjoint by construction: chunk ci owns rows r0..r1
+                // SAFETY: `base` points at element 0 of a live
+                // `&mut [T]` of length `rows*width` (asserted on entry),
+                // and `r0 < r1 <= rows`, so the window
+                // `[r0*width, r1*width)` is in bounds. Distinct chunk
+                // indices yield disjoint windows (the partition covers
+                // `0..rows` exactly once — propcheck test
+                // `windows_partition_rows_exactly_once` below), and each
+                // index is claimed by exactly one thread
+                // (`chunks_claimed_exactly_once` loom model), so no two
+                // `&mut` windows alias. The underlying exclusive borrow
+                // of `data` is pinned by this `run_rows` frame, which
+                // does not return until the `done` handshake confirms
+                // every chunk has drained.
                 let window = unsafe {
                     std::slice::from_raw_parts_mut(base.0.add(r0 * width), (r1 - r0) * width)
                 };
@@ -270,6 +324,7 @@ impl WorkerPool {
             };
             self.dispatch(n_chunks, &task);
         }
+        // Relaxed: metrics counter; see `kernel_us` for the argument.
         self.kernel_us
             .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
     }
@@ -278,12 +333,21 @@ impl WorkerPool {
     /// the workers, wait for everyone, and re-throw the first panic.
     fn dispatch(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
         debug_assert!(n_chunks > 0);
-        // Erase the borrow lifetime: the job cannot outlive this call —
-        // we do not return until every worker has checked out.
+        // SAFETY: the transmute only erases the borrow lifetime to
+        // `'static`; the reference never outlives this call. `dispatch`
+        // does not return (and the enclosing `run_rows` frame that owns
+        // the real closure stays alive) until every worker has
+        // decremented `active` to zero *and* the job has been removed
+        // from the state slot, with the dispatcher's own local `Arc`
+        // dropped before the gate is released — so every use of the
+        // erased reference happens-before the end of the true borrow.
+        // The `done_signal_not_missed` loom model checks exactly this:
+        // on every interleaving, `active == 0` and `job == None` before
+        // `dispatch` returns.
         let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
-        let gate = self.dispatch_gate.lock().unwrap();
+        let gate = relock(self.dispatch_gate.lock());
         let job = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = relock(self.shared.state.lock());
             st.epoch += 1;
             st.active = self.handles.len();
             let job = Arc::new(Job {
@@ -298,28 +362,33 @@ impl WorkerPool {
         self.shared.work.notify_all();
         // lane 0 works too — an idle dispatcher would waste a core
         loop {
+            // Relaxed chunk claim: same single-location RMW argument as
+            // in `worker_loop` (the comment there is the canonical one).
             let i = job.next.fetch_add(1, Ordering::Relaxed);
             if i >= n_chunks {
                 break;
             }
             if let Err(p) = catch_unwind(AssertUnwindSafe(|| (job.task)(i))) {
-                let mut st = self.shared.state.lock().unwrap();
+                let mut st = relock(self.shared.state.lock());
                 if st.panic.is_none() {
                     st.panic = Some(p);
                 }
             }
         }
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = relock(self.shared.state.lock());
         while st.active > 0 {
-            st = self.shared.done.wait(st).unwrap();
+            st = relock(self.shared.done.wait(st));
         }
         st.job = None;
         let p = st.panic.take();
         drop(st);
         drop(job);
         // release the gate *before* re-throwing: unwinding through a
-        // held MutexGuard would poison the gate and brick the pool for
-        // every later dispatch (the survival contract of the module)
+        // held MutexGuard would poison the gate, and although `relock`
+        // recovers from poison, the gate must not even appear held
+        // while no dispatch is running (the `panic_payload_propagates`
+        // loom model and the `two_panicking_workers_do_not_brick_the_pool`
+        // stress test cover the survival contract).
         drop(gate);
         if let Some(p) = p {
             resume_unwind(p);
@@ -330,7 +399,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = relock(self.shared.state.lock());
             st.shutdown = true;
         }
         self.shared.work.notify_all();
@@ -343,9 +412,16 @@ impl Drop for WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::propcheck::{check, Config};
 
     /// Big-enough hint to force the pooled path.
     const FORCE: usize = MT_FLOP_FLOOR;
+
+    /// Rounds for the stress loops — shrunk under Miri (interpreter)
+    /// and under `--cfg ttq_sanitize` (TSan/ASan builds instrument
+    /// every access) so the runs finish while still crossing the
+    /// dispatch protocol many times.
+    const ROUNDS: u64 = if cfg!(any(miri, ttq_sanitize)) { 20 } else { 1000 };
 
     #[test]
     fn fills_disjoint_chunks() {
@@ -393,15 +469,15 @@ mod tests {
     fn survives_many_dispatches() {
         let pool = WorkerPool::new(3);
         let mut data = vec![0u64; 64];
-        for round in 0..1000u64 {
+        for round in 0..ROUNDS {
             pool.run_rows(&mut data, 64, 1, FORCE, |r0, w| {
                 for (i, v) in w.iter_mut().enumerate() {
                     *v = (r0 + i) as u64 + round;
                 }
             });
         }
-        assert_eq!(data[10], 10 + 999);
-        assert!(pool.kernel_us() > 0 || data[0] == 999);
+        assert_eq!(data[10], 10 + ROUNDS - 1);
+        assert!(pool.kernel_us() > 0 || data[0] == ROUNDS - 1);
     }
 
     #[test]
@@ -426,6 +502,34 @@ mod tests {
         assert_eq!(after[200], 200);
     }
 
+    /// Satellite regression: *every* chunk panics, so multiple workers
+    /// (and the dispatcher lane) panic concurrently within one
+    /// dispatch. The `done` wait must still drain, only one payload is
+    /// re-thrown (the rest are dropped), the gate must not stay
+    /// poisoned, and the pool must serve later dispatches — repeated to
+    /// catch flaky interleavings.
+    #[test]
+    fn two_panicking_workers_do_not_brick_the_pool() {
+        let pool = WorkerPool::new(4);
+        for round in 0..if cfg!(any(miri, ttq_sanitize)) { 3u32 } else { 50 } {
+            let mut data = vec![0usize; 256];
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.run_rows(&mut data, 256, 1, FORCE, |r0, _w| {
+                    panic!("chunk {r0} exploded (round {round})");
+                });
+            }));
+            assert!(r.is_err(), "round {round}: panic must propagate");
+            // pool usable again immediately after
+            let mut after = vec![0usize; 64];
+            pool.run_rows(&mut after, 64, 1, FORCE, |r0, w| {
+                for (i, v) in w.iter_mut().enumerate() {
+                    *v = r0 + i;
+                }
+            });
+            assert_eq!(after[63], 63, "round {round}: pool bricked");
+        }
+    }
+
     #[test]
     fn single_lane_pool_runs_inline() {
         let pool = WorkerPool::new(1);
@@ -444,7 +548,7 @@ mod tests {
         let pool = WorkerPool::new(2);
         let before = pool.kernel_us();
         let mut data = vec![0.0f32; 1 << 12];
-        for _ in 0..50 {
+        for _ in 0..if cfg!(any(miri, ttq_sanitize)) { 5 } else { 50 } {
             pool.run_rows(&mut data, 1 << 12, 1, FORCE, |_r0, w| {
                 for v in w.iter_mut() {
                     *v += 1.0;
@@ -452,6 +556,58 @@ mod tests {
             });
         }
         assert!(pool.kernel_us() >= before);
-        assert_eq!(data[0], 50.0);
+        assert_eq!(data[0], if cfg!(any(miri, ttq_sanitize)) { 5.0 } else { 50.0 });
+    }
+
+    /// Satellite: the disjoint-window partition covers `0..rows`
+    /// exactly once for adversarial shapes — rows = 0, rows = 1,
+    /// rows < threads, non-divisible splits. Runs the real `run_rows`
+    /// (not a re-derivation of its math) and counts per-row visits, so
+    /// under Miri this also proves the `SendPtr` + `from_raw_parts_mut`
+    /// window derivation is UB-free on exactly these shapes.
+    #[test]
+    fn windows_partition_rows_exactly_once() {
+        let cfg = Config {
+            cases: if cfg!(any(miri, ttq_sanitize)) { 6 } else { 48 },
+            seed: 0x9001,
+        };
+        check("run_rows partition covers 0..rows exactly once", &cfg, |g| {
+            let threads = g.usize_in(1, if cfg!(any(miri, ttq_sanitize)) { 3 } else { 8 });
+            let rows = *g.choose(&[0usize, 1, 2, 3, 5, 7, 16, 33, 100]);
+            let width = g.usize_in(1, 3);
+            let pool = WorkerPool::new(threads);
+            let mut data = vec![0u32; rows * width];
+            // force the pooled path whenever it is reachable
+            pool.run_rows(&mut data, rows, width, FORCE, |_r0, w| {
+                for v in w.iter_mut() {
+                    *v += 1;
+                }
+            });
+            for (i, v) in data.iter().enumerate() {
+                crate::prop_assert!(
+                    *v == 1,
+                    "cell {i} visited {v} times (rows={rows} width={width} threads={threads})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Miri-focused smoke at the smallest multi-chunk shape: 2 lanes,
+    /// 2 chunks, width 2 — the minimal case where the `'static`
+    /// transmute and both `SendPtr` windows are live on two threads at
+    /// once. Miri validates the raw-pointer arithmetic and the absence
+    /// of aliasing `&mut` on exactly this path.
+    #[test]
+    fn miri_minimal_two_lane_dispatch() {
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0usize; 4 * 2];
+        pool.run_rows(&mut data, 4, 2, FORCE, |r0, w| {
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = (r0 * 2 + i) * 10;
+            }
+        });
+        let want: Vec<usize> = (0..8).map(|i| i * 10).collect();
+        assert_eq!(data, want);
     }
 }

@@ -4,6 +4,8 @@
 //! bit-identical to `python/compile/corpus.py`); here it additionally
 //! powers reproducible random matrices for tests and benches.
 
+#![forbid(unsafe_code)]
+
 /// SplitMix64 finalizer — the shared hash with the python corpus engine.
 #[inline]
 pub fn splitmix64(z: u64) -> u64 {

@@ -6,6 +6,8 @@
 //! gap; the paper needs only small r (≤ 32), so this is exact enough —
 //! tests compare against loss reduction rather than bit equality.
 
+#![forbid(unsafe_code)]
+
 use super::{Mat, Rng};
 
 /// Truncated factorization W ≈ U diag(s) Vᵀ with r columns.

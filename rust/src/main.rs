@@ -20,6 +20,8 @@
 //! on a bare Rust toolchain (untrained weights: pipeline-shape numbers,
 //! not paper numbers).
 
+#![forbid(unsafe_code)]
+
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};

@@ -6,6 +6,8 @@
 //! tables (Tables 14-16) used by the GPU roofline model — those models
 //! are never executed here, only dimension-accounted.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::fs;
 use std::path::Path;

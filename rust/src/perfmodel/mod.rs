@@ -27,6 +27,8 @@
 //! sequential quantized GEMVs, and the verifier pays one prefill-priced
 //! pass over the k+1-token window ([`speculative_ktokens_per_sec`]).
 
+#![forbid(unsafe_code)]
+
 use crate::quant::{MethodSpec, QuantSpec};
 
 /// Published card specs (dense FP16 tensor TFLOPs, HBM/GDDR GB/s).

@@ -25,6 +25,8 @@
 //! * [`online_pca`] — Oja streaming subspace tracker (future
 //!   [`StatsRequirement::StreamingActivations`] methods).
 
+#![forbid(unsafe_code)]
+
 pub mod awq;
 pub mod formats;
 pub mod gptq;

@@ -4,6 +4,8 @@
 //! process; compiled executables are cached per artifact path so the
 //! coordinator's shape buckets each compile exactly once.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;

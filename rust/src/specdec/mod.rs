@@ -37,6 +37,8 @@
 //! requantization so the signal speaks about the *current* drafter
 //! generation.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend::ExecBackend;
@@ -45,6 +47,34 @@ use crate::kvcache::{KvCache, KvCacheConfig, SeqId};
 use crate::models::ModelWeights;
 use crate::quant::{lowrank_init, LayerStats, MethodSpec, QuantSpec, StatsRequirement};
 use crate::util::argmax;
+
+/// Speculative-round invariant violations that used to be `expect`s
+/// (repo-lint R3 bans `unwrap`/`expect` in this module — the round
+/// must fail as a `Result`, not unwind mid-serve).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// `spec_round` was entered with no committed token to anchor the
+    /// verify window (`pending` empty — the prefill must seed it).
+    EmptyPending,
+    /// A freshly built single-slot KV cache refused to allocate its
+    /// one sequence slot.
+    CacheSlotUnavailable,
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::EmptyPending => {
+                write!(f, "speculative round with empty pending window")
+            }
+            SpecError::CacheSlotUnavailable => {
+                write!(f, "fresh single-slot KV cache has no free slot")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
 
 // ---------------------------------------------------------------------
 // Policy
@@ -318,7 +348,7 @@ pub fn spec_round(
 
     // -- verify: one cached forward over [last, d₁..d_k] ---------------
     let mut vtokens = Vec::with_capacity(k + 1);
-    vtokens.push(*draft.pending.last().expect("pending holds the newest committed token"));
+    vtokens.push(*draft.pending.last().ok_or(SpecError::EmptyPending)?);
     vtokens.extend_from_slice(&drafts);
     let out = verifier
         .backend
@@ -437,9 +467,9 @@ impl<'a> SpecGenerator<'a> {
             ));
         }
         let mut vcache = KvCache::new(KvCacheConfig::from_manifest(man, 1));
-        let vid = vcache.alloc().expect("fresh single-slot cache");
+        let vid = vcache.alloc().ok_or(SpecError::CacheSlotUnavailable)?;
         let mut dcache = KvCache::new(KvCacheConfig::from_manifest(man, 1));
-        let did = dcache.alloc().expect("fresh single-slot cache");
+        let did = dcache.alloc().ok_or(SpecError::CacheSlotUnavailable)?;
 
         // dual prefill: each role builds its own KV state for the prompt
         let step = self

@@ -1,0 +1,89 @@
+//! Synchronization shim: `std::sync` normally, the in-tree model
+//! checker under `--cfg loom`.
+//!
+//! Concurrency-bearing modules (`linalg::pool`, `backend::native`)
+//! import their primitives from here instead of `std::sync` (enforced
+//! by `repo-lint` rule R4). A stable build re-exports the `std` types
+//! unchanged — zero overhead, identical semantics. Building the crate
+//! with `RUSTFLAGS="--cfg loom"` swaps in the instrumented equivalents
+//! from [`model`], which lets `rust/tests/loom_pool.rs` explore every
+//! bounded interleaving of the pool's dispatch protocol.
+//!
+//! Notes on coverage:
+//!
+//! * `Arc` and `OnceLock` are re-exported from `std` in both modes.
+//!   `Arc` is pure refcounting (no protocol to model); `OnceLock` is
+//!   used only for lazy one-time pool construction in
+//!   `backend::native`, which the loom models construct eagerly.
+//! * `thread::spawn_named` / `thread::parallelism` wrap the `std`
+//!   spawn API so the loom build can substitute scheduler-controlled
+//!   model threads.
+
+#![forbid(unsafe_code)]
+
+pub mod model;
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, LockResult, Mutex, MutexGuard, PoisonError};
+
+#[cfg(loom)]
+pub use model::{Condvar, LockResult, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use std::sync::PoisonError;
+
+pub use std::sync::{Arc, OnceLock};
+
+/// Atomic types (instrumented under `--cfg loom`); `Ordering` is always
+/// the `std` enum.
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicU64, AtomicUsize};
+
+    #[cfg(loom)]
+    pub use super::model::{AtomicU64, AtomicUsize};
+}
+
+/// Thread spawn/join (scheduler-controlled model threads under
+/// `--cfg loom`).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::JoinHandle;
+
+    #[cfg(loom)]
+    pub use super::model::JoinHandle;
+
+    /// Spawn a named OS thread (the only sanctioned spawn site outside
+    /// the retained `bench::throughput` scoped baseline — repo-lint R1).
+    #[cfg(not(loom))]
+    #[allow(clippy::disallowed_methods)]
+    pub fn spawn_named<F, T>(name: &str, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("spawn named thread")
+    }
+
+    #[cfg(loom)]
+    pub use super::model::spawn_named;
+
+    /// Hardware parallelism (fixed at 4 under `--cfg loom` so model
+    /// explorations are machine-independent).
+    #[cfg(not(loom))]
+    pub fn parallelism() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Hardware parallelism (fixed at 4 under `--cfg loom` so model
+    /// explorations are machine-independent).
+    #[cfg(loom)]
+    pub fn parallelism() -> usize {
+        4
+    }
+}

@@ -1,0 +1,939 @@
+//! Bounded-exhaustive interleaving model checker (in-tree mini-`loom`).
+//!
+//! The build environment has no network access, so the real `loom`
+//! crate cannot be a dependency. This module implements the same idea
+//! at the scale the pool protocol needs: every synchronization
+//! primitive is instrumented so a controller decides, at each visible
+//! operation, which thread runs next; a depth-first search then replays
+//! the program under every schedule (up to a preemption bound), and any
+//! panic, deadlock or livelock in any schedule is reported together
+//! with how many schedules were explored.
+//!
+//! Scope and fidelity (limits are mirrored in `docs/CONCURRENCY.md`):
+//!
+//! * **Sequentially consistent memory model.** Instrumented atomics
+//!   ignore the requested `Ordering` and execute `SeqCst`; the checker
+//!   explores thread interleavings, not weak-memory reorderings. The
+//!   `Ordering::Relaxed` arguments in `linalg::pool` are justified by
+//!   comments at each site, not by this checker.
+//! * **`notify_one` is modeled as `notify_all`.** Condvars permit
+//!   spurious wakeups, so waking more waiters than requested is an
+//!   over-approximation that every correct caller already tolerates.
+//! * **Yield points** sit at every instrumented operation (mutex
+//!   acquire, condvar wait/notify, atomic access, join); plain memory
+//!   accesses between them run uninstrumented, under the mutual
+//!   exclusion the model enforces.
+//!
+//! The checker is always compiled and self-tested (stable `cargo test`
+//! runs the seeded-bug tests below), while `--cfg loom` additionally
+//! switches [`crate::sync`] so `linalg::pool` itself runs on these
+//! primitives; `rust/tests/loom_pool.rs` holds the pool models.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::panic::{catch_unwind, panic_any, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::thread as real_thread;
+use std::time::{Duration, Instant};
+
+/// `std`-shaped lock result; the model mutex never actually poisons.
+pub type LockResult<T> = std::sync::LockResult<T>;
+
+/// Panic payload used to unwind model threads when an iteration aborts
+/// (deadlock / step cap / panic elsewhere). Never observed by user code
+/// unless a kernel closure itself performs instrumented operations.
+struct AbortToken;
+
+/// Scheduling state of one model thread.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Ts {
+    /// Can be chosen by the scheduler.
+    Runnable,
+    /// Blocked acquiring model mutex `id`.
+    Mutex(usize),
+    /// Blocked waiting on model condvar `id`.
+    Cond(usize),
+    /// Blocked joining model thread `tid`.
+    Join(usize),
+    /// Exited (result stored in its join slot).
+    Finished,
+}
+
+/// Why an exploration stopped at a failing schedule.
+#[derive(Clone, Debug)]
+pub enum Failure {
+    /// A model thread panicked (message extracted from the payload).
+    Panic(String),
+    /// No thread was runnable while some were still alive; the string
+    /// lists every thread's blocked state.
+    Deadlock(String),
+    /// One schedule exceeded the per-schedule step cap (livelock guard).
+    StepCap,
+    /// The wall-clock watchdog fired — a checker or model bug left the
+    /// iteration stuck; reported instead of hanging the test harness.
+    Watchdog,
+}
+
+/// Outcome of [`Model::try_check`].
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Schedules executed (including the failing one, if any).
+    pub schedules: usize,
+    /// True when the schedule space was exhausted under the bounds.
+    pub complete: bool,
+    /// First failing schedule's diagnosis, if one was found.
+    pub failure: Option<Failure>,
+}
+
+/// Mutable scheduler state, guarded by the controller's one real mutex.
+struct Ctl {
+    states: Vec<Ts>,
+    names: Vec<String>,
+    /// Thread currently holding the token (`usize::MAX` = none; set on
+    /// completion or abort).
+    cur: usize,
+    /// Replay prefix: decision indices from a previous run.
+    prefix: Vec<usize>,
+    /// (chosen candidate index, candidate count) per decision point.
+    trace: Vec<(usize, usize)>,
+    /// Next decision index (cursor into `prefix` / `trace`).
+    step: usize,
+    preemptions: usize,
+    /// Locked flag per registered model mutex.
+    mutexes: Vec<bool>,
+    n_condvars: usize,
+    abort: bool,
+    failure: Option<Failure>,
+    /// OS handles of model-spawned threads, joined by the orchestrator.
+    real: Vec<real_thread::JoinHandle<()>>,
+    /// Model threads not yet finished.
+    live: usize,
+}
+
+/// One exploration iteration's scheduler: a single mutex + condvar pair
+/// implementing cooperative token passing over real OS threads.
+struct Controller {
+    ctl: StdMutex<Ctl>,
+    cv: StdCondvar,
+    preemption_bound: usize,
+    max_steps: usize,
+}
+
+thread_local! {
+    /// (controller, thread id) of the model context this OS thread runs
+    /// in, if any. Installed by `run_once` / `spawn_named`.
+    static CTX: RefCell<Option<(Arc<Controller>, usize)>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> (Arc<Controller>, usize) {
+    CTX.with(|c| c.borrow().clone())
+        .expect("model primitive used outside Model::check")
+}
+
+fn in_model() -> bool {
+    CTX.try_with(|c| c.borrow().is_some()).unwrap_or(false)
+}
+
+/// Silence the default panic-hook backtrace for panics raised on model
+/// threads: aborts and seeded-bug panics fire on most explored
+/// schedules and would flood stderr. Installed once per process;
+/// non-model threads keep the previous hook's behavior.
+fn install_quiet_hook() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !in_model() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn payload_msg(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Unwind out of a model thread after an abort. During an active panic
+/// a second panic would abort the process, so the caller falls through
+/// to a degraded, scheduler-free path instead (everything is unwinding
+/// by then; real mutexes still provide mutual exclusion).
+fn abort_exit() {
+    if !real_thread::panicking() {
+        panic_any(AbortToken);
+    }
+}
+
+impl Controller {
+    fn lock_ctl(&self) -> StdMutexGuard<'_, Ctl> {
+        self.ctl.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn fail(&self, ctl: &mut Ctl, f: Failure) {
+        ctl.abort = true;
+        if ctl.failure.is_none() {
+            ctl.failure = Some(f);
+        }
+        ctl.cur = usize::MAX;
+    }
+
+    /// Pick the next thread to run. Called with the token effectively
+    /// held by `ctl.cur` (which may have just blocked or finished).
+    /// Candidate order is deterministic — continue-current first, then
+    /// ascending ids — so a recorded decision index replays exactly.
+    fn pick_next(&self, ctl: &mut Ctl) {
+        let me = ctl.cur;
+        let me_runnable = me != usize::MAX && ctl.states[me] == Ts::Runnable;
+        let mut cands: Vec<usize> = Vec::new();
+        if me_runnable {
+            cands.push(me);
+        }
+        for (i, s) in ctl.states.iter().enumerate() {
+            if i != me && *s == Ts::Runnable {
+                cands.push(i);
+            }
+        }
+        if cands.is_empty() {
+            if ctl.live > 0 {
+                let desc = ctl
+                    .names
+                    .iter()
+                    .zip(ctl.states.iter())
+                    .map(|(n, s)| format!("{n}={s:?}"))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                self.fail(ctl, Failure::Deadlock(desc));
+            } else {
+                ctl.cur = usize::MAX;
+            }
+            return;
+        }
+        // CHESS-style preemption bounding: switching away from a still-
+        // runnable thread costs budget; once spent, it must continue.
+        let n = if me_runnable && ctl.preemptions >= self.preemption_bound {
+            1
+        } else {
+            cands.len()
+        };
+        let idx = if ctl.step < ctl.prefix.len() {
+            ctl.prefix[ctl.step].min(n - 1)
+        } else {
+            0
+        };
+        ctl.trace.push((idx, n));
+        ctl.step += 1;
+        if ctl.step > self.max_steps {
+            self.fail(ctl, Failure::StepCap);
+            return;
+        }
+        let chosen = cands[idx];
+        if me_runnable && chosen != me {
+            ctl.preemptions += 1;
+        }
+        ctl.cur = chosen;
+    }
+
+    /// The single yield/block primitive. Runs `mark` (which may flip
+    /// this thread to a blocked state and update shared model state)
+    /// atomically with the scheduling decision, then waits until this
+    /// thread is runnable and holds the token again. Returns `true` if
+    /// the iteration aborted while waiting.
+    fn block_on<F: FnOnce(&mut Ctl)>(&self, me: usize, mark: F) -> bool {
+        let mut ctl = self.lock_ctl();
+        if ctl.abort {
+            return true;
+        }
+        mark(&mut ctl);
+        self.pick_next(&mut ctl);
+        self.cv.notify_all();
+        while !ctl.abort && !(ctl.cur == me && ctl.states[me] == Ts::Runnable) {
+            ctl = self.cv.wait(ctl).unwrap_or_else(|e| e.into_inner());
+        }
+        ctl.abort
+    }
+
+    /// Wait for the first token grant (used by freshly spawned threads,
+    /// which must not make a scheduling decision of their own).
+    fn wait_for_token(&self, me: usize) -> bool {
+        let mut ctl = self.lock_ctl();
+        while !ctl.abort && !(ctl.cur == me && ctl.states[me] == Ts::Runnable) {
+            ctl = self.cv.wait(ctl).unwrap_or_else(|e| e.into_inner());
+        }
+        ctl.abort
+    }
+
+    /// Record a user panic (a real bug found on this schedule) and
+    /// abort the iteration.
+    fn fail_panic(&self, p: &(dyn Any + Send)) {
+        let msg = payload_msg(p);
+        let mut ctl = self.lock_ctl();
+        self.fail(&mut ctl, Failure::Panic(msg));
+        self.cv.notify_all();
+    }
+
+    /// Mark thread `tid` finished, wake its joiners, and pass the token
+    /// on if it held one.
+    fn finish(&self, tid: usize) {
+        let mut ctl = self.lock_ctl();
+        ctl.states[tid] = Ts::Finished;
+        ctl.live -= 1;
+        for s in ctl.states.iter_mut() {
+            if *s == Ts::Join(tid) {
+                *s = Ts::Runnable;
+            }
+        }
+        if !ctl.abort && ctl.cur == tid {
+            self.pick_next(&mut ctl);
+        }
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented primitives (API-compatible with the std::sync subset the
+// pool uses; swapped in for it by `crate::sync` under `--cfg loom`).
+// ---------------------------------------------------------------------------
+
+/// Model mutex: mutual exclusion is enforced by the scheduler (blocked
+/// threads are descheduled until unlock); the inner real mutex is never
+/// contended and only carries the data + happens-before.
+pub struct Mutex<T> {
+    ctrl: Arc<Controller>,
+    id: usize,
+    cell: StdMutex<T>,
+}
+
+/// Guard for [`Mutex`]. Dropping it releases the model lock and wakes
+/// blocked acquirers; the drop never panics and is not a yield point,
+/// so it is safe to run during unwinding.
+pub struct MutexGuard<'a, T> {
+    mx: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    /// New model mutex, registered with the current model iteration.
+    /// Panics outside [`Model::check`].
+    pub fn new(value: T) -> Self {
+        let (ctrl, _me) = ctx();
+        let id = {
+            let mut ctl = ctrl.lock_ctl();
+            ctl.mutexes.push(false);
+            ctl.mutexes.len() - 1
+        };
+        Mutex { ctrl, id, cell: StdMutex::new(value) }
+    }
+
+    /// Acquire. Blocking, scheduling-aware; always returns `Ok` (the
+    /// model mutex does not poison — `linalg::pool` recovers from
+    /// poisoning via `into_inner` anyway, so both modes behave alike).
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        Ok(self.acquire())
+    }
+
+    fn acquire(&self) -> MutexGuard<'_, T> {
+        let (ctrl, me) = ctx();
+        loop {
+            // Decision point before the acquire attempt.
+            if ctrl.block_on(me, |_| {}) {
+                abort_exit();
+                break; // degraded: fall through to the real lock
+            }
+            // Token held: no other thread can run between this check
+            // and the block below, so check-then-act is atomic.
+            let mut ctl = ctrl.lock_ctl();
+            if !ctl.mutexes[self.id] {
+                ctl.mutexes[self.id] = true;
+                drop(ctl);
+                break;
+            }
+            drop(ctl);
+            let aborted = ctrl.block_on(me, |ctl| {
+                if ctl.mutexes[self.id] {
+                    ctl.states[me] = Ts::Mutex(self.id);
+                }
+            });
+            if aborted {
+                abort_exit();
+                break;
+            }
+            // Woken by an unlock: retry (another thread may have barged
+            // in first — the DFS explores both winners).
+        }
+        let inner = self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        MutexGuard { mx: self, inner: Some(inner) }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds the lock")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds the lock")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the data lock first, then the model lock. No yields,
+        // no panics: this must be safe mid-unwind.
+        self.inner = None;
+        let mut ctl = self.mx.ctrl.lock_ctl();
+        ctl.mutexes[self.mx.id] = false;
+        let id = self.mx.id;
+        for s in ctl.states.iter_mut() {
+            if *s == Ts::Mutex(id) {
+                *s = Ts::Runnable;
+            }
+        }
+    }
+}
+
+/// Model condvar. `wait` atomically releases the mutex and deschedules;
+/// `notify_one` wakes all waiters (a legal spurious-wakeup
+/// over-approximation — see the module docs).
+pub struct Condvar {
+    id: usize,
+}
+
+impl Condvar {
+    /// New model condvar, registered with the current model iteration.
+    /// Panics outside [`Model::check`].
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        let (ctrl, _me) = ctx();
+        let mut ctl = ctrl.lock_ctl();
+        ctl.n_condvars += 1;
+        Condvar { id: ctl.n_condvars - 1 }
+    }
+
+    /// Release `guard`'s mutex, deschedule until a notify, reacquire.
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let (ctrl, me) = ctx();
+        let mx: &'a Mutex<T> = guard.mx;
+        {
+            // Manual release: drop the real guard, skip the model
+            // release in Drop (done under the scheduler lock below so
+            // release + deschedule are one atomic decision).
+            let mut g = guard;
+            g.inner = None;
+            std::mem::forget(g);
+        }
+        let aborted = ctrl.block_on(me, |ctl| {
+            ctl.mutexes[mx.id] = false;
+            let id = mx.id;
+            for s in ctl.states.iter_mut() {
+                if *s == Ts::Mutex(id) {
+                    *s = Ts::Runnable;
+                }
+            }
+            ctl.states[me] = Ts::Cond(self.id);
+        });
+        if aborted {
+            abort_exit();
+        }
+        Ok(mx.acquire())
+    }
+
+    /// Wake every thread waiting on this condvar.
+    pub fn notify_all(&self) {
+        let (ctrl, me) = ctx();
+        if ctrl.block_on(me, |ctl| {
+            for s in ctl.states.iter_mut() {
+                if *s == Ts::Cond(self.id) {
+                    *s = Ts::Runnable;
+                }
+            }
+        }) {
+            abort_exit();
+        }
+    }
+
+    /// Modeled as [`Condvar::notify_all`] (see module docs).
+    pub fn notify_one(&self) {
+        self.notify_all();
+    }
+}
+
+macro_rules! model_atomic {
+    ($name:ident, $std:ident, $prim:ty) => {
+        /// Instrumented atomic: every access is a yield point and runs
+        /// `SeqCst` regardless of the ordering argument (the checker
+        /// explores interleavings, not weak-memory reorderings).
+        pub struct $name {
+            cell: std::sync::atomic::$std,
+        }
+
+        impl $name {
+            /// New atomic with the given initial value.
+            pub fn new(v: $prim) -> Self {
+                $name { cell: std::sync::atomic::$std::new(v) }
+            }
+
+            /// Instrumented load (`_order` ignored; SeqCst).
+            pub fn load(&self, _order: Ordering) -> $prim {
+                let (ctrl, me) = ctx();
+                if ctrl.block_on(me, |_| {}) {
+                    abort_exit();
+                }
+                self.cell.load(Ordering::SeqCst)
+            }
+
+            /// Instrumented store (`_order` ignored; SeqCst).
+            pub fn store(&self, v: $prim, _order: Ordering) {
+                let (ctrl, me) = ctx();
+                if ctrl.block_on(me, |_| {}) {
+                    abort_exit();
+                }
+                self.cell.store(v, Ordering::SeqCst)
+            }
+
+            /// Instrumented fetch-add (`_order` ignored; SeqCst).
+            pub fn fetch_add(&self, v: $prim, _order: Ordering) -> $prim {
+                let (ctrl, me) = ctx();
+                if ctrl.block_on(me, |_| {}) {
+                    abort_exit();
+                }
+                self.cell.fetch_add(v, Ordering::SeqCst)
+            }
+        }
+    };
+}
+
+model_atomic!(AtomicUsize, AtomicUsize, usize);
+model_atomic!(AtomicU64, AtomicU64, u64);
+
+// ---------------------------------------------------------------------------
+// Model threads.
+// ---------------------------------------------------------------------------
+
+type ResultSlot<T> = Arc<StdMutex<Option<real_thread::Result<T>>>>;
+
+/// Handle for a model-spawned thread; `join` is scheduling-aware.
+pub struct JoinHandle<T> {
+    tid: usize,
+    slot: ResultSlot<T>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Deschedule until the target thread finishes, then return its
+    /// result (`Err` carries the panic payload, as with `std`).
+    pub fn join(self) -> real_thread::Result<T> {
+        let (ctrl, me) = ctx();
+        loop {
+            let aborted = ctrl.block_on(me, |ctl| {
+                if ctl.states[self.tid] != Ts::Finished {
+                    ctl.states[me] = Ts::Join(self.tid);
+                }
+            });
+            if aborted {
+                abort_exit();
+                // Degraded: the abort wakes every model thread, so the
+                // target's wrapper will fill the slot shortly; poll it.
+                loop {
+                    if let Some(r) = self.slot.lock().unwrap_or_else(|e| e.into_inner()).take() {
+                        return r;
+                    }
+                    real_thread::yield_now();
+                }
+            }
+            let done = ctrl.lock_ctl().states[self.tid] == Ts::Finished;
+            if done {
+                break;
+            }
+        }
+        self.slot
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .expect("finished model thread stored its result")
+    }
+}
+
+/// Spawn a named model thread. The OS thread is real; its execution is
+/// serialized by the controller like every other model thread. Panics
+/// outside [`Model::check`].
+#[allow(clippy::disallowed_methods)] // the one sanctioned real-spawn site
+pub fn spawn_named<F, T>(name: &str, f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (ctrl, _me) = ctx();
+    let tid = {
+        let mut ctl = ctrl.lock_ctl();
+        ctl.states.push(Ts::Runnable);
+        ctl.names.push(name.to_string());
+        ctl.live += 1;
+        ctl.states.len() - 1
+    };
+    let slot: ResultSlot<T> = Arc::new(StdMutex::new(None));
+    let slot2 = slot.clone();
+    let c2 = ctrl.clone();
+    let handle = real_thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || {
+            CTX.with(|c| *c.borrow_mut() = Some((c2.clone(), tid)));
+            let aborted = c2.wait_for_token(tid);
+            let result: real_thread::Result<T> = if aborted {
+                Err(Box::new(AbortToken))
+            } else {
+                catch_unwind(AssertUnwindSafe(f))
+            };
+            if let Err(p) = &result {
+                if p.downcast_ref::<AbortToken>().is_none() {
+                    c2.fail_panic(p.as_ref());
+                }
+            }
+            *slot2.lock().unwrap_or_else(|e| e.into_inner()) = Some(result);
+            c2.finish(tid);
+        })
+        .expect("spawn model thread");
+    ctrl.lock_ctl().real.push(handle);
+    JoinHandle { tid, slot }
+}
+
+// ---------------------------------------------------------------------------
+// The exploration driver.
+// ---------------------------------------------------------------------------
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Exploration bounds for one model. `Default` reads the
+/// `TTQ_LOOM_PREEMPTIONS` / `TTQ_LOOM_MAX_SCHEDULES` /
+/// `TTQ_LOOM_MAX_STEPS` environment overrides.
+#[derive(Clone, Debug)]
+pub struct Model {
+    /// CHESS-style preemption budget per schedule (2 finds the vast
+    /// majority of real concurrency bugs while keeping the space small).
+    pub preemptions: usize,
+    /// Cap on explored schedules; hitting it yields `complete: false`.
+    pub max_schedules: usize,
+    /// Per-schedule decision cap (livelock guard).
+    pub max_steps: usize,
+}
+
+impl Default for Model {
+    fn default() -> Self {
+        Model {
+            preemptions: env_usize("TTQ_LOOM_PREEMPTIONS", 2),
+            max_schedules: env_usize("TTQ_LOOM_MAX_SCHEDULES", 20_000),
+            max_steps: env_usize("TTQ_LOOM_MAX_STEPS", 20_000),
+        }
+    }
+}
+
+impl Model {
+    /// Explore `f` under every schedule within the bounds; panic with
+    /// the diagnosis if any schedule fails. The loom-style entry point.
+    pub fn check<F: Fn() + Send + Sync>(&self, f: F) {
+        let report = self.try_check(f);
+        if let Some(fail) = &report.failure {
+            panic!("model failed after {} schedule(s): {:?}", report.schedules, fail);
+        }
+    }
+
+    /// Like [`Model::check`] but returns the [`Report`] instead of
+    /// panicking — the self-tests use this to assert that seeded bugs
+    /// ARE found.
+    pub fn try_check<F: Fn() + Send + Sync>(&self, f: F) -> Report {
+        install_quiet_hook();
+        let mut prefix: Vec<usize> = Vec::new();
+        let mut schedules = 0usize;
+        loop {
+            schedules += 1;
+            let (trace, failure) = self.run_once(&f, &prefix);
+            if failure.is_some() {
+                return Report { schedules, complete: false, failure };
+            }
+            match next_prefix(&trace) {
+                Some(p) => prefix = p,
+                None => return Report { schedules, complete: true, failure: None },
+            }
+            if schedules >= self.max_schedules {
+                return Report { schedules, complete: false, failure: None };
+            }
+        }
+    }
+
+    /// Run one schedule (replaying `prefix`, then first-choice greedy).
+    #[allow(clippy::disallowed_methods)] // orchestrator's sanctioned scope
+    fn run_once<F: Fn() + Send + Sync>(
+        &self,
+        f: &F,
+        prefix: &[usize],
+    ) -> (Vec<(usize, usize)>, Option<Failure>) {
+        let ctrl = Arc::new(Controller {
+            ctl: StdMutex::new(Ctl {
+                states: vec![Ts::Runnable],
+                names: vec!["main".to_string()],
+                cur: 0,
+                prefix: prefix.to_vec(),
+                trace: Vec::new(),
+                step: 0,
+                preemptions: 0,
+                mutexes: Vec::new(),
+                n_condvars: 0,
+                abort: false,
+                failure: None,
+                real: Vec::new(),
+                live: 1,
+            }),
+            cv: StdCondvar::new(),
+            preemption_bound: self.preemptions,
+            max_steps: self.max_steps,
+        });
+        let watchdog = Duration::from_secs(env_usize("TTQ_LOOM_WATCHDOG_SECS", 60) as u64);
+        real_thread::scope(|s| {
+            let c2 = ctrl.clone();
+            s.spawn(move || {
+                CTX.with(|c| *c.borrow_mut() = Some((c2.clone(), 0)));
+                // Thread 0 starts holding the token: run f directly.
+                let result = catch_unwind(AssertUnwindSafe(f));
+                if let Err(p) = &result {
+                    if p.downcast_ref::<AbortToken>().is_none() {
+                        c2.fail_panic(p.as_ref());
+                    }
+                }
+                c2.finish(0);
+                CTX.with(|c| *c.borrow_mut() = None);
+            });
+            // Orchestrate: wait for every model thread to finish, with
+            // a wall-clock watchdog so checker bugs fail instead of
+            // hanging the harness; then reap the real OS threads.
+            let deadline = Instant::now() + watchdog;
+            let mut ctl = ctrl.lock_ctl();
+            while ctl.live > 0 {
+                let (g, timeout) = ctrl
+                    .cv
+                    .wait_timeout(ctl, Duration::from_millis(50))
+                    .unwrap_or_else(|e| e.into_inner());
+                ctl = g;
+                if timeout.timed_out() && Instant::now() >= deadline && !ctl.abort {
+                    ctrl.fail(&mut ctl, Failure::Watchdog);
+                    ctrl.cv.notify_all();
+                }
+            }
+            let handles = std::mem::take(&mut ctl.real);
+            drop(ctl);
+            for h in handles {
+                let _ = h.join();
+            }
+        });
+        let ctl = ctrl.lock_ctl();
+        (ctl.trace.clone(), ctl.failure.clone())
+    }
+}
+
+/// Depth-first successor of a completed schedule: flip the deepest
+/// decision that still has an untried alternative.
+fn next_prefix(trace: &[(usize, usize)]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        let (chosen, n) = trace[i];
+        if chosen + 1 < n {
+            let mut p: Vec<usize> = trace[..i].iter().map(|t| t.0).collect();
+            p.push(chosen + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Convenience entry point mirroring `loom::model`.
+pub fn model<F: Fn() + Send + Sync>(f: F) {
+    Model::default().check(f);
+}
+
+// The self-test suite seeds known concurrency bugs and asserts the
+// checker FINDS them (and that correct protocols explore to
+// completion). This is what makes the loom models trustworthy: a
+// checker that cannot find a planted race would pass them vacuously.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Model {
+        Model { preemptions: 2, max_schedules: 5_000, max_steps: 5_000 }
+    }
+
+    #[test]
+    fn trivial_model_explores_one_schedule() {
+        let r = small().try_check(|| {});
+        assert!(r.failure.is_none());
+        assert!(r.complete);
+        assert_eq!(r.schedules, 1);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns many short-lived threads; slow under miri")]
+    fn finds_non_atomic_increment_race() {
+        let r = small().try_check(|| {
+            let a = Arc::new(AtomicUsize::new(0));
+            let mk = |a: Arc<AtomicUsize>| {
+                move || {
+                    // Seeded bug: load/store instead of fetch_add.
+                    let v = a.load(Ordering::SeqCst);
+                    a.store(v + 1, Ordering::SeqCst);
+                }
+            };
+            let t1 = spawn_named("inc-1", mk(a.clone()));
+            let t2 = spawn_named("inc-2", mk(a.clone()));
+            t1.join().expect("inc-1");
+            t2.join().expect("inc-2");
+            assert_eq!(a.load(Ordering::SeqCst), 2, "lost update");
+        });
+        match r.failure {
+            Some(Failure::Panic(msg)) => {
+                assert!(msg.contains("lost update"), "unexpected diagnosis: {msg}")
+            }
+            other => panic!("checker missed the seeded race: {other:?}"),
+        }
+        assert!(r.schedules > 1, "race needs schedule exploration to surface");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns many short-lived threads; slow under miri")]
+    fn finds_abba_deadlock() {
+        let r = small().try_check(|| {
+            let locks = Arc::new((Mutex::new(()), Mutex::new(())));
+            let l1 = locks.clone();
+            let a = spawn_named("abba-a", move || {
+                let _g1 = l1.0.lock();
+                let _g2 = l1.1.lock();
+            });
+            let l2 = locks.clone();
+            let b = spawn_named("abba-b", move || {
+                let _g2 = l2.1.lock();
+                let _g1 = l2.0.lock();
+            });
+            let _ = a.join();
+            let _ = b.join();
+        });
+        match r.failure {
+            Some(Failure::Deadlock(desc)) => {
+                assert!(desc.contains("abba-a"), "deadlock report names threads: {desc}")
+            }
+            other => panic!("checker missed the ABBA deadlock: {other:?}"),
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns many short-lived threads; slow under miri")]
+    fn finds_lost_wakeup() {
+        let r = small().try_check(|| {
+            let flag = Arc::new(AtomicUsize::new(0));
+            let pair = Arc::new((Mutex::new(()), Condvar::new()));
+            let (f2, p2) = (flag.clone(), pair.clone());
+            let waiter = spawn_named("waiter", move || {
+                // Seeded bug: the flag check is OUTSIDE the mutex, so
+                // the notify can fire between the check and the wait.
+                if f2.load(Ordering::SeqCst) == 0 {
+                    let g = p2.0.lock().unwrap_or_else(|e| e.into_inner());
+                    let _g = p2.1.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+            });
+            flag.store(1, Ordering::SeqCst);
+            pair.1.notify_all();
+            let _ = waiter.join();
+        });
+        match r.failure {
+            Some(Failure::Deadlock(desc)) => {
+                assert!(desc.contains("waiter"), "deadlock report names waiter: {desc}")
+            }
+            other => panic!("checker missed the lost wakeup: {other:?}"),
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns many short-lived threads; slow under miri")]
+    fn correct_handshake_explores_to_completion() {
+        let r = small().try_check(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let waiter = spawn_named("ok-waiter", move || {
+                let mut g = p2.0.lock().unwrap_or_else(|e| e.into_inner());
+                while !*g {
+                    g = p2.1.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+            });
+            {
+                let mut g = pair.0.lock().unwrap_or_else(|e| e.into_inner());
+                *g = true;
+            }
+            pair.1.notify_all();
+            waiter.join().expect("waiter completes");
+        });
+        assert!(r.failure.is_none(), "correct handshake must pass: {:?}", r.failure);
+        assert!(r.complete, "schedule space should be exhausted");
+        assert!(r.schedules > 1, "handshake has real interleavings");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns many short-lived threads; slow under miri")]
+    fn mutex_serializes_critical_sections() {
+        let r = small().try_check(|| {
+            let m = Arc::new(Mutex::new(0usize));
+            let spin = Arc::new(AtomicUsize::new(0));
+            let mk = |m: Arc<Mutex<usize>>, spin: Arc<AtomicUsize>| {
+                move || {
+                    let mut g = m.lock().unwrap_or_else(|e| e.into_inner());
+                    let v = *g;
+                    // Yield point mid-critical-section: the lock must
+                    // still keep the read-modify-write atomic.
+                    spin.fetch_add(1, Ordering::SeqCst);
+                    *g = v + 1;
+                }
+            };
+            let t1 = spawn_named("cs-1", mk(m.clone(), spin.clone()));
+            let t2 = spawn_named("cs-2", mk(m.clone(), spin.clone()));
+            t1.join().expect("cs-1");
+            t2.join().expect("cs-2");
+            assert_eq!(*m.lock().unwrap_or_else(|e| e.into_inner()), 2);
+        });
+        assert!(r.failure.is_none(), "mutex must serialize: {:?}", r.failure);
+        assert!(r.complete);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns many short-lived threads; slow under miri")]
+    fn join_returns_thread_value() {
+        let r = small().try_check(|| {
+            let t = spawn_named("value", || 41usize + 1);
+            assert_eq!(t.join().expect("no panic"), 42);
+        });
+        assert!(r.failure.is_none());
+        assert!(r.complete);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "spawns many short-lived threads; slow under miri")]
+    #[should_panic(expected = "model failed")]
+    fn check_panics_on_seeded_failure() {
+        small().check(|| {
+            let a = Arc::new(AtomicUsize::new(0));
+            let a2 = a.clone();
+            let t = spawn_named("bug", move || {
+                let v = a2.load(Ordering::SeqCst);
+                a2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = a.load(Ordering::SeqCst);
+            a.store(v + 1, Ordering::SeqCst);
+            t.join().expect("bug thread");
+            assert_eq!(a.load(Ordering::SeqCst), 2);
+        });
+    }
+}

@@ -10,6 +10,8 @@
 //! * [`propcheck`] — property-based testing: seeded case generation
 //!   with failure-case reporting and input shrinking.
 
+#![forbid(unsafe_code)]
+
 pub mod benchkit;
 pub mod cli;
 pub mod json;

@@ -1,0 +1,177 @@
+//! Exhaustive interleaving models of the `WorkerPool` dispatch
+//! protocol, run on the in-tree model checker (`ttq_serve::sync::model`)
+//! with the pool compiled against instrumented primitives.
+//!
+//! This target only contains tests under `--cfg loom`:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_pool
+//! ```
+//!
+//! Each model states the protocol invariant it checks; the matching
+//! `SAFETY:`/ordering comments in `rust/src/linalg/pool.rs` cite these
+//! names. Kernels deliberately perform only *plain* memory writes (no
+//! instrumented ops) so an exploration abort can never be confused with
+//! a kernel panic by the pool's `catch_unwind`.
+#![cfg(loom)]
+
+use std::panic::AssertUnwindSafe;
+use std::sync::Arc;
+
+use ttq_serve::linalg::pool::{WorkerPool, MT_FLOP_FLOOR};
+use ttq_serve::sync::model::Model;
+use ttq_serve::sync::thread::spawn_named;
+
+const FORCE: usize = MT_FLOP_FLOOR;
+
+fn model() -> Model {
+    // Defaults (preemption bound 2, 20k schedules) unless overridden
+    // via TTQ_LOOM_* environment variables.
+    Model::default()
+}
+
+/// Invariant: every chunk index is claimed by exactly one lane, and
+/// every row is written exactly once — on every bounded interleaving
+/// of worker and dispatcher. (Cited by the `Ordering::Relaxed` comment
+/// on the chunk-claim `fetch_add` and the `SendPtr` SAFETY comment.)
+#[test]
+fn chunks_claimed_exactly_once() {
+    let report = model().try_check(|| {
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0u32; 3];
+        pool.run_rows(&mut data, 3, 1, FORCE, |_r0, w| {
+            for v in w.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert_eq!(data, vec![1, 1, 1], "row visited other than exactly once");
+    });
+    assert!(report.failure.is_none(), "model failed: {:?}", report.failure);
+    assert!(report.schedules > 1, "pool dispatch must have interleavings");
+}
+
+/// Invariant: the `done` signal cannot be missed across *consecutive*
+/// dispatches — the epoch handshake never lets the dispatcher sleep
+/// through the last worker check-in, and a stale worker can never
+/// double-serve an old job. A missed signal deadlocks the dispatcher,
+/// which the checker reports on the schedule that loses it. (Cited by
+/// the `'static` transmute SAFETY comment.)
+#[test]
+fn done_signal_not_missed() {
+    let report = model().try_check(|| {
+        let pool = WorkerPool::new(2);
+        let mut a = vec![0u32; 2];
+        pool.run_rows(&mut a, 2, 1, FORCE, |_r0, w| {
+            for v in w.iter_mut() {
+                *v += 1;
+            }
+        });
+        let mut b = vec![0u32; 2];
+        pool.run_rows(&mut b, 2, 1, FORCE, |_r0, w| {
+            for v in w.iter_mut() {
+                *v += 10;
+            }
+        });
+        assert_eq!(a, vec![1, 1], "first dispatch corrupted");
+        assert_eq!(b, vec![10, 10], "second dispatch corrupted");
+    });
+    assert!(report.failure.is_none(), "model failed: {:?}", report.failure);
+}
+
+/// Invariant: a panicking kernel chunk propagates its payload to the
+/// dispatching thread on every interleaving, remaining chunks drain,
+/// and the pool stays serviceable afterwards (gate released, workers
+/// alive, state cleared).
+#[test]
+fn panic_payload_propagates() {
+    let report = model().try_check(|| {
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0u32; 2];
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_rows(&mut data, 2, 1, FORCE, |r0, _w| {
+                if r0 == 0 {
+                    panic!("chunk 0 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "kernel panic must reach the dispatcher");
+        let mut after = vec![0u32; 2];
+        pool.run_rows(&mut after, 2, 1, FORCE, |_r0, w| {
+            for v in w.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert_eq!(after, vec![1, 1], "pool bricked after kernel panic");
+    });
+    assert!(report.failure.is_none(), "model failed: {:?}", report.failure);
+}
+
+/// Invariant: concurrent dispatchers serialize on `dispatch_gate` —
+/// the single-occupancy job slot is never overwritten mid-dispatch and
+/// both callers complete with correct output on every interleaving.
+#[test]
+fn concurrent_dispatchers_serialize() {
+    let report = model().try_check(|| {
+        let pool = Arc::new(WorkerPool::new(2));
+        let p2 = pool.clone();
+        let other = spawn_named("dispatcher-2", move || {
+            let mut b = vec![0u32; 2];
+            p2.run_rows(&mut b, 2, 1, FORCE, |_r0, w| {
+                for v in w.iter_mut() {
+                    *v += 10;
+                }
+            });
+            b
+        });
+        let mut a = vec![0u32; 2];
+        pool.run_rows(&mut a, 2, 1, FORCE, |_r0, w| {
+            for v in w.iter_mut() {
+                *v += 1;
+            }
+        });
+        let b = other.join().expect("second dispatcher completes");
+        assert_eq!(a, vec![1, 1], "first dispatcher corrupted");
+        assert_eq!(b, vec![10, 10], "second dispatcher corrupted");
+    });
+    assert!(report.failure.is_none(), "model failed: {:?}", report.failure);
+}
+
+/// Invariant: shutdown is sound against every startup/park
+/// interleaving — dropping the pool (with or without a prior dispatch)
+/// joins all workers without deadlock, including the schedule where a
+/// worker has not yet parked when `shutdown` is raised.
+#[test]
+fn drop_joins_workers() {
+    let report = model().try_check(|| {
+        // no dispatch at all: worker may still be before its first park
+        let pool = WorkerPool::new(2);
+        drop(pool);
+    });
+    assert!(report.failure.is_none(), "model failed: {:?}", report.failure);
+}
+
+/// Invariant (satellite: `kernel_us` accounting races are benign): a
+/// concurrent reader of the metrics counter never deadlocks the
+/// protocol and observes a monotone value; after the dispatch joins,
+/// the dispatcher's contribution is visible to the owner.
+#[test]
+fn kernel_us_accounting_benign() {
+    let report = model().try_check(|| {
+        let pool = Arc::new(WorkerPool::new(2));
+        let p2 = pool.clone();
+        let reader = spawn_named("metrics-reader", move || {
+            let a = p2.kernel_us();
+            let b = p2.kernel_us();
+            assert!(b >= a, "kernel_us went backwards");
+        });
+        let mut data = vec![0u32; 2];
+        pool.run_rows(&mut data, 2, 1, FORCE, |_r0, w| {
+            for v in w.iter_mut() {
+                *v += 1;
+            }
+        });
+        reader.join().expect("reader completes");
+        assert_eq!(data, vec![1, 1]);
+    });
+    assert!(report.failure.is_none(), "model failed: {:?}", report.failure);
+}

@@ -1,0 +1,589 @@
+//! Repo-specific invariant lints for the `ttq-serve` tree.
+//!
+//! `cargo run -p repo-lint` walks `rust/src` and enforces the
+//! concurrency contracts that `rustc` cannot express (see
+//! `docs/CONCURRENCY.md` for the full rationale):
+//!
+//! * **R1** — no direct thread spawning (`thread::spawn`,
+//!   `thread::scope`, `Builder::new`) outside the sync shim. Every
+//!   thread must come from `crate::sync::thread::spawn_named` so the
+//!   loom build can intercept it. The single retained scoped-spawn
+//!   baseline in `bench/throughput.rs` is allowlisted.
+//! * **R2** — no `unsafe` outside `linalg/pool.rs` and `sync/`
+//!   (mirrored by `#![forbid(unsafe_code)]` in every other module; the
+//!   lint catches removal of the attribute).
+//! * **R3** — no `.unwrap()` / `.expect()` on the serving path
+//!   (`coordinator`, `backend`, `kvcache`, `specdec`): these modules
+//!   degrade via error enums, never by unwinding mid-batch. Exact
+//!   identifier matching, so `unwrap_or` / `unwrap_or_else` are fine.
+//! * **R4** — no direct `std::sync` in the shimmed modules
+//!   (`linalg/pool.rs`, `backend/native.rs`): they must import from
+//!   `crate::sync` so `--cfg loom` swaps in the model primitives.
+//! * **R5** — no raw `Instant::now` in `linalg/` (except the pool
+//!   itself) or `backend/native.rs`: kernel timing belongs to the
+//!   pool's single `kernel_us` counter, not to ad-hoc probes inside
+//!   kernels where they would skew the accounting the
+//!   `kernel_us_accounting_benign` model reasons about.
+//!
+//! The scanner is a hand-rolled lexer (this tree is dependency-free by
+//! policy, so no `syn`): comments, string/char literals, raw strings
+//! and lifetimes are stripped before matching, identifiers are matched
+//! exactly, and `#[cfg(test)]` items are exempt from R1/R3/R5.
+
+use std::fmt;
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line of the offending token.
+    pub line: usize,
+    /// Stable rule id, e.g. `"R1"`.
+    pub rule: &'static str,
+    /// Human-readable explanation with the sanctioned alternative.
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// lexer
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+}
+
+#[derive(Debug, Clone)]
+struct Token {
+    line: usize,
+    tok: Tok,
+    in_test: bool,
+}
+
+fn skip_string(b: &[char], mut i: usize, line: &mut usize) -> usize {
+    debug_assert_eq!(b[i], '"');
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => {
+                if i + 1 < b.len() && b[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+fn skip_char_lit(b: &[char], mut i: usize, line: &mut usize) -> usize {
+    debug_assert_eq!(b[i], '\'');
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\'' => return i + 1,
+            '\n' => {
+                // unterminated; bail so the lexer resynchronizes
+                *line += 1;
+                return i + 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// `i` points at the first `#` or `"` after an `r`/`b`/`br` prefix.
+fn skip_raw_string(b: &[char], mut i: usize, line: &mut usize) -> usize {
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i >= b.len() || b[i] != '"' {
+        return i; // not actually a raw string; resynchronize
+    }
+    i += 1;
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == '"' {
+            let mut k = 0;
+            while k < hashes && i + 1 + k < b.len() && b[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+fn lex(src: &str) -> Vec<(usize, Tok)> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            i = skip_string(&b, i, &mut line);
+        } else if c == '\'' {
+            let is_lifetime = i + 2 < b.len()
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && b[i + 2] != '\'';
+            if is_lifetime {
+                i += 1;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                i = skip_char_lit(&b, i, &mut line);
+            }
+        } else if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let id: String = b[start..i].iter().collect();
+            let raw_prefix = matches!(id.as_str(), "r" | "b" | "br")
+                && i < b.len()
+                && (b[i] == '"' || b[i] == '#');
+            if raw_prefix {
+                i = skip_raw_string(&b, i, &mut line);
+            } else {
+                out.push((line, Tok::Ident(id)));
+            }
+        } else if c.is_ascii_digit() {
+            // numeric literal; `.` only continues it when a digit
+            // follows (so `tuple.0.unwrap()` still yields `.unwrap`)
+            while i < b.len() {
+                let d = b[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' && i + 1 < b.len() && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+        } else if c.is_whitespace() {
+            i += 1;
+        } else {
+            out.push((line, Tok::Punct(c)));
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Flag tokens inside `#[cfg(test)]`-gated items.
+fn mark_test_regions(raw: Vec<(usize, Tok)>) -> Vec<Token> {
+    let mut toks: Vec<Token> = raw
+        .into_iter()
+        .map(|(line, tok)| Token {
+            line,
+            tok,
+            in_test: false,
+        })
+        .collect();
+    let is = |t: &Token, s: &str| matches!(&t.tok, Tok::Ident(id) if id == s);
+    let p = |t: &Token, c: char| t.tok == Tok::Punct(c);
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(p(&toks[i], '#') && i + 1 < toks.len() && p(&toks[i + 1], '[')) {
+            i += 1;
+            continue;
+        }
+        // collect the attribute body up to its matching `]`
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut has_cfg = false;
+        let mut has_test = false;
+        let mut has_not = false;
+        while j < toks.len() && depth > 0 {
+            if p(&toks[j], '[') {
+                depth += 1;
+            } else if p(&toks[j], ']') {
+                depth -= 1;
+            } else if is(&toks[j], "cfg") {
+                has_cfg = true;
+            } else if is(&toks[j], "test") {
+                has_test = true;
+            } else if is(&toks[j], "not") {
+                has_not = true;
+            }
+            j += 1;
+        }
+        if !(has_cfg && has_test && !has_not) {
+            i = j;
+            continue;
+        }
+        // the attribute gates the next item: skip trailing attributes,
+        // then either a `{ .. }` body or a `;`-terminated item
+        let mut k = j;
+        while k + 1 < toks.len() && p(&toks[k], '#') && p(&toks[k + 1], '[') {
+            // another attribute on the same item
+            let mut d = 1usize;
+            k += 2;
+            while k < toks.len() && d > 0 {
+                if p(&toks[k], '[') {
+                    d += 1;
+                } else if p(&toks[k], ']') {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        let mut brace = 0usize;
+        let mut entered = false;
+        while k < toks.len() {
+            if p(&toks[k], '{') {
+                brace += 1;
+                entered = true;
+            } else if p(&toks[k], '}') {
+                brace = brace.saturating_sub(1);
+                if entered && brace == 0 {
+                    k += 1;
+                    break;
+                }
+            } else if p(&toks[k], ';') && !entered {
+                k += 1;
+                break;
+            }
+            k += 1;
+        }
+        for t in &mut toks[j..k.min(toks.len())] {
+            t.in_test = true;
+        }
+        i = k.max(j);
+    }
+    toks
+}
+
+// ---------------------------------------------------------------------
+// pattern matching
+// ---------------------------------------------------------------------
+
+/// Pattern element: `"::"`, `"."`, or an exact identifier.
+fn pat_toks(pat: &[&str]) -> Vec<Tok> {
+    let mut out = Vec::new();
+    for p in pat {
+        match *p {
+            "::" => {
+                out.push(Tok::Punct(':'));
+                out.push(Tok::Punct(':'));
+            }
+            "." => out.push(Tok::Punct('.')),
+            id => out.push(Tok::Ident(id.to_string())),
+        }
+    }
+    out
+}
+
+fn find_matches(toks: &[Token], pat: &[&str], skip_test: bool) -> Vec<usize> {
+    let pt = pat_toks(pat);
+    let mut hits = Vec::new();
+    if pt.is_empty() || toks.len() < pt.len() {
+        return hits;
+    }
+    for i in 0..=(toks.len() - pt.len()) {
+        if skip_test && toks[i].in_test {
+            continue;
+        }
+        if (0..pt.len()).all(|k| toks[i + k].tok == pt[k]) {
+            hits.push(i);
+        }
+    }
+    hits
+}
+
+// ---------------------------------------------------------------------
+// rules
+// ---------------------------------------------------------------------
+
+fn starts_with_any(path: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| path.starts_with(p))
+}
+
+/// Scan one file's source text against every applicable rule.
+///
+/// `path` is the repo-relative path with forward slashes (it selects
+/// which rules apply); `src` is the file contents.
+pub fn scan_str(path: &str, src: &str) -> Vec<Violation> {
+    let toks = mark_test_regions(lex(src));
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        out.push(Violation {
+            file: path.to_string(),
+            line,
+            rule,
+            msg,
+        });
+    };
+
+    // R1: thread creation only via the sync shim
+    let r1_exempt = starts_with_any(
+        path,
+        &["rust/src/sync/", "rust/src/bench/throughput.rs", "rust/tests/"],
+    );
+    if !r1_exempt {
+        for pat in [
+            &["thread", "::", "spawn"][..],
+            &["thread", "::", "scope"][..],
+            &["Builder", "::", "new"][..],
+        ] {
+            for i in find_matches(&toks, pat, true) {
+                push(
+                    toks[i].line,
+                    "R1",
+                    format!(
+                        "direct thread creation (`{}`): use \
+                         `crate::sync::thread::spawn_named` so the loom \
+                         build can model it",
+                        pat.join("")
+                    ),
+                );
+            }
+        }
+    }
+
+    // R2: `unsafe` confined to the pool and the sync shim
+    let r2_exempt = starts_with_any(path, &["rust/src/linalg/pool.rs", "rust/src/sync/"]);
+    if !r2_exempt {
+        for i in find_matches(&toks, &["unsafe"], false) {
+            push(
+                toks[i].line,
+                "R2",
+                "`unsafe` outside linalg/pool.rs and sync/: keep \
+                 `#![forbid(unsafe_code)]` on this module and move the \
+                 operation behind a checked pool/shim API"
+                    .to_string(),
+            );
+        }
+    }
+
+    // R3: serving path degrades via error enums, never unwinds
+    let r3_applies = starts_with_any(
+        path,
+        &[
+            "rust/src/coordinator/",
+            "rust/src/backend/",
+            "rust/src/kvcache/",
+            "rust/src/specdec/",
+        ],
+    );
+    if r3_applies {
+        for pat in [&[".", "unwrap"][..], &[".", "expect"][..]] {
+            for i in find_matches(&toks, pat, true) {
+                push(
+                    toks[i].line,
+                    "R3",
+                    format!(
+                        "`{}` on the serving path: return \
+                         `ServeError`/`SpecError` (or recover with \
+                         `unwrap_or_else(PoisonError::into_inner)`) \
+                         instead of unwinding mid-batch",
+                        pat.join("")
+                    ),
+                );
+            }
+        }
+    }
+
+    // R4: shimmed modules must not reach std::sync directly
+    let r4_applies = starts_with_any(
+        path,
+        &["rust/src/linalg/pool.rs", "rust/src/backend/native.rs"],
+    );
+    if r4_applies {
+        for i in find_matches(&toks, &["std", "::", "sync"], false) {
+            push(
+                toks[i].line,
+                "R4",
+                "`std::sync` in a loom-shimmed module: import from \
+                 `crate::sync` so `--cfg loom` swaps in the model \
+                 primitives"
+                    .to_string(),
+            );
+        }
+    }
+
+    // R5: kernel timing belongs to the pool's kernel_us counter
+    let r5_applies = (starts_with_any(path, &["rust/src/linalg/"])
+        && path != "rust/src/linalg/pool.rs")
+        || path == "rust/src/backend/native.rs";
+    if r5_applies {
+        for i in find_matches(&toks, &["Instant", "::", "now"], true) {
+            push(
+                toks[i].line,
+                "R5",
+                "raw `Instant::now` inside kernel code: timing belongs \
+                 to the pool's `kernel_us` counter (WorkerPool::run_rows \
+                 already accounts dispatch time)"
+                    .to_string(),
+            );
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(path: &str, src: &str) -> Vec<&'static str> {
+        scan_str(path, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn r1_fires_on_direct_spawn() {
+        let bad = "fn f() { std::thread::spawn(|| {}); }";
+        assert_eq!(rules("rust/src/kvcache/mod.rs", bad), vec!["R1"]);
+        let bad_scope = "fn f() { std::thread::scope(|s| {}); }";
+        assert_eq!(rules("rust/src/quant/mod.rs", bad_scope), vec!["R1"]);
+    }
+
+    #[test]
+    fn r1_allows_shim_and_baseline() {
+        let shim = "fn f() { std::thread::Builder::new(); }";
+        assert!(rules("rust/src/sync/mod.rs", shim).is_empty());
+        let bench = "fn f() { std::thread::scope(|s| {}); }";
+        assert!(rules("rust/src/bench/throughput.rs", bench).is_empty());
+        let named = "fn f() { crate::sync::thread::spawn_named(\"x\", || {}); }";
+        assert!(rules("rust/src/quant/mod.rs", named).is_empty());
+    }
+
+    #[test]
+    fn r2_fires_on_unsafe_outside_pool() {
+        let bad = "fn f() { unsafe { core::hint::unreachable_unchecked() } }";
+        assert_eq!(rules("rust/src/quant/mod.rs", bad), vec!["R2"]);
+        assert!(rules("rust/src/linalg/pool.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn r2_ignores_forbid_attribute_and_comments() {
+        let good = "#![forbid(unsafe_code)]\n// unsafe in a comment\nfn f() {}";
+        assert!(rules("rust/src/quant/mod.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r3_fires_on_serving_path_unwrap() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(rules("rust/src/coordinator/server.rs", bad), vec!["R3"]);
+        let bad2 = "fn f(x: Option<u32>) -> u32 { x.expect(\"boom\") }";
+        assert_eq!(rules("rust/src/specdec/mod.rs", bad2), vec!["R3"]);
+    }
+
+    #[test]
+    fn r3_exact_idents_and_test_mods_are_exempt() {
+        let fine = "fn f(x: Option<u32>) -> u32 { x.unwrap_or_else(|| 0) }";
+        assert!(rules("rust/src/backend/native.rs", fine).is_empty());
+        let test_mod = "#[cfg(test)]\nmod tests {\n fn g(x: Option<u32>) -> u32 { x.unwrap() }\n}";
+        assert!(rules("rust/src/kvcache/mod.rs", test_mod).is_empty());
+        let outside = "fn h(x: Option<u32>) -> u32 { x.unwrap() }\n#[cfg(test)]\nmod tests {}";
+        assert_eq!(rules("rust/src/kvcache/mod.rs", outside), vec!["R3"]);
+    }
+
+    #[test]
+    fn r3_does_not_apply_off_serving_path() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert!(rules("rust/src/quant/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn r4_fires_on_std_sync_in_shimmed_modules() {
+        let bad = "use std::sync::Mutex;";
+        assert_eq!(rules("rust/src/linalg/pool.rs", bad), vec!["R4"]);
+        assert_eq!(rules("rust/src/backend/native.rs", bad), vec!["R4"]);
+        assert!(rules("rust/src/runtime/mod.rs", bad).is_empty());
+        let good = "use crate::sync::Mutex;";
+        assert!(rules("rust/src/linalg/pool.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r5_fires_on_instant_in_kernels_but_not_pool() {
+        let bad = "fn f() { let t = std::time::Instant::now(); }";
+        assert_eq!(rules("rust/src/linalg/svd.rs", bad), vec!["R5"]);
+        assert_eq!(rules("rust/src/backend/native.rs", bad), vec!["R5"]);
+        assert!(rules("rust/src/linalg/pool.rs", bad).is_empty());
+        assert!(rules("rust/src/bench/throughput.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn strings_and_raw_strings_never_match() {
+        let good = r###"fn f() {
+            let s = "std::thread::spawn unsafe .unwrap()";
+            let r = r#"Instant::now"#;
+        }"###;
+        assert!(rules("rust/src/coordinator/server.rs", good).is_empty());
+        assert!(rules("rust/src/linalg/svd.rs", good).is_empty());
+    }
+
+    #[test]
+    fn lifetimes_do_not_derail_the_lexer() {
+        let good = "fn f<'a>(x: &'a str) -> &'a str { x }\nfn g() -> char { 'x' }";
+        assert!(rules("rust/src/coordinator/server.rs", good).is_empty());
+    }
+
+    #[test]
+    fn tuple_field_access_still_matches_unwrap() {
+        let bad = "fn f(x: (Option<u32>,)) -> u32 { x.0.unwrap() }";
+        assert_eq!(rules("rust/src/specdec/mod.rs", bad), vec!["R3"]);
+    }
+
+    #[test]
+    fn violation_display_is_greppable() {
+        let v = scan_str(
+            "rust/src/coordinator/server.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }",
+        );
+        let s = v[0].to_string();
+        assert!(s.contains("rust/src/coordinator/server.rs:1: [R3]"), "{s}");
+    }
+}

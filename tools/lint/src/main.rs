@@ -1,0 +1,70 @@
+//! `cargo run -p repo-lint` — walk `rust/src` (and the loom test
+//! target) and enforce the repo's concurrency-invariant lints. Exits
+//! non-zero and prints every violation when the tree is dirty; see
+//! `repo_lint` (src/lib.rs) for the rule catalogue and
+//! `docs/CONCURRENCY.md` for the rationale.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("repo-lint: cannot read {}: {e}", dir.display());
+            return;
+        }
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    // tools/lint/ -> tools/ -> repo root
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("repo root above tools/lint")
+        .to_path_buf();
+
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust").join("src"), &mut files);
+    collect_rs(&root.join("rust").join("tests"), &mut files);
+    files.sort();
+
+    let mut violations = 0usize;
+    for file in &files {
+        let rel = file
+            .strip_prefix(&root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = match fs::read_to_string(file) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("repo-lint: cannot read {rel}: {e}");
+                violations += 1;
+                continue;
+            }
+        };
+        for v in repo_lint::scan_str(&rel, &src) {
+            eprintln!("{v}");
+            violations += 1;
+        }
+    }
+
+    if violations > 0 {
+        eprintln!("repo-lint: {violations} violation(s) in {} files", files.len());
+        ExitCode::FAILURE
+    } else {
+        println!("repo-lint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    }
+}
