@@ -102,7 +102,7 @@ fn serve_once(
         } else {
             server.submit(toks);
         }
-        count(&server.step(Instant::now()).unwrap());
+        count(&server.step().unwrap());
     }
     count(&server.drain().unwrap());
     let wall = t0.elapsed().as_secs_f64();

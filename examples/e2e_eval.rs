@@ -102,7 +102,7 @@ fn main() -> Result<()> {
             *t = stream.next_token();
         }
         server.submit(toks);
-        count(&server.step(Instant::now())?);
+        count(&server.step()?);
     }
     count(&server.drain()?);
     println!("\nserved batched stream: {}", server.metrics.summary());

@@ -14,7 +14,7 @@
 //! Works with zero artifacts: the native backend serves deterministic
 //! synthetic weights through the very same loop.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 use ttq_serve::backend::default_backend;
@@ -57,7 +57,7 @@ fn main() -> Result<()> {
             server.submit(toks);
             // bursty arrivals: drive the engine every few submissions
             if i % 3 == 2 {
-                count(&server.step(Instant::now())?);
+                count(&server.step()?);
             }
         }
         count(&server.drain()?);

@@ -13,7 +13,6 @@
 //! cargo run --release --example streaming_generate
 //! ```
 
-use std::time::Instant;
 
 use anyhow::Result;
 use ttq_serve::backend::default_backend;
@@ -53,7 +52,7 @@ fn main() -> Result<()> {
 
     // drive the engine until every request is done, streaming tokens
     while server.pending() > 0 || server.running() > 0 {
-        for e in server.step(Instant::now())? {
+        for e in server.step()? {
             match e {
                 ServeEvent::Token { id, token, index, weight_generation } => {
                     println!("req {id}: token[{index}] = {token} (weight gen {weight_generation})");

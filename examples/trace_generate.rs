@@ -1,0 +1,95 @@
+//! Serving-path observability end to end: force a mid-stream
+//! requantization, introspect *why* it fired, and export a Perfetto
+//! trace of the whole session.
+//!
+//! Traffic starts on one corpus domain and switches to another halfway
+//! through, so the online calibrator's drift detector fires while
+//! requests are still decoding — the paper's test-time scenario. The
+//! example then prints each [`ttq_serve::obs::RequantEvent`] (drift vs
+//! threshold, tokens of evidence, quantization wall time) with its
+//! top-3 drifted layers, and writes the recorded span ring as Chrome
+//! trace-event JSON. Open the file at <https://ui.perfetto.dev>: each
+//! request is its own track, with admit/prefill/decode spans nested
+//! inside the request span and requants on the engine track.
+//!
+//! ```bash
+//! cargo run --release --example trace_generate
+//! ```
+
+use anyhow::Result;
+use ttq_serve::backend::NativeBackend;
+use ttq_serve::coordinator::{ServeEvent, Server, ServerConfig};
+use ttq_serve::corpus::{CorpusStream, Split, BOS};
+use ttq_serve::obs::export::{chrome_trace, metrics_json};
+use ttq_serve::quant::MethodSpec;
+
+const TRACE_PATH: &str = "trace_generate.json";
+
+fn main() -> Result<()> {
+    // Cached decode (and therefore serving) needs the native backend;
+    // synthetic models keep this runnable without `make artifacts`.
+    let backend = NativeBackend::new(&ttq_serve::artifacts_dir());
+
+    let mut cfg = ServerConfig::new("qwen-micro").with_method(MethodSpec::ttq(0));
+    cfg.max_new_tokens = 8;
+    // a tighter threshold than the default so the wt2s→c4s shift below
+    // reliably trips the drift detector mid-stream
+    cfg.calib.drift_threshold = 0.02;
+    let mut server = Server::new(&backend, cfg)?;
+    let prompt_len = server.max_seq() / 2;
+
+    // first half of the traffic on one domain, second half on another —
+    // the domain shift is what accumulates diagonal drift
+    let mut submit_from = |domain: &str, n: usize, server: &mut Server| {
+        let mut stream = CorpusStream::new(domain, Split::Eval);
+        for _ in 0..n {
+            let mut toks = vec![BOS; prompt_len];
+            for t in toks.iter_mut().skip(1) {
+                *t = stream.next_token();
+            }
+            server.submit(toks);
+        }
+    };
+    submit_from("wt2s", 6, &mut server);
+    submit_from("c4s", 6, &mut server);
+
+    let (mut streamed, mut done) = (0usize, 0usize);
+    while server.pending() > 0 || server.running() > 0 {
+        for e in server.step()? {
+            match e {
+                ServeEvent::Token { .. } => streamed += 1,
+                ServeEvent::Done { .. } => done += 1,
+            }
+        }
+    }
+    println!("served {done} requests, {streamed} streamed tokens");
+    println!("{}\n", server.metrics.summary());
+
+    // why did the weights requantize mid-stream?
+    if server.requant_events().is_empty() {
+        println!("no drift requant fired (unexpected for this traffic mix)");
+    }
+    for ev in server.requant_events() {
+        println!("requant: {}", ev.describe());
+        println!("  drift exceeded threshold: {}", ev.drift_exceeded());
+        for (layer, drift) in ev.top_layers(3) {
+            println!("  layer {layer:>3}: drift {drift:.4}");
+        }
+    }
+
+    // export the span ring for Perfetto / chrome://tracing
+    let events = server.trace().snapshot();
+    std::fs::write(TRACE_PATH, chrome_trace(&events))?;
+    println!(
+        "\nwrote {} spans ({} recorded, {} dropped) to {TRACE_PATH}",
+        events.len(),
+        server.trace().recorded(),
+        server.trace().dropped()
+    );
+    println!("open it at https://ui.perfetto.dev");
+
+    // the machine-readable snapshot the CI artifact job also captures
+    let snap = metrics_json(&server.metrics);
+    println!("metrics snapshot: {} bytes of JSON", snap.len());
+    Ok(())
+}

@@ -24,6 +24,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 use anyhow::{anyhow, bail, Result};
@@ -911,6 +912,10 @@ pub struct NativeBackend {
     /// unique (see [`ModelWeights::version`]), so a stale entry can
     /// never alias a requantized generation.
     packed: Mutex<HashMap<String, PackedEntry>>,
+    /// Packed-cache rebuilds so far (first pack + every version-miss
+    /// repack after a requant) — observability for how often requants
+    /// actually force a repack ([`NativeBackend::repacks`]).
+    repacks: AtomicU64,
 }
 
 impl NativeBackend {
@@ -923,7 +928,17 @@ impl NativeBackend {
             pool: OnceLock::new(),
             exec_spec: None,
             packed: Mutex::new(HashMap::new()),
+            repacks: AtomicU64::new(0),
         }
+    }
+
+    /// Packed-weight cache rebuilds so far: the first pack of each model
+    /// plus one repack per weight-version miss (i.e. per requant that
+    /// actually reached this backend's packed execution path).
+    pub fn repacks(&self) -> u64 {
+        // Relaxed: monotone metrics counter, never ordered against
+        // other shared state.
+        self.repacks.load(Ordering::Relaxed)
     }
 
     /// Execute quantizable linears as packed grouped int-matmuls at the
@@ -992,6 +1007,8 @@ impl NativeBackend {
         }
         let arc = Arc::new(map);
         cache.insert(weights.manifest.name.clone(), (weights.version(), arc.clone()));
+        // Relaxed: metrics counter (see `repacks`).
+        self.repacks.fetch_add(1, Ordering::Relaxed);
         Ok(arc)
     }
 

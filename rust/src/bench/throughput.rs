@@ -4,9 +4,14 @@
 //! [`run_scenario`] drives [`crate::coordinator::Server`] as a
 //! closed-loop load generator: every request is submitted up front and
 //! the engine is stepped to completion, measuring streamed tokens/sec,
-//! per-token latency percentiles (p50/p95 over per-step latency
-//! attributed to the tokens that step emitted), requantization count,
+//! per-token latency percentiles (p50/p95/p99 over per-step latency
+//! attributed to the tokens that step emitted, computed on the shared
+//! [`crate::obs::Hist`] log-bucketed histogram), requantization count,
 //! speculative acceptance and the pool's kernel-time share.
+//! [`run_scenario`] runs with the trace recorder disabled (capacity 0);
+//! [`run_scenario_traced`] runs the same load with a live trace ring —
+//! the pair behind the ≤ 2% recorder-overhead gate in
+//! `benches/serve_throughput.rs`.
 //! [`default_scenarios`] describes the serving mix the throughput bench
 //! (`benches/serve_throughput.rs`) sweeps:
 //!
@@ -43,6 +48,7 @@ use crate::coordinator::{BatchPolicy, ServeEvent, Server, ServerConfig};
 use crate::corpus::{CorpusStream, Split, BOS};
 use crate::linalg::pool::{WorkerPool, MT_FLOP_FLOOR};
 use crate::linalg::{Mat, Rng};
+use crate::obs::{Hist, HistBucket};
 use crate::quant::{MethodSpec, QuantSpec};
 use crate::specdec::SpecConfig;
 use crate::util::benchkit::{black_box, Bencher};
@@ -93,6 +99,11 @@ pub struct ScenarioResult {
     pub p50_token_ms: f64,
     /// 95th-percentile per-token latency, milliseconds.
     pub p95_token_ms: f64,
+    /// 99th-percentile per-token latency, milliseconds.
+    pub p99_token_ms: f64,
+    /// Occupied per-token latency histogram buckets, microseconds
+    /// (`[lo, hi]` bounds + count; counts sum to `streamed_tokens`).
+    pub token_us_buckets: Vec<HistBucket>,
     /// Mid-run requantizations the drift detector fired.
     pub requants: u64,
     /// Draft-acceptance rate (0 for non-speculative scenarios).
@@ -102,10 +113,17 @@ pub struct ScenarioResult {
 }
 
 impl ScenarioResult {
-    /// One JSON object line for `BENCH_throughput.json`.
+    /// One JSON object line for `BENCH_throughput.json`
+    /// (`docs/BENCHMARKS.md` documents the schema).
     pub fn to_json(&self) -> String {
+        let buckets = self
+            .token_us_buckets
+            .iter()
+            .map(|b| format!("[{}, {}, {}]", b.lo, b.hi, b.count))
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
-            r#"{{"name": "{}", "threads": {}, "exec": "{}", "requests": {}, "streamed_tokens": {}, "wall_s": {:.4}, "tokens_per_sec": {:.1}, "decode_tokens_per_sec": {:.1}, "p50_token_ms": {:.4}, "p95_token_ms": {:.4}, "requants": {}, "spec_acceptance": {:.3}, "kernel_share": {:.3}}}"#,
+            r#"{{"name": "{}", "threads": {}, "exec": "{}", "requests": {}, "streamed_tokens": {}, "wall_s": {:.4}, "tokens_per_sec": {:.1}, "decode_tokens_per_sec": {:.1}, "p50_token_ms": {:.4}, "p95_token_ms": {:.4}, "p99_token_ms": {:.4}, "token_us_buckets": [{}], "requants": {}, "spec_acceptance": {:.3}, "kernel_share": {:.3}}}"#,
             self.name,
             self.threads,
             self.exec,
@@ -116,6 +134,8 @@ impl ScenarioResult {
             self.decode_tokens_per_sec,
             self.p50_token_ms,
             self.p95_token_ms,
+            self.p99_token_ms,
+            buckets,
             self.requants,
             self.spec_acceptance,
             self.kernel_share,
@@ -125,7 +145,7 @@ impl ScenarioResult {
     /// Fixed-width report line for the bench output.
     pub fn report(&self) -> String {
         format!(
-            "{:<22} {:>2}t {:<5} {:>7.0} tok/s  decode {:>7.0} tok/s  p50 {:>7.3}ms  p95 {:>7.3}ms  requants {:>2}  kernel {:>3.0}%{}",
+            "{:<22} {:>2}t {:<5} {:>7.0} tok/s  decode {:>7.0} tok/s  p50 {:>7.3}ms  p95 {:>7.3}ms  p99 {:>7.3}ms  requants {:>2}  kernel {:>3.0}%{}",
             self.name,
             self.threads,
             self.exec,
@@ -133,6 +153,7 @@ impl ScenarioResult {
             self.decode_tokens_per_sec,
             self.p50_token_ms,
             self.p95_token_ms,
+            self.p99_token_ms,
             self.requants,
             100.0 * self.kernel_share,
             if self.spec_acceptance > 0.0 {
@@ -144,19 +165,30 @@ impl ScenarioResult {
     }
 }
 
-fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
-    if sorted_ms.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted_ms.len() as f64 * q) as usize).min(sorted_ms.len() - 1);
-    sorted_ms[idx]
-}
-
 /// Drive one scenario to completion on a fresh backend with `threads`
 /// pool lanes. Closed loop: all requests are queued up front, then the
 /// engine steps until every generation finishes (admission backpressure
-/// paces the queue through the KV slots).
+/// paces the queue through the KV slots). Runs with the trace recorder
+/// *disabled* — the clean-performance baseline.
 pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
+    run_scenario_with(spec, threads, 0)
+}
+
+/// [`run_scenario`] with a live trace ring of `trace_capacity` events —
+/// the measured side of the recorder-overhead gate.
+pub fn run_scenario_traced(
+    spec: &LoadSpec,
+    threads: usize,
+    trace_capacity: usize,
+) -> Result<ScenarioResult> {
+    run_scenario_with(spec, threads, trace_capacity)
+}
+
+fn run_scenario_with(
+    spec: &LoadSpec,
+    threads: usize,
+    trace_capacity: usize,
+) -> Result<ScenarioResult> {
     let dir = crate::artifacts_dir();
     let backend = match spec.exec_bits {
         Some(bits) => NativeBackend::new(&dir).with_exec_quant(QuantSpec::new(bits, 32)),
@@ -164,7 +196,9 @@ pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
     }
     .with_threads(threads);
 
-    let mut cfg = ServerConfig::new(&spec.model).with_method(MethodSpec::ttq(0));
+    let mut cfg = ServerConfig::new(&spec.model)
+        .with_method(MethodSpec::ttq(0))
+        .with_trace_capacity(trace_capacity);
     cfg.spec = QuantSpec::new(spec.exec_bits.unwrap_or(4), 32);
     cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
     cfg.max_new_tokens = spec.max_new_tokens.max(1);
@@ -200,12 +234,12 @@ pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
     }
 
     let t_wall = Instant::now();
-    let mut lat_ms: Vec<f64> = Vec::new();
+    let lat = Hist::new();
     let (mut streamed, mut done) = (0usize, 0usize);
     while server.pending() > 0 || server.running() > 0 {
         let t0 = Instant::now();
-        let evs = server.step(Instant::now())?;
-        let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let evs = server.step()?;
+        let dt_us = t0.elapsed().as_micros() as u64;
         let toks = evs
             .iter()
             .filter(|e| matches!(e, ServeEvent::Token { .. }))
@@ -217,8 +251,10 @@ pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
         if toks > 0 {
             // attribute the step's latency evenly to its tokens, one
             // sample per token so percentiles weight by token count
-            let per = dt_ms / toks as f64;
-            lat_ms.resize(lat_ms.len() + toks, per);
+            let per_us = dt_us / toks as u64;
+            for _ in 0..toks {
+                lat.record(per_us);
+            }
             streamed += toks;
         }
     }
@@ -226,7 +262,6 @@ pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
     if done != spec.requests {
         bail!("scenario {}: {done} of {} requests completed", spec.name, spec.requests);
     }
-    lat_ms.sort_by(f64::total_cmp);
 
     use std::sync::atomic::Ordering::Relaxed;
     Ok(ScenarioResult {
@@ -238,8 +273,10 @@ pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
         wall_s,
         tokens_per_sec: if wall_s > 0.0 { streamed as f64 / wall_s } else { 0.0 },
         decode_tokens_per_sec: server.metrics.decode_tokens_per_sec(),
-        p50_token_ms: percentile(&lat_ms, 0.50),
-        p95_token_ms: percentile(&lat_ms, 0.95),
+        p50_token_ms: lat.p50() / 1e3,
+        p95_token_ms: lat.p95() / 1e3,
+        p99_token_ms: lat.p99() / 1e3,
+        token_us_buckets: lat.nonzero_buckets(),
         requants: server.metrics.requants.load(Relaxed),
         spec_acceptance: server.metrics.spec_acceptance(),
         kernel_share: server.metrics.kernel_share(),
@@ -430,6 +467,33 @@ mod tests {
         assert!(r.streamed_tokens >= 4, "at least one token per request");
         assert!(r.tokens_per_sec > 0.0);
         assert!(r.p95_token_ms >= r.p50_token_ms);
+        assert!(r.p99_token_ms >= r.p95_token_ms);
+        let bucketed: u64 = r.token_us_buckets.iter().map(|b| b.count).sum();
+        assert_eq!(
+            bucketed, r.streamed_tokens as u64,
+            "bucket counts account for every streamed token"
+        );
+        // JSON line stays machine-parseable with the new fields
+        let v = crate::util::json::Value::parse(&r.to_json()).unwrap();
+        assert!(v.get("p99_token_ms").and_then(|x| x.as_f64()).is_some());
+        assert!(v.get("token_us_buckets").and_then(|x| x.as_arr()).is_some());
+    }
+
+    #[test]
+    fn traced_scenario_records_spans() {
+        let spec = LoadSpec {
+            name: "unit-traced".into(),
+            model: "qwen-micro".into(),
+            prompt_frac: (1, 4),
+            max_new_tokens: 3,
+            requests: 2,
+            domains: vec!["wt2s".into()],
+            speculative: false,
+            exec_bits: Some(4),
+        };
+        let r = run_scenario_traced(&spec, 2, 4096).unwrap();
+        assert_eq!(r.requests, 2);
+        assert!(r.streamed_tokens >= 2);
     }
 
     #[test]

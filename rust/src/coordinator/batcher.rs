@@ -9,7 +9,7 @@
 //! request — they are masked out of replies).
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Monotonically increasing server-assigned request identifier.
 pub type RequestId = u64;
@@ -23,14 +23,18 @@ pub struct Request {
     /// variable-length prompts; [`Batch::tokens`] still requires
     /// fixed-`seq` rows for the legacy full-batch executable path).
     pub tokens: Vec<i32>,
-    /// Submission time (drives linger and latency accounting).
-    pub arrived: Instant,
+    /// Submission time in microseconds on the server's
+    /// [`crate::obs::Clock`] (drives linger, latency accounting and
+    /// the request's trace span).
+    pub arrived_us: u64,
 }
 
 impl Request {
-    /// Request arriving now.
-    pub fn new(id: RequestId, tokens: Vec<i32>) -> Self {
-        Request { id, tokens, arrived: Instant::now() }
+    /// Request arriving at `arrived_us` (a [`crate::obs::Clock`]
+    /// reading — the serving path never reads wall clocks directly,
+    /// repo-lint R6).
+    pub fn new(id: RequestId, tokens: Vec<i32>, arrived_us: u64) -> Self {
+        Request { id, tokens, arrived_us }
     }
 }
 
@@ -157,8 +161,9 @@ impl Batcher {
             .unwrap_or_else(|| self.max_bucket())
     }
 
-    /// Poll for a ready batch at time `now`.
-    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+    /// Poll for a ready batch at clock reading `now_us` (microseconds
+    /// on the same [`crate::obs::Clock`] that stamped the requests).
+    pub fn poll(&mut self, now_us: u64) -> Option<Batch> {
         if self.queue.is_empty() {
             return None;
         }
@@ -168,8 +173,8 @@ impl Batcher {
                 self.queue.drain(..max_bucket).collect();
             return Some(Batch::new(max_bucket, requests));
         }
-        let oldest = self.queue.front()?.arrived;
-        if now.duration_since(oldest) >= self.policy.linger {
+        let oldest = self.queue.front()?.arrived_us;
+        if now_us.saturating_sub(oldest) >= self.policy.linger.as_micros() as u64 {
             return Some(self.release_partial());
         }
         None
@@ -220,7 +225,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
-        Request::new(id, vec![0; 8])
+        Request::new(id, vec![0; 8], 0)
     }
 
     fn mk(buckets: Vec<usize>, linger_ms: u64) -> Batcher {
@@ -236,7 +241,7 @@ mod tests {
         for i in 0..4 {
             b.push(req(i));
         }
-        let batch = b.poll(Instant::now()).expect("full bucket");
+        let batch = b.poll(0).expect("full bucket");
         assert_eq!(batch.bucket, 4);
         assert_eq!(batch.requests.len(), 4);
         assert_eq!(b.pending(), 0);
@@ -246,14 +251,14 @@ mod tests {
     fn no_fire_before_linger() {
         let mut b = mk(vec![1, 4], 1000);
         b.push(req(0));
-        assert!(b.poll(Instant::now()).is_none());
+        assert!(b.poll(0).is_none(), "linger not expired at t=0");
     }
 
     #[test]
     fn linger_fires_single() {
         let mut b = mk(vec![1, 4], 0);
         b.push(req(0));
-        let batch = b.poll(Instant::now() + Duration::from_millis(1)).unwrap();
+        let batch = b.poll(1_000).unwrap();
         assert_eq!(batch.bucket, 1);
         assert_eq!(batch.padding_rows(), 0);
     }
@@ -264,7 +269,7 @@ mod tests {
         for i in 0..3 {
             b.push(req(i));
         }
-        let batch = b.poll(Instant::now() + Duration::from_millis(1)).unwrap();
+        let batch = b.poll(1_000).unwrap();
         // 3 requests, buckets {1,4}: largest full bucket is 1, but the
         // policy prefers covering all 3 with a padded 4-batch over three
         // sequential singles.
@@ -280,13 +285,13 @@ mod tests {
         for i in 0..9 {
             b.push(req(i));
         }
-        let b1 = b.poll(Instant::now()).unwrap();
-        let b2 = b.poll(Instant::now()).unwrap();
+        let b1 = b.poll(0).unwrap();
+        let b2 = b.poll(0).unwrap();
         assert_eq!(b1.bucket, 4);
         assert_eq!(b2.bucket, 4);
         assert_eq!(b.pending(), 1);
         // last one waits for linger
-        assert!(b.poll(Instant::now()).is_none());
+        assert!(b.poll(0).is_none(), "linger not expired at t=0");
     }
 
     #[test]
@@ -295,7 +300,7 @@ mod tests {
         for i in 0..4 {
             b.push(req(i));
         }
-        let batch = b.poll(Instant::now()).unwrap();
+        let batch = b.poll(0).unwrap();
         let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
     }
@@ -313,7 +318,7 @@ mod tests {
     fn force_flush_fires_without_waiting() {
         let mut b = mk(vec![1, 4], 1000);
         b.push(req(0));
-        assert!(b.poll(Instant::now()).is_none(), "linger not expired");
+        assert!(b.poll(0).is_none(), "linger not expired");
         let batch = b.force_flush().expect("flush ignores linger");
         assert_eq!(batch.requests.len(), 1);
         assert_eq!(b.pending(), 0);
@@ -354,9 +359,9 @@ mod tests {
     #[test]
     fn tokens_pads_with_last_request() {
         let mut b = mk(vec![4], 0);
-        b.push(Request::new(0, vec![1; 8]));
-        b.push(Request::new(1, vec![2; 8]));
-        let batch = b.poll(Instant::now() + Duration::from_millis(1)).unwrap();
+        b.push(Request::new(0, vec![1; 8], 0));
+        b.push(Request::new(1, vec![2; 8], 0));
+        let batch = b.poll(1_000).unwrap();
         let toks = batch.tokens(8);
         assert_eq!(toks.len(), 32);
         assert_eq!(&toks[0..8], &[1; 8]);

@@ -57,6 +57,10 @@ pub struct OnlineCalibrator {
     cfg: CalibratorConfig,
     layers: Vec<LayerState>,
     generation: u64,
+    /// Rows (tokens) observed since the last [`Self::commit`] — the
+    /// "how much evidence triggered this requant" introspection field
+    /// of [`crate::obs::RequantEvent`].
+    observed_since_commit: f64,
 }
 
 impl OnlineCalibrator {
@@ -66,7 +70,7 @@ impl OnlineCalibrator {
             .iter()
             .map(|&d| LayerState { stats: ActStats::new(ps, d), active_diag: None })
             .collect();
-        OnlineCalibrator { cfg, layers, generation: 0 }
+        OnlineCalibrator { cfg, layers, generation: 0, observed_since_commit: 0.0 }
     }
 
     /// Committed weight generations so far (bumped per requant).
@@ -74,13 +78,24 @@ impl OnlineCalibrator {
         self.generation
     }
 
+    /// The configured drift threshold (requant fires above it).
+    pub fn drift_threshold(&self) -> f64 {
+        self.cfg.drift_threshold
+    }
+
     /// Feed fresh per-layer norm sums from a stats pass.
     pub fn observe(&mut self, per_layer: &[ActStats]) {
         assert_eq!(per_layer.len(), self.layers.len());
+        self.observed_since_commit += per_layer.first().map_or(0.0, |s| s.count);
         for (layer, fresh) in self.layers.iter_mut().zip(per_layer) {
             layer.stats.decay(self.cfg.decay);
             layer.stats.accumulate(&fresh.norm_sums, fresh.count);
         }
+    }
+
+    /// Rows (tokens) observed since the last commit.
+    pub fn tokens_since_commit(&self) -> f64 {
+        self.observed_since_commit
     }
 
     /// Current diagonal for a layer.
@@ -127,6 +142,7 @@ impl OnlineCalibrator {
             layer.active_diag = Some(d.clone());
         }
         self.generation += 1;
+        self.observed_since_commit = 0.0;
         diags
     }
 
@@ -135,6 +151,14 @@ impl OnlineCalibrator {
         (0..self.layers.len())
             .map(|i| self.drift(i))
             .fold(0.0, f64::max)
+    }
+
+    /// Per-layer drift scores vs. the active generation, indexed by
+    /// layer (∞ for never-quantized layers). Snapshot this *before*
+    /// [`Self::commit`] to explain a requant decision
+    /// ([`crate::obs::RequantEvent::layer_drifts`]).
+    pub fn drifts(&self) -> Vec<f64> {
+        (0..self.layers.len()).map(|i| self.drift(i)).collect()
     }
 }
 
@@ -208,6 +232,25 @@ mod tests {
         let g0 = c.generation();
         c.commit();
         assert_eq!(c.generation(), g0 + 1);
+    }
+
+    #[test]
+    fn drift_introspection_tracks_layers_and_tokens() {
+        let mut c = mk(8);
+        c.observe(&[stats_with(8, 1.0, 4.0), stats_with(8, 1.0, 4.0)]);
+        assert_eq!(c.tokens_since_commit(), 4.0);
+        let d = c.drifts();
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| x.is_infinite()), "never quantized → ∞");
+        c.commit();
+        assert_eq!(c.tokens_since_commit(), 0.0, "commit resets evidence");
+        for _ in 0..4 {
+            c.observe(&[stats_shaped(8, 400.0, 4.0), stats_shaped(8, 400.0, 4.0)]);
+        }
+        assert_eq!(c.tokens_since_commit(), 16.0);
+        let d = c.drifts();
+        assert!(d.iter().cloned().fold(0.0, f64::max) > c.drift_threshold());
+        assert!((d.iter().cloned().fold(0.0, f64::max) - c.max_drift()).abs() < 1e-12);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod server;
 pub use batcher::{Batch, BatchPolicy, Batcher, Request, RequestId};
 pub use calibrator::{CalibratorConfig, OnlineCalibrator};
 pub use metrics::Metrics;
-pub use server::{ServeEvent, Server, ServerConfig, StopReason};
+pub use server::{ServeEvent, Server, ServerConfig, StopReason, DEFAULT_TRACE_CAPACITY};
 
 /// Serving-path failures that used to be `expect`s. The serving loop
 /// must degrade by surfacing an error on the offending request, never

@@ -21,6 +21,15 @@
 //! events. Offline-calibrated methods cannot do this; that is the
 //! paper's whole argument.
 //!
+//! **Observability.** Every phase above is recorded: the server stamps
+//! all times from one [`crate::obs::Clock`] (deterministic in tests),
+//! writes admit/prefill/decode/spec/requant spans into a lock-free
+//! [`crate::obs::TraceBuffer`] (export with
+//! [`crate::obs::export::chrome_trace`]), accumulates
+//! [`crate::obs::RequantEvent`] introspection records per drift
+//! requant, and feeds latency histograms in [`Metrics`]. See
+//! `docs/OBSERVABILITY.md`.
+//!
 //! The compression method is a [`MethodSpec`] registry handle. Methods
 //! that consume the activation diagonal (TTQ, online AWQ, test-time
 //! pruning) ride the calibrator's observe→drift→commit loop; weight-only
@@ -50,7 +59,7 @@
 
 use std::collections::HashSet;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -63,9 +72,15 @@ use crate::eval::{EvalConfig, Evaluator, Sampler};
 use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, SeqId};
 use crate::linalg::pool::WorkerPool;
 use crate::models::ModelWeights;
+use crate::obs::{Clock, RequantEvent, SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};
 use crate::quant::{MethodSpec, QuantSpec};
 use crate::specdec::{spec_round, DraftState, SpecConfig, SpecController, SpecModel};
 use crate::util::argmax;
+
+/// Default span-ring capacity (events) for a new server. At 64 bytes
+/// per slot this is ~1 MiB; set [`ServerConfig::trace_capacity`] to 0
+/// to disable recording entirely.
+pub const DEFAULT_TRACE_CAPACITY: usize = 16_384;
 
 /// Serving-engine configuration.
 #[derive(Clone, Debug)]
@@ -94,6 +109,14 @@ pub struct ServerConfig {
     /// Speculative-decoding policy for requests submitted through
     /// [`Server::submit_speculative`] (draft depth, adaptivity).
     pub specdec: SpecConfig,
+    /// The clock every serving-path timestamp is read from: real
+    /// monotonic time in production, [`Clock::test`] for deterministic
+    /// span trees in tests (repo-lint R6 bans raw `Instant::now` on
+    /// the serving path).
+    pub clock: Clock,
+    /// Span ring capacity in events ([`DEFAULT_TRACE_CAPACITY`]);
+    /// 0 disables the recorder (the overhead-gate baseline).
+    pub trace_capacity: usize,
 }
 
 impl ServerConfig {
@@ -109,7 +132,22 @@ impl ServerConfig {
             eos: None,
             cache_slots: 16,
             specdec: SpecConfig::default(),
+            clock: Clock::real(),
+            trace_capacity: DEFAULT_TRACE_CAPACITY,
         }
+    }
+
+    /// Drive the engine from this clock (tests pass [`Clock::test`]
+    /// for exactly reproducible span trees).
+    pub fn with_clock(mut self, clock: Clock) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Set the span-ring capacity in events (0 disables tracing).
+    pub fn with_trace_capacity(mut self, events: usize) -> Self {
+        self.trace_capacity = events;
+        self
     }
 
     /// Replace the serving compression method.
@@ -192,7 +230,9 @@ struct SequenceState {
     generated: Vec<i32>,
     /// Effective budget (config clamped to context room).
     max_new: usize,
-    arrived: Instant,
+    /// Arrival reading of the server clock, microseconds (start of the
+    /// request's trace span; drives latency accounting).
+    arrived_us: u64,
     /// Speculative sequences carry the drafter's dual-cache state; plain
     /// sequences decode one token per step on the serving weights.
     spec: Option<DraftState>,
@@ -235,6 +275,13 @@ pub struct Server<'b> {
     running: Vec<SequenceState>,
     /// Cumulative serving counters (read freely; atomics inside).
     pub metrics: Metrics,
+    /// The serving clock (every timestamp on this path reads it).
+    clock: Clock,
+    /// Span recorder; `Arc` because the worker pool shares it for
+    /// kernel-dispatch spans.
+    trace: Arc<TraceBuffer>,
+    /// Drift-requant introspection records, in firing order.
+    requant_events: Vec<RequantEvent>,
     next_id: RequestId,
     /// Weight-only methods quantize once; set before the first prefill.
     static_applied: bool,
@@ -277,6 +324,15 @@ impl<'b> Server<'b> {
         let batcher = Batcher::new(cfg.policy.clone());
         let cache = KvCache::new(KvCacheConfig::from_manifest(man, cfg.cache_slots));
         let spec_ctrl = SpecController::new(&cfg.specdec);
+        let clock = cfg.clock.clone();
+        let trace = Arc::new(TraceBuffer::new(cfg.trace_capacity));
+        if trace.enabled() {
+            // Kernel-dispatch spans ride the same ring; first attach
+            // wins when backends share a pool (the hook is a OnceLock).
+            if let Some(pool) = backend.worker_pool() {
+                pool.attach_trace(trace.clone(), clock.clone());
+            }
+        }
         Ok(Server {
             cfg,
             ev,
@@ -285,6 +341,9 @@ impl<'b> Server<'b> {
             cache,
             running: Vec::new(),
             metrics: Metrics::new(),
+            clock,
+            trace,
+            requant_events: Vec::new(),
             next_id: 0,
             static_applied: false,
             spec_state: None,
@@ -365,6 +424,36 @@ impl<'b> Server<'b> {
         &self.spec_ctrl
     }
 
+    /// The span recorder (snapshot it for export; disabled when
+    /// [`ServerConfig::trace_capacity`] is 0).
+    pub fn trace(&self) -> &TraceBuffer {
+        &self.trace
+    }
+
+    /// Drift-triggered requantization introspection events, in firing
+    /// order (what drifted, how far past the threshold, what it cost).
+    pub fn requant_events(&self) -> &[RequantEvent] {
+        &self.requant_events
+    }
+
+    /// KV-cache occupancy sample: high-water metrics + an instant
+    /// counter event on the engine track.
+    fn sample_cache_occupancy(&self) {
+        let used = self.cache.used_tokens() + self.draft_tokens_used();
+        self.metrics.record_cache_used(used);
+        if self.trace.enabled() {
+            self.trace.record(&TraceEvent {
+                kind: SpanKind::CacheOccupancy,
+                seq: ENGINE_SEQ,
+                start_us: self.clock.now_us(),
+                dur_us: 0,
+                weight_version: self.calibrator.generation(),
+                a: used as u64,
+                b: self.cache.stats().capacity_tokens as u64,
+            });
+        }
+    }
+
     /// Enqueue a BOS-led prompt of `1..=max_seq` in-vocabulary tokens.
     pub fn submit(&mut self, tokens: Vec<i32>) -> RequestId {
         self.submit_inner(tokens)
@@ -398,7 +487,7 @@ impl<'b> Server<'b> {
         );
         let id = self.next_id;
         self.next_id += 1;
-        self.batcher.push(Request::new(id, tokens));
+        self.batcher.push(Request::new(id, tokens, self.clock.now_us()));
         id
     }
 
@@ -414,11 +503,14 @@ impl<'b> Server<'b> {
 
     /// Drive the engine once: admit newly-fired batches into the decode
     /// batch (prefill), then advance every running sequence by one
-    /// token. Returns the events this step produced.
-    pub fn step(&mut self, now: Instant) -> Result<Vec<ServeEvent>> {
+    /// token. Returns the events this step produced. Time comes from
+    /// the server's own [`Clock`] (configure via
+    /// [`ServerConfig::with_clock`]).
+    pub fn step(&mut self) -> Result<Vec<ServeEvent>> {
         let mut events = Vec::new();
         while self.cache.free_slots() > 0 {
-            let Some(batch) = self.batcher.poll(now) else { break };
+            let now_us = self.clock.now_us();
+            let Some(batch) = self.batcher.poll(now_us) else { break };
             self.admit(batch, &mut events)?;
         }
         self.decode_once(&mut events)?;
@@ -460,14 +552,31 @@ impl<'b> Server<'b> {
             return Ok(());
         }
         self.metrics.record_admitted(requests.len(), bucket_slack);
+        if self.trace.enabled() {
+            // queue-wait spans: arrival → admission, one per request
+            let now_us = self.clock.now_us();
+            let gen = self.calibrator.generation();
+            for r in &requests {
+                self.trace.record(&TraceEvent {
+                    kind: SpanKind::Admit,
+                    seq: r.id,
+                    start_us: r.arrived_us,
+                    dur_us: now_us.saturating_sub(r.arrived_us),
+                    weight_version: gen,
+                    a: r.tokens.len() as u64,
+                    b: 0,
+                });
+            }
+        }
 
         // weight-only methods: one quantization pass before any forward
         if !self.cfg.method.needs_stats() && !self.static_applied {
-            let t0 = Instant::now();
+            let t0_us = self.clock.now_us();
             let cfg = EvalConfig { spec: self.cfg.spec.clone(), ..Default::default() };
             self.ev.apply_quantization(&self.cfg.method, None, &cfg)?;
             self.static_applied = true;
-            self.metrics.record_requant(t0.elapsed());
+            let dur = self.clock.now_us().saturating_sub(t0_us);
+            self.metrics.record_requant(Duration::from_micros(dur));
         }
 
         // one prefill forward per prompt-length group (insertion order)
@@ -528,7 +637,7 @@ impl<'b> Server<'b> {
             tokens.extend_from_slice(&r.tokens);
         }
         let with_stats = self.cfg.method.needs_stats();
-        let t0 = Instant::now();
+        let t0_us = self.clock.now_us();
         let k0 = self.kernel_us();
         let res = if speculative {
             let st = self.spec_state.as_mut().ok_or(ServeError::SpecStateMissing)?;
@@ -555,9 +664,26 @@ impl<'b> Server<'b> {
                 return Err(e);
             }
         };
-        self.metrics.record_prefill(tokens.len(), t0.elapsed());
+        let prefill_dur = self.clock.now_us().saturating_sub(t0_us);
+        self.metrics
+            .record_prefill(tokens.len(), Duration::from_micros(prefill_dur));
         self.metrics
             .record_prefill_kernel(self.kernel_us().saturating_sub(k0));
+        if self.trace.enabled() {
+            // one prefill span per member request, on its own track
+            let gen = self.calibrator.generation();
+            for r in &group {
+                self.trace.record(&TraceEvent {
+                    kind: SpanKind::Prefill,
+                    seq: r.id,
+                    start_us: t0_us,
+                    dur_us: prefill_dur,
+                    weight_version: gen,
+                    a: tokens.len() as u64,
+                    b: n as u64,
+                });
+            }
+        }
 
         // the drafter builds its own KV state for the prompt (dual
         // cache — drafter and verifier disagree about hidden states)
@@ -570,7 +696,7 @@ impl<'b> Server<'b> {
                 // speculative sequences draw from it
                 dids.push(st.draft_cache.alloc().ok_or(ServeError::DraftCacheExhausted)?);
             }
-            let t0 = Instant::now();
+            let t0_us = self.clock.now_us();
             let res = st.drafter_backend.prefill(
                 &self.ev.weights,
                 &tokens,
@@ -587,7 +713,9 @@ impl<'b> Server<'b> {
                 }
                 return Err(e);
             }
-            self.metrics.record_prefill(tokens.len(), t0.elapsed());
+            let dur = self.clock.now_us().saturating_sub(t0_us);
+            self.metrics
+                .record_prefill(tokens.len(), Duration::from_micros(dur));
             self.metrics
                 .record_prefill_kernel(self.kernel_us().saturating_sub(k0));
             Some(dids)
@@ -595,7 +723,7 @@ impl<'b> Server<'b> {
             None
         };
         // sample occupancy *before* any release below — this is the peak
-        self.metrics.record_cache_used(self.cache.used_tokens() + self.draft_tokens_used());
+        self.sample_cache_occupancy();
 
         // the generation that produced these logits (pre-observe)
         let gen = self.calibrator.generation();
@@ -612,7 +740,7 @@ impl<'b> Server<'b> {
                 last_token: tok,
                 generated: vec![tok],
                 max_new: self.cfg.max_new_tokens.clamp(1, room),
-                arrived: req.arrived,
+                arrived_us: req.arrived_us,
                 spec: draft_ids
                     .as_ref()
                     .map(|dids| DraftState::new(dids[row], tok)),
@@ -652,19 +780,36 @@ impl<'b> Server<'b> {
         let last: Vec<i32> = rows.iter().map(|&i| self.running[i].last_token).collect();
         let ids: Vec<SeqId> = rows.iter().map(|&i| self.running[i].kv).collect();
         let with_stats = self.cfg.method.needs_stats();
-        let t0 = Instant::now();
+        let t0_us = self.clock.now_us();
         let k0 = self.kernel_us();
         let out = self
             .ev
             .backend
             .decode_step(&self.ev.weights, &last, &mut self.cache, &ids, with_stats)?;
-        self.metrics.record_decode(rows.len(), t0.elapsed());
+        let dur_us = self.clock.now_us().saturating_sub(t0_us);
+        let kern = self.kernel_us().saturating_sub(k0);
         self.metrics
-            .record_decode_kernel(self.kernel_us().saturating_sub(k0));
+            .record_decode(rows.len(), Duration::from_micros(dur_us));
+        self.metrics.record_decode_kernel(kern);
         // peak occupancy: every plain sequence just grew by one token
-        self.metrics.record_cache_used(self.cache.used_tokens() + self.draft_tokens_used());
+        self.sample_cache_occupancy();
 
         let gen = self.calibrator.generation();
+        if self.trace.enabled() {
+            // the step is one batched forward: each participant gets a
+            // span with the batch's timing on its own request track
+            for &i in &rows {
+                self.trace.record(&TraceEvent {
+                    kind: SpanKind::DecodeStep,
+                    seq: self.running[i].id,
+                    start_us: t0_us,
+                    dur_us,
+                    weight_version: gen,
+                    a: kern,
+                    b: rows.len() as u64,
+                });
+            }
+        }
         // per-step statistics: this is what makes requantization able
         // to fire *mid-generation* on drifting traffic
         self.observe_and_maybe_requant(out.stats.as_deref())?;
@@ -711,6 +856,7 @@ impl<'b> Server<'b> {
             return Ok(());
         }
         let with_stats = self.cfg.method.needs_stats();
+        let clock = self.clock.clone();
         let mut seqs = std::mem::take(&mut self.running);
         for i in 0..seqs.len() {
             if seqs[i].spec.is_none() {
@@ -720,7 +866,7 @@ impl<'b> Server<'b> {
             // most k+1 tokens
             let budget = seqs[i].max_new - seqs[i].generated.len();
             let k = self.spec_ctrl.k().min(budget.saturating_sub(1));
-            let t0 = Instant::now();
+            let t0_us = clock.now_us();
             let kern0 = self.kernel_us();
             let round = {
                 let seq = &mut seqs[i];
@@ -744,6 +890,7 @@ impl<'b> Server<'b> {
                     k,
                     &mut self.sampler,
                     with_stats,
+                    &clock,
                 )
             };
             let r = match round {
@@ -764,13 +911,53 @@ impl<'b> Server<'b> {
                     .map_or(r.committed.len(), |p| p + 1),
                 None => r.committed.len(),
             };
-            self.metrics.record_spec_round(streamed, r.drafted, r.accepted, t0.elapsed());
+            let dur_us = clock.now_us().saturating_sub(t0_us);
+            self.metrics.record_spec_round(
+                streamed,
+                r.drafted,
+                r.accepted,
+                Duration::from_micros(dur_us),
+            );
             self.metrics
                 .record_spec_kernel(self.kernel_us().saturating_sub(kern0));
-            self.metrics.record_cache_used(self.cache.used_tokens() + self.draft_tokens_used());
+            self.sample_cache_occupancy();
             self.spec_ctrl.observe(r.accepted, r.drafted);
 
             let gen = self.calibrator.generation();
+            if self.trace.enabled() {
+                // round span + draft/verify children, clamped so the
+                // children always nest inside the round
+                let id = seqs[i].id;
+                let draft = r.draft_us.min(dur_us);
+                let verify = r.verify_us.min(dur_us.saturating_sub(draft));
+                self.trace.record(&TraceEvent {
+                    kind: SpanKind::SpecRound,
+                    seq: id,
+                    start_us: t0_us,
+                    dur_us,
+                    weight_version: gen,
+                    a: r.drafted as u64,
+                    b: r.accepted as u64,
+                });
+                self.trace.record(&TraceEvent {
+                    kind: SpanKind::Draft,
+                    seq: id,
+                    start_us: t0_us,
+                    dur_us: draft,
+                    weight_version: gen,
+                    a: r.drafted as u64,
+                    b: 0,
+                });
+                self.trace.record(&TraceEvent {
+                    kind: SpanKind::Verify,
+                    seq: id,
+                    start_us: t0_us + draft,
+                    dur_us: verify,
+                    weight_version: gen,
+                    a: r.drafted as u64 + 1,
+                    b: r.accepted as u64,
+                });
+            }
             // verifier-side stats (present only for fully-committed
             // windows — see RoundOut) keep feeding the calibrator, so
             // drift can requantize (and swap) the drafter mid-generation
@@ -812,11 +999,42 @@ impl<'b> Server<'b> {
         let Some(stats) = stats else { return Ok(()) };
         self.calibrator.observe(stats);
         if self.calibrator.needs_requant() {
-            let t0 = Instant::now();
+            // snapshot the evidence *before* commit resets it — this is
+            // the introspection record that explains the decision
+            let layer_drifts = self.calibrator.drifts();
+            let max_drift = layer_drifts.iter().cloned().fold(0.0, f64::max);
+            let threshold = self.calibrator.drift_threshold();
+            let tokens_since_last = self.calibrator.tokens_since_commit() as u64;
+            let from_version = self.calibrator.generation();
+            let t0_us = self.clock.now_us();
             let diags = self.calibrator.commit();
             self.ev
                 .apply_diags(&diags, &self.cfg.method, &self.cfg.spec)?;
-            self.metrics.record_requant(t0.elapsed());
+            let quant_us = self.clock.now_us().saturating_sub(t0_us);
+            self.metrics.record_requant(Duration::from_micros(quant_us));
+            let to_version = self.calibrator.generation();
+            if self.trace.enabled() {
+                self.trace.record(&TraceEvent {
+                    kind: SpanKind::Requant,
+                    seq: ENGINE_SEQ,
+                    start_us: t0_us,
+                    dur_us: quant_us,
+                    weight_version: to_version,
+                    a: from_version,
+                    // ∞ (never-quantized) saturates to u64::MAX
+                    b: (max_drift * 1e6) as u64,
+                });
+            }
+            self.requant_events.push(RequantEvent {
+                at_us: t0_us,
+                from_version,
+                to_version,
+                max_drift,
+                threshold,
+                tokens_since_last,
+                quant_us,
+                layer_drifts,
+            });
             // the drafter weights just changed generation (version bump
             // repacks them transparently); the old acceptance history
             // says nothing about the new drafter
@@ -835,7 +1053,22 @@ impl<'b> Server<'b> {
                 st.draft_cache.release(ds.kv);
             }
         }
-        self.metrics.record_latency(seq.arrived.elapsed());
+        let latency_us = self.clock.now_us().saturating_sub(seq.arrived_us);
+        self.metrics
+            .record_latency(Duration::from_micros(latency_us));
+        if self.trace.enabled() {
+            // the request's root span: every decode/spec/prefill span
+            // of this id falls inside [arrived_us, arrived_us + latency]
+            self.trace.record(&TraceEvent {
+                kind: SpanKind::Request,
+                seq: seq.id,
+                start_us: seq.arrived_us,
+                dur_us: latency_us,
+                weight_version: self.calibrator.generation(),
+                a: seq.generated.len() as u64,
+                b: seq.prompt_len as u64,
+            });
+        }
         let stop = if self.cfg.eos.is_some_and(|e| seq.generated.last() == Some(&e)) {
             StopReason::Eos
         } else if seq.max_new < self.cfg.max_new_tokens {

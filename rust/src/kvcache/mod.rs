@@ -101,6 +101,20 @@ pub struct CacheStats {
     pub high_water_tokens: usize,
 }
 
+impl CacheStats {
+    /// Fraction of the token capacity currently occupied, in `[0, 1]`
+    /// (0 for a zero-capacity cache) — the value behind the exported
+    /// `kv_cache_tokens` occupancy counter track
+    /// (`docs/OBSERVABILITY.md`).
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_tokens == 0 {
+            0.0
+        } else {
+            self.used_tokens as f64 / self.capacity_tokens as f64
+        }
+    }
+}
+
 /// The slab: `slots` preallocated sequences, recycled across requests.
 pub struct KvCache {
     cfg: KvCacheConfig,
@@ -303,6 +317,8 @@ mod tests {
         assert_eq!(st.used_tokens, 4);
         assert_eq!(st.capacity_tokens, 48);
         assert_eq!(st.high_water_tokens, 4);
+        assert!((st.utilization() - 4.0 / 48.0).abs() < 1e-12);
+        assert_eq!(CacheStats::default().utilization(), 0.0, "0-capacity → 0");
         // high water survives release
         c.release(id);
         assert_eq!(c.stats().used_tokens, 0);

@@ -47,6 +47,12 @@
 //!   and both KV caches roll back to the first rejection — greedy
 //!   output stays token-identical to the fp32 model while decode rides
 //!   the cheap drafter. Adaptive draft depth from an acceptance EWMA.
+//! * [`obs`] — serving-path observability: the [`obs::Clock`]
+//!   abstraction (real vs. deterministic test clock), a lock-free span
+//!   ring buffer recording the request lifecycle, HDR-style latency
+//!   histograms (the repo's single percentile implementation), per-
+//!   requant drift introspection, and Chrome-trace / Prometheus / JSON
+//!   exporters (`docs/OBSERVABILITY.md`).
 //! * [`eval`] — perplexity / accuracy / success-rate pipelines; plans
 //!   stats collection from [`quant::StatsRequirement`]; token
 //!   [`eval::Sampler`]s (greedy / temperature / top-k).
@@ -71,6 +77,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod linalg;
 pub mod models;
+pub mod obs;
 pub mod perfmodel;
 pub mod quant;
 pub mod runtime;

@@ -34,6 +34,11 @@
 //!   its wall time to a cumulative counter ([`WorkerPool::kernel_us`]),
 //!   which the serving metrics split per phase (prefill / decode /
 //!   speculative).
+//! * **Span recording.** Once a server attaches its trace ring
+//!   ([`WorkerPool::attach_trace`]), every pooled dispatch additionally
+//!   records a [`crate::obs::SpanKind::Kernel`] span timed on the
+//!   server's [`crate::obs::Clock`]; serial fallbacks are never
+//!   recorded (they would flood the ring at decode time).
 //!
 //! One pool is meant to be shared by everything that executes kernels:
 //! [`crate::backend::NativeBackend`] owns an `Arc<WorkerPool>`, and the
@@ -67,9 +72,10 @@
 //! assert_eq!(data[777], 777);
 //! ```
 
+use crate::obs::{Clock, SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};
 use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::sync::thread::JoinHandle;
-use crate::sync::{Arc, Condvar, Mutex, PoisonError};
+use crate::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
@@ -200,6 +206,14 @@ pub struct WorkerPool {
     /// single-occupancy by design.
     dispatch_gate: Mutex<()>,
     kernel_us: AtomicU64,
+    /// Pooled (multi-lane) dispatches posted so far.
+    dispatches: AtomicU64,
+    /// Observability hook: once attached ([`WorkerPool::attach_trace`]),
+    /// every pooled dispatch records a [`SpanKind::Kernel`] span on the
+    /// server's trace ring, timed on the server's [`Clock`] so kernel
+    /// spans nest consistently inside request spans in the exported
+    /// Chrome trace. Unset (the default) costs one `OnceLock::get`.
+    trace: OnceLock<(Arc<TraceBuffer>, Clock)>,
 }
 
 impl WorkerPool {
@@ -234,7 +248,25 @@ impl WorkerPool {
             threads,
             dispatch_gate: Mutex::new(()),
             kernel_us: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
+            trace: OnceLock::new(),
         }
+    }
+
+    /// Attach a span recorder + clock: from now on every *pooled*
+    /// dispatch (serial fallbacks are below the floor by definition and
+    /// would flood the ring) records a [`SpanKind::Kernel`] span with
+    /// `a` = rows and `b` = lanes. First attachment wins; later calls
+    /// are ignored so drafter/verifier backends sharing one pool cannot
+    /// re-point it mid-serve.
+    pub fn attach_trace(&self, trace: Arc<TraceBuffer>, clock: Clock) {
+        let _ = self.trace.set((trace, clock));
+    }
+
+    /// Pooled dispatches posted so far (serial inline calls excluded).
+    pub fn dispatch_count(&self) -> u64 {
+        // Relaxed: monotone metrics counter, same argument as kernel_us.
+        self.dispatches.load(Ordering::Relaxed)
     }
 
     /// The hardware-sized lane count: `available_parallelism`, capped
@@ -322,7 +354,25 @@ impl WorkerPool {
                 };
                 f(r0, window);
             };
+            let span_t0 = self
+                .trace
+                .get()
+                .filter(|(t, _)| t.enabled())
+                .map(|(_, c)| c.now_us());
             self.dispatch(n_chunks, &task);
+            // Relaxed: metrics counter; see `kernel_us`.
+            self.dispatches.fetch_add(1, Ordering::Relaxed);
+            if let (Some(start), Some((trace, clock))) = (span_t0, self.trace.get()) {
+                trace.record(&TraceEvent {
+                    kind: SpanKind::Kernel,
+                    seq: ENGINE_SEQ,
+                    start_us: start,
+                    dur_us: clock.now_us().saturating_sub(start),
+                    weight_version: 0,
+                    a: rows as u64,
+                    b: lanes as u64,
+                });
+            }
         }
         // Relaxed: metrics counter; see `kernel_us` for the argument.
         self.kernel_us
@@ -528,6 +578,34 @@ mod tests {
             });
             assert_eq!(after[63], 63, "round {round}: pool bricked");
         }
+    }
+
+    #[test]
+    fn attached_trace_records_kernel_spans() {
+        let pool = WorkerPool::new(2);
+        let trace = Arc::new(TraceBuffer::new(32));
+        pool.attach_trace(trace.clone(), Clock::test(7));
+        // first attachment wins — this one must be ignored
+        pool.attach_trace(Arc::new(TraceBuffer::disabled()), Clock::real());
+        assert_eq!(pool.dispatch_count(), 0);
+        let mut data = vec![0u64; 64];
+        pool.run_rows(&mut data, 64, 1, FORCE, |r0, w| {
+            for (i, v) in w.iter_mut().enumerate() {
+                *v = (r0 + i) as u64;
+            }
+        });
+        assert_eq!(pool.dispatch_count(), 1);
+        let snap = trace.snapshot();
+        assert_eq!(snap.len(), 1, "one pooled dispatch → one kernel span");
+        let e = &snap[0];
+        assert_eq!(e.kind, SpanKind::Kernel);
+        assert_eq!(e.seq, ENGINE_SEQ);
+        assert_eq!((e.a, e.b), (64, 2), "a = rows, b = lanes");
+        assert!(e.dur_us >= 7, "test clock ticks under the span");
+        // serial fallback (below the floor) records nothing
+        pool.run_rows(&mut data, 64, 1, 0, |_r0, _w| {});
+        assert_eq!(pool.dispatch_count(), 1);
+        assert_eq!(trace.snapshot().len(), 1);
     }
 
     #[test]

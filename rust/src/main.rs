@@ -55,6 +55,8 @@ USAGE:
                   [--rank R] [--domains d1,d2] [--backend B] [--exec-quant Q]
                   [--max-new-tokens T] [--prompt-len L] [--cache-slots S]
                   [--speculative] [--spec-k K] [--threads T]
+                  [--trace-out FILE] [--metrics-out FILE] [--prom-out FILE]
+                  [--trace-capacity N]
   ttq-serve info
 
 SERVING (decode engine):
@@ -68,6 +70,17 @@ SERVING (decode engine):
   serving weights draft up to K tokens per round (--spec-k, adaptive by
   default) and a full-precision verifier commits them in one batched
   cached forward — the streamed tokens are exactly the fp32 model's.
+
+OBSERVABILITY (docs/OBSERVABILITY.md):
+  --trace-out FILE     write the recorded span trace as Chrome trace-event
+                       JSON (open at https://ui.perfetto.dev)
+  --metrics-out FILE   write a JSON metrics snapshot (counters + latency
+                       histograms with p50/p95/p99 and bucket tables)
+  --prom-out FILE      write Prometheus text exposition of the same metrics
+  --trace-capacity N   span ring size in events (default 16384; 0 disables
+                       recording entirely)
+  Requant events (drift vs threshold, top drifted layers, quantization
+  wall time) are printed after the run whenever the calibrator fired.
 
 BACKENDS:
   pjrt     AOT HLO artifacts via the PJRT client (needs `make artifacts`)
@@ -267,6 +280,10 @@ fn cmd_serve(a: &Args) -> Result<()> {
     cfg.policy = BatchPolicy::default();
     cfg.max_new_tokens = a.get_usize("max-new-tokens", 8).max(1);
     cfg.cache_slots = a.get_usize("cache-slots", 16).max(1);
+    cfg.trace_capacity = a.get_usize(
+        "trace-capacity",
+        ttq_serve::coordinator::DEFAULT_TRACE_CAPACITY,
+    );
     let speculative = a.has("speculative");
     cfg.specdec = ttq_serve::specdec::SpecConfig::new(a.get_usize("spec-k", 4));
     let requests = a.get_usize("requests", 64);
@@ -305,7 +322,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         } else {
             server.submit(toks);
         }
-        count(&server.step(Instant::now())?);
+        count(&server.step()?);
     }
     count(&server.drain()?);
     println!(
@@ -327,6 +344,29 @@ fn cmd_serve(a: &Args) -> Result<()> {
             server.spec_controller().acceptance(),
             server.spec_controller().k()
         );
+    }
+    for ev in server.requant_events() {
+        println!("requant: {}", ev.describe());
+        for (layer, drift) in ev.top_layers(3) {
+            println!("  layer {layer}: drift {drift:.4}");
+        }
+    }
+    if let Some(path) = a.get("trace-out") {
+        let trace = ttq_serve::obs::export::chrome_trace(&server.trace().snapshot());
+        std::fs::write(path, trace)?;
+        println!(
+            "trace: {} events recorded ({} dropped) -> {path}",
+            server.trace().recorded(),
+            server.trace().dropped()
+        );
+    }
+    if let Some(path) = a.get("metrics-out") {
+        std::fs::write(path, ttq_serve::obs::export::metrics_json(&server.metrics))?;
+        println!("metrics snapshot -> {path}");
+    }
+    if let Some(path) = a.get("prom-out") {
+        std::fs::write(path, ttq_serve::obs::export::prometheus(&server.metrics))?;
+        println!("prometheus exposition -> {path}");
     }
     Ok(())
 }

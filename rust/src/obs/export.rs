@@ -1,0 +1,327 @@
+//! Trace and metrics exporters: Chrome trace-event JSON (loads in
+//! Perfetto / `chrome://tracing`), Prometheus-style text exposition,
+//! and a machine-readable JSON metrics snapshot.
+//!
+//! The Chrome format puts each request on its own track (`tid` =
+//! request id + 1) with the engine-wide track at `tid` 0, so decode
+//! and speculative spans nest visually inside their request span and
+//! requants/cache-occupancy show up as engine activity. Open a written
+//! file at <https://ui.perfetto.dev> or `chrome://tracing`.
+//! Field-by-field reference: `docs/OBSERVABILITY.md`.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::Metrics;
+use crate::obs::hist::Hist;
+use crate::obs::trace::{SpanKind, TraceEvent, ENGINE_SEQ};
+use crate::util::json::Value;
+
+/// Chrome trace-event `tid` for an event: engine track 0, requests on
+/// `seq + 1`.
+fn tid_of(ev: &TraceEvent) -> u64 {
+    if ev.seq == ENGINE_SEQ {
+        0
+    } else {
+        ev.seq + 1
+    }
+}
+
+/// Kind-specific argument names for the two payload words, in `(a, b)`
+/// order; `None` hides the word in the export.
+fn arg_names(kind: SpanKind) -> (Option<&'static str>, Option<&'static str>) {
+    match kind {
+        SpanKind::Request => (Some("generated_tokens"), Some("prompt_len")),
+        SpanKind::Admit => (Some("prompt_len"), None),
+        SpanKind::Prefill => (Some("prompt_tokens"), Some("rows")),
+        SpanKind::DecodeStep => (Some("kernel_us"), Some("rows")),
+        SpanKind::SpecRound => (Some("drafted"), Some("accepted")),
+        SpanKind::Draft => (Some("drafted"), None),
+        SpanKind::Verify => (Some("rows"), Some("accepted")),
+        SpanKind::Requant => (Some("from_version"), Some("max_drift_ppm")),
+        SpanKind::CacheOccupancy => (Some("used_tokens"), Some("capacity_tokens")),
+        SpanKind::Kernel => (Some("rows"), Some("lanes")),
+    }
+}
+
+fn num(v: u64) -> Value {
+    Value::Num(v as f64)
+}
+
+/// Render recorded events as Chrome trace-event JSON
+/// (`{"traceEvents": [...]}`), directly loadable in Perfetto.
+/// Duration spans become `"ph": "X"` complete events; counter kinds
+/// ([`SpanKind::is_counter`]) become `"ph": "C"` counter samples.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    let mut out: Vec<Value> = Vec::with_capacity(events.len() + 8);
+    let mut meta = |name: &str, tid: u64, arg: &str| {
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Value::Str(arg.to_string()));
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Value::Str(name.to_string()));
+        o.insert("ph".to_string(), Value::Str("M".to_string()));
+        o.insert("pid".to_string(), num(1));
+        o.insert("tid".to_string(), num(tid));
+        o.insert("args".to_string(), Value::Obj(args));
+        out.push(Value::Obj(o));
+    };
+    meta("process_name", 0, "ttq-serve");
+    meta("thread_name", 0, "engine");
+    let mut seen: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+    for ev in events {
+        if ev.seq != ENGINE_SEQ && seen.insert(ev.seq) {
+            meta("thread_name", ev.seq + 1, &format!("request {}", ev.seq));
+        }
+    }
+    for ev in events {
+        let mut args = BTreeMap::new();
+        args.insert("weight_version".to_string(), num(ev.weight_version));
+        let (an, bn) = arg_names(ev.kind);
+        if let Some(an) = an {
+            args.insert(an.to_string(), num(ev.a));
+        }
+        if let Some(bn) = bn {
+            args.insert(bn.to_string(), num(ev.b));
+        }
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Value::Str(ev.kind.name().to_string()));
+        o.insert("cat".to_string(), Value::Str("serve".to_string()));
+        o.insert("pid".to_string(), num(1));
+        o.insert("tid".to_string(), num(tid_of(ev)));
+        o.insert("ts".to_string(), num(ev.start_us));
+        if ev.kind.is_counter() {
+            o.insert("ph".to_string(), Value::Str("C".to_string()));
+        } else {
+            o.insert("ph".to_string(), Value::Str("X".to_string()));
+            o.insert("dur".to_string(), num(ev.dur_us));
+        }
+        o.insert("args".to_string(), Value::Obj(args));
+        out.push(Value::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("displayTimeUnit".to_string(), Value::Str("ms".to_string()));
+    top.insert("traceEvents".to_string(), Value::Arr(out));
+    Value::Obj(top).to_json()
+}
+
+/// One Prometheus counter line with a `# TYPE` header.
+fn prom_counter(out: &mut String, name: &str, kind: &str, v: u64) {
+    out.push_str(&format!("# TYPE {name} {kind}\n{name} {v}\n"));
+}
+
+/// One histogram in Prometheus exposition format: cumulative
+/// `_bucket{{le=...}}` lines over the non-empty buckets, then
+/// `_sum`/`_count`.
+fn prom_hist(out: &mut String, name: &str, h: &Hist) {
+    out.push_str(&format!("# TYPE {name} histogram\n"));
+    let mut cum = 0u64;
+    for b in h.nonzero_buckets() {
+        cum += b.count;
+        out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", b.hi));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+    out.push_str(&format!("{name}_count {}\n", h.count()));
+}
+
+/// Prometheus-style text exposition of every metrics family
+/// (counters, gauges and the three latency histograms, all in
+/// microseconds where time-valued).
+pub fn prometheus(m: &Metrics) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut s = String::new();
+    let counters: [(&str, u64); 14] = [
+        ("ttq_requests_total", m.requests.load(Relaxed)),
+        ("ttq_requests_completed_total", m.completed.load(Relaxed)),
+        ("ttq_batches_total", m.batches.load(Relaxed)),
+        ("ttq_padded_rows_total", m.padded_rows.load(Relaxed)),
+        ("ttq_tokens_total", m.tokens.load(Relaxed)),
+        ("ttq_prefill_tokens_total", m.prefill_tokens.load(Relaxed)),
+        ("ttq_decode_tokens_total", m.decode_tokens.load(Relaxed)),
+        ("ttq_decode_steps_total", m.decode_steps.load(Relaxed)),
+        ("ttq_requants_total", m.requants.load(Relaxed)),
+        ("ttq_quant_us_total", m.quant_us.load(Relaxed)),
+        ("ttq_exec_us_total", m.exec_us.load(Relaxed)),
+        ("ttq_spec_rounds_total", m.spec_rounds.load(Relaxed)),
+        ("ttq_spec_drafted_total", m.spec_drafted.load(Relaxed)),
+        ("ttq_spec_accepted_total", m.spec_accepted.load(Relaxed)),
+    ];
+    for (name, v) in counters {
+        prom_counter(&mut s, name, "counter", v);
+    }
+    prom_counter(
+        &mut s,
+        "ttq_kv_cache_high_water_tokens",
+        "gauge",
+        m.cache_hwm_tokens.load(Relaxed),
+    );
+    prom_counter(
+        &mut s,
+        "ttq_kernel_us_total",
+        "counter",
+        m.prefill_kernel_us.load(Relaxed)
+            + m.decode_kernel_us.load(Relaxed)
+            + m.spec_kernel_us.load(Relaxed),
+    );
+    prom_hist(&mut s, "ttq_request_latency_us", &m.latency_hist);
+    prom_hist(&mut s, "ttq_decode_step_us", &m.decode_step_hist);
+    prom_hist(&mut s, "ttq_spec_round_us", &m.spec_round_hist);
+    s
+}
+
+/// A histogram as JSON: count, sum, p50/p95/p99 and the non-empty
+/// `[lo, hi, count]` buckets.
+fn hist_value(h: &Hist) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("count".to_string(), num(h.count()));
+    o.insert("sum".to_string(), num(h.sum()));
+    o.insert("p50".to_string(), Value::Num(h.p50()));
+    o.insert("p95".to_string(), Value::Num(h.p95()));
+    o.insert("p99".to_string(), Value::Num(h.p99()));
+    o.insert(
+        "buckets".to_string(),
+        Value::Arr(
+            h.nonzero_buckets()
+                .iter()
+                .map(|b| Value::Arr(vec![num(b.lo), num(b.hi), num(b.count)]))
+                .collect(),
+        ),
+    );
+    Value::Obj(o)
+}
+
+/// Machine-readable JSON snapshot of every metrics family, including
+/// the three latency histograms with their bucket tables.
+pub fn metrics_json(m: &Metrics) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut o = BTreeMap::new();
+    let mut put = |k: &str, v: u64| {
+        o.insert(k.to_string(), num(v));
+    };
+    put("requests", m.requests.load(Relaxed));
+    put("completed", m.completed.load(Relaxed));
+    put("batches", m.batches.load(Relaxed));
+    put("padded_rows", m.padded_rows.load(Relaxed));
+    put("tokens", m.tokens.load(Relaxed));
+    put("prefill_tokens", m.prefill_tokens.load(Relaxed));
+    put("decode_tokens", m.decode_tokens.load(Relaxed));
+    put("decode_steps", m.decode_steps.load(Relaxed));
+    put("requants", m.requants.load(Relaxed));
+    put("quant_us", m.quant_us.load(Relaxed));
+    put("exec_us", m.exec_us.load(Relaxed));
+    put("prefill_us", m.prefill_us.load(Relaxed));
+    put("decode_us", m.decode_us.load(Relaxed));
+    put("spec_us", m.spec_us.load(Relaxed));
+    put("spec_rounds", m.spec_rounds.load(Relaxed));
+    put("spec_drafted", m.spec_drafted.load(Relaxed));
+    put("spec_accepted", m.spec_accepted.load(Relaxed));
+    put("cache_hwm_tokens", m.cache_hwm_tokens.load(Relaxed));
+    o.insert(
+        "mean_latency_ms".to_string(),
+        Value::Num(m.mean_latency_ms()),
+    );
+    o.insert("kernel_share".to_string(), Value::Num(m.kernel_share()));
+    o.insert(
+        "spec_acceptance".to_string(),
+        Value::Num(m.spec_acceptance()),
+    );
+    o.insert(
+        "request_latency_us".to_string(),
+        hist_value(&m.latency_hist),
+    );
+    o.insert(
+        "decode_step_us".to_string(),
+        hist_value(&m.decode_step_hist),
+    );
+    o.insert("spec_round_us".to_string(), hist_value(&m.spec_round_hist));
+    Value::Obj(o).to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn span(kind: SpanKind, seq: u64, start: u64, dur: u64) -> TraceEvent {
+        TraceEvent {
+            kind,
+            seq,
+            start_us: start,
+            dur_us: dur,
+            weight_version: 1,
+            a: 7,
+            b: 9,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_tracks_split() {
+        let evs = [
+            span(SpanKind::Request, 0, 0, 100),
+            span(SpanKind::DecodeStep, 0, 10, 5),
+            span(SpanKind::Requant, ENGINE_SEQ, 20, 8),
+            span(SpanKind::CacheOccupancy, ENGINE_SEQ, 25, 0),
+        ];
+        let s = chrome_trace(&evs);
+        let v = Value::parse(&s).expect("valid JSON");
+        let arr = v.field("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process/engine meta + 1 request meta + 4 events
+        assert_eq!(arr.len(), 7);
+        let phases: Vec<&str> = arr
+            .iter()
+            .map(|e| e.field("ph").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(phases.iter().filter(|p| **p == "M").count(), 3);
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 3);
+        assert_eq!(phases.iter().filter(|p| **p == "C").count(), 1);
+        // Requant rides the engine track, request spans their own.
+        for e in arr.iter().filter(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("requant")
+        }) {
+            assert_eq!(e.field("tid").unwrap().as_f64(), Some(0.0));
+        }
+        for e in arr.iter().filter(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("decode_step")
+        }) {
+            assert_eq!(e.field("tid").unwrap().as_f64(), Some(1.0));
+        }
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative() {
+        let m = Metrics::new();
+        m.record_admitted(3, 0);
+        for ms in [1u64, 2, 400] {
+            m.record_latency(Duration::from_millis(ms));
+        }
+        let s = prometheus(&m);
+        assert!(s.contains("ttq_requests_total 3"), "{s}");
+        assert!(s.contains("ttq_request_latency_us_count 3"), "{s}");
+        assert!(s.contains("le=\"+Inf\"} 3"), "{s}");
+        // Cumulative bucket counts never decrease.
+        let mut last = 0u64;
+        for line in s.lines().filter(|l| l.starts_with("ttq_request_latency_us_bucket")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= last, "{line}");
+            last = n;
+        }
+    }
+
+    #[test]
+    fn metrics_json_roundtrips() {
+        let m = Metrics::new();
+        m.record_admitted(1, 0);
+        m.record_decode(1, Duration::from_micros(250));
+        m.record_latency(Duration::from_millis(3));
+        let v = Value::parse(&metrics_json(&m)).expect("valid JSON");
+        assert_eq!(v.field("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(v.field("completed").unwrap().as_usize(), Some(1));
+        let h = v.field("decode_step_us").unwrap();
+        assert_eq!(h.field("count").unwrap().as_usize(), Some(1));
+        let buckets = h.field("buckets").unwrap().as_arr().unwrap();
+        let total: usize = buckets
+            .iter()
+            .map(|b| b.as_arr().unwrap()[2].as_usize().unwrap())
+            .sum();
+        assert_eq!(total, 1);
+    }
+}

@@ -1,0 +1,289 @@
+//! HDR-style log-bucketed histograms, atomics only.
+//!
+//! Values (typically microsecond latencies) are binned into
+//! logarithmic buckets with [`SUB_BUCKETS`] linear sub-buckets per
+//! octave, giving a bounded ≤ ~3% relative quantization error across
+//! the full `u64` range with a fixed 1920-bucket table. Recording is a
+//! single relaxed `fetch_add` — safe to call concurrently from every
+//! serving thread with no locks and no allocation.
+//!
+//! This is the single percentile implementation in the repo:
+//! [`crate::coordinator::Metrics`] holds three of these (request
+//! latency, decode-step time, spec-round time) and
+//! [`crate::bench::throughput`] reuses it instead of sorting a `Vec`
+//! of samples. Bucket scheme reference: `docs/OBSERVABILITY.md`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linear sub-buckets per octave (`2^SUB_BITS`).
+const SUB_BITS: u32 = 5;
+/// Number of linear sub-divisions within each power-of-two octave.
+pub const SUB_BUCKETS: usize = 1 << SUB_BITS;
+/// Total bucket count: one linear octave for values `< 32` plus 59
+/// log octaves covering the rest of the `u64` range.
+pub const NUM_BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB_BUCKETS;
+
+/// Bucket index for a value: identity below [`SUB_BUCKETS`], then
+/// `(octave, top-5-mantissa-bits)`.
+fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros();
+        let octave = (msb - SUB_BITS + 1) as usize;
+        let sub = ((v >> (msb - SUB_BITS)) & (SUB_BUCKETS as u64 - 1)) as usize;
+        octave * SUB_BUCKETS + sub
+    }
+}
+
+/// Smallest value mapping to bucket `idx`.
+fn bucket_lo(idx: usize) -> u64 {
+    let octave = idx / SUB_BUCKETS;
+    let sub = (idx % SUB_BUCKETS) as u64;
+    if octave == 0 {
+        sub
+    } else {
+        (SUB_BUCKETS as u64 + sub) << (octave - 1)
+    }
+}
+
+/// Largest value mapping to bucket `idx`.
+fn bucket_hi(idx: usize) -> u64 {
+    let octave = idx / SUB_BUCKETS;
+    if octave == 0 {
+        bucket_lo(idx)
+    } else {
+        bucket_lo(idx).saturating_add((1u64 << (octave - 1)) - 1)
+    }
+}
+
+/// One non-empty histogram bucket: the closed value range it covers
+/// and how many samples landed in it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistBucket {
+    /// Smallest value in the bucket.
+    pub lo: u64,
+    /// Largest value in the bucket.
+    pub hi: u64,
+    /// Number of recorded samples in `[lo, hi]`.
+    pub count: u64,
+}
+
+/// Concurrent log-bucketed histogram over `u64` samples.
+pub struct Hist {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl std::fmt::Debug for Hist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Hist")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .finish()
+    }
+}
+
+impl Hist {
+    /// Empty histogram (fixed [`NUM_BUCKETS`]-entry table).
+    pub fn new() -> Self {
+        let buckets = (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Hist {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free; callable from any thread.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples (saturating only at `u64` wrap).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Mean sample value, `0.0` when empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum() as f64 / n as f64
+    }
+
+    /// Quantile estimate: midpoint of the bucket containing the
+    /// `ceil(q·count)`-th smallest sample (`q` clamped to `[0, 1]`).
+    /// Monotone in `q` by construction, so `p50 ≤ p95 ≤ p99` always
+    /// holds. Returns `0.0` when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum >= rank {
+                return (bucket_lo(i) as f64 + bucket_hi(i) as f64) / 2.0;
+            }
+        }
+        // Unreachable when count() is consistent with the buckets;
+        // fall back to the largest representable midpoint.
+        (bucket_lo(NUM_BUCKETS - 1) as f64 + bucket_hi(NUM_BUCKETS - 1) as f64) / 2.0
+    }
+
+    /// Median estimate (see [`Hist::percentile`]).
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    /// 95th-percentile estimate (see [`Hist::percentile`]).
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    /// 99th-percentile estimate (see [`Hist::percentile`]).
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    /// All non-empty buckets in ascending value order. The bucket
+    /// counts sum to [`Hist::count`] exactly (asserted in tests and in
+    /// the serve observability suite).
+    pub fn nonzero_buckets(&self) -> Vec<HistBucket> {
+        let mut out = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                out.push(HistBucket {
+                    lo: bucket_lo(i),
+                    hi: bucket_hi(i),
+                    count: c,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_roundtrips() {
+        // Every value maps into a bucket whose [lo, hi] contains it,
+        // and lo/hi themselves map back to the same bucket.
+        for v in (0u64..2048).chain([4095, 4096, 1 << 20, u64::MAX / 3, u64::MAX]) {
+            let i = bucket_index(v);
+            assert!(i < NUM_BUCKETS, "index {i} out of range for {v}");
+            assert!(bucket_lo(i) <= v && v <= bucket_hi(i), "v={v} i={i}");
+            assert_eq!(bucket_index(bucket_lo(i)), i);
+            assert_eq!(bucket_index(bucket_hi(i)), i);
+        }
+    }
+
+    #[test]
+    fn buckets_are_contiguous() {
+        for i in 1..NUM_BUCKETS {
+            assert_eq!(
+                bucket_hi(i - 1).saturating_add(1).max(bucket_lo(i)),
+                bucket_lo(i),
+                "gap or overlap between buckets {} and {}",
+                i - 1,
+                i
+            );
+        }
+    }
+
+    #[test]
+    fn exact_below_linear_range() {
+        let h = Hist::new();
+        for v in 0..SUB_BUCKETS as u64 {
+            h.record(v);
+        }
+        // Below 32 every value has its own bucket: percentiles exact.
+        assert_eq!(h.percentile(1.0 / SUB_BUCKETS as f64), 0.0);
+        assert_eq!(h.p50(), 15.0);
+        assert_eq!(h.percentile(1.0), 31.0);
+    }
+
+    #[test]
+    fn percentiles_monotone_and_bounded() {
+        let h = Hist::new();
+        for i in 0..10_000u64 {
+            h.record(i * 37 % 100_000);
+        }
+        let (p50, p95, p99) = (h.p50(), h.p95(), h.p99());
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // ≤ ~3% relative bucket error at these magnitudes.
+        assert!((p50 - 50_000.0).abs() / 50_000.0 < 0.05, "p50={p50}");
+        assert!((p95 - 95_000.0).abs() / 95_000.0 < 0.05, "p95={p95}");
+        let n: u64 = h.nonzero_buckets().iter().map(|b| b.count).sum();
+        assert_eq!(n, h.count());
+    }
+
+    #[test]
+    fn empty_hist_is_zero() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn mean_matches_sum() {
+        let h = Hist::new();
+        for v in [1u64, 2, 3, 4] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 2.5);
+        assert_eq!(h.sum(), 10);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = std::sync::Arc::new(Hist::new());
+        let per = if cfg!(miri) { 50 } else { 5_000 };
+        let hs: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                crate::sync::thread::spawn_named("hist-test", move || {
+                    for i in 0..per {
+                        h.record((t * per + i) as u64);
+                    }
+                })
+            })
+            .collect();
+        for j in hs {
+            let _ = j.join();
+        }
+        assert_eq!(h.count(), 4 * per as u64);
+        let n: u64 = h.nonzero_buckets().iter().map(|b| b.count).sum();
+        assert_eq!(n, h.count());
+    }
+}

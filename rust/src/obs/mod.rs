@@ -1,0 +1,40 @@
+//! Serving-path observability: span tracing, latency histograms,
+//! calibration drift introspection and trace/metrics exporters.
+//!
+//! TTQ's whole pitch is *on-the-fly* adaptation — per-prompt online
+//! calibration and drift-triggered requantization — so the serving
+//! path must be able to show its work: when a requant fired, what the
+//! per-layer drift looked like, how long quantization stalled decode,
+//! and where each request spent its wall time. This module is that
+//! layer, split into four pieces:
+//!
+//! - [`clock`] — the [`Clock`] abstraction every serving-path
+//!   timestamp goes through (repo-lint R6). A real monotonic clock in
+//!   production, a deterministic auto-advancing clock in tests, so
+//!   span trees are exactly reproducible.
+//! - [`trace`] — a lock-free fixed-capacity span ring buffer
+//!   ([`TraceBuffer`]) recording the request lifecycle
+//!   (`admit → prefill → decode_step* → spec_round* → requant →
+//!   done`). Built on [`crate::sync`] atomics only, so the recorder
+//!   itself is model-checked (`rust/tests/loom_obs.rs`).
+//! - [`hist`] — HDR-style log-bucketed histograms ([`Hist`]) giving
+//!   `Metrics` p50/p95/p99 for request latency, decode-step time and
+//!   spec-round time; [`crate::bench::throughput`] reuses the same
+//!   implementation instead of sorting a `Vec`.
+//! - [`requant`] + [`export`] — per-requant introspection records
+//!   ([`RequantEvent`]) and exporters: Chrome trace-event JSON
+//!   (loadable in Perfetto / `chrome://tracing`), Prometheus-style
+//!   text exposition, and a machine-readable JSON metrics snapshot.
+//!
+//! Format and span taxonomy reference: `docs/OBSERVABILITY.md`.
+
+pub mod clock;
+pub mod export;
+pub mod hist;
+pub mod requant;
+pub mod trace;
+
+pub use clock::Clock;
+pub use hist::{Hist, HistBucket};
+pub use requant::RequantEvent;
+pub use trace::{SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};

@@ -1,0 +1,110 @@
+//! Per-requantization introspection records.
+//!
+//! Every drift-triggered requant on the serving path produces one
+//! [`RequantEvent`] capturing *why* it fired (per-layer drift scores
+//! vs. the configured threshold), *what it saw* (tokens observed since
+//! the previous requant) and *what it cost* (quantization wall time,
+//! old → new weight generation). The server accumulates them
+//! (`Server::requant_events`); `examples/trace_generate.rs` prints
+//! them and the observability test suite asserts on them.
+
+/// One drift-triggered requantization, as observed by the server.
+#[derive(Clone, Debug)]
+pub struct RequantEvent {
+    /// When the requant started, microseconds on the server clock.
+    pub at_us: u64,
+    /// Weight generation before the requant.
+    pub from_version: u64,
+    /// Weight generation after the requant.
+    pub to_version: u64,
+    /// Maximum per-layer drift score at trigger time (`f64::INFINITY`
+    /// for a layer that had never been quantized).
+    pub max_drift: f64,
+    /// The calibrator's configured drift threshold.
+    pub threshold: f64,
+    /// Tokens observed by the calibrator since the previous commit.
+    pub tokens_since_last: u64,
+    /// Wall time spent requantizing and swapping weights,
+    /// microseconds.
+    pub quant_us: u64,
+    /// Drift score per layer at trigger time, indexed by layer.
+    pub layer_drifts: Vec<f64>,
+}
+
+impl RequantEvent {
+    /// True when the trigger drift actually exceeded the threshold
+    /// (always the case for requants fired by the drift rule; asserted
+    /// by the observability suite).
+    pub fn drift_exceeded(&self) -> bool {
+        self.max_drift > self.threshold
+    }
+
+    /// The `n` most-drifted layers as `(layer index, drift score)`,
+    /// most drifted first. Never-quantized layers (infinite drift)
+    /// sort first.
+    pub fn top_layers(&self, n: usize) -> Vec<(usize, f64)> {
+        let mut v: Vec<(usize, f64)> = self.layer_drifts.iter().cloned().enumerate().collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
+        v.truncate(n);
+        v
+    }
+
+    /// One-line human-readable summary (used by the CLI and example).
+    pub fn describe(&self) -> String {
+        format!(
+            "t={:.3}ms v{}→v{} drift={:.4} (threshold {:.4}) tokens_since={} quant={:.2}ms",
+            self.at_us as f64 / 1e3,
+            self.from_version,
+            self.to_version,
+            self.max_drift,
+            self.threshold,
+            self.tokens_since_last,
+            self.quant_us as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event() -> RequantEvent {
+        RequantEvent {
+            at_us: 1_500,
+            from_version: 3,
+            to_version: 4,
+            max_drift: 0.21,
+            threshold: 0.05,
+            tokens_since_last: 640,
+            quant_us: 2_200,
+            layer_drifts: vec![0.01, 0.21, f64::INFINITY, 0.07],
+        }
+    }
+
+    #[test]
+    fn top_layers_sorted_desc_with_infinities_first() {
+        let e = event();
+        let top = e.top_layers(3);
+        assert_eq!(top.len(), 3);
+        assert_eq!(top[0].0, 2);
+        assert!(top[0].1.is_infinite());
+        assert_eq!(top[1], (1, 0.21));
+        assert_eq!(top[2], (3, 0.07));
+    }
+
+    #[test]
+    fn drift_exceeded_compares_against_threshold() {
+        let mut e = event();
+        assert!(e.drift_exceeded());
+        e.max_drift = 0.04;
+        assert!(!e.drift_exceeded());
+    }
+
+    #[test]
+    fn describe_mentions_versions_and_drift() {
+        let s = event().describe();
+        assert!(s.contains("v3→v4"), "{s}");
+        assert!(s.contains("0.2100"), "{s}");
+        assert!(s.contains("tokens_since=640"), "{s}");
+    }
+}

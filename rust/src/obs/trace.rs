@@ -1,0 +1,370 @@
+//! Lock-free fixed-capacity span ring buffer for the serving path.
+//!
+//! The recorder is a seqlock-style ticket ring: writers claim a
+//! monotonically increasing ticket with one `fetch_add`, mark the slot
+//! as in-progress (odd sequence word), store the payload, then publish
+//! (even sequence word). Readers ([`TraceBuffer::snapshot`]) validate
+//! the sequence word before *and* after reading the payload and drop
+//! any slot a writer touched in between — a snapshot never blocks a
+//! writer and never returns a torn record. On wraparound the oldest
+//! records are silently overwritten (dropped), never blocking the
+//! serving loop; [`TraceBuffer::dropped`] reports how many.
+//!
+//! Built exclusively on [`crate::sync`] atomics (`load` / `store` /
+//! `fetch_add`, the subset the in-tree model checker instruments), so
+//! the whole protocol is explored exhaustively under `--cfg loom` in
+//! `rust/tests/loom_obs.rs`. All accesses are `SeqCst`: the model
+//! checker is sequentially consistent, and recording is a handful of
+//! stores on an already-synchronizing serving path — clarity over
+//! nanoseconds.
+//!
+//! Span taxonomy and payload conventions: `docs/OBSERVABILITY.md`.
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+
+/// Sequence id used for engine-wide spans (requant, cache occupancy,
+/// kernels) that do not belong to any single request.
+pub const ENGINE_SEQ: u64 = u64::MAX;
+
+/// `u64` words per ring slot: one sequence word + the 7 payload words
+/// of a [`TraceEvent`].
+const WORDS: usize = 8;
+
+/// What a span or instant event measures. The `a`/`b` payload words of
+/// a [`TraceEvent`] are kind-specific (documented per variant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Whole request lifetime, arrival to `Done`. `a` = generated
+    /// tokens, `b` = prompt length.
+    Request = 0,
+    /// Queue wait: arrival to admission. `a` = prompt length.
+    Admit = 1,
+    /// Prompt prefill forward for one request's batch group.
+    /// `a` = total prompt tokens in the group, `b` = group rows.
+    Prefill = 2,
+    /// One batched decode step, recorded per participating sequence.
+    /// `a` = kernel microseconds attributed to the step, `b` = rows.
+    DecodeStep = 3,
+    /// One speculative draft+verify round. `a` = tokens drafted,
+    /// `b` = tokens accepted.
+    SpecRound = 4,
+    /// Drafter phase of a speculative round. `a` = tokens drafted.
+    Draft = 5,
+    /// Verifier phase of a speculative round. `a` = rows verified,
+    /// `b` = tokens accepted.
+    Verify = 6,
+    /// Drift-triggered requantization. `weight_version` = new
+    /// generation, `a` = old generation, `b` = max drift in parts per
+    /// million.
+    Requant = 7,
+    /// KV-cache occupancy sample (instant). `a` = used tokens,
+    /// `b` = capacity tokens.
+    CacheOccupancy = 8,
+    /// One pooled kernel dispatch on the worker pool. `a` = rows,
+    /// `b` = lanes participating.
+    Kernel = 9,
+}
+
+impl SpanKind {
+    /// Decode a payload word back into a kind; `None` for garbage
+    /// (a torn or never-written slot that slipped every other guard).
+    pub fn from_u64(v: u64) -> Option<SpanKind> {
+        Some(match v {
+            0 => SpanKind::Request,
+            1 => SpanKind::Admit,
+            2 => SpanKind::Prefill,
+            3 => SpanKind::DecodeStep,
+            4 => SpanKind::SpecRound,
+            5 => SpanKind::Draft,
+            6 => SpanKind::Verify,
+            7 => SpanKind::Requant,
+            8 => SpanKind::CacheOccupancy,
+            9 => SpanKind::Kernel,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase name used by the exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Admit => "admit",
+            SpanKind::Prefill => "prefill",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::SpecRound => "spec_round",
+            SpanKind::Draft => "draft",
+            SpanKind::Verify => "verify",
+            SpanKind::Requant => "requant",
+            SpanKind::CacheOccupancy => "kv_cache_tokens",
+            SpanKind::Kernel => "kernel",
+        }
+    }
+
+    /// True for instant counter samples (exported as Chrome `"C"`
+    /// events) rather than duration spans.
+    pub fn is_counter(self) -> bool {
+        matches!(self, SpanKind::CacheOccupancy)
+    }
+}
+
+/// One recorded span or instant event. All times are microseconds on
+/// the owning server's [`crate::obs::Clock`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// What this event measures.
+    pub kind: SpanKind,
+    /// Owning request id, or [`ENGINE_SEQ`] for engine-wide events.
+    pub seq: u64,
+    /// Span start, microseconds.
+    pub start_us: u64,
+    /// Span duration, microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// Weight generation current when the span was recorded.
+    pub weight_version: u64,
+    /// Kind-specific payload (see [`SpanKind`]).
+    pub a: u64,
+    /// Kind-specific payload (see [`SpanKind`]).
+    pub b: u64,
+}
+
+/// Lock-free bounded span recorder. Capacity 0 disables recording
+/// entirely ([`TraceBuffer::record`] becomes a no-op), which is how
+/// the ≤ 2% recorder-overhead gate measures its baseline.
+pub struct TraceBuffer {
+    cap: usize,
+    /// Total tickets ever claimed; slot for ticket `t` is `t % cap`.
+    head: AtomicU64,
+    /// `cap * WORDS` words; word 0 of each slot is the sequence word
+    /// (`2t+1` while writing ticket `t`, `2t+2` once published).
+    cells: Box<[AtomicU64]>,
+}
+
+impl std::fmt::Debug for TraceBuffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceBuffer")
+            .field("capacity", &self.cap)
+            .field("recorded", &self.recorded())
+            .finish()
+    }
+}
+
+impl TraceBuffer {
+    /// Ring holding the most recent `capacity` events (0 = disabled).
+    pub fn new(capacity: usize) -> Self {
+        let cells = (0..capacity * WORDS).map(|_| AtomicU64::new(0)).collect();
+        TraceBuffer {
+            cap: capacity,
+            head: AtomicU64::new(0),
+            cells,
+        }
+    }
+
+    /// A disabled recorder: every [`TraceBuffer::record`] is a no-op.
+    pub fn disabled() -> Self {
+        TraceBuffer::new(0)
+    }
+
+    /// True when the buffer actually records (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        if self.cap == 0 {
+            0
+        } else {
+            self.head.load(Ordering::SeqCst)
+        }
+    }
+
+    /// Events lost to wraparound so far.
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.cap as u64)
+    }
+
+    /// Record one event. Lock-free and wait-free apart from the single
+    /// ticket `fetch_add`; on a full ring the oldest event is
+    /// overwritten. Never blocks the serving loop.
+    pub fn record(&self, ev: &TraceEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        // Claim a unique ticket; tickets are never reused, so sequence
+        // words are unique across the buffer's lifetime (no ABA).
+        let t = self.head.fetch_add(1, Ordering::SeqCst);
+        let base = (t as usize % self.cap) * WORDS;
+        // Odd = write in progress. Invariant checked by loom model
+        // `writers_never_tear` in rust/tests/loom_obs.rs: a reader that
+        // sees the same even word before and after its payload reads
+        // observed no concurrent writer on the slot.
+        self.cells[base].store(t.wrapping_mul(2).wrapping_add(1), Ordering::SeqCst);
+        self.cells[base + 1].store(ev.kind as u64, Ordering::SeqCst);
+        self.cells[base + 2].store(ev.seq, Ordering::SeqCst);
+        self.cells[base + 3].store(ev.start_us, Ordering::SeqCst);
+        self.cells[base + 4].store(ev.dur_us, Ordering::SeqCst);
+        self.cells[base + 5].store(ev.weight_version, Ordering::SeqCst);
+        self.cells[base + 6].store(ev.a, Ordering::SeqCst);
+        self.cells[base + 7].store(ev.b, Ordering::SeqCst);
+        // Even = published for ticket t.
+        self.cells[base].store(t.wrapping_mul(2).wrapping_add(2), Ordering::SeqCst);
+    }
+
+    /// Consistent copy of the currently retained events, oldest first.
+    /// Slots a concurrent writer is touching are skipped, never read
+    /// torn: the sequence word is checked before and after the payload
+    /// reads, and any concurrent writer must flip it to its own odd
+    /// value first (tickets are unique, so the check cannot be fooled
+    /// by a same-slot rewrite).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        if self.cap == 0 {
+            return Vec::new();
+        }
+        let head = self.head.load(Ordering::SeqCst);
+        let n = head.min(self.cap as u64);
+        let mut out = Vec::with_capacity(n as usize);
+        for t in (head - n)..head {
+            let base = (t as usize % self.cap) * WORDS;
+            let published = t.wrapping_mul(2).wrapping_add(2);
+            if self.cells[base].load(Ordering::SeqCst) != published {
+                continue; // still being written, or already overwritten
+            }
+            let kind = SpanKind::from_u64(self.cells[base + 1].load(Ordering::SeqCst));
+            let ev = TraceEvent {
+                kind: kind.unwrap_or(SpanKind::Request),
+                seq: self.cells[base + 2].load(Ordering::SeqCst),
+                start_us: self.cells[base + 3].load(Ordering::SeqCst),
+                dur_us: self.cells[base + 4].load(Ordering::SeqCst),
+                weight_version: self.cells[base + 5].load(Ordering::SeqCst),
+                a: self.cells[base + 6].load(Ordering::SeqCst),
+                b: self.cells[base + 7].load(Ordering::SeqCst),
+            };
+            if kind.is_some() && self.cells[base].load(Ordering::SeqCst) == published {
+                out.push(ev);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64, start: u64) -> TraceEvent {
+        TraceEvent {
+            kind: SpanKind::DecodeStep,
+            seq,
+            start_us: start,
+            dur_us: 5,
+            weight_version: 1,
+            a: 2,
+            b: 3,
+        }
+    }
+
+    #[test]
+    fn roundtrip_in_order() {
+        let tb = TraceBuffer::new(8);
+        for i in 0..5 {
+            tb.record(&ev(i, i * 10));
+        }
+        let snap = tb.snapshot();
+        assert_eq!(snap.len(), 5);
+        for (i, e) in snap.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+            assert_eq!(e.start_us, i as u64 * 10);
+            assert_eq!(e.kind, SpanKind::DecodeStep);
+        }
+        assert_eq!(tb.dropped(), 0);
+    }
+
+    #[test]
+    fn wraparound_drops_oldest() {
+        let tb = TraceBuffer::new(4);
+        for i in 0..10 {
+            tb.record(&ev(i, i));
+        }
+        let snap = tb.snapshot();
+        assert_eq!(snap.len(), 4);
+        let seqs: Vec<u64> = snap.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "newest 4 retained, oldest dropped");
+        assert_eq!(tb.recorded(), 10);
+        assert_eq!(tb.dropped(), 6);
+    }
+
+    #[test]
+    fn disabled_buffer_is_noop() {
+        let tb = TraceBuffer::disabled();
+        tb.record(&ev(0, 0));
+        assert!(!tb.enabled());
+        assert!(tb.snapshot().is_empty());
+        assert_eq!(tb.recorded(), 0);
+        assert_eq!(tb.dropped(), 0);
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for k in [
+            SpanKind::Request,
+            SpanKind::Admit,
+            SpanKind::Prefill,
+            SpanKind::DecodeStep,
+            SpanKind::SpecRound,
+            SpanKind::Draft,
+            SpanKind::Verify,
+            SpanKind::Requant,
+            SpanKind::CacheOccupancy,
+            SpanKind::Kernel,
+        ] {
+            assert_eq!(SpanKind::from_u64(k as u64), Some(k));
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(SpanKind::from_u64(250), None);
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear() {
+        // Stress analogue of the loom model: payload invariant b == a ^ M.
+        const M: u64 = 0x5bd1_e995_9bd1_e995;
+        let tb = std::sync::Arc::new(TraceBuffer::new(16));
+        let per = if cfg!(miri) { 40 } else { 20_000 };
+        let hs: Vec<_> = (0..4)
+            .map(|w| {
+                let tb = tb.clone();
+                crate::sync::thread::spawn_named("trace-test", move || {
+                    for i in 0..per {
+                        let a = (w * per + i) as u64;
+                        tb.record(&TraceEvent {
+                            kind: SpanKind::Kernel,
+                            seq: a,
+                            start_us: a,
+                            dur_us: a,
+                            weight_version: a,
+                            a,
+                            b: a ^ M,
+                        });
+                        if i % 16 == 0 {
+                            for e in tb.snapshot() {
+                                assert_eq!(e.b, e.a ^ M, "torn record observed");
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            let _ = h.join();
+        }
+        assert_eq!(tb.recorded(), 4 * per as u64);
+        for e in tb.snapshot() {
+            assert_eq!(e.b, e.a ^ M);
+        }
+    }
+}

@@ -45,6 +45,7 @@ use crate::backend::ExecBackend;
 use crate::eval::Sampler;
 use crate::kvcache::{KvCache, KvCacheConfig, SeqId};
 use crate::models::ModelWeights;
+use crate::obs::Clock;
 use crate::quant::{lowrank_init, LayerStats, MethodSpec, QuantSpec, StatsRequirement};
 use crate::util::argmax;
 
@@ -291,6 +292,12 @@ pub struct RoundOut {
     /// leak drafter-hallucinated activations into the calibrator — the
     /// same stats-pollution class the padding-row fix eliminated.
     pub stats: Option<Vec<crate::quant::ActStats>>,
+    /// Wall time of the drafting phase (catch-up + proposals),
+    /// microseconds on the caller's [`Clock`] — the server turns this
+    /// into the round's `draft` trace span.
+    pub draft_us: u64,
+    /// Wall time of the verify + rollback phase, microseconds.
+    pub verify_us: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -318,6 +325,7 @@ pub fn spec_round(
     k: usize,
     sampler: &mut Sampler,
     with_stats: bool,
+    clock: &Clock,
 ) -> Result<RoundOut> {
     let vocab = verifier.weights.manifest.config.vocab;
     let room = vcache.remaining(vid);
@@ -328,6 +336,7 @@ pub fn spec_round(
     let k = k.min(room - 1);
 
     // -- draft: catch up on pending tokens, then propose k tokens -----
+    let t0_us = clock.now_us();
     let mut drafts: Vec<i32> = Vec::with_capacity(k);
     if k > 0 {
         debug_assert!(!draft.pending.is_empty(), "speculative sequence with empty pending");
@@ -345,6 +354,8 @@ pub fn spec_round(
             drafts.push(tok);
         }
     }
+
+    let t1_us = clock.now_us();
 
     // -- verify: one cached forward over [last, d₁..d_k] ---------------
     let mut vtokens = Vec::with_capacity(k + 1);
@@ -390,7 +401,15 @@ pub fn spec_round(
     // stats purity: the tap aggregated over all k+1 rows, so they are
     // only safe to report when every row was committed (see RoundOut)
     let stats = if accepted == k { out.stats } else { None };
-    Ok(RoundOut { committed, accepted, drafted: k, stats })
+    let t2_us = clock.now_us();
+    Ok(RoundOut {
+        committed,
+        accepted,
+        drafted: k,
+        stats,
+        draft_us: t1_us.saturating_sub(t0_us),
+        verify_us: t2_us.saturating_sub(t1_us),
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -426,6 +445,7 @@ pub struct SpecGenerator<'a> {
     drafter: SpecModel<'a>,
     verifier: SpecModel<'a>,
     ctrl: SpecController,
+    clock: Clock,
 }
 
 impl<'a> SpecGenerator<'a> {
@@ -439,7 +459,12 @@ impl<'a> SpecGenerator<'a> {
         {
             bail!("drafter and verifier manifests disagree — self-speculation needs one model");
         }
-        Ok(SpecGenerator { drafter, verifier, ctrl: SpecController::new(cfg) })
+        Ok(SpecGenerator {
+            drafter,
+            verifier,
+            ctrl: SpecController::new(cfg),
+            clock: Clock::real(),
+        })
     }
 
     /// The adaptive-k controller (read access for diagnostics/tests).
@@ -501,6 +526,7 @@ impl<'a> SpecGenerator<'a> {
                 k,
                 sampler,
                 false,
+                &self.clock,
             )?;
             self.ctrl.observe(r.accepted, r.drafted);
             stats.rounds += 1;

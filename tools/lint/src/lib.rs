@@ -24,6 +24,13 @@
 //!   pool's single `kernel_us` counter, not to ad-hoc probes inside
 //!   kernels where they would skew the accounting the
 //!   `kernel_us_accounting_benign` model reasons about.
+//! * **R6** — observability discipline on the serving path
+//!   (`coordinator`, `backend`, `kvcache`, `specdec`): no
+//!   `println!`/`eprintln!` (telemetry flows through `Metrics`, the
+//!   span ring and the exporters, never stdout), and no raw
+//!   `Instant::now` (timestamps come from `obs::Clock`, so tests can
+//!   pin a deterministic clock). `backend/native.rs` is excluded from
+//!   the `Instant` half — R5 already owns its kernel timing.
 //!
 //! The scanner is a hand-rolled lexer (this tree is dependency-free by
 //! policy, so no `syn`): comments, string/char literals, raw strings
@@ -470,6 +477,45 @@ pub fn scan_str(path: &str, src: &str) -> Vec<Violation> {
         }
     }
 
+    // R6: serving-path telemetry goes through obs, not stdout/Instant
+    let r6_applies = starts_with_any(
+        path,
+        &[
+            "rust/src/coordinator/",
+            "rust/src/backend/",
+            "rust/src/kvcache/",
+            "rust/src/specdec/",
+        ],
+    );
+    if r6_applies {
+        for ident in ["println", "eprintln"] {
+            for i in find_matches(&toks, &[ident], true) {
+                push(
+                    toks[i].line,
+                    "R6",
+                    format!(
+                        "`{ident}!` on the serving path: emit through \
+                         `Metrics` / the span ring / `obs::export`, \
+                         never stdout (CLI and examples own printing)"
+                    ),
+                );
+            }
+        }
+        // backend/native.rs kernel timing is R5's jurisdiction
+        if path != "rust/src/backend/native.rs" {
+            for i in find_matches(&toks, &["Instant", "::", "now"], true) {
+                push(
+                    toks[i].line,
+                    "R6",
+                    "raw `Instant::now` on the serving path: read \
+                     `obs::Clock` instead so deterministic-clock tests \
+                     can replay exact span trees"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
     out
 }
 
@@ -575,6 +621,35 @@ mod tests {
     fn tuple_field_access_still_matches_unwrap() {
         let bad = "fn f(x: (Option<u32>,)) -> u32 { x.0.unwrap() }";
         assert_eq!(rules("rust/src/specdec/mod.rs", bad), vec!["R3"]);
+    }
+
+    #[test]
+    fn r6_fires_on_serving_path_println() {
+        let bad = "fn f() { println!(\"tok/s {}\", 3); }";
+        assert_eq!(rules("rust/src/coordinator/server.rs", bad), vec!["R6"]);
+        let bad2 = "fn f() { eprintln!(\"oops\"); }";
+        assert_eq!(rules("rust/src/kvcache/mod.rs", bad2), vec!["R6"]);
+        // printing is the CLI's and the examples' job
+        assert!(rules("rust/src/main.rs", bad).is_empty());
+        assert!(rules("rust/src/bench/throughput.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn r6_fires_on_serving_path_instant() {
+        let bad = "fn f() { let t = std::time::Instant::now(); }";
+        assert_eq!(rules("rust/src/coordinator/server.rs", bad), vec!["R6"]);
+        assert_eq!(rules("rust/src/specdec/mod.rs", bad), vec!["R6"]);
+        // native.rs kernel timing stays R5's finding, never double-reported
+        assert_eq!(rules("rust/src/backend/native.rs", bad), vec!["R5"]);
+        // the clock abstraction itself legitimately reads Instant
+        assert!(rules("rust/src/obs/clock.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn r6_exempts_test_modules() {
+        let test_mod =
+            "#[cfg(test)]\nmod tests {\n fn g() { println!(\"dbg\"); let t = std::time::Instant::now(); }\n}";
+        assert!(rules("rust/src/coordinator/metrics.rs", test_mod).is_empty());
     }
 
     #[test]
