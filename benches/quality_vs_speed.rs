@@ -1,0 +1,163 @@
+//! Quality-vs-speed Pareto bench + quality gates.
+//!
+//! Run: `cargo bench --bench quality_vs_speed [-- --fast] [-- --threads N]`
+//! — needs **no** artifacts (synthetic models). llama.cpp KL
+//! methodology: record the pristine fp32 model's logits once per
+//! calibration-mismatch scenario, score every method of the ladder
+//! (online TTQ, frozen AWQ, RTN, NF) against that recording, join
+//! decode tokens/sec per execution format from the throughput harness,
+//! write the Pareto table as `BENCH_quality.json`
+//! (schema: `docs/BENCHMARKS.md`) and exit non-zero when a gate fails:
+//!
+//! * **ttq_beats_frozen_awq_under_mismatch** — in every
+//!   calibrate-on-A-serve-B scenario, online TTQ's KL against fp32 must
+//!   not exceed frozen AWQ's (the paper's test-time claim: online
+//!   recalibration erases the calibration-mismatch penalty);
+//! * **probe overhead** — short-chat throughput with the online quality
+//!   probe firing (`probe_every` as configured below) must stay ≥ 95%
+//!   of the unprobed run, best-of-2 per side.
+
+use ttq_serve::bench::quality::{default_mismatch_scenarios, run_quality_scenario};
+use ttq_serve::bench::throughput::{default_scenarios, run_scenario, run_scenario_probed};
+use ttq_serve::linalg::pool::WorkerPool;
+use ttq_serve::util::cli::Args;
+
+/// Probe cadence for the overhead gate: sparse enough that a sampled
+/// full-prefix fp32 replay amortizes below the 5% budget, frequent
+/// enough to actually fire several times in the gate workload.
+const GATE_PROBE_EVERY: usize = 48;
+
+fn main() {
+    let a = Args::from_env();
+    let fast = a.has("fast");
+    let threads = a.get_usize("threads", WorkerPool::default_threads()).max(1);
+    let bits: Vec<u32> = if fast { vec![4] } else { vec![3, 4] };
+    let mut gate_ok = true;
+
+    // -- speed axis: short-chat decode tok/s per execution format ------
+    println!("== quality vs speed, {threads} pool lanes, fast={fast} ==");
+    let chat = default_scenarios(fast).remove(0);
+    let mut fmt_spec = chat.clone();
+    fmt_spec.name = "short-chat-fp32".into();
+    fmt_spec.exec_bits = None;
+    let fp32_run = run_scenario(&fmt_spec, threads).expect("fp32 format run");
+    println!("{}", fp32_run.report());
+    let fp32_tps = fp32_run.decode_tokens_per_sec;
+    let mut tps_by_bits: Vec<(u32, f64)> = Vec::new();
+    for &b in &bits {
+        let mut s = chat.clone();
+        s.name = format!("short-chat-w{b}");
+        s.exec_bits = Some(b);
+        let r = run_scenario(&s, threads).expect("packed format run");
+        println!("{}", r.report());
+        tps_by_bits.push((b, r.decode_tokens_per_sec));
+    }
+
+    // -- quality axis: calibration-mismatch scenarios ------------------
+    let mut scenarios = Vec::new();
+    let mut mismatch_ok = true;
+    for spec in default_mismatch_scenarios() {
+        let mut sq = run_quality_scenario(&spec, &bits, fast, threads).expect("quality scenario");
+        for row in sq.rows.iter_mut() {
+            row.tokens_per_sec = if row.bits >= 16 {
+                fp32_tps
+            } else {
+                tps_by_bits
+                    .iter()
+                    .find(|(b, _)| *b == row.bits)
+                    .map_or(0.0, |(_, t)| *t)
+            };
+        }
+        sq.report().print();
+        for &b in &bits {
+            let (Some(ttq), Some(awq)) = (sq.row("ttq", b), sq.row("awq", b)) else {
+                continue;
+            };
+            println!(
+                "{} w{b}: ttq KL {:.4} vs frozen awq KL {:.4} ({})",
+                sq.name,
+                ttq.kl,
+                awq.kl,
+                if ttq.kl <= awq.kl { "ok" } else { "FAIL" }
+            );
+            if ttq.kl > awq.kl {
+                eprintln!(
+                    "QUALITY GATE FAILED: {} w{b}: online ttq KL {:.4} > frozen awq KL {:.4} \
+                     under calibration mismatch",
+                    sq.name, ttq.kl, awq.kl
+                );
+                mismatch_ok = false;
+            }
+        }
+        scenarios.push(sq);
+    }
+    if !mismatch_ok {
+        gate_ok = false;
+    }
+
+    // -- probe overhead gate -------------------------------------------
+    // A fixed (not fast-shrunk) workload so the cadence math holds: the
+    // sampled fp32 replay must cost < 5% of short-chat throughput.
+    println!("\n== probe overhead (short-chat, probe_every={GATE_PROBE_EVERY}) ==");
+    let mut gate_spec = chat.clone();
+    gate_spec.requests = 48;
+    gate_spec.max_new_tokens = 12;
+    let best = |probed: bool| {
+        let mut best_tps = 0.0f64;
+        for _ in 0..2 {
+            let mut s = gate_spec.clone();
+            s.name = if probed { "short-chat-probed" } else { "short-chat-unprobed" }.into();
+            let r = if probed {
+                run_scenario_probed(&s, threads, GATE_PROBE_EVERY)
+            } else {
+                run_scenario(&s, threads)
+            }
+            .expect("overhead scenario");
+            println!("{}", r.report());
+            best_tps = best_tps.max(r.tokens_per_sec);
+        }
+        best_tps
+    };
+    let unprobed_tps = best(false);
+    let probed_tps = best(true);
+    let probe_ratio = if unprobed_tps > 0.0 {
+        probed_tps / unprobed_tps
+    } else {
+        1.0
+    };
+    let probe_ok = probe_ratio >= 0.95;
+    println!(
+        "probe overhead: {probed_tps:.0} tok/s probed vs {unprobed_tps:.0} tok/s unprobed \
+         ({:+.2}%)",
+        100.0 * (probe_ratio - 1.0)
+    );
+    if !probe_ok {
+        eprintln!(
+            "PERF GATE FAILED: quality probe costs more than 5% of short-chat throughput \
+             ({probed_tps:.0} tok/s probed < 0.95 × {unprobed_tps:.0} tok/s unprobed)"
+        );
+        gate_ok = false;
+    }
+
+    // -- JSON artifact -------------------------------------------------
+    let scenario_json: Vec<String> = scenarios
+        .iter()
+        .map(|s| format!("    {}", s.to_json()))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"quality_vs_speed\",\n  \"threads\": {threads},\n  \"fast\": {fast},\n  \
+         \"gates\": {{\"ttq_beats_frozen_awq_under_mismatch\": {mismatch_ok}, \
+         \"probe_overhead_le_5pct\": {probe_ok}}},\n  \
+         \"probe\": {{\"probe_every\": {GATE_PROBE_EVERY}, \"unprobed_tps\": {unprobed_tps:.1}, \
+         \"probed_tps\": {probed_tps:.1}, \"ratio\": {probe_ratio:.4}}},\n  \
+         \"scenarios\": [\n{}\n  ]\n}}\n",
+        scenario_json.join(",\n")
+    );
+    std::fs::write("BENCH_quality.json", &json).expect("write BENCH_quality.json");
+    println!("\nwrote BENCH_quality.json ({} scenarios)", scenarios.len());
+
+    if !gate_ok {
+        eprintln!("QUALITY GATE FAILED: see messages above");
+        std::process::exit(1);
+    }
+}

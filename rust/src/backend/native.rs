@@ -871,15 +871,7 @@ fn nll_from_logits(logits: &Mat, tokens: &[i32], batch: usize, seq: usize) -> (f
             let row = logits.row(b * seq + s);
             let tgt = tokens[b * seq + s + 1] as usize;
             debug_assert!(tgt < vocab);
-            let mut mx = f32::NEG_INFINITY;
-            for &v in row {
-                mx = mx.max(v);
-            }
-            let mut z = 0.0f64;
-            for &v in row {
-                z += ((v - mx) as f64).exp();
-            }
-            let lse = z.ln() + mx as f64;
+            let lse = crate::util::logsumexp(row);
             sum += lse - row[tgt] as f64;
             count += 1.0;
         }

@@ -10,12 +10,14 @@
 
 pub mod ablations;
 pub mod figure2;
+pub mod quality;
 pub mod tables_quality;
 pub mod tables_runtime;
 pub mod throughput;
 
 pub use ablations::{sweep_formats, sweep_lowrank_init, sweep_nf, sweep_prune};
 pub use figure2::figure2;
+pub use quality::{default_mismatch_scenarios, run_quality_scenario};
 pub use tables_quality::{table1, table2, table3, table12, table13};
 pub use tables_runtime::runtime_table;
 pub use throughput::{default_scenarios, kernel_baseline, run_scenario};

@@ -1,0 +1,398 @@
+//! Offline quality-vs-speed Pareto harness (llama.cpp KL methodology).
+//!
+//! The reference distribution is recorded **once**: the pristine fp32
+//! model's full logits over a fixed eval-token set. Every method is
+//! then scored against that recording — full-softmax KL(fp32 ‖ method)
+//! per next-token position, perplexity ratio, top-1 and top-k
+//! agreement — so all methods face literally the same tokens and the
+//! same reference, the way `llama-perplexity --kl-divergence` scores
+//! quantizations against a saved fp16 logit file.
+//!
+//! [`run_quality_scenario`] runs one **calibration-mismatch** scenario
+//! (calibrate on domain A, serve domain B — the regime from "On the
+//! Impact of Calibration Data"): offline methods freeze their
+//! statistics on the calib domain's calib split, while online TTQ
+//! recalibrates from each eval batch itself (Fig. 1b). The mismatch is
+//! exactly what the paper claims test-time quantization erases;
+//! `benches/quality_vs_speed.rs` gates on TTQ beating frozen AWQ's KL
+//! in every scenario, joins decode tokens/sec per execution format
+//! from the throughput harness ([`super::throughput`]) into each row,
+//! and serializes the Pareto table as `BENCH_quality.json`
+//! (schema: `docs/BENCHMARKS.md`).
+//!
+//! The online **sampled** counterpart of this harness — the serving
+//! probe that replays live steps through fp32 — lives in
+//! [`crate::obs::quality`]; this module is the exhaustive offline
+//! side of the same contract.
+
+use anyhow::Result;
+
+use super::Report;
+use crate::backend::NativeBackend;
+use crate::corpus::{CorpusStream, Split};
+use crate::eval::{EvalConfig, Evaluator, MethodSpec};
+use crate::obs::quality::kl_divergence;
+use crate::quant::QuantSpec;
+use crate::util::{argmax, logsumexp};
+
+/// Reference top-k window for the agreement column: the served top-1
+/// token must fall inside the fp32 model's `TOPK` most likely tokens.
+pub const TOPK: usize = 5;
+
+/// One calibration-mismatch scenario: freeze offline statistics on
+/// `calib`, evaluate everyone on `eval`.
+#[derive(Clone, Debug)]
+pub struct MismatchSpec {
+    /// Scenario name (appears in the report and the JSON).
+    pub name: String,
+    /// Domain offline methods calibrate on (calib split).
+    pub calib: String,
+    /// Domain every method is evaluated on (eval split).
+    pub eval: String,
+}
+
+/// The two cross-domain scenarios the quality bench sweeps: the
+/// structured-text and web-text synthetic domains, each serving as the
+/// other's out-of-distribution traffic.
+pub fn default_mismatch_scenarios() -> Vec<MismatchSpec> {
+    vec![
+        MismatchSpec {
+            name: "calib-wt2s-serve-c4s".into(),
+            calib: "wt2s".into(),
+            eval: "c4s".into(),
+        },
+        MismatchSpec {
+            name: "calib-c4s-serve-wt2s".into(),
+            calib: "c4s".into(),
+            eval: "wt2s".into(),
+        },
+    ]
+}
+
+/// One Pareto point: a (method, bits) cell scored against the fp32
+/// reference recording, plus the decode throughput of its execution
+/// format (joined by the bench binary; 0 until then).
+#[derive(Clone, Debug)]
+pub struct QualityRow {
+    /// Method key (`"fp32"`, `"ttq"`, `"awq"`, `"rtn"`, `"nf"`).
+    pub method: String,
+    /// Quantization bit-width (32 for the fp32 reference row).
+    pub bits: u32,
+    /// Mean full-softmax KL(fp32 ‖ method) per position, nats.
+    pub kl: f64,
+    /// `ppl(method) / ppl(fp32)` on the same tokens (1.0 = lossless).
+    pub ppl_ratio: f64,
+    /// Fraction of positions where both argmax tokens agree.
+    pub top1: f64,
+    /// Fraction of positions where the served argmax falls inside the
+    /// fp32 reference's top-[`TOPK`].
+    pub topk: f64,
+    /// Decode tokens/sec of this row's execution format, from the
+    /// throughput harness (the speed axis of the Pareto table).
+    pub tokens_per_sec: f64,
+}
+
+impl QualityRow {
+    /// One JSON object line for `BENCH_quality.json`.
+    pub fn to_json(&self) -> String {
+        format!(
+            r#"{{"method": "{}", "bits": {}, "kl": {:.6}, "ppl_ratio": {:.4}, "top1": {:.4}, "topk": {:.4}, "tokens_per_sec": {:.1}}}"#,
+            self.method,
+            self.bits,
+            self.kl,
+            self.ppl_ratio,
+            self.top1,
+            self.topk,
+            self.tokens_per_sec,
+        )
+    }
+}
+
+/// One scenario's scored Pareto table.
+#[derive(Clone, Debug)]
+pub struct ScenarioQuality {
+    /// Scenario name (from [`MismatchSpec::name`]).
+    pub name: String,
+    /// The frozen methods' calibration domain.
+    pub calib: String,
+    /// The evaluation domain everyone is scored on.
+    pub eval: String,
+    /// Pareto rows: the fp32 reference first, then method × bits.
+    pub rows: Vec<QualityRow>,
+}
+
+impl ScenarioQuality {
+    /// The row for (`method`, `bits`), if scored.
+    pub fn row(&self, method: &str, bits: u32) -> Option<&QualityRow> {
+        self.rows
+            .iter()
+            .find(|r| r.method == method && r.bits == bits)
+    }
+
+    /// Fixed-width Pareto table for the bench output.
+    pub fn report(&self) -> Report {
+        let title = format!(
+            "quality vs speed — {} (calib {} → serve {})",
+            self.name, self.calib, self.eval
+        );
+        // columns: KL in nats, ppl/fp = perplexity ratio vs fp32
+        let mut rep = Report::new(
+            &title,
+            &["method", "bits", "KL", "ppl/fp", "top1", "top5", "tok/s"],
+        );
+        for r in &self.rows {
+            rep.row(vec![
+                r.method.clone(),
+                r.bits.to_string(),
+                format!("{:.4}", r.kl),
+                format!("{:.4}", r.ppl_ratio),
+                format!("{:.3}", r.top1),
+                format!("{:.3}", r.topk),
+                format!("{:.0}", r.tokens_per_sec),
+            ]);
+        }
+        rep
+    }
+
+    /// One JSON object for the scenario (rows inline).
+    pub fn to_json(&self) -> String {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| format!("      {}", r.to_json()))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\"name\": \"{}\", \"calib\": \"{}\", \"eval\": \"{}\", \"rows\": [\n{}\n    ]}}",
+            self.name,
+            self.calib,
+            self.eval,
+            rows
+        )
+    }
+}
+
+/// Accumulated per-position agreement between one reference/served
+/// logit recording pair.
+#[derive(Default)]
+struct ScoreAcc {
+    kl: f64,
+    top1: u64,
+    topk: u64,
+    nll: f64,
+    n: u64,
+}
+
+impl ScoreAcc {
+    /// Score every next-token position of one batch: `reference` and
+    /// `served` are `(batch·seq) × vocab` logit recordings over the
+    /// same `tokens`.
+    fn accumulate(
+        &mut self,
+        reference: &[f32],
+        served: &[f32],
+        tokens: &[i32],
+        batch: usize,
+        seq: usize,
+        vocab: usize,
+    ) {
+        for b in 0..batch {
+            for s in 0..seq - 1 {
+                let off = (b * seq + s) * vocab;
+                let r = &reference[off..off + vocab];
+                let q = &served[off..off + vocab];
+                self.kl += kl_divergence(r, q);
+                let qtop = argmax(q);
+                if argmax(r) == qtop {
+                    self.top1 += 1;
+                }
+                // served top-1 inside the reference's top-k window:
+                // fewer than k reference logits strictly above it
+                let above = r.iter().filter(|&&v| v > r[qtop]).count();
+                if above < TOPK {
+                    self.topk += 1;
+                }
+                let tgt = tokens[b * seq + s + 1] as usize;
+                self.nll += logsumexp(q) - q[tgt] as f64;
+                self.n += 1;
+            }
+        }
+    }
+
+    fn mean_kl(&self) -> f64 {
+        if self.n > 0 {
+            self.kl / self.n as f64
+        } else {
+            0.0
+        }
+    }
+
+    fn mean_nll(&self) -> f64 {
+        if self.n > 0 {
+            self.nll / self.n as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The method ladder one scenario scores at one bit-width: online TTQ
+/// (recalibrates per eval batch), frozen AWQ (calibrated once on the
+/// mismatched domain — the gated comparison), and the stats-free RTN /
+/// NormalFloat baselines. GPTQ is absent by construction: the serving
+/// substrate has no corr artifact.
+fn method_ladder(calib: &str, bits: u32) -> Vec<(&'static str, MethodSpec)> {
+    vec![
+        ("ttq", MethodSpec::ttq(0)),
+        ("awq", MethodSpec::awq(calib)),
+        ("rtn", MethodSpec::rtn()),
+        ("nf", MethodSpec::nf(bits)),
+    ]
+}
+
+/// Run one calibration-mismatch scenario: record the fp32 reference
+/// logits once over a fixed eval-token set, then score every
+/// (method, bits) cell of the ladder against that recording. `fast`
+/// shrinks batch counts for CI. Rows come back with
+/// `tokens_per_sec = 0` — the bench binary joins throughput per
+/// execution format.
+pub fn run_quality_scenario(
+    spec: &MismatchSpec,
+    bits_sweep: &[u32],
+    fast: bool,
+    threads: usize,
+) -> Result<ScenarioQuality> {
+    let dir = crate::artifacts_dir();
+    let backend = NativeBackend::new(&dir).with_threads(threads);
+    let mut ev = Evaluator::new(&backend, "qwen-micro")?;
+    let seq = ev.weights.manifest.config.seq;
+    let vocab = ev.weights.manifest.config.vocab;
+    let batch = 2usize;
+    let eval_batches = if fast { 3 } else { 6 };
+    let calib_batches = if fast { 4 } else { 8 };
+
+    // the fixed eval-token set every method faces
+    let mut stream = CorpusStream::new(&spec.eval, Split::Eval);
+    let batches: Vec<Vec<i32>> = (0..eval_batches)
+        .map(|_| stream.batch(batch, seq))
+        .collect();
+
+    // the reference recording: pristine fp32 logits, computed once
+    ev.restore();
+    let mut reference = Vec::with_capacity(batches.len());
+    for toks in &batches {
+        reference.push(ev.backend.logits(&ev.weights, toks, batch)?);
+    }
+    let mut ref_acc = ScoreAcc::default();
+    for (bi, toks) in batches.iter().enumerate() {
+        let r = &reference[bi];
+        ref_acc.accumulate(r, r, toks, batch, seq, vocab);
+    }
+    let ref_nll = ref_acc.mean_nll();
+
+    let mut rows = vec![QualityRow {
+        method: "fp32".into(),
+        bits: 32,
+        kl: 0.0,
+        ppl_ratio: 1.0,
+        top1: 1.0,
+        topk: 1.0,
+        tokens_per_sec: 0.0,
+    }];
+    for &bits in bits_sweep {
+        let cfg = EvalConfig {
+            batch,
+            eval_batches,
+            calib_batches,
+            spec: QuantSpec::new(bits, 32),
+        };
+        for (key, method) in method_ladder(&spec.calib, bits) {
+            // frozen methods quantize once, from the *mismatched* calib
+            // domain; online methods are handled per batch below
+            ev.quantize_static(&method, &cfg)?;
+            let mut acc = ScoreAcc::default();
+            for (bi, toks) in batches.iter().enumerate() {
+                if method.is_online() {
+                    // the test-time loop: statistics from the incoming
+                    // batch itself, quantize, then serve it
+                    ev.restore();
+                    let st = ev.collect(toks, batch, method.needs_corr())?;
+                    ev.apply_quantization(&method, Some(&st), &cfg)?;
+                }
+                let served = ev.backend.logits(&ev.weights, toks, batch)?;
+                let r = &reference[bi];
+                acc.accumulate(r, &served, toks, batch, seq, vocab);
+            }
+            rows.push(QualityRow {
+                method: key.into(),
+                bits,
+                kl: acc.mean_kl(),
+                ppl_ratio: (acc.mean_nll() - ref_nll).exp(),
+                top1: acc.top1 as f64 / acc.n.max(1) as f64,
+                topk: acc.topk as f64 / acc.n.max(1) as f64,
+                tokens_per_sec: 0.0,
+            });
+        }
+    }
+    ev.restore();
+    Ok(ScenarioQuality {
+        name: spec.name.clone(),
+        calib: spec.calib.clone(),
+        eval: spec.eval.clone(),
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mismatch_scenario_scores_the_ladder() {
+        let spec = default_mismatch_scenarios().remove(0);
+        let sq = run_quality_scenario(&spec, &[4], true, 2).unwrap();
+        // fp32 reference row + the 4-method ladder at one bit-width
+        assert_eq!(sq.rows.len(), 5);
+        let fp32 = sq.row("fp32", 32).unwrap();
+        assert_eq!(fp32.kl, 0.0);
+        assert_eq!(fp32.ppl_ratio, 1.0);
+        for r in &sq.rows {
+            assert!(r.kl >= 0.0, "{}: KL {}", r.method, r.kl);
+            assert!(r.ppl_ratio > 0.0, "{}: ppl ratio {}", r.method, r.ppl_ratio);
+            assert!((0.0..=1.0).contains(&r.top1), "{}", r.method);
+            assert!((0.0..=1.0).contains(&r.topk), "{}", r.method);
+            assert!(r.topk >= r.top1, "top-5 window contains top-1 agreement");
+        }
+        // every quantized method degrades (or at best matches) fp32
+        let ttq = sq.row("ttq", 4).unwrap();
+        assert!(ttq.kl >= 0.0);
+        // rows stay machine-parseable for the JSON artifact
+        let v = crate::util::json::Value::parse(&ttq.to_json()).unwrap();
+        assert_eq!(v.get("method").and_then(|x| x.as_str()), Some("ttq"));
+        assert!(v.get("kl").and_then(|x| x.as_f64()).is_some());
+        let sv = crate::util::json::Value::parse(&sq.to_json()).unwrap();
+        let arr = sv.get("rows").and_then(|x| x.as_arr());
+        assert!(arr.is_some_and(|a| a.len() == 5));
+    }
+
+    #[test]
+    fn report_renders_all_rows() {
+        let sq = ScenarioQuality {
+            name: "t".into(),
+            calib: "wt2s".into(),
+            eval: "c4s".into(),
+            rows: vec![QualityRow {
+                method: "ttq".into(),
+                bits: 4,
+                kl: 0.01,
+                ppl_ratio: 1.02,
+                top1: 0.98,
+                topk: 1.0,
+                tokens_per_sec: 1234.0,
+            }],
+        };
+        let s = sq.report().render();
+        assert!(s.contains("ttq"), "{s}");
+        assert!(s.contains("1234"), "{s}");
+    }
+}

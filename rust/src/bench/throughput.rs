@@ -171,7 +171,7 @@ impl ScenarioResult {
 /// paces the queue through the KV slots). Runs with the trace recorder
 /// *disabled* — the clean-performance baseline.
 pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
-    run_scenario_with(spec, threads, 0)
+    run_scenario_with(spec, threads, 0, 0)
 }
 
 /// [`run_scenario`] with a live trace ring of `trace_capacity` events —
@@ -181,13 +181,26 @@ pub fn run_scenario_traced(
     threads: usize,
     trace_capacity: usize,
 ) -> Result<ScenarioResult> {
-    run_scenario_with(spec, threads, trace_capacity)
+    run_scenario_with(spec, threads, trace_capacity, 0)
+}
+
+/// [`run_scenario`] with the online quality probe firing every
+/// `probe_every` committed plain decode steps (trace ring disabled) —
+/// the measured side of the probe-overhead gate in
+/// `benches/quality_vs_speed.rs`.
+pub fn run_scenario_probed(
+    spec: &LoadSpec,
+    threads: usize,
+    probe_every: usize,
+) -> Result<ScenarioResult> {
+    run_scenario_with(spec, threads, 0, probe_every)
 }
 
 fn run_scenario_with(
     spec: &LoadSpec,
     threads: usize,
     trace_capacity: usize,
+    probe_every: usize,
 ) -> Result<ScenarioResult> {
     let dir = crate::artifacts_dir();
     let backend = match spec.exec_bits {
@@ -198,7 +211,8 @@ fn run_scenario_with(
 
     let mut cfg = ServerConfig::new(&spec.model)
         .with_method(MethodSpec::ttq(0))
-        .with_trace_capacity(trace_capacity);
+        .with_trace_capacity(trace_capacity)
+        .with_probe_every(probe_every);
     cfg.spec = QuantSpec::new(spec.exec_bits.unwrap_or(4), 32);
     cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
     cfg.max_new_tokens = spec.max_new_tokens.max(1);

@@ -51,6 +51,9 @@ pub enum ServeError {
     SpecSeqMissing,
     /// The batching policy has an empty bucket list.
     NoBuckets,
+    /// A quality probe fired but the pristine-fp32 replay state
+    /// (weights + dense backend) is missing.
+    ProbeStateMissing,
 }
 
 impl std::fmt::Display for ServeError {
@@ -70,6 +73,9 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::NoBuckets => {
                 write!(f, "batch policy has no buckets configured")
+            }
+            ServeError::ProbeStateMissing => {
+                write!(f, "probe state missing for a fired quality probe")
             }
         }
     }

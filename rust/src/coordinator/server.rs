@@ -72,6 +72,7 @@ use crate::eval::{EvalConfig, Evaluator, Sampler};
 use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, SeqId};
 use crate::linalg::pool::WorkerPool;
 use crate::models::ModelWeights;
+use crate::obs::quality::{self, QualityProbe};
 use crate::obs::{Clock, RequantEvent, SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};
 use crate::quant::{MethodSpec, QuantSpec};
 use crate::specdec::{spec_round, DraftState, SpecConfig, SpecController, SpecModel};
@@ -117,6 +118,12 @@ pub struct ServerConfig {
     /// Span ring capacity in events ([`DEFAULT_TRACE_CAPACITY`]);
     /// 0 disables the recorder (the overhead-gate baseline).
     pub trace_capacity: usize,
+    /// Online quality-probe cadence: every `probe_every` committed
+    /// plain decode steps, replay one sampled sequence's exact prefix
+    /// through the pristine fp32 weights and record KL / top-1
+    /// agreement / NLL delta ([`crate::obs::quality`]). 0 (default)
+    /// disables probing entirely — no fp32 fork, no cost.
+    pub probe_every: usize,
 }
 
 impl ServerConfig {
@@ -134,6 +141,7 @@ impl ServerConfig {
             specdec: SpecConfig::default(),
             clock: Clock::real(),
             trace_capacity: DEFAULT_TRACE_CAPACITY,
+            probe_every: 0,
         }
     }
 
@@ -165,6 +173,13 @@ impl ServerConfig {
     /// Set the speculative-decoding policy.
     pub fn with_specdec(mut self, specdec: SpecConfig) -> Self {
         self.specdec = specdec;
+        self
+    }
+
+    /// Probe quality vs fp32 every `n` committed plain decode steps
+    /// (0 disables — the default).
+    pub fn with_probe_every(mut self, n: usize) -> Self {
+        self.probe_every = n;
         self
     }
 }
@@ -225,6 +240,9 @@ struct SequenceState {
     id: RequestId,
     kv: SeqId,
     prompt_len: usize,
+    /// The prompt tokens, retained so the quality probe can replay the
+    /// exact prefix (prompt ⧺ generated) through pristine fp32.
+    prompt: Vec<i32>,
     /// Most recent token (input to the next decode step).
     last_token: i32,
     generated: Vec<i32>,
@@ -265,6 +283,18 @@ struct SpecState {
     draft_cache: KvCache,
 }
 
+/// Pristine-fp32 replay machinery for the online quality probe,
+/// materialized lazily on the first probed step — unprobed servers
+/// never pay the fp32 weight fork.
+struct ProbeState {
+    /// Full-precision snapshot the probe replays through.
+    /// Requantization never touches it.
+    weights: ModelWeights,
+    /// Dense fp32 execution for the replay: the serving backend may be
+    /// in packed exec mode, which would quantize even pristine weights.
+    backend: NativeBackend,
+}
+
 /// The continuous-batching decode engine (see the module docs).
 pub struct Server<'b> {
     cfg: ServerConfig,
@@ -294,6 +324,12 @@ pub struct Server<'b> {
     spec_requests: HashSet<RequestId>,
     /// Verifier-side token selection (greedy — the exactness mode).
     sampler: Sampler,
+    // -- online quality probe ------------------------------------------
+    /// Probe cadence counter ([`ServerConfig::probe_every`]).
+    probe: QualityProbe,
+    /// Lazily-built pristine-fp32 replay pair (`None` until the first
+    /// probe fires).
+    probe_state: Option<ProbeState>,
 }
 
 impl<'b> Server<'b> {
@@ -324,6 +360,7 @@ impl<'b> Server<'b> {
         let batcher = Batcher::new(cfg.policy.clone());
         let cache = KvCache::new(KvCacheConfig::from_manifest(man, cfg.cache_slots));
         let spec_ctrl = SpecController::new(&cfg.specdec);
+        let probe = QualityProbe::new(cfg.probe_every);
         let clock = cfg.clock.clone();
         let trace = Arc::new(TraceBuffer::new(cfg.trace_capacity));
         if trace.enabled() {
@@ -350,6 +387,8 @@ impl<'b> Server<'b> {
             spec_ctrl,
             spec_requests: HashSet::new(),
             sampler: Sampler::greedy(),
+            probe,
+            probe_state: None,
         })
     }
 
@@ -378,6 +417,27 @@ impl<'b> Server<'b> {
                 .with_pool(pool)
                 .with_exec_quant(self.cfg.spec.clone()),
             draft_cache: KvCache::new(KvCacheConfig::from_manifest(man, self.cfg.cache_slots)),
+        });
+    }
+
+    /// Build the probe's pristine-fp32 replay pair on first demand.
+    /// Mirrors [`Self::ensure_spec_state`]: the serving backend may be
+    /// in packed exec mode (which would quantize even pristine
+    /// weights), so the probe gets its own dense-fp32 backend, sharing
+    /// the serving worker pool rather than spawning a second one.
+    fn ensure_probe_state(&mut self) {
+        if self.probe_state.is_some() {
+            return;
+        }
+        let dir = self.ev.backend.models_dir();
+        let pool = self
+            .ev
+            .backend
+            .worker_pool()
+            .unwrap_or_else(|| Arc::new(WorkerPool::with_default_threads()));
+        self.probe_state = Some(ProbeState {
+            weights: self.ev.pristine_weights(),
+            backend: NativeBackend::new(dir).with_pool(pool),
         });
     }
 
@@ -737,6 +797,7 @@ impl<'b> Server<'b> {
                 id: req.id,
                 kv,
                 prompt_len,
+                prompt: req.tokens,
                 last_token: tok,
                 generated: vec![tok],
                 max_new: self.cfg.max_new_tokens.clamp(1, room),
@@ -815,9 +876,24 @@ impl<'b> Server<'b> {
         self.observe_and_maybe_requant(out.stats.as_deref())?;
 
         let vocab = self.ev.weights.manifest.config.vocab;
+        // cadence ticks once per committed plain step; a firing samples
+        // ONE rotating participant (not the whole batch), so the replay
+        // cost stays bounded by prefix_len / (probe_every · batch)
+        // relative to decode — the overhead budget the quality bench
+        // gates on
+        let probe_step = self.probe.tick();
+        let probe_row = if probe_step {
+            self.probe.steps() as usize % rows.len()
+        } else {
+            rows.len()
+        };
         for (row, &i) in rows.iter().enumerate() {
+            let served = &out.logits[row * vocab..(row + 1) * vocab];
+            let tok = argmax(served) as i32;
+            if row == probe_row {
+                self.probe_sequence(i, served, tok as usize)?;
+            }
             let seq = &mut self.running[i];
-            let tok = argmax(&out.logits[row * vocab..(row + 1) * vocab]) as i32;
             seq.generated.push(tok);
             seq.last_token = tok;
             events.push(ServeEvent::Token {
@@ -838,6 +914,44 @@ impl<'b> Server<'b> {
             }
         }
         self.running = still;
+        Ok(())
+    }
+
+    /// Replay one plain sequence's exact pre-commit prefix
+    /// (prompt ⧺ generated) through the pristine fp32 weights and score
+    /// the served logits against the reference: full-softmax
+    /// KL(fp32 ‖ served), top-1 agreement, and the NLL delta on the
+    /// token about to be committed ([`crate::obs::quality`]). Records
+    /// histograms in [`Metrics`] and a probe span on the request's
+    /// track. The replay runs *after* the step's kernel-time diff was
+    /// taken and its wall time lands in `probe_us`, never `exec_us`, so
+    /// decode attribution and throughput accounting stay honest.
+    fn probe_sequence(&mut self, idx: usize, served: &[f32], committed: usize) -> Result<()> {
+        self.ensure_probe_state();
+        let seq = &self.running[idx];
+        let mut prefix = Vec::with_capacity(seq.prompt.len() + seq.generated.len());
+        prefix.extend_from_slice(&seq.prompt);
+        prefix.extend_from_slice(&seq.generated);
+        let st = self.probe_state.as_ref().ok_or(ServeError::ProbeStateMissing)?;
+        let t0_us = self.clock.now_us();
+        let logits = st.backend.logits(&st.weights, &prefix, 1)?;
+        let dur_us = self.clock.now_us().saturating_sub(t0_us);
+        let vocab = self.ev.weights.manifest.config.vocab;
+        let last = &logits[(prefix.len() - 1) * vocab..prefix.len() * vocab];
+        let sample = quality::compare(last, served, committed);
+        self.metrics
+            .record_probe(&sample, Duration::from_micros(dur_us));
+        if self.trace.enabled() {
+            self.trace.record(&TraceEvent {
+                kind: SpanKind::Probe,
+                seq: seq.id,
+                start_us: t0_us,
+                dur_us,
+                weight_version: self.calibrator.generation(),
+                a: quality::nanonats(sample.kl),
+                b: sample.top1_agree as u64,
+            });
+        }
         Ok(())
     }
 
@@ -922,6 +1036,11 @@ impl<'b> Server<'b> {
                 .record_spec_kernel(self.kernel_us().saturating_sub(kern0));
             self.sample_cache_occupancy();
             self.spec_ctrl.observe(r.accepted, r.drafted);
+            // mirror the controller's tuning state into the exporters
+            self.metrics.record_spec_tuning(
+                self.spec_ctrl.acceptance(),
+                self.spec_ctrl.k(),
+            );
 
             let gen = self.calibrator.generation();
             if self.trace.enabled() {
@@ -1025,6 +1144,10 @@ impl<'b> Server<'b> {
                     b: (max_drift * 1e6) as u64,
                 });
             }
+            // score what the requant just produced: activation-weighted
+            // reconstruction error per layer, on the same introspection
+            // record as the drift that triggered it
+            let layer_recon_err = self.ev.reconstruction_errors(&diags);
             self.requant_events.push(RequantEvent {
                 at_us: t0_us,
                 from_version,
@@ -1034,6 +1157,7 @@ impl<'b> Server<'b> {
                 tokens_since_last,
                 quant_us,
                 layer_drifts,
+                layer_recon_err,
             });
             // the drafter weights just changed generation (version bump
             // repacks them transparently); the old acceptance history

@@ -323,6 +323,48 @@ impl<'b> Evaluator<'b> {
         w
     }
 
+    /// Activation-weighted relative reconstruction error of every
+    /// quantizable linear against its pristine tensor, manifest order:
+    /// `Σᵢⱼ dⱼ²·(Wᵢⱼ−Ŵᵢⱼ)² / Σᵢⱼ dⱼ²·Wᵢⱼ²` — the squared error the
+    /// activation-aware objective actually minimizes, normalized so
+    /// layers of different scale compare. `diags[i]` is layer `i`'s
+    /// activation diagonal over input columns (the calibrator's
+    /// committed diagonals on the serving path); a missing or empty
+    /// diagonal falls back to uniform weighting. All-zero layers
+    /// report 0. The server attaches this per requant
+    /// ([`crate::obs::RequantEvent::layer_recon_err`]).
+    pub fn reconstruction_errors(&self, diags: &[Vec<f32>]) -> Vec<f64> {
+        let linears = &self.weights.manifest.linears;
+        let mut out = Vec::with_capacity(linears.len());
+        for (i, lin) in linears.iter().enumerate() {
+            let orig = &self.originals[&lin.name];
+            let Some(cur) = self.weights.get(&lin.name) else {
+                out.push(0.0);
+                continue;
+            };
+            let d = diags.get(i).map(|v| v.as_slice()).unwrap_or(&[]);
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for r in 0..orig.rows {
+                let ro = orig.row(r);
+                let rc = cur.row(r);
+                for c in 0..orig.cols {
+                    let wj = if c < d.len() {
+                        d[c] as f64 * d[c] as f64
+                    } else {
+                        1.0
+                    };
+                    let w = ro[c] as f64;
+                    let dw = w - rc[c] as f64;
+                    num += wj * dw * dw;
+                    den += wj * w * w;
+                }
+            }
+            out.push(if den > 0.0 { num / den } else { 0.0 });
+        }
+        out
+    }
+
     /// Offline calibration (Fig. 1a) for methods with a calib domain:
     /// collect what the method requires from the domain's calib split
     /// and quantize once. No-stats methods quantize directly; online
@@ -444,5 +486,48 @@ mod tests {
         let c = EvalConfig::default();
         assert_eq!(c.spec.group, 32);
         assert!(c.eval_batches > 0 && c.calib_batches > 0);
+    }
+
+    #[test]
+    fn reconstruction_errors_relative_and_diag_weighted() {
+        let backend = crate::backend::NativeBackend::new(std::path::Path::new("artifacts"));
+        let mut ev = Evaluator::new(&backend, "qwen-micro").expect("synthetic model");
+        let n = ev.weights.manifest.linears.len();
+        assert!(n > 0);
+
+        // Pristine weights → exactly zero everywhere.
+        let errs = ev.reconstruction_errors(&[]);
+        assert_eq!(errs.len(), n);
+        assert!(errs.iter().all(|&e| e == 0.0), "{errs:?}");
+
+        // Scaling one linear by 1.1 gives relative error (0.1)² = 0.01
+        // regardless of the layer's own scale.
+        let name = ev.weights.manifest.linears[0].name.clone();
+        let orig = ev.weights.get(&name).expect("linear").clone();
+        let mut scaled = orig.clone();
+        for v in scaled.data.iter_mut() {
+            *v *= 1.1;
+        }
+        ev.weights.set(&name, scaled);
+        let errs = ev.reconstruction_errors(&[]);
+        assert!((errs[0] - 0.01).abs() < 1e-4, "{}", errs[0]);
+        assert!(errs[1..].iter().all(|&e| e == 0.0));
+
+        // Diagonal weighting: a diag that zeroes every input column but
+        // 0 is blind to a perturbation confined to column 1, while the
+        // uniform fallback sees it.
+        let mut poked = orig.clone();
+        for r in 0..poked.rows {
+            poked.row_mut(r)[1] += 0.5;
+        }
+        ev.weights.set(&name, poked);
+        let mut diags: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut d0 = vec![0.0f32; orig.cols];
+        d0[0] = 1.0;
+        diags[0] = d0;
+        let errs = ev.reconstruction_errors(&diags);
+        assert_eq!(errs[0], 0.0, "column-1 damage invisible to a column-0 diag");
+        let uniform = ev.reconstruction_errors(&[]);
+        assert!(uniform[0] > 0.0);
     }
 }

@@ -56,7 +56,7 @@ USAGE:
                   [--max-new-tokens T] [--prompt-len L] [--cache-slots S]
                   [--speculative] [--spec-k K] [--threads T]
                   [--trace-out FILE] [--metrics-out FILE] [--prom-out FILE]
-                  [--trace-capacity N]
+                  [--trace-capacity N] [--probe-every N]
   ttq-serve info
 
 SERVING (decode engine):
@@ -79,8 +79,14 @@ OBSERVABILITY (docs/OBSERVABILITY.md):
   --prom-out FILE      write Prometheus text exposition of the same metrics
   --trace-capacity N   span ring size in events (default 16384; 0 disables
                        recording entirely)
-  Requant events (drift vs threshold, top drifted layers, quantization
-  wall time) are printed after the run whenever the calibrator fired.
+  --probe-every N      online quality probe: every N committed plain decode
+                       steps, replay one sampled sequence through pristine
+                       fp32 and record KL / top-1 / NLL-delta histograms
+                       (0 = off, the default); summaries land in the
+                       metrics line and every exporter
+  Requant events (drift vs threshold, top drifted layers, per-layer
+  reconstruction error, quantization wall time) are printed after the
+  run whenever the calibrator fired.
 
 BACKENDS:
   pjrt     AOT HLO artifacts via the PJRT client (needs `make artifacts`)
@@ -284,6 +290,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         "trace-capacity",
         ttq_serve::coordinator::DEFAULT_TRACE_CAPACITY,
     );
+    cfg.probe_every = a.get_usize("probe-every", 0);
     let speculative = a.has("speculative");
     cfg.specdec = ttq_serve::specdec::SpecConfig::new(a.get_usize("spec-k", 4));
     let requests = a.get_usize("requests", 64);
@@ -349,6 +356,9 @@ fn cmd_serve(a: &Args) -> Result<()> {
         println!("requant: {}", ev.describe());
         for (layer, drift) in ev.top_layers(3) {
             println!("  layer {layer}: drift {drift:.4}");
+        }
+        for (layer, err) in ev.worst_recon_layers(3) {
+            println!("  layer {layer}: recon err {err:.2e}");
         }
     }
     if let Some(path) = a.get("trace-out") {

@@ -40,6 +40,7 @@ fn arg_names(kind: SpanKind) -> (Option<&'static str>, Option<&'static str>) {
         SpanKind::Requant => (Some("from_version"), Some("max_drift_ppm")),
         SpanKind::CacheOccupancy => (Some("used_tokens"), Some("capacity_tokens")),
         SpanKind::Kernel => (Some("rows"), Some("lanes")),
+        SpanKind::Probe => (Some("kl_nanonats"), Some("top1_agree")),
     }
 }
 
@@ -129,7 +130,7 @@ fn prom_hist(out: &mut String, name: &str, h: &Hist) {
 pub fn prometheus(m: &Metrics) -> String {
     use std::sync::atomic::Ordering::Relaxed;
     let mut s = String::new();
-    let counters: [(&str, u64); 14] = [
+    let counters: [(&str, u64); 17] = [
         ("ttq_requests_total", m.requests.load(Relaxed)),
         ("ttq_requests_completed_total", m.completed.load(Relaxed)),
         ("ttq_batches_total", m.batches.load(Relaxed)),
@@ -144,6 +145,9 @@ pub fn prometheus(m: &Metrics) -> String {
         ("ttq_spec_rounds_total", m.spec_rounds.load(Relaxed)),
         ("ttq_spec_drafted_total", m.spec_drafted.load(Relaxed)),
         ("ttq_spec_accepted_total", m.spec_accepted.load(Relaxed)),
+        ("ttq_probe_samples_total", m.probe_samples.load(Relaxed)),
+        ("ttq_probe_top1_total", m.probe_top1_agree.load(Relaxed)),
+        ("ttq_probe_us_total", m.probe_us.load(Relaxed)),
     ];
     for (name, v) in counters {
         prom_counter(&mut s, name, "counter", v);
@@ -162,9 +166,27 @@ pub fn prometheus(m: &Metrics) -> String {
             + m.decode_kernel_us.load(Relaxed)
             + m.spec_kernel_us.load(Relaxed),
     );
+    prom_counter(
+        &mut s,
+        "ttq_spec_accept_ewma_milli",
+        "gauge",
+        m.spec_accept_ewma_milli.load(Relaxed),
+    );
+    prom_counter(
+        &mut s,
+        "ttq_spec_draft_depth",
+        "gauge",
+        m.spec_draft_depth.load(Relaxed),
+    );
     prom_hist(&mut s, "ttq_request_latency_us", &m.latency_hist);
     prom_hist(&mut s, "ttq_decode_step_us", &m.decode_step_hist);
     prom_hist(&mut s, "ttq_spec_round_us", &m.spec_round_hist);
+    prom_hist(&mut s, "ttq_probe_kl_nanonats", &m.probe_kl_hist);
+    prom_hist(
+        &mut s,
+        "ttq_probe_nll_delta_nanonats",
+        &m.probe_nll_delta_hist,
+    );
     s
 }
 
@@ -214,7 +236,11 @@ pub fn metrics_json(m: &Metrics) -> String {
     put("spec_rounds", m.spec_rounds.load(Relaxed));
     put("spec_drafted", m.spec_drafted.load(Relaxed));
     put("spec_accepted", m.spec_accepted.load(Relaxed));
+    put("spec_draft_depth", m.spec_draft_depth.load(Relaxed));
     put("cache_hwm_tokens", m.cache_hwm_tokens.load(Relaxed));
+    put("probe_samples", m.probe_samples.load(Relaxed));
+    put("probe_top1_agree", m.probe_top1_agree.load(Relaxed));
+    put("probe_us", m.probe_us.load(Relaxed));
     o.insert(
         "mean_latency_ms".to_string(),
         Value::Num(m.mean_latency_ms()),
@@ -225,6 +251,18 @@ pub fn metrics_json(m: &Metrics) -> String {
         Value::Num(m.spec_acceptance()),
     );
     o.insert(
+        "spec_accept_ewma".to_string(),
+        Value::Num(m.spec_accept_ewma()),
+    );
+    o.insert(
+        "probe_top1_rate".to_string(),
+        Value::Num(m.probe_top1_rate()),
+    );
+    o.insert(
+        "probe_mean_kl_nats".to_string(),
+        Value::Num(m.probe_mean_kl()),
+    );
+    o.insert(
         "request_latency_us".to_string(),
         hist_value(&m.latency_hist),
     );
@@ -233,6 +271,14 @@ pub fn metrics_json(m: &Metrics) -> String {
         hist_value(&m.decode_step_hist),
     );
     o.insert("spec_round_us".to_string(), hist_value(&m.spec_round_hist));
+    o.insert(
+        "probe_kl_nanonats".to_string(),
+        hist_value(&m.probe_kl_hist),
+    );
+    o.insert(
+        "probe_nll_delta_nanonats".to_string(),
+        hist_value(&m.probe_nll_delta_hist),
+    );
     Value::Obj(o).to_json()
 }
 

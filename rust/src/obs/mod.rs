@@ -5,8 +5,9 @@
 //! calibration and drift-triggered requantization — so the serving
 //! path must be able to show its work: when a requant fired, what the
 //! per-layer drift looked like, how long quantization stalled decode,
-//! and where each request spent its wall time. This module is that
-//! layer, split into four pieces:
+//! and where each request spent its wall time — and, since PR 8, *how
+//! close* the served distribution stays to pristine fp32 while it
+//! adapts. This module is that layer:
 //!
 //! - [`clock`] — the [`Clock`] abstraction every serving-path
 //!   timestamp goes through (repo-lint R6). A real monotonic clock in
@@ -21,6 +22,10 @@
 //!   `Metrics` p50/p95/p99 for request latency, decode-step time and
 //!   spec-round time; [`crate::bench::throughput`] reuses the same
 //!   implementation instead of sorting a `Vec`.
+//! - [`quality`] — online quality probing: KL divergence, top-1
+//!   agreement and NLL delta of the served (quantized) logits vs the
+//!   pristine fp32 weights ([`QualityProbe`], [`quality::compare`]),
+//!   sampled every N committed decode steps by the server.
 //! - [`requant`] + [`export`] — per-requant introspection records
 //!   ([`RequantEvent`]) and exporters: Chrome trace-event JSON
 //!   (loadable in Perfetto / `chrome://tracing`), Prometheus-style
@@ -31,10 +36,12 @@
 pub mod clock;
 pub mod export;
 pub mod hist;
+pub mod quality;
 pub mod requant;
 pub mod trace;
 
 pub use clock::Clock;
 pub use hist::{Hist, HistBucket};
+pub use quality::{ProbeSample, QualityProbe};
 pub use requant::RequantEvent;
 pub use trace::{SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};

@@ -1,0 +1,279 @@
+//! Online quality probing: how far is the *served* (quantized,
+//! possibly mid-requant) model's next-token distribution from the
+//! pristine fp32 weights, measured while requests decode.
+//!
+//! The serving half lives in the coordinator: every N committed decode
+//! steps (`ServerConfig::probe_every`, [`QualityProbe`] owns the
+//! cadence) the server replays **one** rotating sampled sequence's
+//! exact prefix through a plain fp32 backend holding
+//! `Evaluator::pristine_weights`, then scores the served logits row
+//! against the reference row with [`compare`]:
+//!
+//! * **KL divergence** `KL(fp32 ‖ served)` over the full softmax — the
+//!   llama.cpp-style headline quality number (reference distribution
+//!   first, so mass the fp32 model cares about dominates);
+//! * **top-1 agreement** — would greedy decoding have picked the same
+//!   token;
+//! * **NLL delta** — extra nats the served model charges the token it
+//!   actually committed, versus what fp32 would have charged.
+//!
+//! Samples land in [`crate::obs::Hist`]s on the server `Metrics`
+//! (KL and NLL-delta in **nanonats** — the histograms count `u64`s, so
+//! sub-nat divergences are stored fixed-point via [`nanonats`]) and as
+//! `SpanKind::Probe` spans on the trace ring, putting drift, requant
+//! and quality recovery on one Perfetto timeline. The offline half —
+//! the Pareto harness scoring every method against recorded fp32
+//! logits — reuses the same [`kl_divergence`] in
+//! [`crate::bench::quality`]. Design notes: `docs/OBSERVABILITY.md`.
+
+#![forbid(unsafe_code)]
+
+use crate::util::{argmax, logsumexp};
+
+/// One scored probe comparison between a served logits row and its
+/// fp32 reference row. All divergences are in nats.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeSample {
+    /// `KL(fp32 ‖ served)` over the full vocabulary softmax. Always
+    /// ≥ 0 (clamped against rounding in the last bit).
+    pub kl: f64,
+    /// True when both rows argmax to the same token — greedy decoding
+    /// would have been unaffected by quantization at this step.
+    pub top1_agree: bool,
+    /// `nll_served(tok) − nll_fp32(tok)` for the committed token: the
+    /// extra nats quantization charged the token the server actually
+    /// emitted. Positive when the served model is less confident than
+    /// fp32 about its own choice; can be (slightly) negative.
+    pub nll_delta: f64,
+}
+
+/// `KL(reference ‖ served)` in nats between two same-length logit
+/// rows, computed over the full softmax with f64 accumulation via the
+/// shared [`logsumexp`]. Returns 0 for empty or all-`-inf` rows, and
+/// clamps tiny negative rounding residue to exactly 0, so the result
+/// is always ≥ 0 for finite inputs (property-tested below).
+pub fn kl_divergence(reference: &[f32], served: &[f32]) -> f64 {
+    debug_assert_eq!(reference.len(), served.len());
+    let lse_p = logsumexp(reference);
+    let lse_q = logsumexp(served);
+    if !lse_p.is_finite() || !lse_q.is_finite() {
+        return 0.0;
+    }
+    let mut kl = 0.0f64;
+    for (&pl, &ql) in reference.iter().zip(served.iter()) {
+        let lp = pl as f64 - lse_p; // log p_i
+        let p = lp.exp();
+        if p > 0.0 {
+            let lq = ql as f64 - lse_q; // log q_i
+            kl += p * (lp - lq);
+        }
+    }
+    kl.max(0.0)
+}
+
+/// Score one served row against its fp32 reference row. `committed` is
+/// the token index the server emitted for this step (clamped rows with
+/// `committed` out of range yield `nll_delta = 0`).
+pub fn compare(reference: &[f32], served: &[f32], committed: usize) -> ProbeSample {
+    let kl = kl_divergence(reference, served);
+    let top1_agree = !reference.is_empty() && argmax(reference) == argmax(served);
+    let nll_delta = if committed < reference.len() && committed < served.len() {
+        let nll_served = logsumexp(served) - served[committed] as f64;
+        let nll_ref = logsumexp(reference) - reference[committed] as f64;
+        nll_served - nll_ref
+    } else {
+        0.0
+    };
+    ProbeSample {
+        kl,
+        top1_agree,
+        nll_delta,
+    }
+}
+
+/// Fixed-point nats → nanonats for the `u64`-valued histograms:
+/// `round(max(x, 0) · 1e9)`, saturating at `u64::MAX`. Negative and
+/// NaN inputs map to 0 — the histograms track *regressions*, so the
+/// occasional sub-zero NLL delta is clamped rather than wrapped (the
+/// clamp is part of the export contract, see `docs/OBSERVABILITY.md`).
+pub fn nanonats(x: f64) -> u64 {
+    // `as` casts saturate (and NaN → 0) since Rust 1.45.
+    (x.max(0.0) * 1e9).round() as u64
+}
+
+/// Sampling cadence for the online probe: fire on every `every`-th
+/// committed decode step (0 disables). Pure counter logic — the server
+/// owns the replay machinery; this owns *when*.
+#[derive(Clone, Debug)]
+pub struct QualityProbe {
+    every: usize,
+    steps: u64,
+}
+
+impl QualityProbe {
+    /// Probe every `every` committed decode steps; 0 never fires.
+    pub fn new(every: usize) -> Self {
+        QualityProbe { every, steps: 0 }
+    }
+
+    /// True when this probe can ever fire.
+    pub fn enabled(&self) -> bool {
+        self.every > 0
+    }
+
+    /// The configured cadence (0 = disabled).
+    pub fn every(&self) -> usize {
+        self.every
+    }
+
+    /// Committed decode steps observed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Count one committed decode step; true when this step is a probe
+    /// step (the `every`-th, `2·every`-th, … step observed).
+    pub fn tick(&mut self) -> bool {
+        if self.every == 0 {
+            return false;
+        }
+        self.steps += 1;
+        self.steps % self.every as u64 == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::{check, Config, Gen};
+
+    /// Directly computed discrete KL between two explicit probability
+    /// vectors, for goldens.
+    fn kl_explicit(p: &[f64], q: &[f64]) -> f64 {
+        p.iter().zip(q).map(|(&pi, &qi)| pi * (pi / qi).ln()).sum()
+    }
+
+    #[test]
+    fn golden_kl_hand_computed() {
+        // P = softmax([0, 0]) = [1/2, 1/2];
+        // Q = softmax([ln 3, 0]) = [3/4, 1/4].
+        // KL(P‖Q) = ½·ln(½ ÷ ¾) + ½·ln(½ ÷ ¼) = ½·ln(4/3)
+        //         = 0.14384103622589045…
+        let got = kl_divergence(&[0.0, 0.0], &[3.0f32.ln(), 0.0]);
+        assert!((got - 0.143_841_036_225_890_45).abs() < 1e-9, "{got}");
+        // and it matches the explicit discrete form
+        let explicit = kl_explicit(&[0.5, 0.5], &[0.75, 0.25]);
+        assert!((got - explicit).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_of_identical_rows_is_zero() {
+        let row = [1.5f32, -0.25, 3.0, 0.0, -7.5];
+        assert_eq!(kl_divergence(&row, &row), 0.0);
+    }
+
+    #[test]
+    fn kl_degenerate_rows_are_zero() {
+        assert_eq!(kl_divergence(&[], &[]), 0.0);
+        let ninf = [f32::NEG_INFINITY; 4];
+        assert_eq!(kl_divergence(&ninf, &[0.0; 4]), 0.0);
+    }
+
+    #[test]
+    fn prop_kl_nonnegative_and_self_zero() {
+        check("kl_nonnegative", &Config::default(), |g: &mut Gen| {
+            let n = g.usize_in(1, 40);
+            let p = g.vec_f32_adversarial(n);
+            let q = g.vec_f32_adversarial(n);
+            let kl = kl_divergence(&p, &q);
+            prop_assert!(kl >= 0.0, "KL(p‖q) = {kl} < 0");
+            let self_kl = kl_divergence(&p, &p);
+            prop_assert!(self_kl.abs() < 1e-9, "KL(p‖p) = {self_kl} != 0");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_kl_invariant_under_uniform_logit_shift() {
+        check("kl_shift_invariant", &Config::default(), |g: &mut Gen| {
+            let n = g.usize_in(2, 24);
+            let p: Vec<f32> = (0..n).map(|_| g.f32_normal()).collect();
+            let q: Vec<f32> = (0..n).map(|_| g.f32_normal()).collect();
+            let cp = g.f32_normal() * 10.0;
+            let cq = g.f32_normal() * 10.0;
+            let base = kl_divergence(&p, &q);
+            let ps: Vec<f32> = p.iter().map(|v| v + cp).collect();
+            let qs: Vec<f32> = q.iter().map(|v| v + cq).collect();
+            let shifted = kl_divergence(&ps, &qs);
+            // f32 addition rounds each shifted logit by up to ~1 ulp of
+            // the shift magnitude, so allow a matching slack.
+            prop_assert!(
+                (base - shifted).abs() < 1e-3 * (1.0 + base.abs()),
+                "KL changed under uniform shift: {base} vs {shifted}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compare_scores_agreement_and_nll_delta() {
+        // Served row still argmaxes to token 0 but is less confident.
+        let reference = [2.0f32, 0.0, -1.0];
+        let served = [1.0f32, 0.0, -1.0];
+        let s = compare(&reference, &served, 0);
+        assert!(s.top1_agree);
+        assert!(s.kl > 0.0);
+        // fp32 charges −log p(0), served charges more (less peaked).
+        assert!(s.nll_delta > 0.0, "{}", s.nll_delta);
+
+        // Disagreement: served argmaxes elsewhere.
+        let served2 = [0.0f32, 2.0, -1.0];
+        let s2 = compare(&reference, &served2, 1);
+        assert!(!s2.top1_agree);
+        // Token 1 is *more* likely under served2 → negative delta.
+        assert!(s2.nll_delta < 0.0);
+
+        // Identical rows: everything degenerate-zero.
+        let s3 = compare(&reference, &reference, 0);
+        assert_eq!(s3.kl, 0.0);
+        assert!(s3.top1_agree);
+        assert_eq!(s3.nll_delta, 0.0);
+
+        // Out-of-range committed token → nll_delta pinned to 0.
+        let s4 = compare(&reference, &served, 99);
+        assert_eq!(s4.nll_delta, 0.0);
+    }
+
+    #[test]
+    fn nanonats_fixed_point() {
+        assert_eq!(nanonats(0.0), 0);
+        assert_eq!(nanonats(1.5e-3), 1_500_000);
+        assert_eq!(nanonats(2.0), 2_000_000_000);
+        // regressions-only clamp: negatives and NaN record as 0
+        assert_eq!(nanonats(-0.25), 0);
+        assert_eq!(nanonats(f64::NAN), 0);
+        // saturation, not wraparound
+        assert_eq!(nanonats(f64::INFINITY), u64::MAX);
+    }
+
+    #[test]
+    fn probe_cadence_fires_every_nth_step() {
+        let mut p = QualityProbe::new(3);
+        assert!(p.enabled());
+        let fired: Vec<bool> = (0..9).map(|_| p.tick()).collect();
+        assert_eq!(
+            fired,
+            vec![false, false, true, false, false, true, false, false, true]
+        );
+        assert_eq!(p.steps(), 9);
+
+        let mut off = QualityProbe::new(0);
+        assert!(!off.enabled());
+        assert!((0..10).all(|_| !off.tick()));
+        assert_eq!(off.steps(), 0);
+
+        let mut every_step = QualityProbe::new(1);
+        assert!((0..5).all(|_| every_step.tick()));
+    }
+}

@@ -29,6 +29,13 @@ pub struct RequantEvent {
     pub quant_us: u64,
     /// Drift score per layer at trigger time, indexed by layer.
     pub layer_drifts: Vec<f64>,
+    /// Activation-weighted relative reconstruction error per quantized
+    /// linear *after* the requant, in the calibrator's layer order:
+    /// `Σᵢⱼ dⱼ²·(Wᵢⱼ−Ŵᵢⱼ)² / Σᵢⱼ dⱼ²·Wᵢⱼ²` with `d` the layer's
+    /// activation diagonal (uniform when no statistics exist yet).
+    /// Correlates the drift that *triggered* the requant with the
+    /// quantization quality that came *out* of it on one timeline.
+    pub layer_recon_err: Vec<f64>,
 }
 
 impl RequantEvent {
@@ -47,6 +54,25 @@ impl RequantEvent {
         v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v.truncate(n);
         v
+    }
+
+    /// The `n` worst-reconstructed layers as `(layer index, relative
+    /// activation-weighted error)`, worst first.
+    pub fn worst_recon_layers(&self, n: usize) -> Vec<(usize, f64)> {
+        let mut v: Vec<(usize, f64)> = self.layer_recon_err.iter().cloned().enumerate().collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
+        v.truncate(n);
+        v
+    }
+
+    /// Mean relative reconstruction error across quantized layers
+    /// (0 when the requant recorded none).
+    pub fn mean_recon_err(&self) -> f64 {
+        if self.layer_recon_err.is_empty() {
+            0.0
+        } else {
+            self.layer_recon_err.iter().sum::<f64>() / self.layer_recon_err.len() as f64
+        }
     }
 
     /// One-line human-readable summary (used by the CLI and example).
@@ -78,6 +104,7 @@ mod tests {
             tokens_since_last: 640,
             quant_us: 2_200,
             layer_drifts: vec![0.01, 0.21, f64::INFINITY, 0.07],
+            layer_recon_err: vec![1e-4, 3e-3, 2e-3, 5e-5],
         }
     }
 
@@ -98,6 +125,21 @@ mod tests {
         assert!(e.drift_exceeded());
         e.max_drift = 0.04;
         assert!(!e.drift_exceeded());
+    }
+
+    #[test]
+    fn recon_error_queries() {
+        let e = event();
+        let worst = e.worst_recon_layers(2);
+        assert_eq!(worst, vec![(1, 3e-3), (2, 2e-3)]);
+        let mean = e.mean_recon_err();
+        assert!((mean - (1e-4 + 3e-3 + 2e-3 + 5e-5) / 4.0).abs() < 1e-15);
+        let empty = RequantEvent {
+            layer_recon_err: Vec::new(),
+            ..e
+        };
+        assert_eq!(empty.mean_recon_err(), 0.0);
+        assert!(empty.worst_recon_layers(3).is_empty());
     }
 
     #[test]

@@ -64,6 +64,10 @@ pub enum SpanKind {
     /// One pooled kernel dispatch on the worker pool. `a` = rows,
     /// `b` = lanes participating.
     Kernel = 9,
+    /// One online quality-probe replay (fp32 reference forward for one
+    /// sequence at a committed decode step). `a` = KL(fp32 ‖ served)
+    /// in nanonats, `b` = 1 when the top-1 tokens agreed, else 0.
+    Probe = 10,
 }
 
 impl SpanKind {
@@ -81,6 +85,7 @@ impl SpanKind {
             7 => SpanKind::Requant,
             8 => SpanKind::CacheOccupancy,
             9 => SpanKind::Kernel,
+            10 => SpanKind::Probe,
             _ => return None,
         })
     }
@@ -98,6 +103,7 @@ impl SpanKind {
             SpanKind::Requant => "requant",
             SpanKind::CacheOccupancy => "kv_cache_tokens",
             SpanKind::Kernel => "kernel",
+            SpanKind::Probe => "probe",
         }
     }
 
@@ -322,6 +328,7 @@ mod tests {
             SpanKind::Requant,
             SpanKind::CacheOccupancy,
             SpanKind::Kernel,
+            SpanKind::Probe,
         ] {
             assert_eq!(SpanKind::from_u64(k as u64), Some(k));
             assert!(!k.name().is_empty());

@@ -30,9 +30,31 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
+/// Numerically stable `ln Σᵢ exp(xᵢ)` over a logit row, accumulated in
+/// `f64` after max-shifting — the one implementation shared by the
+/// eval perplexity path ([`crate::backend`] NLL), the quality benches
+/// and the online KL probe ([`crate::obs::quality`]). Returns
+/// `f64::NEG_INFINITY` for an empty row (the sum over zero terms), and
+/// stays finite whenever at least one input is finite (all-`-inf` rows
+/// come back `-inf` rather than `NaN`).
+pub fn logsumexp(row: &[f32]) -> f64 {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in row {
+        mx = mx.max(v);
+    }
+    if mx == f32::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let mut z = 0.0f64;
+    for &v in row {
+        z += ((v - mx) as f64).exp();
+    }
+    z.ln() + mx as f64
+}
+
 #[cfg(test)]
 mod tests {
-    use super::argmax;
+    use super::{argmax, logsumexp};
 
     #[test]
     fn argmax_basics() {
@@ -43,5 +65,32 @@ mod tests {
         assert_eq!(argmax(&[2.0, 7.0, 7.0]), 1);
         // NaN never beats an existing max under strict >
         assert_eq!(argmax(&[1.0, f32::NAN, 3.0]), 2);
+    }
+
+    #[test]
+    fn logsumexp_matches_direct_sum_on_small_logits() {
+        let xs = [0.5f32, -1.25, 2.0, 0.0];
+        let direct: f64 = xs.iter().map(|&v| (v as f64).exp()).sum::<f64>().ln();
+        assert!((logsumexp(&xs) - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logsumexp_is_shift_invariant_and_overflow_safe() {
+        let xs = [1.0f32, 2.0, 3.0];
+        let base = logsumexp(&xs);
+        let shifted: Vec<f32> = xs.iter().map(|v| v + 500.0).collect();
+        // exp(503) overflows naively; the max-shift keeps it finite and
+        // exactly `base + 500`.
+        let s = logsumexp(&shifted);
+        assert!(s.is_finite());
+        assert!((s - (base + 500.0)).abs() < 1e-9, "{s} vs {}", base + 500.0);
+    }
+
+    #[test]
+    fn logsumexp_edge_rows() {
+        assert_eq!(logsumexp(&[]), f64::NEG_INFINITY);
+        assert_eq!(logsumexp(&[f32::NEG_INFINITY; 3]), f64::NEG_INFINITY);
+        // Single element: lse == the element.
+        assert!((logsumexp(&[4.25]) - 4.25).abs() < 1e-12);
     }
 }

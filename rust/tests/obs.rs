@@ -12,7 +12,11 @@
 //!   counts sum to the event count, for all three serving histograms;
 //! * a domain shift mid-traffic produces at least one [`RequantEvent`]
 //!   whose measured drift exceeds the configured threshold, with
-//!   per-layer drift scores and monotone weight generations.
+//!   per-layer drift scores, per-layer activation-weighted
+//!   reconstruction errors and monotone weight generations;
+//! * a probed session (`probe_every = 3`) fires the online quality
+//!   probe on exactly every third committed plain decode step, with one
+//!   `Probe` span per sample nested inside the owning request's root.
 //!
 //! The traffic mix mirrors `examples/trace_generate.rs`: half the
 //! requests from one synthetic corpus domain, half from another, with
@@ -120,6 +124,14 @@ fn requant_events_capture_drift_introspection() -> Result<()> {
         assert!(e.drift_exceeded(), "requant {i} fired below threshold: {}", e.describe());
         assert_eq!(e.to_version, e.from_version + 1, "generations must step by one");
         assert!(!e.layer_drifts.is_empty(), "per-layer drift scores missing");
+        assert!(!e.layer_recon_err.is_empty(), "per-layer recon errors missing");
+        assert!(
+            e.layer_recon_err.iter().all(|r| r.is_finite() && *r >= 0.0),
+            "recon errors must be finite and non-negative: {:?}",
+            e.layer_recon_err
+        );
+        let worst = e.worst_recon_layers(3);
+        assert!(worst.windows(2).all(|w| w[0].1 >= w[1].1), "worst layers unsorted");
         assert!(e.tokens_since_last > 0, "requant with no observed evidence");
         assert!(e.quant_us > 0, "deterministic clock must charge quant time");
         let top = e.top_layers(3);
@@ -282,5 +294,75 @@ fn sessions_on_the_same_clock_are_identical() -> Result<()> {
         assert_eq!(x.layer_drifts, y.layer_drifts);
     }
     assert_eq!(a.hists, b.hists);
+    Ok(())
+}
+
+/// Probe cadence for the probed-session test: with a single plain
+/// request the batch has one row, so the rotating row sampler always
+/// picks it and the probe must fire on *exactly* every third step.
+const PROBE_EVERY: usize = 3;
+
+#[test]
+fn probed_session_cadence_and_nesting() -> Result<()> {
+    let backend = NativeBackend::new(&ttq_serve::artifacts_dir()).with_threads(2);
+    let cfg = ServerConfig::new("qwen-micro")
+        .with_clock(Clock::test(25))
+        .with_trace_capacity(8192)
+        .with_max_new_tokens(7)
+        .with_probe_every(PROBE_EVERY);
+    let mut server = Server::new(&backend, cfg)?;
+    let prompt_len = server.max_seq() / 2;
+    let mut stream = CorpusStream::new("wt2s", Split::Eval);
+    let mut toks = vec![BOS; prompt_len];
+    for t in toks.iter_mut().skip(1) {
+        *t = stream.next_token();
+    }
+    server.submit(toks);
+    while server.pending() > 0 || server.running() > 0 {
+        server.step()?;
+    }
+
+    // deterministic cadence: one sample per every-third committed step
+    let decode_steps = server.metrics.decode_steps.load(Relaxed);
+    let samples = server.metrics.probe_samples.load(Relaxed);
+    assert!(decode_steps >= PROBE_EVERY as u64, "session too short to probe");
+    assert_eq!(
+        samples,
+        decode_steps / PROBE_EVERY as u64,
+        "probe must fire on exactly every {PROBE_EVERY}th committed step"
+    );
+    assert!(samples > 0, "no probe fired; grow max_new_tokens");
+    assert_eq!(server.metrics.probe_kl_hist.count(), samples);
+    assert_eq!(server.metrics.probe_nll_delta_hist.count(), samples);
+    assert!(
+        server.metrics.probe_us.load(Relaxed) > 0,
+        "deterministic clock must charge probe replay time"
+    );
+    assert!(server.metrics.summary().contains("probe"), "summary omits probe section");
+
+    // span contract: one Probe span per sample, riding the owning
+    // request's track and nested inside its root span
+    let events = server.trace().snapshot();
+    let probes: Vec<&TraceEvent> = events
+        .iter()
+        .filter(|e| e.kind == SpanKind::Probe)
+        .collect();
+    assert_eq!(probes.len() as u64, samples, "one probe span per sample");
+    let root = events
+        .iter()
+        .find(|e| e.kind == SpanKind::Request)
+        .expect("request root span");
+    for (i, p) in probes.iter().enumerate() {
+        assert_eq!(p.seq, root.seq, "probe spans ride the request track");
+        assert!(p.start_us >= root.start_us, "probe starts before its root");
+        assert!(
+            p.start_us + p.dur_us <= root.start_us + root.dur_us,
+            "probe span escapes its request root"
+        );
+        assert!(p.b <= 1, "payload b is the top-1 agreement bit");
+        if i > 0 {
+            assert!(p.start_us > probes[i - 1].start_us, "probe spans out of order");
+        }
+    }
     Ok(())
 }
