@@ -20,7 +20,11 @@
 //! Dense projections and the cached-attention inner loops execute on a
 //! persistent [`crate::linalg::pool::WorkerPool`] — parked worker
 //! threads claim chunked row ranges per kernel call, replacing the
-//! scoped-thread spawn/join every matmul used to pay.
+//! scoped-thread spawn/join every matmul used to pay. Every dispatch
+//! goes through [`WorkerPool::run_rows_site`] with a
+//! [`crate::obs::KernelCall`] describing its kind, shape and analytic
+//! FLOP/byte counts (repo-lint R7), so an attached
+//! [`crate::obs::Profiler`] can attribute pooled kernel time per site.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -31,6 +35,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{BatchStats, ExecBackend, StepOut};
 use crate::kvcache::{KvCache, SeqId};
+use crate::obs::{Clock, KernelCall};
 use crate::linalg::pool::WorkerPool;
 use crate::linalg::Mat;
 use crate::models::{Manifest, ModelWeights};
@@ -115,12 +120,13 @@ pub fn matmul_bt_mt(a: &Mat, b: &Mat, pool: &WorkerPool) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_bt_mt dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut out = Mat::zeros(m, n);
+    let call = KernelCall::fp32_gemm(m, n, k);
     if m == 1 {
-        pool.run_rows(&mut out.data, n, 1, k * n, |j0, os| {
+        pool.run_rows_site(&mut out.data, n, 1, k * n, call, |j0, os| {
             gemv_cols(a.row(0), b, j0, os);
         });
     } else {
-        pool.run_rows(&mut out.data, m, n, m * k * n, |r0, orows| {
+        pool.run_rows_site(&mut out.data, m, n, m * k * n, call, |r0, orows| {
             bt_rows(a, b, r0, orows);
         });
     }
@@ -146,7 +152,8 @@ pub fn packed_matmul_nt(p: &Packed, x: &Mat, pool: &WorkerPool) -> Mat {
     }
     let groups_per_row = d_in / g;
     let mut yt = Mat::zeros(d_out, n);
-    pool.run_rows(&mut yt.data, d_out, n, n * d_in * d_out, |r0, yrows| {
+    let call = KernelCall::packed_w4(n, d_out, d_in, p.bits, g);
+    pool.run_rows_site(&mut yt.data, d_out, n, n * d_in * d_out, call, |r0, yrows| {
         let mut wbuf = vec![0.0f32; g];
         let rows = yrows.len() / n;
         for rr in 0..rows {
@@ -755,11 +762,10 @@ fn forward_cached(
         // Per-(seq, head, pos) arithmetic is exactly the serial loop's,
         // so chunking keeps the step bit-identical.
         let cache_ro: &KvCache = cache;
-        let att_flops: usize = starts
-            .iter()
-            .map(|&s0| new_len * (s0 + new_len) * d_attn * 2)
-            .sum();
-        pool.run_rows(&mut o.data, n, d_attn, att_flops, |r0, orows| {
+        let ctx_total: usize = starts.iter().map(|&s0| new_len * (s0 + new_len)).sum();
+        let att_flops = ctx_total * d_attn * 2;
+        let att_call = KernelCall::cached_attention(n, d_attn, ctx_total);
+        pool.run_rows_site(&mut o.data, n, d_attn, att_flops, att_call, |r0, orows| {
             let mut scores = vec![0.0f32; cfg.max_seq];
             let rows = orows.len() / d_attn;
             for rr in 0..rows {
@@ -985,6 +991,7 @@ impl NativeBackend {
             }
         }
         let mut map = HashMap::new();
+        let profiler = self.pool().profiler().cloned();
         for lin in &weights.manifest.linears {
             let w = need(weights, &lin.name)?;
             if w.data.len() % spec.group != 0 {
@@ -995,7 +1002,15 @@ impl NativeBackend {
                     spec.group
                 );
             }
+            // Quant-pack is serial (not a pool dispatch), so attribute it
+            // directly; a fresh real clock reads 0 at creation (R5 keeps
+            // raw `Instant` out of this file).
+            let t = Clock::real();
             map.insert(lin.name.clone(), pack(&rtn_quantize_int(w, spec)));
+            if let Some(prof) = profiler.as_ref() {
+                let call = KernelCall::quant_pack(w.rows, w.cols, spec.bits, spec.group);
+                prof.record(&call, t.now_us());
+            }
         }
         let arc = Arc::new(map);
         cache.insert(weights.manifest.name.clone(), (weights.version(), arc.clone()));

@@ -11,7 +11,11 @@
 //! [`run_scenario`] runs with the trace recorder disabled (capacity 0);
 //! [`run_scenario_traced`] runs the same load with a live trace ring —
 //! the pair behind the ≤ 2% recorder-overhead gate in
-//! `benches/serve_throughput.rs`.
+//! `benches/serve_throughput.rs`. [`run_scenario_profiled`] runs with
+//! the kernel profiler attached and additionally returns the per-site
+//! roofline [`ProfileReport`] — the measured side of the
+//! profiler-overhead and attribution-coverage gates in
+//! `benches/kernel_profile.rs`.
 //! [`default_scenarios`] describes the serving mix the throughput bench
 //! (`benches/serve_throughput.rs`) sweeps:
 //!
@@ -48,6 +52,7 @@ use crate::coordinator::{BatchPolicy, ServeEvent, Server, ServerConfig};
 use crate::corpus::{CorpusStream, Split, BOS};
 use crate::linalg::pool::{WorkerPool, MT_FLOP_FLOOR};
 use crate::linalg::{Mat, Rng};
+use crate::obs::profile::{HostSpec, ProfileReport};
 use crate::obs::{Hist, HistBucket};
 use crate::quant::{MethodSpec, QuantSpec};
 use crate::specdec::SpecConfig;
@@ -171,7 +176,7 @@ impl ScenarioResult {
 /// paces the queue through the KV slots). Runs with the trace recorder
 /// *disabled* — the clean-performance baseline.
 pub fn run_scenario(spec: &LoadSpec, threads: usize) -> Result<ScenarioResult> {
-    run_scenario_with(spec, threads, 0, 0)
+    run_scenario_with(spec, threads, 0, 0, None).map(|(r, _)| r)
 }
 
 /// [`run_scenario`] with a live trace ring of `trace_capacity` events —
@@ -181,7 +186,7 @@ pub fn run_scenario_traced(
     threads: usize,
     trace_capacity: usize,
 ) -> Result<ScenarioResult> {
-    run_scenario_with(spec, threads, trace_capacity, 0)
+    run_scenario_with(spec, threads, trace_capacity, 0, None).map(|(r, _)| r)
 }
 
 /// [`run_scenario`] with the online quality probe firing every
@@ -193,7 +198,23 @@ pub fn run_scenario_probed(
     threads: usize,
     probe_every: usize,
 ) -> Result<ScenarioResult> {
-    run_scenario_with(spec, threads, 0, probe_every)
+    run_scenario_with(spec, threads, 0, probe_every, None).map(|(r, _)| r)
+}
+
+/// [`run_scenario`] with the kernel profiler attached (trace ring and
+/// probes disabled): returns the scenario result plus the per-site
+/// roofline [`ProfileReport`] evaluated against `host` — the measured
+/// side of the profiler-overhead gate in `benches/kernel_profile.rs`.
+pub fn run_scenario_profiled(
+    spec: &LoadSpec,
+    threads: usize,
+    host: &HostSpec,
+) -> Result<(ScenarioResult, ProfileReport)> {
+    let (r, rep) = run_scenario_with(spec, threads, 0, 0, Some(host))?;
+    match rep {
+        Some(rep) => Ok((r, rep)),
+        None => bail!("scenario {}: backend has no pooled profiler", spec.name),
+    }
 }
 
 fn run_scenario_with(
@@ -201,7 +222,8 @@ fn run_scenario_with(
     threads: usize,
     trace_capacity: usize,
     probe_every: usize,
-) -> Result<ScenarioResult> {
+    profile_host: Option<&HostSpec>,
+) -> Result<(ScenarioResult, Option<ProfileReport>)> {
     let dir = crate::artifacts_dir();
     let backend = match spec.exec_bits {
         Some(bits) => NativeBackend::new(&dir).with_exec_quant(QuantSpec::new(bits, 32)),
@@ -212,7 +234,8 @@ fn run_scenario_with(
     let mut cfg = ServerConfig::new(&spec.model)
         .with_method(MethodSpec::ttq(0))
         .with_trace_capacity(trace_capacity)
-        .with_probe_every(probe_every);
+        .with_probe_every(probe_every)
+        .with_profile(profile_host.is_some());
     cfg.spec = QuantSpec::new(spec.exec_bits.unwrap_or(4), 32);
     cfg.policy = BatchPolicy { buckets: vec![1, 4], linger: Duration::ZERO };
     cfg.max_new_tokens = spec.max_new_tokens.max(1);
@@ -277,8 +300,17 @@ fn run_scenario_with(
         bail!("scenario {}: {done} of {} requests completed", spec.name, spec.requests);
     }
 
+    let profile = if let Some(h) = profile_host {
+        match server.profile_report(h) {
+            Some(rep) => Some(rep),
+            None => bail!("scenario {}: backend has no pooled profiler", spec.name),
+        }
+    } else {
+        None
+    };
+
     use std::sync::atomic::Ordering::Relaxed;
-    Ok(ScenarioResult {
+    Ok((ScenarioResult {
         name: spec.name.clone(),
         threads,
         exec: spec.exec_bits.map_or_else(|| "fp32".into(), |b| format!("w{b}")),
@@ -294,7 +326,7 @@ fn run_scenario_with(
         requants: server.metrics.requants.load(Relaxed),
         spec_acceptance: server.metrics.spec_acceptance(),
         kernel_share: server.metrics.kernel_share(),
-    })
+    }, profile))
 }
 
 /// The serving mix the throughput bench sweeps (see the module docs).
@@ -508,6 +540,30 @@ mod tests {
         let r = run_scenario_traced(&spec, 2, 4096).unwrap();
         assert_eq!(r.requests, 2);
         assert!(r.streamed_tokens >= 2);
+    }
+
+    #[test]
+    fn profiled_scenario_attributes_kernel_time() {
+        let spec = LoadSpec {
+            name: "unit-profiled".into(),
+            model: "qwen-micro".into(),
+            prompt_frac: (1, 4),
+            max_new_tokens: 3,
+            requests: 2,
+            domains: vec!["wt2s".into()],
+            speculative: false,
+            exec_bits: Some(4),
+        };
+        let (r, rep) = run_scenario_profiled(&spec, 2, &HostSpec::synthetic(8.0, 40.0)).unwrap();
+        assert_eq!(r.requests, 2);
+        assert!(!rep.sites.is_empty(), "profiled run names at least one site");
+        assert!(rep.attributed_us > 0);
+        assert_eq!(rep.dropped, 0);
+        // every observed phase is a serving phase the server sets
+        for s in &rep.sites {
+            let p = s.site.phase.name();
+            assert!(p == "prefill" || p == "decode", "{p}");
+        }
     }
 
     #[test]

@@ -72,8 +72,12 @@ use crate::eval::{EvalConfig, Evaluator, Sampler};
 use crate::kvcache::{CacheStats, KvCache, KvCacheConfig, SeqId};
 use crate::linalg::pool::WorkerPool;
 use crate::models::ModelWeights;
+use crate::obs::profile::HostSpec;
 use crate::obs::quality::{self, QualityProbe};
-use crate::obs::{Clock, RequantEvent, SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};
+use crate::obs::{
+    Clock, Phase, ProfileReport, Profiler, RequantEvent, SpanKind, TraceBuffer, TraceEvent,
+    ENGINE_SEQ,
+};
 use crate::quant::{MethodSpec, QuantSpec};
 use crate::specdec::{spec_round, DraftState, SpecConfig, SpecController, SpecModel};
 use crate::util::argmax;
@@ -124,6 +128,13 @@ pub struct ServerConfig {
     /// agreement / NLL delta ([`crate::obs::quality`]). 0 (default)
     /// disables probing entirely — no fp32 fork, no cost.
     pub probe_every: usize,
+    /// Attach a kernel-level [`Profiler`] to the serving pool: every
+    /// pooled dispatch is attributed to a
+    /// [`crate::obs::KernelSite`] (kind × phase × shape bucket) with
+    /// analytic FLOP/byte counts, read back via
+    /// [`Server::profile_report`]. Off by default (the overhead-gate
+    /// baseline).
+    pub profile: bool,
 }
 
 impl ServerConfig {
@@ -142,7 +153,14 @@ impl ServerConfig {
             clock: Clock::real(),
             trace_capacity: DEFAULT_TRACE_CAPACITY,
             probe_every: 0,
+            profile: false,
         }
+    }
+
+    /// Enable per-site kernel profiling (see [`ServerConfig::profile`]).
+    pub fn with_profile(mut self, profile: bool) -> Self {
+        self.profile = profile;
+        self
     }
 
     /// Drive the engine from this clock (tests pass [`Clock::test`]
@@ -330,6 +348,14 @@ pub struct Server<'b> {
     /// Lazily-built pristine-fp32 replay pair (`None` until the first
     /// probe fires).
     probe_state: Option<ProbeState>,
+    // -- kernel profiling -----------------------------------------------
+    /// Per-site kernel profiler shared with the serving pool
+    /// (`None` unless [`ServerConfig::profile`]).
+    profiler: Option<Arc<Profiler>>,
+    /// Pool `kernel_us` reading at construction, so the profile
+    /// report's coverage denominator counts only this server's time
+    /// even on a shared pool.
+    kernel_base_us: u64,
 }
 
 impl<'b> Server<'b> {
@@ -370,6 +396,19 @@ impl<'b> Server<'b> {
                 pool.attach_trace(trace.clone(), clock.clone());
             }
         }
+        let profiler = if cfg.profile {
+            backend.worker_pool().map(|pool| {
+                pool.attach_profiler(Arc::new(Profiler::new()));
+                // first attach wins on a shared pool — read back
+                // whichever profiler is actually installed
+                pool.profiler()
+                    .cloned()
+                    .unwrap_or_else(|| Arc::new(Profiler::new()))
+            })
+        } else {
+            None
+        };
+        let kernel_base_us = backend.worker_pool().map_or(0, |p| p.kernel_us());
         Ok(Server {
             cfg,
             ev,
@@ -389,6 +428,8 @@ impl<'b> Server<'b> {
             sampler: Sampler::greedy(),
             probe,
             probe_state: None,
+            profiler,
+            kernel_base_us,
         })
     }
 
@@ -496,20 +537,67 @@ impl<'b> Server<'b> {
         &self.requant_events
     }
 
-    /// KV-cache occupancy sample: high-water metrics + an instant
-    /// counter event on the engine track.
+    /// The kernel profiler attached to the serving pool (`None` unless
+    /// [`ServerConfig::profile`]).
+    pub fn profiler(&self) -> Option<&Arc<Profiler>> {
+        self.profiler.as_ref()
+    }
+
+    /// Per-site roofline report over everything this server dispatched:
+    /// achieved GFLOP/s / GB/s / intensity per [`crate::obs::KernelSite`]
+    /// against `host`, plus predicted-vs-measured drift and the
+    /// attribution coverage vs. this server's share of pool kernel time.
+    /// `None` unless profiling is on.
+    pub fn profile_report(&self, host: &HostSpec) -> Option<ProfileReport> {
+        let kern = self.kernel_us().saturating_sub(self.kernel_base_us);
+        self.profiler.as_ref().map(|p| p.report(host, kern))
+    }
+
+    /// Point the profiler's phase gauge (no-op without a profiler).
+    fn set_phase(&self, phase: Phase) {
+        if let Some(p) = &self.profiler {
+            p.set_phase(phase);
+        }
+    }
+
+    /// KV-cache occupancy sample: high-water metrics, slab-byte gauges
+    /// (occupancy vs. reserved-but-empty waste across serving + draft
+    /// caches), plus instant counter events on the engine track.
     fn sample_cache_occupancy(&self) {
         let used = self.cache.used_tokens() + self.draft_tokens_used();
         self.metrics.record_cache_used(used);
+        // Slab-byte gauges: a slot reserves max_seq tokens for the whole
+        // residency of its sequence, so waste = reserved − written. The
+        // draft cache shares the manifest's geometry (same bytes/token).
+        let kcfg = self.cache.config();
+        let bpt = (kcfg.n_layers * 2 * kcfg.d_kv * 4) as u64;
+        let mut reserved = self.cache.stats().active_seqs * kcfg.max_seq;
+        if let Some(st) = &self.spec_state {
+            reserved += st.draft_cache.stats().active_seqs * kcfg.max_seq;
+        }
+        let occupancy = used as u64 * bpt;
+        let waste = reserved.saturating_sub(used) as u64 * bpt;
+        self.metrics.record_kv_bytes(occupancy, waste);
         if self.trace.enabled() {
+            let now_us = self.clock.now_us();
+            let gen = self.calibrator.generation();
             self.trace.record(&TraceEvent {
                 kind: SpanKind::CacheOccupancy,
                 seq: ENGINE_SEQ,
-                start_us: self.clock.now_us(),
+                start_us: now_us,
                 dur_us: 0,
-                weight_version: self.calibrator.generation(),
+                weight_version: gen,
                 a: used as u64,
                 b: self.cache.stats().capacity_tokens as u64,
+            });
+            self.trace.record(&TraceEvent {
+                kind: SpanKind::KvBytes,
+                seq: ENGINE_SEQ,
+                start_us: now_us,
+                dur_us: 0,
+                weight_version: gen,
+                a: occupancy,
+                b: waste,
             });
         }
     }
@@ -697,6 +785,7 @@ impl<'b> Server<'b> {
             tokens.extend_from_slice(&r.tokens);
         }
         let with_stats = self.cfg.method.needs_stats();
+        self.set_phase(Phase::Prefill);
         let t0_us = self.clock.now_us();
         let k0 = self.kernel_us();
         let res = if speculative {
@@ -841,6 +930,7 @@ impl<'b> Server<'b> {
         let last: Vec<i32> = rows.iter().map(|&i| self.running[i].last_token).collect();
         let ids: Vec<SeqId> = rows.iter().map(|&i| self.running[i].kv).collect();
         let with_stats = self.cfg.method.needs_stats();
+        self.set_phase(Phase::Decode);
         let t0_us = self.clock.now_us();
         let k0 = self.kernel_us();
         let out = self
@@ -1032,8 +1122,15 @@ impl<'b> Server<'b> {
                 r.accepted,
                 Duration::from_micros(dur_us),
             );
+            // split the round's pool kernel time into its two halves:
+            // draft as measured inside spec_round, verify as the
+            // residual — so the four phase counters sum exactly to
+            // total pool kernel time
+            let round_kern = self.kernel_us().saturating_sub(kern0);
+            let draft_kern = r.draft_kernel_us.min(round_kern);
+            self.metrics.record_spec_draft_kernel(draft_kern);
             self.metrics
-                .record_spec_kernel(self.kernel_us().saturating_sub(kern0));
+                .record_spec_verify_kernel(round_kern.saturating_sub(draft_kern));
             self.sample_cache_occupancy();
             self.spec_ctrl.observe(r.accepted, r.drafted);
             // mirror the controller's tuning state into the exporters

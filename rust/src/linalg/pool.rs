@@ -39,6 +39,16 @@
 //!   records a [`crate::obs::SpanKind::Kernel`] span timed on the
 //!   server's [`crate::obs::Clock`]; serial fallbacks are never
 //!   recorded (they would flood the ring at decode time).
+//! * **Per-site attribution.** Once a server attaches a kernel
+//!   profiler ([`WorkerPool::attach_profiler`]), every *attributed*
+//!   dispatch ([`WorkerPool::run_rows_site`] — the only dispatch
+//!   surface `backend::native` is allowed to use, repo-lint R7)
+//!   accumulates its wall time plus analytic FLOP/byte counts into the
+//!   per-[`crate::obs::KernelSite`] aggregator. Serial fallbacks are
+//!   attributed too (decode GEMVs on the miniature models run below
+//!   [`MT_FLOP_FLOOR`], and the ≥ 90% attribution-coverage gate counts
+//!   them), so site wall time sums to [`WorkerPool::kernel_us`] minus
+//!   only unattributed `run_rows` callers (tests, benches).
 //!
 //! One pool is meant to be shared by everything that executes kernels:
 //! [`crate::backend::NativeBackend`] owns an `Arc<WorkerPool>`, and the
@@ -72,7 +82,7 @@
 //! assert_eq!(data[777], 777);
 //! ```
 
-use crate::obs::{Clock, SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};
+use crate::obs::{Clock, KernelCall, Profiler, SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};
 use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::sync::thread::JoinHandle;
 use crate::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
@@ -214,6 +224,13 @@ pub struct WorkerPool {
     /// spans nest consistently inside request spans in the exported
     /// Chrome trace. Unset (the default) costs one `OnceLock::get`.
     trace: OnceLock<(Arc<TraceBuffer>, Clock)>,
+    /// Observability hook: once attached
+    /// ([`WorkerPool::attach_profiler`]), every site-attributed
+    /// dispatch ([`WorkerPool::run_rows_site`], serial or pooled)
+    /// accumulates wall time + analytic FLOP/byte counts into the
+    /// per-site aggregator. Unset (the default) costs one
+    /// `OnceLock::get` per dispatch.
+    profiler: OnceLock<Arc<Profiler>>,
 }
 
 impl WorkerPool {
@@ -250,6 +267,7 @@ impl WorkerPool {
             kernel_us: AtomicU64::new(0),
             dispatches: AtomicU64::new(0),
             trace: OnceLock::new(),
+            profiler: OnceLock::new(),
         }
     }
 
@@ -261,6 +279,25 @@ impl WorkerPool {
     /// re-point it mid-serve.
     pub fn attach_trace(&self, trace: Arc<TraceBuffer>, clock: Clock) {
         let _ = self.trace.set((trace, clock));
+    }
+
+    /// Attach a kernel profiler: from now on every
+    /// [`WorkerPool::run_rows_site`] dispatch — serial fallback *or*
+    /// pooled — accumulates its wall time and the call's analytic
+    /// FLOP/byte counts into the per-site aggregator, attributed to the
+    /// profiler's current serving [`crate::obs::Phase`] gauge. First
+    /// attachment wins (same contract as [`WorkerPool::attach_trace`]),
+    /// so drafter/verifier backends sharing one pool cannot re-point it
+    /// mid-serve.
+    pub fn attach_profiler(&self, profiler: Arc<Profiler>) {
+        let _ = self.profiler.set(profiler);
+    }
+
+    /// The attached kernel profiler, if any — the coordinator and
+    /// `specdec` use this to flip the serving-phase gauge, and
+    /// `backend::native` to record the (non-pooled) quant-pack site.
+    pub fn profiler(&self) -> Option<&Arc<Profiler>> {
+        self.profiler.get()
     }
 
     /// Pooled dispatches posted so far (serial inline calls excluded).
@@ -322,6 +359,39 @@ impl WorkerPool {
         flops: usize,
         f: impl Fn(usize, &mut [T]) + Sync,
     ) {
+        self.run_rows_inner(data, rows, width, flops, None, f);
+    }
+
+    /// [`WorkerPool::run_rows`] with kernel-site attribution: `call`
+    /// names what this dispatch computes (kind + shape) and carries its
+    /// analytic FLOP/byte counts. When a profiler is attached
+    /// ([`WorkerPool::attach_profiler`]) the dispatch's wall time —
+    /// serial fallback or pooled, the same value that feeds
+    /// [`WorkerPool::kernel_us`] — is accumulated into the call's
+    /// [`crate::obs::KernelSite`] under the profiler's current phase
+    /// gauge. This is the only dispatch surface `backend::native` may
+    /// use (repo-lint R7: no unattributed kernels on the serving path).
+    pub fn run_rows_site<T: Send>(
+        &self,
+        data: &mut [T],
+        rows: usize,
+        width: usize,
+        flops: usize,
+        call: KernelCall,
+        f: impl Fn(usize, &mut [T]) + Sync,
+    ) {
+        self.run_rows_inner(data, rows, width, flops, Some(call), f);
+    }
+
+    fn run_rows_inner<T: Send>(
+        &self,
+        data: &mut [T],
+        rows: usize,
+        width: usize,
+        flops: usize,
+        call: Option<KernelCall>,
+        f: impl Fn(usize, &mut [T]) + Sync,
+    ) {
         // hard assert: this invariant guards the unsafe disjoint-window
         // derivation below — a violation must never reach release builds
         assert_eq!(data.len(), rows * width, "run_rows shape mismatch");
@@ -374,9 +444,16 @@ impl WorkerPool {
                 });
             }
         }
+        let elapsed_us = t0.elapsed().as_micros() as u64;
         // Relaxed: metrics counter; see `kernel_us` for the argument.
-        self.kernel_us
-            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        self.kernel_us.fetch_add(elapsed_us, Ordering::Relaxed);
+        // Attribution records the *same* elapsed value kernel_us just
+        // accumulated, on both the serial and pooled paths, so per-site
+        // wall time sums exactly to kernel_us across attributed calls
+        // (the ≥ 90% coverage invariant in `obs::profile`).
+        if let (Some(call), Some(prof)) = (call.as_ref(), self.profiler.get()) {
+            prof.record(call, elapsed_us);
+        }
     }
 
     /// Post a job, work through chunks on the calling thread alongside
@@ -606,6 +683,51 @@ mod tests {
         pool.run_rows(&mut data, 64, 1, 0, |_r0, _w| {});
         assert_eq!(pool.dispatch_count(), 1);
         assert_eq!(trace.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn attached_profiler_attributes_serial_and_pooled() {
+        use crate::obs::profile::Phase;
+        let pool = WorkerPool::new(2);
+        let prof = Arc::new(Profiler::new());
+        pool.attach_profiler(prof.clone());
+        // first attachment wins — this one must be ignored
+        pool.attach_profiler(Arc::new(Profiler::new()));
+        assert!(pool.profiler().is_some());
+        prof.set_phase(Phase::Decode);
+        let k0 = pool.kernel_us();
+        let mut data = vec![0.0f32; 64];
+        // pooled (hint at the floor) and serial (hint 0) dispatches,
+        // both attributed; plus one unattributed run_rows.
+        pool.run_rows_site(&mut data, 64, 1, FORCE, KernelCall::fp32_gemm(64, 64, 64), |_r, w| {
+            for v in w.iter_mut() {
+                *v += 1.0;
+            }
+        });
+        pool.run_rows_site(&mut data, 64, 1, 0, KernelCall::fp32_gemm(1, 64, 64), |_r, w| {
+            for v in w.iter_mut() {
+                *v += 1.0;
+            }
+        });
+        pool.run_rows(&mut data, 64, 1, 0, |_r, w| {
+            for v in w.iter_mut() {
+                *v += 1.0;
+            }
+        });
+        assert_eq!(data[0], 3.0);
+        let snap = prof.snapshot();
+        assert_eq!(snap.len(), 2, "two shapes → two decode sites");
+        let calls: u64 = snap.iter().map(|s| s.calls).sum();
+        assert_eq!(calls, 2, "unattributed run_rows records no site");
+        let attributed: u64 = snap.iter().map(|s| s.wall_us).sum();
+        assert!(
+            attributed <= pool.kernel_us() - k0,
+            "site wall time ({attributed}) cannot exceed kernel_us ({})",
+            pool.kernel_us() - k0
+        );
+        for s in &snap {
+            assert_eq!(s.site.phase, Phase::Decode);
+        }
     }
 
     #[test]

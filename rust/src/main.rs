@@ -56,7 +56,7 @@ USAGE:
                   [--max-new-tokens T] [--prompt-len L] [--cache-slots S]
                   [--speculative] [--spec-k K] [--threads T]
                   [--trace-out FILE] [--metrics-out FILE] [--prom-out FILE]
-                  [--trace-capacity N] [--probe-every N]
+                  [--trace-capacity N] [--probe-every N] [--profile]
   ttq-serve info
 
 SERVING (decode engine):
@@ -84,6 +84,12 @@ OBSERVABILITY (docs/OBSERVABILITY.md):
                        fp32 and record KL / top-1 / NLL-delta histograms
                        (0 = off, the default); summaries land in the
                        metrics line and every exporter
+  --profile            attach the kernel roofline profiler (native backend):
+                       every pooled kernel dispatch is attributed to a
+                       kind/phase/shape site; after the run the per-site
+                       measured-vs-predicted roofline table is printed, the
+                       ttq_kernel_* families are appended to --prom-out and a
+                       kernel-profile track is added to --trace-out
   Requant events (drift vs threshold, top drifted layers, per-layer
   reconstruction error, quantization wall time) are printed after the
   run whenever the calibrator fired.
@@ -291,6 +297,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         ttq_serve::coordinator::DEFAULT_TRACE_CAPACITY,
     );
     cfg.probe_every = a.get_usize("probe-every", 0);
+    cfg.profile = a.has("profile");
     let speculative = a.has("speculative");
     cfg.specdec = ttq_serve::specdec::SpecConfig::new(a.get_usize("spec-k", 4));
     let requests = a.get_usize("requests", 64);
@@ -361,8 +368,43 @@ fn cmd_serve(a: &Args) -> Result<()> {
             println!("  layer {layer}: recon err {err:.2e}");
         }
     }
+    // Roofline report: measure the host ceilings once, position every
+    // recorded kernel site against them.
+    let profile_report = if a.has("profile") {
+        let host = ttq_serve::obs::profile::HostSpec::measured();
+        server.profile_report(&host)
+    } else {
+        None
+    };
+    if let Some(rep) = &profile_report {
+        println!(
+            "kernel profile: {:.0}% of {} pooled kernel us attributed across {} sites \
+             ({} dropped); host {:.1} GB/s, {:.1} GFLOP/s",
+            100.0 * rep.coverage(),
+            rep.kernel_us,
+            rep.sites.len(),
+            rep.dropped,
+            rep.host.bw_gbps,
+            rep.host.gflops
+        );
+        for s in &rep.sites {
+            println!(
+                "  {:<44} {:>6} calls {:>8} us  {:>7.2} gflops  {:>6.2} gbps  {:<7} ratio {:.2}",
+                s.site.label(),
+                s.calls,
+                s.measured_us,
+                s.gflops,
+                s.gbps,
+                s.bound.name(),
+                s.ratio
+            );
+        }
+    }
     if let Some(path) = a.get("trace-out") {
-        let trace = ttq_serve::obs::export::chrome_trace(&server.trace().snapshot());
+        let trace = ttq_serve::obs::export::chrome_trace_with_profile(
+            &server.trace().snapshot(),
+            profile_report.as_ref(),
+        );
         std::fs::write(path, trace)?;
         println!(
             "trace: {} events recorded ({} dropped) -> {path}",
@@ -375,7 +417,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
         println!("metrics snapshot -> {path}");
     }
     if let Some(path) = a.get("prom-out") {
-        std::fs::write(path, ttq_serve::obs::export::prometheus(&server.metrics))?;
+        let mut prom = ttq_serve::obs::export::prometheus(&server.metrics);
+        if let Some(rep) = &profile_report {
+            prom.push_str(&ttq_serve::obs::export::prometheus_profile(rep));
+        }
+        std::fs::write(path, prom)?;
         println!("prometheus exposition -> {path}");
     }
     Ok(())

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::Metrics;
 use crate::obs::hist::Hist;
+use crate::obs::profile::{KernelSite, ProfileReport};
 use crate::obs::trace::{SpanKind, TraceEvent, ENGINE_SEQ};
 use crate::util::json::Value;
 
@@ -41,6 +42,7 @@ fn arg_names(kind: SpanKind) -> (Option<&'static str>, Option<&'static str>) {
         SpanKind::CacheOccupancy => (Some("used_tokens"), Some("capacity_tokens")),
         SpanKind::Kernel => (Some("rows"), Some("lanes")),
         SpanKind::Probe => (Some("kl_nanonats"), Some("top1_agree")),
+        SpanKind::KvBytes => (Some("occupancy_bytes"), Some("waste_bytes")),
     }
 }
 
@@ -48,11 +50,27 @@ fn num(v: u64) -> Value {
     Value::Num(v as f64)
 }
 
+/// Chrome trace-event `tid` for the synthetic kernel-profile track —
+/// far above any plausible request id so it never collides with
+/// `seq + 1` request tracks.
+const PROFILE_TID: u64 = 1_000_000;
+
 /// Render recorded events as Chrome trace-event JSON
 /// (`{"traceEvents": [...]}`), directly loadable in Perfetto.
 /// Duration spans become `"ph": "X"` complete events; counter kinds
 /// ([`SpanKind::is_counter`]) become `"ph": "C"` counter samples.
 pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    chrome_trace_with_profile(events, None)
+}
+
+/// [`chrome_trace`], plus an optional kernel-profile track: one `"X"`
+/// slice per [`KernelSite`] (laid end to end, width = attributed wall
+/// time) on a dedicated `tid`, with the roofline verdict, achieved
+/// rates and predicted-vs-measured ratio in the slice args.
+pub fn chrome_trace_with_profile(
+    events: &[TraceEvent],
+    profile: Option<&ProfileReport>,
+) -> String {
     let mut out: Vec<Value> = Vec::with_capacity(events.len() + 8);
     let mut meta = |name: &str, tid: u64, arg: &str| {
         let mut args = BTreeMap::new();
@@ -97,6 +115,47 @@ pub fn chrome_trace(events: &[TraceEvent]) -> String {
         }
         o.insert("args".to_string(), Value::Obj(args));
         out.push(Value::Obj(o));
+    }
+    if let Some(rep) = profile {
+        let mut margs = BTreeMap::new();
+        margs.insert(
+            "name".to_string(),
+            Value::Str("kernel profile".to_string()),
+        );
+        let mut mo = BTreeMap::new();
+        mo.insert("name".to_string(), Value::Str("thread_name".to_string()));
+        mo.insert("ph".to_string(), Value::Str("M".to_string()));
+        mo.insert("pid".to_string(), num(1));
+        mo.insert("tid".to_string(), num(PROFILE_TID));
+        mo.insert("args".to_string(), Value::Obj(margs));
+        out.push(Value::Obj(mo));
+        let mut ts = 0u64;
+        for r in &rep.sites {
+            let mut args = BTreeMap::new();
+            args.insert("calls".to_string(), num(r.calls));
+            args.insert("flops".to_string(), num(r.flops));
+            args.insert("bytes".to_string(), num(r.bytes));
+            args.insert("gflops".to_string(), Value::Num(r.gflops));
+            args.insert("gbps".to_string(), Value::Num(r.gbps));
+            args.insert("intensity".to_string(), Value::Num(r.intensity));
+            args.insert(
+                "bound".to_string(),
+                Value::Str(r.bound.name().to_string()),
+            );
+            args.insert("predicted_us".to_string(), Value::Num(r.predicted_us));
+            args.insert("ratio".to_string(), Value::Num(r.ratio));
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Value::Str(r.site.label()));
+            o.insert("cat".to_string(), Value::Str("profile".to_string()));
+            o.insert("pid".to_string(), num(1));
+            o.insert("tid".to_string(), num(PROFILE_TID));
+            o.insert("ts".to_string(), num(ts));
+            o.insert("ph".to_string(), Value::Str("X".to_string()));
+            o.insert("dur".to_string(), num(r.measured_us.max(1)));
+            o.insert("args".to_string(), Value::Obj(args));
+            out.push(Value::Obj(o));
+            ts += r.measured_us.max(1);
+        }
     }
     let mut top = BTreeMap::new();
     top.insert("displayTimeUnit".to_string(), Value::Str("ms".to_string()));
@@ -158,13 +217,42 @@ pub fn prometheus(m: &Metrics) -> String {
         "gauge",
         m.cache_hwm_tokens.load(Relaxed),
     );
+    prom_counter(&mut s, "ttq_kernel_us_total", "counter", m.kernel_us_total());
     prom_counter(
         &mut s,
-        "ttq_kernel_us_total",
+        "ttq_kernel_prefill_us_total",
         "counter",
-        m.prefill_kernel_us.load(Relaxed)
-            + m.decode_kernel_us.load(Relaxed)
-            + m.spec_kernel_us.load(Relaxed),
+        m.prefill_kernel_us.load(Relaxed),
+    );
+    prom_counter(
+        &mut s,
+        "ttq_kernel_decode_us_total",
+        "counter",
+        m.decode_kernel_us.load(Relaxed),
+    );
+    prom_counter(
+        &mut s,
+        "ttq_kernel_spec_draft_us_total",
+        "counter",
+        m.spec_draft_kernel_us.load(Relaxed),
+    );
+    prom_counter(
+        &mut s,
+        "ttq_kernel_spec_verify_us_total",
+        "counter",
+        m.spec_verify_kernel_us.load(Relaxed),
+    );
+    prom_counter(
+        &mut s,
+        "ttq_kv_occupancy_bytes",
+        "gauge",
+        m.kv_occupancy_bytes.load(Relaxed),
+    );
+    prom_counter(
+        &mut s,
+        "ttq_kv_waste_bytes",
+        "gauge",
+        m.kv_waste_bytes.load(Relaxed),
     );
     prom_counter(
         &mut s,
@@ -187,6 +275,130 @@ pub fn prometheus(m: &Metrics) -> String {
         "ttq_probe_nll_delta_nanonats",
         &m.probe_nll_delta_hist,
     );
+    s
+}
+
+/// The Prometheus label set for one kernel site:
+/// `kind="..",phase="..",shape="m{..}xdo{..}xdi{..}"`.
+fn site_labels(site: &KernelSite) -> String {
+    format!(
+        "kind=\"{}\",phase=\"{}\",shape=\"m{}xdo{}xdi{}\"",
+        site.kind.name(),
+        site.phase.name(),
+        site.m_bucket,
+        site.d_out_bucket,
+        site.d_in_bucket
+    )
+}
+
+/// Prometheus-style text exposition of a [`ProfileReport`]: host
+/// ceilings, attribution coverage, and one labelled sample per kernel
+/// site in each `ttq_kernel_*` family (calls, wall time, analytic
+/// FLOPs/bytes, achieved rates, roofline verdict and
+/// predicted-vs-measured drift). Appended to the [`prometheus`]
+/// exposition by the serve CLI when profiling is on.
+pub fn prometheus_profile(rep: &ProfileReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# TYPE ttq_kernel_host_bw_gbps gauge\nttq_kernel_host_bw_gbps {:.3}\n",
+        rep.host.bw_gbps
+    ));
+    s.push_str(&format!(
+        "# TYPE ttq_kernel_host_gflops gauge\nttq_kernel_host_gflops {:.3}\n",
+        rep.host.gflops
+    ));
+    prom_counter(&mut s, "ttq_kernel_pool_us_total", "counter", rep.kernel_us);
+    prom_counter(
+        &mut s,
+        "ttq_kernel_attributed_us_total",
+        "counter",
+        rep.attributed_us,
+    );
+    prom_counter(&mut s, "ttq_kernel_dropped_total", "counter", rep.dropped);
+    s.push_str(&format!(
+        "# TYPE ttq_kernel_coverage_ratio gauge\nttq_kernel_coverage_ratio {:.4}\n",
+        rep.coverage()
+    ));
+    s.push_str("# TYPE ttq_kernel_calls_total counter\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_calls_total{{{}}} {}\n",
+            site_labels(&r.site),
+            r.calls
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_wall_us_total counter\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_wall_us_total{{{}}} {}\n",
+            site_labels(&r.site),
+            r.measured_us
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_flops_total counter\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_flops_total{{{}}} {}\n",
+            site_labels(&r.site),
+            r.flops
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_bytes_total counter\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_bytes_total{{{}}} {}\n",
+            site_labels(&r.site),
+            r.bytes
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_gflops gauge\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_gflops{{{}}} {:.3}\n",
+            site_labels(&r.site),
+            r.gflops
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_gbps gauge\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_gbps{{{}}} {:.3}\n",
+            site_labels(&r.site),
+            r.gbps
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_intensity gauge\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_intensity{{{}}} {:.4}\n",
+            site_labels(&r.site),
+            r.intensity
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_bound gauge\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_bound{{{},bound=\"{}\"}} 1\n",
+            site_labels(&r.site),
+            r.bound.name()
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_predicted_us gauge\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_predicted_us{{{}}} {:.2}\n",
+            site_labels(&r.site),
+            r.predicted_us
+        ));
+    }
+    s.push_str("# TYPE ttq_kernel_ratio gauge\n");
+    for r in &rep.sites {
+        s.push_str(&format!(
+            "ttq_kernel_ratio{{{}}} {:.3}\n",
+            site_labels(&r.site),
+            r.ratio
+        ));
+    }
     s
 }
 
@@ -237,7 +449,14 @@ pub fn metrics_json(m: &Metrics) -> String {
     put("spec_drafted", m.spec_drafted.load(Relaxed));
     put("spec_accepted", m.spec_accepted.load(Relaxed));
     put("spec_draft_depth", m.spec_draft_depth.load(Relaxed));
+    put("prefill_kernel_us", m.prefill_kernel_us.load(Relaxed));
+    put("decode_kernel_us", m.decode_kernel_us.load(Relaxed));
+    put("spec_draft_kernel_us", m.spec_draft_kernel_us.load(Relaxed));
+    put("spec_verify_kernel_us", m.spec_verify_kernel_us.load(Relaxed));
+    put("kernel_us", m.kernel_us_total());
     put("cache_hwm_tokens", m.cache_hwm_tokens.load(Relaxed));
+    put("kv_occupancy_bytes", m.kv_occupancy_bytes.load(Relaxed));
+    put("kv_waste_bytes", m.kv_waste_bytes.load(Relaxed));
     put("probe_samples", m.probe_samples.load(Relaxed));
     put("probe_top1_agree", m.probe_top1_agree.load(Relaxed));
     put("probe_us", m.probe_us.load(Relaxed));
@@ -350,6 +569,107 @@ mod tests {
             assert!(n >= last, "{line}");
             last = n;
         }
+    }
+
+    #[test]
+    fn prometheus_phase_split_and_kv_gauges() {
+        let m = Metrics::new();
+        m.record_prefill_kernel(1_000);
+        m.record_decode_kernel(2_000);
+        m.record_spec_draft_kernel(3_000);
+        m.record_spec_verify_kernel(4_000);
+        m.record_kv_bytes(4096, 512);
+        let s = prometheus(&m);
+        assert!(s.contains("ttq_kernel_us_total 10000"), "{s}");
+        assert!(s.contains("ttq_kernel_prefill_us_total 1000"), "{s}");
+        assert!(s.contains("ttq_kernel_decode_us_total 2000"), "{s}");
+        assert!(s.contains("ttq_kernel_spec_draft_us_total 3000"), "{s}");
+        assert!(s.contains("ttq_kernel_spec_verify_us_total 4000"), "{s}");
+        assert!(s.contains("ttq_kv_occupancy_bytes 4096"), "{s}");
+        assert!(s.contains("ttq_kv_waste_bytes 512"), "{s}");
+        let v = Value::parse(&metrics_json(&m)).expect("valid JSON");
+        assert_eq!(v.field("kernel_us").unwrap().as_usize(), Some(10_000));
+        assert_eq!(
+            v.field("spec_verify_kernel_us").unwrap().as_usize(),
+            Some(4_000)
+        );
+        assert_eq!(v.field("kv_waste_bytes").unwrap().as_usize(), Some(512));
+    }
+
+    fn sample_report() -> ProfileReport {
+        use crate::obs::profile::{HostSpec, KernelCall, Phase, Profiler};
+        let p = Profiler::new();
+        p.set_phase(Phase::Decode);
+        p.record(&KernelCall::fp32_gemm(1, 512, 64), 100);
+        p.set_phase(Phase::Prefill);
+        p.record(&KernelCall::packed_w4(8, 512, 64, 4, 32), 300);
+        p.report(&HostSpec::synthetic(10.0, 50.0), 400)
+    }
+
+    #[test]
+    fn prometheus_profile_labels_every_site() {
+        let rep = sample_report();
+        let s = prometheus_profile(&rep);
+        assert!(s.contains("ttq_kernel_host_bw_gbps 10.000"), "{s}");
+        assert!(s.contains("ttq_kernel_pool_us_total 400"), "{s}");
+        assert!(s.contains("ttq_kernel_coverage_ratio 1.0000"), "{s}");
+        assert!(
+            s.contains("kind=\"fp32_gemm\",phase=\"decode\""),
+            "{s}"
+        );
+        assert!(
+            s.contains("kind=\"packed_w4\",phase=\"prefill\""),
+            "{s}"
+        );
+        assert!(s.contains("bound=\""), "{s}");
+        // Every sample line is `name[{labels}] value`; type lines
+        // declare each family exactly once.
+        for fam in ["ttq_kernel_calls_total", "ttq_kernel_ratio"] {
+            let decls = s
+                .lines()
+                .filter(|l| *l == format!("# TYPE {fam} counter") || *l == format!("# TYPE {fam} gauge"))
+                .count();
+            assert_eq!(decls, 1, "{fam}");
+            let samples = s
+                .lines()
+                .filter(|l| l.starts_with(&format!("{fam}{{")))
+                .count();
+            assert_eq!(samples, 2, "{fam}\n{s}");
+        }
+    }
+
+    #[test]
+    fn chrome_trace_profile_track_parses() {
+        let rep = sample_report();
+        let evs = [span(SpanKind::Request, 0, 0, 100)];
+        let s = chrome_trace_with_profile(&evs, Some(&rep));
+        let v = Value::parse(&s).expect("valid JSON");
+        let arr = v.field("traceEvents").unwrap().as_arr().unwrap();
+        let slices: Vec<_> = arr
+            .iter()
+            .filter(|e| {
+                e.field("tid").unwrap().as_f64() == Some(PROFILE_TID as f64)
+                    && e.field("ph").unwrap().as_str() == Some("X")
+            })
+            .collect();
+        assert_eq!(slices.len(), 2, "{s}");
+        for e in &slices {
+            let name = e.field("name").unwrap().as_str().unwrap();
+            assert!(
+                name.starts_with("fp32_gemm/") || name.starts_with("packed_w4/"),
+                "{name}"
+            );
+            let bound = e
+                .field("args")
+                .unwrap()
+                .field("bound")
+                .unwrap()
+                .as_str()
+                .unwrap();
+            assert!(bound == "memory" || bound == "compute", "{bound}");
+        }
+        // Plain chrome_trace is unchanged by the profile feature.
+        assert!(!chrome_trace(&evs).contains("kernel profile"));
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //!   agreement and NLL delta of the served (quantized) logits vs the
 //!   pristine fp32 weights ([`QualityProbe`], [`quality::compare`]),
 //!   sampled every N committed decode steps by the server.
+//! - [`profile`] — the kernel-level performance profiler (PR 9):
+//!   per-[`KernelSite`] attribution of pooled kernel time with analytic
+//!   FLOP/byte counts, a measured host roofline
+//!   ([`profile::HostSpec::measure`]) giving each site an achieved
+//!   GFLOP/s + GB/s position and a memory/compute-bound verdict, and
+//!   the predicted-vs-measured drift report joined with
+//!   [`crate::perfmodel`].
 //! - [`requant`] + [`export`] — per-requant introspection records
 //!   ([`RequantEvent`]) and exporters: Chrome trace-event JSON
 //!   (loadable in Perfetto / `chrome://tracing`), Prometheus-style
@@ -36,12 +43,14 @@
 pub mod clock;
 pub mod export;
 pub mod hist;
+pub mod profile;
 pub mod quality;
 pub mod requant;
 pub mod trace;
 
 pub use clock::Clock;
 pub use hist::{Hist, HistBucket};
+pub use profile::{KernelCall, KernelKind, KernelSite, Phase, ProfileReport, Profiler};
 pub use quality::{ProbeSample, QualityProbe};
 pub use requant::RequantEvent;
 pub use trace::{SpanKind, TraceBuffer, TraceEvent, ENGINE_SEQ};

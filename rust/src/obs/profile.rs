@@ -1,0 +1,829 @@
+//! Kernel-level performance profiler: per-site attribution, measured
+//! host roofline, and predicted-vs-measured calibration.
+//!
+//! The paper's speedup claim rests on decode being **memory-bound** —
+//! the roofline `t = max(bytes/BW, flops/FLOPS)` that [`crate::perfmodel`]
+//! prices with *published GPU specs*. This module is the measured
+//! counterpart for the CPU kernels every token actually runs on:
+//!
+//! * [`KernelCall`] — one dispatch's identity (kernel kind × shape) plus
+//!   **analytic** FLOP and bytes-moved counts, computed from the shape by
+//!   the constructors so they scale exactly with `m`, `d_out`, `d_in`
+//!   (property-tested).
+//! * [`Profiler`] — a lock-free per-site aggregator on [`crate::sync`]
+//!   atomics (same discipline as [`crate::obs::TraceBuffer`]): a fixed
+//!   open-addressed table of [`KernelSite`] slots accumulating calls,
+//!   wall-µs, FLOPs and bytes. Writers never block and never allocate;
+//!   the serving phase ([`Phase`]) is a gauge the coordinator sets at
+//!   phase boundaries so the pool does not need to know it.
+//! * [`HostSpec`] — a one-shot microbenchmark of the *actual machine*:
+//!   achieved stream bandwidth and scalar FLOP throughput, the two
+//!   ceilings of the measured roofline.
+//! * [`ProfileReport`] — the join: per site, achieved GFLOP/s, GB/s,
+//!   arithmetic intensity, a roofline [`Bound`] verdict (via
+//!   [`crate::perfmodel::roofline_us`] — the same equation the GPU
+//!   simulator uses), and the predicted-vs-measured drift ratio. The
+//!   report also carries the attribution-coverage invariant: the share
+//!   of [`crate::linalg::pool::WorkerPool::kernel_us`] accounted for by
+//!   named sites (CI gates this at ≥ 90% — no dark time).
+//!
+//! Exported through all three exporters (`ttq_kernel_*` Prometheus
+//! families, the JSON snapshot, a profile track in the Perfetto trace)
+//! and through `benches/kernel_profile.rs` → `BENCH_profile.json`
+//! (schema: `docs/BENCHMARKS.md`; methodology: `docs/OBSERVABILITY.md`).
+
+#![forbid(unsafe_code)]
+
+use crate::obs::Clock;
+use crate::perfmodel::{roofline_us, Bound};
+use crate::sync::atomic::{AtomicU64, Ordering};
+
+/// What the dispatched kernel computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum KernelKind {
+    /// Dense fp32 GEMM / GEMV (`matmul_bt_mt`).
+    Fp32Gemm = 0,
+    /// Grouped packed low-bit matmul with register dequant
+    /// (`packed_matmul_nt`).
+    PackedW4 = 1,
+    /// Incremental attention over cached K/V (`forward_cached`).
+    CachedAttention = 2,
+    /// Weight quantize + bit-pack when a packed execution cache misses
+    /// (`NativeBackend::packed_for`).
+    QuantPack = 3,
+}
+
+impl KernelKind {
+    /// Stable lowercase label used in exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Fp32Gemm => "fp32_gemm",
+            KernelKind::PackedW4 => "packed_w4",
+            KernelKind::CachedAttention => "cached_attention",
+            KernelKind::QuantPack => "quant_pack",
+        }
+    }
+
+    fn from_u64(v: u64) -> KernelKind {
+        match v & 0x3 {
+            0 => KernelKind::Fp32Gemm,
+            1 => KernelKind::PackedW4,
+            2 => KernelKind::CachedAttention,
+            _ => KernelKind::QuantPack,
+        }
+    }
+}
+
+/// Which serving phase issued the kernel. Set by the coordinator (and
+/// by `specdec::spec_round` around its draft/verify halves) on the
+/// [`Profiler`]'s phase gauge; the pool never needs to know it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Phase {
+    /// Batched prompt ingestion.
+    Prefill = 0,
+    /// Plain cached decode steps.
+    Decode = 1,
+    /// Speculative drafter proposing tokens.
+    SpecDraft = 2,
+    /// Full-precision verifier scoring a draft window.
+    SpecVerify = 3,
+}
+
+impl Phase {
+    /// Stable lowercase label used in exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::SpecDraft => "spec_draft",
+            Phase::SpecVerify => "spec_verify",
+        }
+    }
+
+    fn from_u64(v: u64) -> Phase {
+        match v & 0x3 {
+            0 => Phase::Prefill,
+            1 => Phase::Decode,
+            2 => Phase::SpecDraft,
+            _ => Phase::SpecVerify,
+        }
+    }
+}
+
+/// One kernel dispatch: kind, shape, and analytic FLOP / bytes-moved
+/// counts. Built by the constructors so the counts are a pure function
+/// of the shape (MACs count as 2 FLOPs; fp32 elements as 4 bytes).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelCall {
+    /// Kernel kind.
+    pub kind: KernelKind,
+    /// Activation rows (1 for a decode GEMV; token count for prefill).
+    pub m: usize,
+    /// Output features (the chunked axis for GEMV fan-out).
+    pub d_out: usize,
+    /// Input features / reduction depth (mean attended context for
+    /// attention).
+    pub d_in: usize,
+    /// Analytic floating-point operations (2 per multiply-accumulate).
+    pub flops: u64,
+    /// Analytic bytes moved: weights or cached K/V streamed plus
+    /// activations read and written.
+    pub bytes: u64,
+}
+
+impl KernelCall {
+    /// Dense fp32 GEMM `x(m,d_in) · Wᵀ(d_in,d_out)`: weights, input and
+    /// output all stream as f32.
+    pub fn fp32_gemm(m: usize, d_out: usize, d_in: usize) -> KernelCall {
+        KernelCall {
+            kind: KernelKind::Fp32Gemm,
+            m,
+            d_out,
+            d_in,
+            flops: 2 * (m * d_out * d_in) as u64,
+            bytes: 4 * (d_out * d_in + m * d_in + m * d_out) as u64,
+        }
+    }
+
+    /// Packed low-bit matmul: weights stream as `bits`-bit codes plus one
+    /// f32 scale + zero per `group` columns per row; activations as f32.
+    pub fn packed_w4(m: usize, d_out: usize, d_in: usize, bits: u32, group: usize) -> KernelCall {
+        let code_bytes = d_out * (d_in * bits as usize).div_ceil(8);
+        let meta_bytes = d_out * d_in.div_ceil(group.max(1)) * 8; // f32 scale + f32 zero
+        KernelCall {
+            kind: KernelKind::PackedW4,
+            m,
+            d_out,
+            d_in,
+            flops: 2 * (m * d_out * d_in) as u64,
+            bytes: (code_bytes + meta_bytes + 4 * (m * d_in + m * d_out)) as u64,
+        }
+    }
+
+    /// Incremental cached attention: `rows` fresh query positions over
+    /// `ctx_total` attended (query, key) pairs of width `d_attn`. QKᵀ
+    /// and the V-weighted sum each cost one MAC per attended pair per
+    /// channel; K and V rows of the prefix stream from the cache.
+    pub fn cached_attention(rows: usize, d_attn: usize, ctx_total: usize) -> KernelCall {
+        KernelCall {
+            kind: KernelKind::CachedAttention,
+            m: rows,
+            d_out: d_attn,
+            d_in: ctx_total / rows.max(1),
+            flops: 4 * (ctx_total * d_attn) as u64,
+            bytes: 4 * (2 * ctx_total * d_attn + 2 * rows * d_attn) as u64,
+        }
+    }
+
+    /// Weight quantize + pack on a packed-cache miss: the fp32 weight is
+    /// read, quantized (one scale/round/clamp pass) and written back as
+    /// codes + group metadata.
+    pub fn quant_pack(d_out: usize, d_in: usize, bits: u32, group: usize) -> KernelCall {
+        let code_bytes = d_out * (d_in * bits as usize).div_ceil(8);
+        let meta_bytes = d_out * d_in.div_ceil(group.max(1)) * 8;
+        KernelCall {
+            kind: KernelKind::QuantPack,
+            m: 1,
+            d_out,
+            d_in,
+            flops: 2 * (d_out * d_in) as u64,
+            bytes: (4 * d_out * d_in + code_bytes + meta_bytes) as u64,
+        }
+    }
+}
+
+/// Power-of-two shape bucket: 0 → 0, else the next power of two ≥ `v`.
+/// Keeps the site table small while preserving the decode-vs-prefill
+/// shape distinction (m=1 GEMV vs m=512 GEMM land in different sites).
+pub fn shape_bucket(v: usize) -> usize {
+    if v == 0 {
+        0
+    } else {
+        v.next_power_of_two()
+    }
+}
+
+fn bucket_log2(v: usize) -> u64 {
+    // 0 → 0, else 1 + log2(next_power_of_two(v)) so bucket 1 (v=1) and
+    // "no extent" (v=0) stay distinct. Fits in 6 bits for any usize
+    // shape this crate can allocate.
+    if v == 0 {
+        0
+    } else {
+        1 + shape_bucket(v).trailing_zeros() as u64
+    }
+}
+
+fn bucket_from_log2(l: u64) -> usize {
+    if l == 0 {
+        0
+    } else {
+        1usize << (l - 1)
+    }
+}
+
+/// A profiler table key: kernel kind × serving phase × shape bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct KernelSite {
+    /// Kernel kind.
+    pub kind: KernelKind,
+    /// Serving phase that issued the dispatch.
+    pub phase: Phase,
+    /// Power-of-two bucket of the activation-row count `m`.
+    pub m_bucket: usize,
+    /// Power-of-two bucket of `d_out`.
+    pub d_out_bucket: usize,
+    /// Power-of-two bucket of `d_in`.
+    pub d_in_bucket: usize,
+}
+
+impl KernelSite {
+    /// Build the site key for a call observed in `phase`.
+    pub fn new(call: &KernelCall, phase: Phase) -> KernelSite {
+        KernelSite {
+            kind: call.kind,
+            phase,
+            m_bucket: shape_bucket(call.m),
+            d_out_bucket: shape_bucket(call.d_out),
+            d_in_bucket: shape_bucket(call.d_in),
+        }
+    }
+
+    /// Stable label used across every exporter:
+    /// `kind/phase/m{mb}xdo{ob}xdi{ib}`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/m{}xdo{}xdi{}",
+            self.kind.name(),
+            self.phase.name(),
+            self.m_bucket,
+            self.d_out_bucket,
+            self.d_in_bucket
+        )
+    }
+
+    /// Pack into a non-zero u64 table key (bit 63 set so an empty slot,
+    /// key 0, can never collide with a real site).
+    fn encode(&self) -> u64 {
+        (1u64 << 63)
+            | (self.kind as u64)
+            | ((self.phase as u64) << 2)
+            | (bucket_log2(self.m_bucket) << 4)
+            | (bucket_log2(self.d_out_bucket) << 10)
+            | (bucket_log2(self.d_in_bucket) << 16)
+    }
+
+    fn decode(key: u64) -> KernelSite {
+        KernelSite {
+            kind: KernelKind::from_u64(key),
+            phase: Phase::from_u64(key >> 2),
+            m_bucket: bucket_from_log2((key >> 4) & 0x3f),
+            d_out_bucket: bucket_from_log2((key >> 10) & 0x3f),
+            d_in_bucket: bucket_from_log2((key >> 16) & 0x3f),
+        }
+    }
+}
+
+/// Open-addressed table size. 4 kinds × 4 phases × a handful of shape
+/// buckets per model is far below this; overflow is counted, never
+/// blocks.
+const SITE_SLOTS: usize = 256;
+
+struct SiteSlot {
+    /// 0 = empty; otherwise a [`KernelSite::encode`] key (bit 63 set).
+    key: AtomicU64,
+    calls: AtomicU64,
+    wall_us: AtomicU64,
+    flops: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// Accumulated raw counters for one site (one aggregator slot).
+#[derive(Clone, Copy, Debug)]
+pub struct SiteStats {
+    /// The site key.
+    pub site: KernelSite,
+    /// Dispatches recorded.
+    pub calls: u64,
+    /// Wall time across those dispatches, microseconds.
+    pub wall_us: u64,
+    /// Analytic floating-point operations.
+    pub flops: u64,
+    /// Analytic bytes moved.
+    pub bytes: u64,
+}
+
+/// Lock-free per-site aggregator. Writers CAS-claim a slot on first
+/// sight of a site, then only issue `Relaxed` counter adds — the same
+/// monotone-counter discipline as [`crate::coordinator::Metrics`], on
+/// the [`crate::sync`] atomics so the loom build can instrument it.
+pub struct Profiler {
+    slots: Vec<SiteSlot>,
+    /// Current serving [`Phase`] gauge (set at phase boundaries).
+    phase: AtomicU64,
+    /// Dispatches dropped because the site table was full (never
+    /// expected; exported so silent truncation is impossible).
+    dropped: AtomicU64,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Profiler::new()
+    }
+}
+
+impl Profiler {
+    /// Empty aggregator; phase gauge starts at [`Phase::Prefill`].
+    pub fn new() -> Profiler {
+        Profiler {
+            slots: (0..SITE_SLOTS)
+                .map(|_| SiteSlot {
+                    key: AtomicU64::new(0),
+                    calls: AtomicU64::new(0),
+                    wall_us: AtomicU64::new(0),
+                    flops: AtomicU64::new(0),
+                    bytes: AtomicU64::new(0),
+                })
+                .collect(),
+            phase: AtomicU64::new(Phase::Prefill as u64),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Set the serving-phase gauge; every subsequently recorded call is
+    /// attributed to `phase` until the next call.
+    pub fn set_phase(&self, phase: Phase) {
+        self.phase.store(phase as u64, Ordering::Relaxed);
+    }
+
+    /// The current serving-phase gauge.
+    pub fn phase(&self) -> Phase {
+        Phase::from_u64(self.phase.load(Ordering::Relaxed))
+    }
+
+    /// Record one dispatch: `call`'s analytic counts plus its measured
+    /// wall time, attributed to the current phase gauge. Lock-free:
+    /// linear-probes the table, CAS-claims an empty slot on first sight
+    /// of a site, then adds with `Relaxed` (monotone counters — readers
+    /// only ever see a slight undercount mid-add, never a torn value).
+    pub fn record(&self, call: &KernelCall, wall_us: u64) {
+        let site = KernelSite::new(call, self.phase());
+        let key = site.encode();
+        let n = self.slots.len();
+        let mut idx = (key as usize).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 48;
+        for _ in 0..n {
+            let slot = &self.slots[idx % n];
+            let cur = slot.key.load(Ordering::Acquire);
+            let claimed = if cur == key {
+                true
+            } else if cur == 0 {
+                // Claim the slot; a racing claimer of the *same* key is
+                // fine (we land in its slot), of a different key sends
+                // us to the next probe.
+                match slot.key.compare_exchange(0, key, Ordering::AcqRel, Ordering::Acquire) {
+                    Ok(_) => true,
+                    Err(actual) => actual == key,
+                }
+            } else {
+                false
+            };
+            if claimed {
+                slot.calls.fetch_add(1, Ordering::Relaxed);
+                slot.wall_us.fetch_add(wall_us, Ordering::Relaxed);
+                slot.flops.fetch_add(call.flops, Ordering::Relaxed);
+                slot.bytes.fetch_add(call.bytes, Ordering::Relaxed);
+                return;
+            }
+            idx += 1;
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Dispatches dropped on a full site table (0 in any sane run).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Copy out all live sites, sorted by wall time (descending), ties
+    /// by site key so the order is deterministic.
+    pub fn snapshot(&self) -> Vec<SiteStats> {
+        let mut out: Vec<SiteStats> = self
+            .slots
+            .iter()
+            .filter(|s| s.key.load(Ordering::Acquire) != 0)
+            .map(|s| SiteStats {
+                site: KernelSite::decode(s.key.load(Ordering::Acquire)),
+                calls: s.calls.load(Ordering::Relaxed),
+                wall_us: s.wall_us.load(Ordering::Relaxed),
+                flops: s.flops.load(Ordering::Relaxed),
+                bytes: s.bytes.load(Ordering::Relaxed),
+            })
+            .collect();
+        out.sort_by(|a, b| b.wall_us.cmp(&a.wall_us).then(a.site.cmp(&b.site)));
+        out
+    }
+
+    /// Join the aggregated sites with the measured host roofline into a
+    /// [`ProfileReport`]. `kernel_us` is the pool's cumulative kernel
+    /// wall time (the attribution-coverage denominator).
+    pub fn report(&self, host: &HostSpec, kernel_us: u64) -> ProfileReport {
+        let sites: Vec<SiteReport> =
+            self.snapshot().iter().map(|s| SiteReport::from_stats(s, host)).collect();
+        let attributed_us = sites.iter().map(|s| s.measured_us).sum();
+        ProfileReport { host: *host, kernel_us, attributed_us, dropped: self.dropped(), sites }
+    }
+}
+
+/// Measured ceilings of the host machine: the two roofs of the roofline.
+#[derive(Clone, Copy, Debug)]
+pub struct HostSpec {
+    /// Achieved peak stream bandwidth, GB/s (large-buffer scale pass).
+    pub bw_gbps: f64,
+    /// Achieved scalar f32 FLOP throughput, GFLOP/s (dependent-FMA-free
+    /// accumulator loop).
+    pub gflops: f64,
+}
+
+impl HostSpec {
+    /// A fixed synthetic spec for deterministic tests — no measurement,
+    /// no wall-clock dependence.
+    pub fn synthetic(bw_gbps: f64, gflops: f64) -> HostSpec {
+        HostSpec { bw_gbps, gflops }
+    }
+
+    /// One-shot microbenchmark of the actual machine: best-of-3 stream
+    /// scale pass over a cache-busting f32 buffer for bandwidth, and a
+    /// best-of-3 independent-accumulator multiply-add loop for scalar
+    /// FLOP throughput. Takes a few tens of milliseconds; callers cache
+    /// the result (see [`HostSpec::measured`]).
+    pub fn measure() -> HostSpec {
+        let clock = Clock::real();
+        // -- stream bandwidth: y[i] = a * x[i] over 8M f32 (32 MiB read
+        //    + 32 MiB write per pass, far past any L3).
+        let n = 8 << 20;
+        let x = vec![1.000_1f32; n];
+        let mut y = vec![0.0f32; n];
+        let mut best_bw = 0.0f64;
+        for pass in 0..3 {
+            let a = 1.0 + pass as f32 * 1e-6;
+            let t0 = clock.now_us();
+            for (yi, xi) in y.iter_mut().zip(x.iter()) {
+                *yi = a * *xi;
+            }
+            let dt = clock.now_us().saturating_sub(t0).max(1);
+            let bytes = (n * 8) as f64;
+            best_bw = best_bw.max(bytes / dt as f64 / 1e3); // bytes/us → GB/s
+        }
+        // -- scalar FLOP throughput: 8 independent accumulators so the
+        //    multiply-add chain is latency-hiding, 2 FLOPs per update.
+        let mut acc = [1.0f32, 1.1, 1.2, 1.3, 1.4, 1.5, 1.6, 1.7];
+        let iters = 4_000_000usize;
+        let mut best_fl = 0.0f64;
+        for _ in 0..3 {
+            let t0 = clock.now_us();
+            for i in 0..iters {
+                let c = 1.0 + (i & 7) as f32 * 1e-9;
+                for a in acc.iter_mut() {
+                    *a = a.mul_add(c, 1e-9);
+                }
+            }
+            let dt = clock.now_us().saturating_sub(t0).max(1);
+            let flops = (iters * acc.len() * 2) as f64;
+            best_fl = best_fl.max(flops / dt as f64 / 1e3); // flops/us → GFLOP/s
+        }
+        // Keep the sink live so the FLOP loop cannot be elided.
+        let sink: f32 = acc.iter().sum();
+        let fuzz = if sink.is_finite() { 0.0 } else { 1e-12 };
+        HostSpec { bw_gbps: best_bw.max(1e-3) + fuzz, gflops: best_fl.max(1e-3) }
+    }
+
+    /// The machine's measured spec, cached process-wide so the
+    /// microbenchmark runs at most once.
+    pub fn measured() -> HostSpec {
+        static CACHE: crate::sync::OnceLock<HostSpec> = crate::sync::OnceLock::new();
+        *CACHE.get_or_init(HostSpec::measure)
+    }
+
+    /// Machine balance: FLOPs per byte at the roofline ridge point.
+    pub fn balance(&self) -> f64 {
+        self.gflops / self.bw_gbps
+    }
+}
+
+/// One site joined with the measured roofline and the model prediction.
+#[derive(Clone, Debug)]
+pub struct SiteReport {
+    /// The site key.
+    pub site: KernelSite,
+    /// Dispatches recorded.
+    pub calls: u64,
+    /// Analytic floating-point operations.
+    pub flops: u64,
+    /// Analytic bytes moved.
+    pub bytes: u64,
+    /// Measured wall time across all dispatches, microseconds.
+    pub measured_us: u64,
+    /// Achieved GFLOP/s (`flops / measured_us / 1e3`).
+    pub gflops: f64,
+    /// Achieved GB/s (`bytes / measured_us / 1e3`).
+    pub gbps: f64,
+    /// Arithmetic intensity, FLOPs per byte.
+    pub intensity: f64,
+    /// Which roof limits this site on the measured host.
+    pub bound: Bound,
+    /// Roofline-predicted wall time on the measured host, microseconds.
+    pub predicted_us: f64,
+    /// Calibration drift: `measured_us / predicted_us` (> 1 means the
+    /// kernel runs slower than the roofline allows).
+    pub ratio: f64,
+}
+
+impl SiteReport {
+    fn from_stats(s: &SiteStats, host: &HostSpec) -> SiteReport {
+        let us = s.wall_us.max(1) as f64;
+        let intensity = s.flops as f64 / (s.bytes.max(1)) as f64;
+        let predicted_us = roofline_us(host.bw_gbps, host.gflops, s.flops as f64, s.bytes as f64);
+        let bound =
+            if intensity < host.balance() { Bound::Memory } else { Bound::Compute };
+        SiteReport {
+            site: s.site,
+            calls: s.calls,
+            flops: s.flops,
+            bytes: s.bytes,
+            measured_us: s.wall_us,
+            gflops: s.flops as f64 / us / 1e3,
+            gbps: s.bytes as f64 / us / 1e3,
+            intensity,
+            bound,
+            predicted_us,
+            ratio: s.wall_us as f64 / predicted_us.max(1e-9),
+        }
+    }
+}
+
+/// The full drift report: measured host spec, per-site rows, and the
+/// attribution-coverage invariant.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    /// Measured (or synthetic) host ceilings used for every verdict.
+    pub host: HostSpec,
+    /// The pool's cumulative kernel wall time (coverage denominator).
+    pub kernel_us: u64,
+    /// Σ site `measured_us` (coverage numerator).
+    pub attributed_us: u64,
+    /// Dispatches dropped on a full site table (0 in any sane run).
+    pub dropped: u64,
+    /// Per-site rows, sorted by wall time descending.
+    pub sites: Vec<SiteReport>,
+}
+
+impl ProfileReport {
+    /// Fraction of pooled kernel wall time attributed to named sites,
+    /// in `[0, 1]`-ish (timer granularity can push it slightly past 1).
+    /// CI gates this at ≥ 0.90 — no dark time.
+    pub fn coverage(&self) -> f64 {
+        if self.kernel_us == 0 {
+            1.0
+        } else {
+            self.attributed_us as f64 / self.kernel_us as f64
+        }
+    }
+
+    /// Merge another report's sites into this one (summing counters and
+    /// re-deriving rates against this report's host spec) — used by the
+    /// bench to fold the per-scenario profilers into one table.
+    pub fn merge(&mut self, other: &ProfileReport) {
+        self.kernel_us += other.kernel_us;
+        self.attributed_us += other.attributed_us;
+        self.dropped += other.dropped;
+        for o in &other.sites {
+            let stats = SiteStats {
+                site: o.site,
+                calls: o.calls,
+                wall_us: o.measured_us,
+                flops: o.flops,
+                bytes: o.bytes,
+            };
+            if let Some(mine) = self.sites.iter_mut().find(|s| s.site == o.site) {
+                let merged = SiteStats {
+                    site: mine.site,
+                    calls: mine.calls + stats.calls,
+                    wall_us: mine.measured_us + stats.wall_us,
+                    flops: mine.flops + stats.flops,
+                    bytes: mine.bytes + stats.bytes,
+                };
+                *mine = SiteReport::from_stats(&merged, &self.host);
+            } else {
+                self.sites.push(SiteReport::from_stats(&stats, &self.host));
+            }
+        }
+        self.sites.sort_by(|a, b| {
+            b.measured_us.cmp(&a.measured_us).then(a.site.cmp(&b.site))
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_counts_follow_shape() {
+        let c = KernelCall::fp32_gemm(4, 8, 16);
+        assert_eq!(c.flops, 2 * 4 * 8 * 16);
+        assert_eq!(c.bytes, 4 * (8 * 16 + 4 * 16 + 4 * 8));
+        let p = KernelCall::packed_w4(1, 8, 64, 4, 32);
+        assert_eq!(p.flops, 2 * 8 * 64);
+        // 4-bit codes: 64*4/8 = 32 B/row; 2 groups × 8 B meta/row.
+        assert_eq!(p.bytes, (8 * 32 + 8 * 2 * 8 + 4 * (64 + 8)) as u64);
+        let a = KernelCall::cached_attention(2, 16, 20);
+        assert_eq!(a.flops, 4 * 20 * 16);
+        assert_eq!(a.bytes, 4 * (2 * 20 * 16 + 2 * 2 * 16));
+        assert_eq!(a.d_in, 10, "d_in is the mean attended context");
+        let q = KernelCall::quant_pack(8, 64, 4, 32);
+        assert_eq!(q.flops, 2 * 8 * 64);
+        assert_eq!(q.bytes, (4 * 8 * 64 + 8 * 32 + 8 * 2 * 8) as u64);
+    }
+
+    #[test]
+    fn flop_byte_counts_scale_exactly_with_shape() {
+        // Property: doubling m doubles GEMM flops and the activation
+        // byte terms exactly; doubling d_in doubles the reduction.
+        crate::util::propcheck::check(
+            "profile_counts_scale",
+            &crate::util::propcheck::Config { cases: 200, seed: 0x9e37 },
+            |g| {
+                let m = g.usize_in(1, 64);
+                let d_out = g.usize_in(1, 256);
+                let d_in = g.usize_in(1, 256);
+                let c1 = KernelCall::fp32_gemm(m, d_out, d_in);
+                let c2m = KernelCall::fp32_gemm(2 * m, d_out, d_in);
+                let c2i = KernelCall::fp32_gemm(m, d_out, 2 * d_in);
+                let c2o = KernelCall::fp32_gemm(m, 2 * d_out, d_in);
+                crate::prop_assert!(c2m.flops == 2 * c1.flops, "flops linear in m");
+                crate::prop_assert!(c2i.flops == 2 * c1.flops, "flops linear in d_in");
+                crate::prop_assert!(c2o.flops == 2 * c1.flops, "flops linear in d_out");
+                let w1 = 4 * (d_out * d_in) as u64;
+                let w2 = 4 * (2 * d_out * d_in) as u64;
+                crate::prop_assert!(
+                    c2o.bytes == w2 + 4 * (m * d_in + m * 2 * d_out) as u64,
+                    "weight + activation byte terms follow d_out"
+                );
+                crate::prop_assert!(
+                    c2m.bytes == w1 + 4 * (2 * m * d_in + 2 * m * d_out) as u64,
+                    "activation bytes linear in m"
+                );
+                // packed: flops identical to dense, bytes strictly fewer
+                // for 4-bit weights at any shape with d_in ≥ group.
+                let p = KernelCall::packed_w4(m, d_out, d_in.max(32), 4, 32);
+                let d = KernelCall::fp32_gemm(m, d_out, d_in.max(32));
+                crate::prop_assert!(p.flops == d.flops, "packed flops match dense");
+                crate::prop_assert!(p.bytes < d.bytes, "packed moves fewer bytes");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn site_key_roundtrips() {
+        for kind in [
+            KernelKind::Fp32Gemm,
+            KernelKind::PackedW4,
+            KernelKind::CachedAttention,
+            KernelKind::QuantPack,
+        ] {
+            for phase in [Phase::Prefill, Phase::Decode, Phase::SpecDraft, Phase::SpecVerify] {
+                for (m, o, i) in [(0, 1, 1), (1, 512, 64), (64, 4096, 4096), (513, 100, 3)] {
+                    let s = KernelSite {
+                        kind,
+                        phase,
+                        m_bucket: shape_bucket(m),
+                        d_out_bucket: shape_bucket(o),
+                        d_in_bucket: shape_bucket(i),
+                    };
+                    assert_eq!(KernelSite::decode(s.encode()), s, "roundtrip {s:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregator_accumulates_per_site() {
+        let p = Profiler::new();
+        let gemv = KernelCall::fp32_gemm(1, 512, 64);
+        let gemm = KernelCall::fp32_gemm(64, 512, 64);
+        p.set_phase(Phase::Prefill);
+        p.record(&gemm, 100);
+        p.set_phase(Phase::Decode);
+        p.record(&gemv, 10);
+        p.record(&gemv, 12);
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 2);
+        // sorted by wall time: the prefill GEMM leads
+        assert_eq!(snap[0].site.phase, Phase::Prefill);
+        assert_eq!(snap[0].calls, 1);
+        assert_eq!(snap[0].wall_us, 100);
+        assert_eq!(snap[1].site.phase, Phase::Decode);
+        assert_eq!(snap[1].calls, 2);
+        assert_eq!(snap[1].wall_us, 22);
+        assert_eq!(snap[1].flops, 2 * gemv.flops);
+        assert_eq!(snap[1].bytes, 2 * gemv.bytes);
+        assert_eq!(p.dropped(), 0);
+    }
+
+    #[test]
+    fn roofline_verdicts_from_synthetic_host() {
+        // Host: 10 GB/s, 100 GFLOP/s → balance 10 FLOP/byte.
+        let host = HostSpec::synthetic(10.0, 100.0);
+        let p = Profiler::new();
+        p.set_phase(Phase::Decode);
+        // decode GEMV: intensity ≈ 0.5 FLOP/byte → memory-bound
+        p.record(&KernelCall::fp32_gemm(1, 512, 512), 50);
+        p.set_phase(Phase::Prefill);
+        // big GEMM: intensity ≈ 2·m·o·i / 4(oi+mi+mo) ≈ 170 → compute-bound
+        p.record(&KernelCall::fp32_gemm(512, 512, 512), 5000);
+        let rep = p.report(&host, 5050);
+        assert_eq!(rep.sites.len(), 2);
+        let gemv = rep.sites.iter().find(|s| s.site.m_bucket == 1).unwrap();
+        let gemm = rep.sites.iter().find(|s| s.site.m_bucket == 512).unwrap();
+        assert_eq!(gemv.bound, Bound::Memory, "decode GEMV is memory-bound");
+        assert_eq!(gemm.bound, Bound::Compute, "prefill GEMM is compute-bound");
+        assert!(gemv.intensity < host.balance() && gemm.intensity > host.balance());
+        // predicted: gemv bytes ≈ 4·(512·512 + 512 + 512) ≈ 1.05 MB at
+        // 10 GB/s ≈ 105 us (memory roof binds)
+        assert!(gemv.predicted_us > 0.0 && gemv.ratio > 0.0);
+        assert!((rep.coverage() - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn report_merge_sums_sites() {
+        let host = HostSpec::synthetic(10.0, 100.0);
+        let mk = |wall: u64| {
+            let p = Profiler::new();
+            p.set_phase(Phase::Decode);
+            p.record(&KernelCall::fp32_gemm(1, 512, 512), wall);
+            p.report(&host, wall)
+        };
+        let mut a = mk(10);
+        let b = mk(30);
+        a.merge(&b);
+        assert_eq!(a.sites.len(), 1);
+        assert_eq!(a.sites[0].calls, 2);
+        assert_eq!(a.sites[0].measured_us, 40);
+        assert_eq!(a.kernel_us, 40);
+        assert!((a.coverage() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_replay_identical_snapshots() {
+        let run = || {
+            let p = Profiler::new();
+            for step in 0..50u64 {
+                p.set_phase(if step % 5 == 0 { Phase::Prefill } else { Phase::Decode });
+                p.record(&KernelCall::fp32_gemm(1 + (step % 3) as usize, 512, 64), 7);
+                p.record(&KernelCall::packed_w4(1, 512, 64, 4, 32), 3);
+            }
+            p.snapshot()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.site, y.site);
+            assert_eq!((x.calls, x.wall_us, x.flops, x.bytes), (y.calls, y.wall_us, y.flops, y.bytes));
+        }
+    }
+
+    #[test]
+    fn concurrent_records_never_lose_counts() {
+        use crate::sync::Arc;
+        let p = Arc::new(Profiler::new());
+        let threads = 4;
+        let per = if cfg!(any(miri, ttq_sanitize)) { 50 } else { 2000 };
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let p = Arc::clone(&p);
+                crate::sync::thread::spawn_named(&format!("prof-{t}"), move || {
+                    for i in 0..per {
+                        p.record(&KernelCall::fp32_gemm(1 + (i % 4), 128, 128), 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let snap = p.snapshot();
+        let total: u64 = snap.iter().map(|s| s.calls).sum();
+        assert_eq!(total + p.dropped(), (threads * per) as u64, "no lost dispatches");
+        assert_eq!(p.dropped(), 0, "table never fills at 4 shapes");
+    }
+
+    #[test]
+    fn synthetic_host_balance() {
+        let h = HostSpec::synthetic(20.0, 60.0);
+        assert!((h.balance() - 3.0).abs() < 1e-12);
+    }
+}

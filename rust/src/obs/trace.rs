@@ -68,6 +68,10 @@ pub enum SpanKind {
     /// sequence at a committed decode step). `a` = KL(fp32 ‖ served)
     /// in nanonats, `b` = 1 when the top-1 tokens agreed, else 0.
     Probe = 10,
+    /// KV-cache slab bytes sample (instant). `a` = occupancy bytes
+    /// (tokens written × bytes/token), `b` = waste bytes (reserved by
+    /// active slots but not yet written).
+    KvBytes = 11,
 }
 
 impl SpanKind {
@@ -86,6 +90,7 @@ impl SpanKind {
             8 => SpanKind::CacheOccupancy,
             9 => SpanKind::Kernel,
             10 => SpanKind::Probe,
+            11 => SpanKind::KvBytes,
             _ => return None,
         })
     }
@@ -104,13 +109,14 @@ impl SpanKind {
             SpanKind::CacheOccupancy => "kv_cache_tokens",
             SpanKind::Kernel => "kernel",
             SpanKind::Probe => "probe",
+            SpanKind::KvBytes => "kv_cache_bytes",
         }
     }
 
     /// True for instant counter samples (exported as Chrome `"C"`
     /// events) rather than duration spans.
     pub fn is_counter(self) -> bool {
-        matches!(self, SpanKind::CacheOccupancy)
+        matches!(self, SpanKind::CacheOccupancy | SpanKind::KvBytes)
     }
 }
 
@@ -329,6 +335,7 @@ mod tests {
             SpanKind::CacheOccupancy,
             SpanKind::Kernel,
             SpanKind::Probe,
+            SpanKind::KvBytes,
         ] {
             assert_eq!(SpanKind::from_u64(k as u64), Some(k));
             assert!(!k.name().is_empty());

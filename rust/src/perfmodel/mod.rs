@@ -26,6 +26,18 @@
 //! (acceptance, k) ([`expected_tokens_per_round`]), the drafter pays k
 //! sequential quantized GEMVs, and the verifier pays one prefill-priced
 //! pass over the k+1-token window ([`speculative_ktokens_per_sec`]).
+//!
+//! **Measured cross-check.** Since PR 9 these predictions are no longer
+//! unfalsifiable on the machines we actually serve on: the same
+//! `max(bytes/BW, flops/FLOPS)` primitive ([`roofline_us`], with a
+//! [`Bound`] verdict at the ridge point) is evaluated against a
+//! *measured* host ceiling ([`crate::obs::profile::HostSpec::measure`])
+//! and joined with per-kernel-site measured wall time by
+//! [`crate::obs::profile::Profiler::report`] into a
+//! predicted-vs-measured drift ratio per site
+//! (`benches/kernel_profile.rs` → `BENCH_profile.json`). The paper's
+//! memory-bound-decode premise is asserted analytically here and
+//! verified empirically there.
 
 #![forbid(unsafe_code)]
 
@@ -56,6 +68,37 @@ pub const GPUS: [GpuSpec; 5] = [
 /// Look up a card by table name (panics on unknown names).
 pub fn gpu(name: &str) -> &'static GpuSpec {
     GPUS.iter().find(|g| g.name == name).expect("unknown GPU")
+}
+
+/// Which roof limits a kernel at its arithmetic intensity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    /// Below the ridge point: time is `bytes / BW`.
+    Memory,
+    /// Above the ridge point: time is `flops / FLOPS`.
+    Compute,
+}
+
+impl Bound {
+    /// Stable lowercase label used in exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Bound::Memory => "memory",
+            Bound::Compute => "compute",
+        }
+    }
+}
+
+/// The roofline time primitive in microseconds:
+/// `max(bytes/BW, flops/FLOPS)` for a ceiling of `bw_gbps` GB/s and
+/// `gflops` GFLOP/s. This is the same equation every GPU row of
+/// Tables 4-8 is priced with (there in seconds against published
+/// specs); `obs::profile` evaluates it against a **measured** host
+/// ceiling to produce the per-site predicted-vs-measured drift report.
+pub fn roofline_us(bw_gbps: f64, gflops: f64, flops: f64, bytes: f64) -> f64 {
+    let mem_us = bytes / bw_gbps.max(1e-12) / 1e3;
+    let cmp_us = flops / gflops.max(1e-12) / 1e3;
+    mem_us.max(cmp_us)
 }
 
 /// Streaming read-modify-write efficiency of the online `find_params`
@@ -605,6 +648,19 @@ mod tests {
         assert!(k_high > k_low, "k* {k_low} (α=0.2) vs {k_high} (α=0.95)");
         // at α≈1 a deeper window is always better within the cap
         assert!(k_high >= 8, "near-certain acceptance wants a deep window, got {k_high}");
+    }
+
+    #[test]
+    fn roofline_primitive_picks_the_binding_roof() {
+        // 10 GB/s, 100 GFLOP/s → ridge at 10 FLOP/byte.
+        // 1e6 bytes at intensity 0.5: memory roof binds, 100 us.
+        let t = roofline_us(10.0, 100.0, 5e5, 1e6);
+        assert!((t - 100.0).abs() < 1e-9, "memory-bound time {t}");
+        // 1e8 flops over 1e6 bytes (intensity 100): compute roof, 1000 us.
+        let t = roofline_us(10.0, 100.0, 1e8, 1e6);
+        assert!((t - 1000.0).abs() < 1e-9, "compute-bound time {t}");
+        assert_eq!(Bound::Memory.name(), "memory");
+        assert_eq!(Bound::Compute.name(), "compute");
     }
 
     #[test]

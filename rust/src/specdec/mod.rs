@@ -298,6 +298,12 @@ pub struct RoundOut {
     pub draft_us: u64,
     /// Wall time of the verify + rollback phase, microseconds.
     pub verify_us: u64,
+    /// Pool kernel time spent inside the drafting phase (drafter
+    /// backend's [`crate::linalg::pool::WorkerPool::kernel_us`] delta),
+    /// feeding the `Metrics` spec-draft kernel counter.
+    pub draft_kernel_us: u64,
+    /// Pool kernel time spent inside the verify + rollback phase.
+    pub verify_kernel_us: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -336,7 +342,17 @@ pub fn spec_round(
     let k = k.min(room - 1);
 
     // -- draft: catch up on pending tokens, then propose k tokens -----
+    // Kernel-time deltas are read off each role's pool so `Metrics` can
+    // split pool time into spec-draft vs spec-verify; the attached
+    // profiler (when any) gets the matching phase gauge so per-site
+    // attribution lands in the right phase too.
+    let dpool = drafter.backend.worker_pool();
+    let vpool = verifier.backend.worker_pool();
+    if let Some(prof) = dpool.as_ref().and_then(|p| p.profiler()) {
+        prof.set_phase(crate::obs::Phase::SpecDraft);
+    }
     let t0_us = clock.now_us();
+    let dkern0 = dpool.as_ref().map_or(0, |p| p.kernel_us());
     let mut drafts: Vec<i32> = Vec::with_capacity(k);
     if k > 0 {
         debug_assert!(!draft.pending.is_empty(), "speculative sequence with empty pending");
@@ -356,6 +372,12 @@ pub fn spec_round(
     }
 
     let t1_us = clock.now_us();
+    let draft_kernel_us =
+        dpool.as_ref().map_or(0, |p| p.kernel_us()).saturating_sub(dkern0);
+    if let Some(prof) = vpool.as_ref().and_then(|p| p.profiler()) {
+        prof.set_phase(crate::obs::Phase::SpecVerify);
+    }
+    let vkern0 = vpool.as_ref().map_or(0, |p| p.kernel_us());
 
     // -- verify: one cached forward over [last, d₁..d_k] ---------------
     let mut vtokens = Vec::with_capacity(k + 1);
@@ -402,6 +424,8 @@ pub fn spec_round(
     // only safe to report when every row was committed (see RoundOut)
     let stats = if accepted == k { out.stats } else { None };
     let t2_us = clock.now_us();
+    let verify_kernel_us =
+        vpool.as_ref().map_or(0, |p| p.kernel_us()).saturating_sub(vkern0);
     Ok(RoundOut {
         committed,
         accepted,
@@ -409,6 +433,8 @@ pub fn spec_round(
         stats,
         draft_us: t1_us.saturating_sub(t0_us),
         verify_us: t2_us.saturating_sub(t1_us),
+        draft_kernel_us,
+        verify_kernel_us,
     })
 }
 

@@ -508,6 +508,21 @@ macro_rules! model_atomic {
                 }
                 self.cell.fetch_add(v, Ordering::SeqCst)
             }
+
+            /// Instrumented compare-exchange (orderings ignored; SeqCst).
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                _success: Ordering,
+                _failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                let (ctrl, me) = ctx();
+                if ctrl.block_on(me, |_| {}) {
+                    abort_exit();
+                }
+                self.cell.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+            }
         }
     };
 }

@@ -27,8 +27,9 @@ use std::sync::atomic::Ordering::Relaxed;
 use ttq_serve::backend::NativeBackend;
 use ttq_serve::coordinator::{Server, ServerConfig};
 use ttq_serve::corpus::{CorpusStream, Split, BOS};
-use ttq_serve::obs::export::chrome_trace;
-use ttq_serve::obs::{Clock, RequantEvent, SpanKind, TraceEvent, ENGINE_SEQ};
+use ttq_serve::obs::export::{chrome_trace, chrome_trace_with_profile, prometheus_profile};
+use ttq_serve::obs::profile::HostSpec;
+use ttq_serve::obs::{Clock, ProfileReport, RequantEvent, SpanKind, TraceEvent, ENGINE_SEQ};
 use ttq_serve::util::json::Value;
 
 /// Everything the assertions need, extracted before the server (which
@@ -297,6 +298,142 @@ fn sessions_on_the_same_clock_are_identical() -> Result<()> {
     Ok(())
 }
 
+/// One profiled serve session (4 plain `wt2s` requests on the
+/// deterministic clock): the roofline report against a synthetic host,
+/// the recorded trace, and the *peak* KV byte gauges observed while
+/// requests were live (the gauges read near zero once every sequence
+/// has released its slot).
+fn profiled_session(
+    trace_capacity: usize,
+) -> Result<(ProfileReport, Vec<TraceEvent>, u64, u64)> {
+    let backend = NativeBackend::new(&ttq_serve::artifacts_dir()).with_threads(2);
+    let cfg = ServerConfig::new("qwen-micro")
+        .with_clock(Clock::test(25))
+        .with_trace_capacity(trace_capacity)
+        .with_max_new_tokens(5)
+        .with_profile(true);
+    let mut server = Server::new(&backend, cfg)?;
+    let prompt_len = server.max_seq() / 2;
+    let mut stream = CorpusStream::new("wt2s", Split::Eval);
+    for _ in 0..4 {
+        let mut toks = vec![BOS; prompt_len];
+        for t in toks.iter_mut().skip(1) {
+            *t = stream.next_token();
+        }
+        server.submit(toks);
+    }
+    let (mut max_occ, mut max_waste) = (0u64, 0u64);
+    while server.pending() > 0 || server.running() > 0 {
+        server.step()?;
+        max_occ = max_occ.max(server.metrics.kv_occupancy_bytes.load(Relaxed));
+        max_waste = max_waste.max(server.metrics.kv_waste_bytes.load(Relaxed));
+    }
+    let rep = server
+        .profile_report(&HostSpec::synthetic(10.0, 50.0))
+        .expect("profiler attached via with_profile");
+    Ok((rep, server.trace().snapshot(), max_occ, max_waste))
+}
+
+#[test]
+fn profiler_attribution_within_ten_percent() -> Result<()> {
+    let (rep, _, _, _) = profiled_session(0)?;
+    assert!(rep.kernel_us > 0, "session ran no pooled kernels");
+    assert_eq!(rep.dropped, 0, "site table overflowed");
+    assert!(!rep.sites.is_empty(), "no kernel sites attributed");
+    let cov = rep.coverage();
+    assert!(
+        (0.9..=1.1).contains(&cov),
+        "attributed {} of {} kernel us — coverage {cov:.3} outside [0.9, 1.1]",
+        rep.attributed_us,
+        rep.kernel_us
+    );
+    for s in &rep.sites {
+        // fp32 serving dispatches dense GEMMs and cached attention only,
+        // and the server gauges exactly the prefill/decode phases
+        assert!(
+            matches!(s.site.kind.name(), "fp32_gemm" | "cached_attention"),
+            "unexpected kind in {}",
+            s.site.label()
+        );
+        assert!(
+            matches!(s.site.phase.name(), "prefill" | "decode"),
+            "unexpected phase in {}",
+            s.site.label()
+        );
+        assert!(s.calls > 0 && s.flops > 0 && s.bytes > 0);
+    }
+    Ok(())
+}
+
+#[test]
+fn profiled_sessions_replay_identically() -> Result<()> {
+    let (a, _, _, _) = profiled_session(0)?;
+    let (b, _, _, _) = profiled_session(0)?;
+    // Wall time is real (the pool's own timing is measured, by design);
+    // everything input-derived — the site keys, dispatch counts and
+    // analytic FLOP/byte totals — must replay bit-identically.
+    let keys = |rep: &ProfileReport| {
+        let mut v: Vec<_> = rep
+            .sites
+            .iter()
+            .map(|r| (r.site.label(), r.calls, r.flops, r.bytes))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(keys(&a), keys(&b), "profiler tables must replay identically");
+    Ok(())
+}
+
+#[test]
+fn kv_byte_telemetry_gauges_and_counter_track() -> Result<()> {
+    let (rep, events, max_occ, max_waste) = profiled_session(8192)?;
+    assert!(max_occ > 0, "kv occupancy gauge never set");
+    assert!(
+        max_waste > 0,
+        "half-context prompts must leave reserved-but-unused slab bytes"
+    );
+    let kv: Vec<&TraceEvent> = events
+        .iter()
+        .filter(|e| e.kind == SpanKind::KvBytes)
+        .collect();
+    assert!(!kv.is_empty(), "no kv_cache_bytes counter samples recorded");
+    assert!(
+        kv.iter().all(|e| e.seq == ENGINE_SEQ),
+        "kv byte samples ride the engine track"
+    );
+    assert!(
+        kv.iter().any(|e| e.a > 0 && e.b > 0),
+        "some sample must observe both occupancy and waste"
+    );
+    assert!(kv.iter().all(|e| e.kind.is_counter()));
+
+    // Chrome export: the kv samples become a counter track and the
+    // profile report becomes its own slice track, all valid JSON.
+    let json = chrome_trace_with_profile(&events, Some(&rep));
+    let v = Value::parse(&json).expect("exported trace must be valid JSON");
+    let arr = v.field("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        arr.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str()) == Some("kv_cache_bytes")
+                && e.field("ph").unwrap().as_str() == Some("C")
+                && e.field("args").unwrap().get("occupancy_bytes").is_some()
+        }),
+        "kv counter samples missing from the export"
+    );
+    assert!(
+        arr.iter()
+            .any(|e| e.get("cat").and_then(|c| c.as_str()) == Some("profile")),
+        "kernel-profile track missing from the export"
+    );
+
+    // Prometheus: every site lands in the labelled ttq_kernel_* families.
+    let prom = prometheus_profile(&rep);
+    assert!(prom.contains("ttq_kernel_calls_total{kind=\""), "{prom}");
+    assert!(prom.contains("ttq_kernel_coverage_ratio"), "{prom}");
+    Ok(())
+}
+
 /// Probe cadence for the probed-session test: with a single plain
 /// request the batch has one row, so the rotating row sampler always
 /// picks it and the probe must fire on *exactly* every third step.
@@ -364,5 +501,58 @@ fn probed_session_cadence_and_nesting() -> Result<()> {
             assert!(p.start_us > probes[i - 1].start_us, "probe spans out of order");
         }
     }
+    Ok(())
+}
+
+#[test]
+fn four_phase_kernel_counters_sum_to_pool_time() -> Result<()> {
+    // Mixed plain + speculative traffic on the deterministic clock: all
+    // four serving phases (prefill, decode, spec-draft, spec-verify)
+    // must see kernel time, and the four counters must sum *exactly* to
+    // the pool's cumulative kernel time over the session — no phase
+    // window may leak or double-count a dispatch. The largest synthetic
+    // model keeps every dispatch above the counter's 1 µs granularity.
+    let backend = NativeBackend::new(&ttq_serve::artifacts_dir()).with_threads(2);
+    let cfg = ServerConfig::new("opt-small")
+        .with_clock(Clock::test(25))
+        .with_max_new_tokens(4)
+        .with_profile(true);
+    let mut server = Server::new(&backend, cfg)?;
+    let kern0 = backend.pool().kernel_us();
+    let prompt_len = server.max_seq() / 2;
+    let mut stream = CorpusStream::new("wt2s", Split::Eval);
+    for i in 0..4 {
+        let mut toks = vec![BOS; prompt_len];
+        for t in toks.iter_mut().skip(1) {
+            *t = stream.next_token();
+        }
+        if i % 2 == 0 {
+            server.submit(toks);
+        } else {
+            server.submit_speculative(toks);
+        }
+    }
+    while server.pending() > 0 || server.running() > 0 {
+        server.step()?;
+    }
+    let total = backend.pool().kernel_us() - kern0;
+    let m = &server.metrics;
+    assert!(m.prefill_kernel_us.load(Relaxed) > 0, "prefill phase unmeasured");
+    assert!(m.decode_kernel_us.load(Relaxed) > 0, "decode phase unmeasured");
+    assert!(m.spec_draft_kernel_us.load(Relaxed) > 0, "spec-draft phase unmeasured");
+    assert!(m.spec_verify_kernel_us.load(Relaxed) > 0, "spec-verify phase unmeasured");
+    assert_eq!(
+        m.kernel_us_total(),
+        total,
+        "phase counters (prefill {} + decode {} + draft {} + verify {}) must sum to \
+         the pool's kernel time",
+        m.prefill_kernel_us.load(Relaxed),
+        m.decode_kernel_us.load(Relaxed),
+        m.spec_draft_kernel_us.load(Relaxed),
+        m.spec_verify_kernel_us.load(Relaxed)
+    );
+    // the summary line surfaces the split for humans
+    let s = m.summary();
+    assert!(s.contains("draft") && s.contains("verify"), "{s}");
     Ok(())
 }

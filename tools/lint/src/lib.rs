@@ -31,6 +31,11 @@
 //!   `Instant::now` (timestamps come from `obs::Clock`, so tests can
 //!   pin a deterministic clock). `backend/native.rs` is excluded from
 //!   the `Instant` half — R5 already owns its kernel timing.
+//! * **R7** — profiler attribution coverage (`backend/`): every
+//!   `WorkerPool` dispatch must go through `run_rows_site` with a
+//!   `KernelSite`-bearing `KernelCall`; bare `.run_rows(...)` leaves
+//!   kernel wall time unattributed and breaks the ≥ 90% coverage gate
+//!   in `benches/kernel_profile.rs`.
 //!
 //! The scanner is a hand-rolled lexer (this tree is dependency-free by
 //! policy, so no `syn`): comments, string/char literals, raw strings
@@ -516,6 +521,21 @@ pub fn scan_str(path: &str, src: &str) -> Vec<Violation> {
         }
     }
 
+    // R7: backend kernel dispatches carry a KernelSite for attribution
+    let r7_applies = starts_with_any(path, &["rust/src/backend/"]);
+    if r7_applies {
+        for i in find_matches(&toks, &[".", "run_rows"], true) {
+            push(
+                toks[i].line,
+                "R7",
+                "bare `.run_rows(...)` in the backend: dispatch through \
+                 `run_rows_site` with a `KernelCall` so the profiler can \
+                 attribute the kernel time (attribution-coverage gate)"
+                    .to_string(),
+            );
+        }
+    }
+
     out
 }
 
@@ -650,6 +670,19 @@ mod tests {
         let test_mod =
             "#[cfg(test)]\nmod tests {\n fn g() { println!(\"dbg\"); let t = std::time::Instant::now(); }\n}";
         assert!(rules("rust/src/coordinator/metrics.rs", test_mod).is_empty());
+    }
+
+    #[test]
+    fn r7_fires_on_unattributed_backend_dispatch() {
+        let bad = "fn f(p: &WorkerPool) { p.run_rows(&mut y, 4, 8, 64, |r0, rows| {}); }";
+        assert_eq!(rules("rust/src/backend/native.rs", bad), vec!["R7"]);
+        // the attributed dispatch and non-backend callers are fine
+        let good = "fn f(p: &WorkerPool) { p.run_rows_site(&mut y, 4, 8, 64, call, |r0, rows| {}); }";
+        assert!(rules("rust/src/backend/native.rs", good).is_empty());
+        assert!(rules("rust/src/linalg/pool.rs", bad).is_empty());
+        let test_mod =
+            "#[cfg(test)]\nmod tests {\n fn g(p: &WorkerPool) { p.run_rows(&mut y, 1, 1, 1, |a, b| {}); }\n}";
+        assert!(rules("rust/src/backend/native.rs", test_mod).is_empty());
     }
 
     #[test]
