@@ -16,13 +16,19 @@
 //!   out-run dense decode in the memory-bound phase. Measured on the
 //!   largest synthetic model so the fp32 weights actually stream from
 //!   memory; on a single-lane host the gate has no parallel traffic to
-//!   measure and reports informationally instead.
+//!   measure and reports informationally instead;
+//! * **SIMD ≥ scalar per kernel class** — the runtime-selected vector
+//!   microkernels (`linalg::simd`) must not lose to the scalar path on
+//!   either the fp32 GEMM or the packed-W4 dequant-dot. Only armed when
+//!   a vector ISA is actually selected; under `TTQ_FORCE_SCALAR` or on
+//!   hosts with no vector support the rows are informational.
 
 use ttq_serve::bench::throughput::{
-    default_scenarios, kernel_baseline, run_scenario, run_scenario_traced,
+    default_scenarios, kernel_baseline, run_scenario, run_scenario_traced, simd_baseline,
 };
 use ttq_serve::coordinator::DEFAULT_TRACE_CAPACITY;
 use ttq_serve::linalg::pool::WorkerPool;
+use ttq_serve::linalg::simd::{select, Isa};
 use ttq_serve::util::cli::Args;
 
 fn main() {
@@ -120,6 +126,35 @@ fn main() {
         println!("(pooled-vs-scoped gate informational: single-lane host)");
     }
 
+    // -- scalar vs SIMD instruction-level baseline --------------------
+    // Single-lane pools on both sides so the comparison isolates the
+    // instruction-level dispatch (`linalg::simd`), not pool scheduling.
+    println!("\n== scalar vs SIMD inner kernels ({}) ==", select().name());
+    let simd_rows = simd_baseline(fast);
+    let vector_selected = select() != Isa::Scalar;
+    let mut simd_gate: Option<bool> = None;
+    for r in &simd_rows {
+        println!(
+            "{:<10} {:>8.2} Gflop/s ({})   {:>8.2} Gflop/s (scalar)   speedup {:.2}x",
+            r.kernel, r.simd_gflops, r.isa, r.scalar_gflops, r.speedup
+        );
+    }
+    if vector_selected {
+        let ok = simd_rows.iter().all(|r| r.speedup >= 1.0);
+        simd_gate = Some(ok);
+        if !ok {
+            for r in simd_rows.iter().filter(|r| r.speedup < 1.0) {
+                eprintln!(
+                    "PERF GATE FAILED: {} {} kernel {:.2} Gflop/s < scalar {:.2} Gflop/s",
+                    r.isa, r.kernel, r.simd_gflops, r.scalar_gflops
+                );
+            }
+            gate_ok = false;
+        }
+    } else {
+        println!("(SIMD-vs-scalar gate informational: scalar ISA selected)");
+    }
+
     // -- W4 vs fp32 decode gate ---------------------------------------
     let fp32 = results.iter().find(|r| r.name == "fp32-decode");
     let w4 = results.iter().find(|r| r.name == "w4-decode");
@@ -147,17 +182,22 @@ fn main() {
 
     // -- JSON artifact -------------------------------------------------
     let rows: Vec<String> = results.iter().map(|r| format!("    {}", r.to_json())).collect();
+    let simd_json: Vec<String> =
+        simd_rows.iter().map(|r| format!("    {}", r.to_json())).collect();
     let json = format!(
         "{{\n  \"bench\": \"serve_throughput\",\n  \"threads\": {threads},\n  \"fast\": {fast},\n  \
          \"kernel_baseline\": {{\"threads\": {}, \"pooled_gflops\": {:.3}, \"scoped_gflops\": {:.3}, \"speedup\": {:.3}}},\n  \
-         \"gates\": {{\"pooled_ge_scoped\": {}, \"w4_ge_fp32_decode\": {}, \"trace_overhead_le_2pct\": {overhead_ok}}},\n  \
+         \"simd_baseline\": [\n{}\n  ],\n  \
+         \"gates\": {{\"pooled_ge_scoped\": {}, \"w4_ge_fp32_decode\": {}, \"simd_ge_scalar\": {}, \"trace_overhead_le_2pct\": {overhead_ok}}},\n  \
          \"scenarios\": [\n{}\n  ]\n}}\n",
         base.threads,
         base.pooled_gflops,
         base.scoped_gflops,
         base.speedup,
+        simd_json.join(",\n"),
         base.pooled_gflops >= base.scoped_gflops,
         w4_gate.map_or("null".to_string(), |b| b.to_string()),
+        simd_gate.map_or("null".to_string(), |b| b.to_string()),
         rows.join(",\n")
     );
     std::fs::write("BENCH_throughput.json", &json).expect("write BENCH_throughput.json");

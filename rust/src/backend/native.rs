@@ -25,6 +25,13 @@
 //! [`crate::obs::KernelCall`] describing its kind, shape and analytic
 //! FLOP/byte counts (repo-lint R7), so an attached
 //! [`crate::obs::Profiler`] can attribute pooled kernel time per site.
+//!
+//! The *instruction-level* inner loops of the two hot kernels
+//! ([`matmul_bt_mt`] fp32 tile dots, [`packed_matmul_nt`] group dequant
+//! + dot) dispatch through [`crate::linalg::simd`] on the pool's
+//! selected ISA (AVX2 / NEON / scalar, `TTQ_FORCE_SCALAR` to pin):
+//! W4 results are bit-exact across ISAs, fp32 within the documented
+//! ULP bound — see `docs/ARCHITECTURE.md` § Kernel dispatch & numerics.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -37,11 +44,11 @@ use super::{BatchStats, ExecBackend, StepOut};
 use crate::kvcache::{KvCache, SeqId};
 use crate::obs::{Clock, KernelCall};
 use crate::linalg::pool::WorkerPool;
+use crate::linalg::simd::{self, Isa};
 use crate::linalg::Mat;
 use crate::models::{Manifest, ModelWeights};
 use crate::quant::{
-    awq_quantize, diag_from_x, pack, rtn_quantize_int, unpack_at, ActStats, Packed,
-    QuantSpec,
+    awq_quantize, diag_from_x, pack, rtn_quantize_int, ActStats, Packed, QuantSpec,
 };
 
 /// Norm epsilon shared with `python/compile/model.py::ModelConfig`.
@@ -55,13 +62,18 @@ const NORM_EPS: f32 = 1e-5;
 /// element, tile-partial sums are accumulated in tile order — a fixed,
 /// shape-independent summation order, so every caller (batched rows,
 /// decode GEMV, serial fallback, any thread count) produces bit-identical
-/// results.
+/// results *on a given ISA*. Across ISAs the per-tile dot re-associates
+/// (the `linalg::simd` relaxed fp32 contract): scalar vs vector output
+/// agrees within `util::FP32_MAX_ULPS` / `util::FP32_ABS_TOL`, asserted
+/// by `rust/tests/simd_kernels.rs`.
 const K_TILE: usize = 256;
 
 /// One chunk of `a @ bᵀ` output rows, tiled over `d_in` so the streamed
 /// `b` tile stays cache-resident while it is reused across the chunk's
-/// rows. Shared by the pooled and serial paths of [`matmul_bt_mt`].
-fn bt_rows(a: &Mat, b: &Mat, r0: usize, orows: &mut [f32]) {
+/// rows. Shared by the pooled and serial paths of [`matmul_bt_mt`]; the
+/// per-tile dot dispatches on `isa` ([`simd::dot_f32`] — scalar is the
+/// historical strictly-sequential loop).
+fn bt_rows(isa: Isa, a: &Mat, b: &Mat, r0: usize, orows: &mut [f32]) {
     let (k, n) = (a.cols, b.rows);
     if n == 0 {
         return;
@@ -75,11 +87,7 @@ fn bt_rows(a: &Mat, b: &Mat, r0: usize, orows: &mut [f32]) {
             let orow = &mut orows[rr * n..(rr + 1) * n];
             for (j, o) in orow.iter_mut().enumerate() {
                 let brow = &b.row(j)[kt..ke];
-                let mut acc = 0.0f32;
-                for (av, bv) in arow.iter().zip(brow) {
-                    acc += av * bv;
-                }
-                *o += acc;
+                *o += simd::dot_f32(isa, arow, brow);
             }
         }
         kt = ke;
@@ -90,7 +98,7 @@ fn bt_rows(a: &Mat, b: &Mat, r0: usize, orows: &mut [f32]) {
 /// `d_out` columns (`j0..`) instead of over rows — the only axis a
 /// decode-time GEMV can fan out on. Identical tile-partial accumulation
 /// order, so GEMV results match the batched kernel bit for bit.
-fn gemv_cols(arow: &[f32], b: &Mat, j0: usize, os: &mut [f32]) {
+fn gemv_cols(isa: Isa, arow: &[f32], b: &Mat, j0: usize, os: &mut [f32]) {
     let k = arow.len();
     let mut kt = 0;
     while kt < k {
@@ -98,11 +106,7 @@ fn gemv_cols(arow: &[f32], b: &Mat, j0: usize, os: &mut [f32]) {
         let at = &arow[kt..ke];
         for (jj, o) in os.iter_mut().enumerate() {
             let brow = &b.row(j0 + jj)[kt..ke];
-            let mut acc = 0.0f32;
-            for (av, bv) in at.iter().zip(brow) {
-                acc += av * bv;
-            }
-            *o += acc;
+            *o += simd::dot_f32(isa, at, brow);
         }
         kt = ke;
     }
@@ -120,14 +124,15 @@ pub fn matmul_bt_mt(a: &Mat, b: &Mat, pool: &WorkerPool) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_bt_mt dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut out = Mat::zeros(m, n);
-    let call = KernelCall::fp32_gemm(m, n, k);
+    let isa = pool.isa();
+    let call = KernelCall::fp32_gemm(m, n, k).with_isa(isa);
     if m == 1 {
         pool.run_rows_site(&mut out.data, n, 1, k * n, call, |j0, os| {
-            gemv_cols(a.row(0), b, j0, os);
+            gemv_cols(isa, a.row(0), b, j0, os);
         });
     } else {
         pool.run_rows_site(&mut out.data, m, n, m * k * n, call, |r0, orows| {
-            bt_rows(a, b, r0, orows);
+            bt_rows(isa, a, b, r0, orows);
         });
     }
     out
@@ -152,7 +157,8 @@ pub fn packed_matmul_nt(p: &Packed, x: &Mat, pool: &WorkerPool) -> Mat {
     }
     let groups_per_row = d_in / g;
     let mut yt = Mat::zeros(d_out, n);
-    let call = KernelCall::packed_w4(n, d_out, d_in, p.bits, g);
+    let isa = pool.isa();
+    let call = KernelCall::packed_w4(n, d_out, d_in, p.bits, g).with_isa(isa);
     pool.run_rows_site(&mut yt.data, d_out, n, n * d_in * d_out, call, |r0, yrows| {
         let mut wbuf = vec![0.0f32; g];
         let rows = yrows.len() / n;
@@ -162,18 +168,15 @@ pub fn packed_matmul_nt(p: &Packed, x: &Mat, pool: &WorkerPool) -> Mat {
             for bg in 0..groups_per_row {
                 let gi = r * groups_per_row + bg;
                 let (s, z) = (p.scales[gi], p.zeros[gi]);
-                let base = gi * g;
-                for (j, w) in wbuf.iter_mut().enumerate() {
-                    *w = unpack_at(p, base + j) as f32 * s + z;
-                }
+                // Dequant + dot both dispatch on the pool's ISA and are
+                // bit-exact across ISAs (elementwise dequant rounding
+                // and canonical-lane accumulation — the W4 half of the
+                // `linalg::simd` numerics contract).
+                simd::w4_dequant_group(isa, p, gi * g, s, z, &mut wbuf);
                 let xbase = bg * g;
                 for (t, y) in yrow.iter_mut().enumerate() {
                     let xrow = &x.row(t)[xbase..xbase + g];
-                    let mut acc = 0.0f32;
-                    for (w, xv) in wbuf.iter().zip(xrow) {
-                        acc += w * xv;
-                    }
-                    *y += acc;
+                    *y += simd::w4_dot(isa, &wbuf, xrow);
                 }
             }
         }

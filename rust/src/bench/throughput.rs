@@ -46,15 +46,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::backend::native::matmul_bt_mt;
+use crate::backend::native::{matmul_bt_mt, packed_matmul_nt};
 use crate::backend::NativeBackend;
 use crate::coordinator::{BatchPolicy, ServeEvent, Server, ServerConfig};
 use crate::corpus::{CorpusStream, Split, BOS};
 use crate::linalg::pool::{WorkerPool, MT_FLOP_FLOOR};
+use crate::linalg::simd::{select, Isa};
 use crate::linalg::{Mat, Rng};
 use crate::obs::profile::{HostSpec, ProfileReport};
 use crate::obs::{Hist, HistBucket};
-use crate::quant::{MethodSpec, QuantSpec};
+use crate::quant::{pack, rtn_quantize_int, MethodSpec, QuantSpec};
 use crate::specdec::SpecConfig;
 use crate::util::benchkit::{black_box, Bencher};
 
@@ -492,6 +493,108 @@ pub fn kernel_baseline(threads: usize, fast: bool) -> KernelBaseline {
     }
 }
 
+// ---------------------------------------------------------------------
+// Scalar-vs-SIMD kernel baseline
+// ---------------------------------------------------------------------
+
+/// Selected-ISA vs forced-scalar throughput for one kernel class
+/// (`fp32_gemm` via [`matmul_bt_mt`], `packed_w4` via
+/// [`packed_matmul_nt`]) — the instruction-level counterpart of
+/// [`KernelBaseline`]'s thread-level comparison.
+#[derive(Clone, Debug)]
+pub struct SimdBaseline {
+    /// Kernel class: `"fp32_gemm"` or `"packed_w4"`.
+    pub kernel: &'static str,
+    /// The selected ISA's name (`"avx2"` / `"neon"` / `"scalar"`).
+    pub isa: &'static str,
+    /// Selected-ISA throughput, Gflop/s (median sample).
+    pub simd_gflops: f64,
+    /// Forced-scalar throughput, Gflop/s.
+    pub scalar_gflops: f64,
+    /// `simd / scalar` — the vectorization win (1.0 ≈ none).
+    pub speedup: f64,
+}
+
+impl SimdBaseline {
+    /// One JSON object for the `simd_baseline` array of
+    /// `BENCH_throughput.json` (schema: `docs/BENCHMARKS.md`).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"kernel\": \"{}\", \"isa\": \"{}\", \"simd_gflops\": {:.3}, \
+             \"scalar_gflops\": {:.3}, \"speedup\": {:.3}}}",
+            self.kernel, self.isa, self.simd_gflops, self.scalar_gflops, self.speedup
+        )
+    }
+}
+
+fn simd_class(
+    bencher: &Bencher,
+    kernel: &'static str,
+    isa: Isa,
+    flops: f64,
+    mut body: impl FnMut(&WorkerPool) -> f32,
+) -> SimdBaseline {
+    // Single-lane pools: the comparison isolates the instruction-level
+    // dispatch, so thread fan-out (kernel_baseline's subject) stays out.
+    let scalar_pool = WorkerPool::new_with_isa(1, Isa::Scalar);
+    let simd_pool = WorkerPool::new_with_isa(1, isa);
+    let simd = bencher.run_with_items(&format!("{kernel} {}", isa.name()), flops, || {
+        black_box(body(&simd_pool))
+    });
+    let scalar = bencher.run_with_items(&format!("{kernel} scalar"), flops, || {
+        black_box(body(&scalar_pool))
+    });
+    let simd_gflops = simd.throughput().unwrap_or(0.0) / 1e9;
+    let scalar_gflops = scalar.throughput().unwrap_or(0.0) / 1e9;
+    SimdBaseline {
+        kernel,
+        isa: isa.name(),
+        simd_gflops,
+        scalar_gflops,
+        speedup: if scalar_gflops > 0.0 { simd_gflops / scalar_gflops } else { 0.0 },
+    }
+}
+
+/// Time the selected-ISA inner kernels against the forced-scalar path,
+/// one row per kernel class, on decode-shaped streams (small token
+/// block × `opt-small`-sized MLP weight). On a host where [`select`]
+/// returns scalar (no AVX2/NEON, or `TTQ_FORCE_SCALAR`), both sides
+/// run the same code and the speedup hovers at 1.0 — the bench gate
+/// treats that case as informational, not a failure.
+pub fn simd_baseline(fast: bool) -> Vec<SimdBaseline> {
+    let isa = select();
+    let mut rng = Rng::new(43);
+    let bencher = if fast { Bencher::quick() } else { Bencher::default() };
+    let calls = if fast { 40 } else { 120 };
+
+    // fp32_gemm: the same decode-shaped stream kernel_baseline uses.
+    let a = Mat::randn(8, 192, &mut rng);
+    let b = Mat::randn(768, 192, &mut rng);
+    let fp32_flops = 2.0 * 8.0 * 192.0 * 768.0 * calls as f64;
+    let fp32 = simd_class(&bencher, "fp32_gemm", isa, fp32_flops, |pool| {
+        let mut last = 0.0f32;
+        for _ in 0..calls {
+            last = matmul_bt_mt(&a, &b, pool).data[0];
+        }
+        last
+    });
+
+    // packed_w4: grouped 4-bit weight, single-token decode GEMV.
+    let w = Mat::randn(768, 192, &mut rng);
+    let p = pack(&rtn_quantize_int(&w, &QuantSpec::new(4, 32)));
+    let x = Mat::randn(1, 192, &mut rng);
+    let w4_flops = 2.0 * 192.0 * 768.0 * calls as f64;
+    let w4 = simd_class(&bencher, "packed_w4", isa, w4_flops, |pool| {
+        let mut last = 0.0f32;
+        for _ in 0..calls {
+            last = packed_matmul_nt(&p, &x, pool).data[0];
+        }
+        last
+    });
+
+    vec![fp32, w4]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -575,6 +678,21 @@ mod tests {
         let got = matmul_bt_mt(&a, &b, &WorkerPool::new(2));
         for (x, y) in got.data.iter().zip(&want.data) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn simd_baseline_reports_both_kernel_classes() {
+        let rows = simd_baseline(true);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].kernel, "fp32_gemm");
+        assert_eq!(rows[1].kernel, "packed_w4");
+        for r in &rows {
+            assert_eq!(r.isa, select().name(), "{}: rows carry the selected ISA", r.kernel);
+            assert!(r.simd_gflops > 0.0 && r.scalar_gflops > 0.0, "{}", r.kernel);
+            assert!(r.speedup > 0.0, "{}", r.kernel);
+            let j = r.to_json();
+            assert!(j.contains("\"kernel\"") && j.contains("\"speedup\""), "{j}");
         }
     }
 }

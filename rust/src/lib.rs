@@ -12,8 +12,10 @@
 //! Module map (see DESIGN.md §4 for the full inventory):
 //!
 //! * [`linalg`] — dense matrix substrate: matmul, Cholesky, truncated
-//!   SVD, and the persistent [`linalg::pool::WorkerPool`] every native
-//!   kernel dispatches on.
+//!   SVD, the persistent [`linalg::pool::WorkerPool`] every native
+//!   kernel dispatches on, and the runtime-selected SIMD microkernels
+//!   ([`linalg::simd`]: AVX2/NEON/scalar, W4 bit-exact across ISAs,
+//!   fp32 within a documented ULP bound).
 //! * [`quant`] — the paper's algorithms behind one dispatch surface: the
 //!   [`quant::Quantizer`] trait + [`quant::MethodRegistry`] (spec strings
 //!   like `"ttq:r=16"`, `"nf:4"`, `"prune:0.5"`), over RTN (Eq. 1), AWQ

@@ -8,6 +8,7 @@
 mod cholesky;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 mod svd;
 
 pub use cholesky::{cholesky, cholesky_inverse, solve_lower, solve_upper};

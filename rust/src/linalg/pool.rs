@@ -231,15 +231,34 @@ pub struct WorkerPool {
     /// per-site aggregator. Unset (the default) costs one
     /// `OnceLock::get` per dispatch.
     profiler: OnceLock<Arc<Profiler>>,
+    /// Instruction-level dispatch, selected once at construction
+    /// ([`crate::linalg::simd::select`]): the ISA every kernel running
+    /// on this pool uses for its inner loops, and the label stamped on
+    /// each [`crate::obs::KernelSite`].
+    isa: crate::linalg::simd::Isa,
 }
 
 impl WorkerPool {
     /// Pool with `threads` parallel lanes. The calling thread is lane 0
     /// and always participates in dispatches, so `threads − 1` worker
     /// threads are spawned; `threads <= 1` spawns none and every
-    /// dispatch runs inline.
+    /// dispatch runs inline. Instruction-level dispatch is resolved
+    /// here too: [`crate::linalg::simd::select`] picks the widest ISA
+    /// the host supports (honoring the `TTQ_FORCE_SCALAR` kill-switch)
+    /// once per pool.
     pub fn new(threads: usize) -> Self {
+        Self::new_with_isa(threads, crate::linalg::simd::select())
+    }
+
+    /// Pool with an explicit [`crate::linalg::simd::Isa`] — the
+    /// differential test/bench hook (scalar-reference pools next to
+    /// vector-selected pools in one process). The requested ISA is
+    /// demoted via [`crate::linalg::simd::Isa::effective`] if the host
+    /// cannot run it, so kernels may trust [`WorkerPool::isa`]
+    /// unconditionally.
+    pub fn new_with_isa(threads: usize, isa: crate::linalg::simd::Isa) -> Self {
         let threads = threads.max(1);
+        let isa = isa.effective();
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 job: None,
@@ -268,7 +287,15 @@ impl WorkerPool {
             dispatches: AtomicU64::new(0),
             trace: OnceLock::new(),
             profiler: OnceLock::new(),
+            isa,
         }
+    }
+
+    /// The instruction-level dispatch selected for this pool's kernels
+    /// — guaranteed runnable on this host (see
+    /// [`WorkerPool::new_with_isa`]).
+    pub fn isa(&self) -> crate::linalg::simd::Isa {
+        self.isa
     }
 
     /// Attach a span recorder + clock: from now on every *pooled*

@@ -1,0 +1,598 @@
+//! Runtime-dispatched SIMD microkernels for the two hot inner loops.
+//!
+//! The worker pool (PR 5) solved *thread-level* dispatch; this module
+//! is the *instruction-level* half: the per-element arithmetic of
+//! [`crate::backend::native::matmul_bt_mt`] (fp32 tile dots) and
+//! [`crate::backend::native::packed_matmul_nt`] (per-group W4 dequant
+//! folded into the dot — nibble unpack → widen → scale/zero-point
+//! multiply-accumulate, the llama.cpp quantized-dot shape) runs on the
+//! widest vector unit the host actually has.
+//!
+//! ## ISA selection
+//!
+//! [`select`] picks one [`Isa`] per process section, at
+//! [`crate::linalg::pool::WorkerPool`] construction:
+//!
+//! * `TTQ_FORCE_SCALAR` (any value except `0`/empty) — kill-switch,
+//!   always scalar; the CI matrix runs the whole suite under it.
+//! * Miri — scalar (vendor intrinsics are Miri-hostile; see
+//!   `docs/CONCURRENCY.md`).
+//! * x86-64 — AVX2 when `is_x86_feature_detected!` confirms it.
+//! * aarch64 — NEON (architecturally mandatory, still detected).
+//! * anything else — the scalar fallback, which is also the reference
+//!   implementation the differential suite (`rust/tests/simd_kernels.rs`)
+//!   compares every vector path against.
+//!
+//! ## The numerics contract
+//!
+//! * **W4 is bit-exact across ISAs.** [`w4_dequant_group`] computes
+//!   every element as `code as f32 * scale + zero` (exact integer
+//!   widening, one elementwise multiply, one elementwise add — the
+//!   identical IEEE roundings in scalar and vector form), and
+//!   [`w4_dot`] accumulates in a *canonical 8-virtual-lane order*:
+//!   lane `l` sums the terms at indices `≡ l (mod 8)` in index order
+//!   (one 8-lane register on AVX2, two 4-lane registers on NEON, an
+//!   array of 8 accumulators in scalar form), multiply and add kept as
+//!   separate rounds (no FMA), tails folded into lane `j mod 8`, and
+//!   one fixed reduction tree (`reduce8`). Every ISA therefore
+//!   produces the same bits, asserted by the differential suite.
+//! * **fp32 is relaxed to a documented ULP bound.** [`dot_f32`]'s
+//!   scalar path keeps the historical strictly-sequential accumulation
+//!   (so forced-scalar output is byte-identical to every release before
+//!   this module existed), while the vector paths accumulate 8 (AVX2)
+//!   or 4 (NEON) partials and reduce at the tile end — a different,
+//!   usually *more* accurate summation order. Cross-ISA agreement is
+//!   bounded by [`crate::util::FP32_MAX_ULPS`] /
+//!   [`crate::util::FP32_ABS_TOL`] (one definition, referenced by every
+//!   suite that relaxes from bit-identity).
+//!
+//! `unsafe` lives only here and is confined by repo-lint **R8** (plus
+//! the R2 allowlist): every block is a call to a `#[target_feature]`
+//! kernel guarded by [`Isa::effective`], which demotes any ISA the
+//! running host has not proven to scalar before dispatch.
+
+use crate::quant::{unpack_at, Packed};
+
+/// Instruction-set architecture of the selected microkernel path.
+///
+/// Carried by [`crate::linalg::pool::WorkerPool::isa`] into every
+/// kernel and stamped on each [`crate::obs::KernelSite`] so roofline
+/// verdicts distinguish scalar from vector dispatches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Isa {
+    /// Portable scalar fallback — also the differential reference.
+    Scalar,
+    /// x86-64 AVX2: 8 × f32 lanes.
+    Avx2,
+    /// aarch64 NEON: 4 × f32 lanes (8 virtual lanes for W4 exactness).
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase name used in site labels and exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per vector register (1 for scalar) — the factor the
+    /// roofline compute ceiling scales by
+    /// ([`crate::perfmodel::vector_ceiling_gflops`]).
+    pub fn lanes(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 8,
+            Isa::Neon => 4,
+        }
+    }
+
+    /// Dense encoding for the [`crate::obs::KernelSite`] key (2 bits).
+    pub fn index(self) -> u64 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2 => 1,
+            Isa::Neon => 2,
+        }
+    }
+
+    /// Inverse of [`Isa::index`]; unknown values decode to scalar.
+    pub fn from_index(v: u64) -> Isa {
+        match v & 0x3 {
+            1 => Isa::Avx2,
+            2 => Isa::Neon,
+            _ => Isa::Scalar,
+        }
+    }
+
+    /// Whether the running host can execute this path. Always true for
+    /// scalar; vector ISAs require the matching architecture, runtime
+    /// feature detection, and a non-Miri build.
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Avx2 => {
+                #[cfg(all(target_arch = "x86_64", not(miri)))]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+                {
+                    false
+                }
+            }
+            Isa::Neon => {
+                #[cfg(all(target_arch = "aarch64", not(miri)))]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(all(target_arch = "aarch64", not(miri))))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Demote to [`Isa::Scalar`] when the host cannot run this path —
+    /// the safety gate every kernel dispatch goes through (so a forced
+    /// or stale `Isa` value can never reach an unsupported intrinsic).
+    pub fn effective(self) -> Isa {
+        if self.available() {
+            self
+        } else {
+            Isa::Scalar
+        }
+    }
+}
+
+/// Parse rule for the kill-switch value: engaged unless unset, empty
+/// or `0`. Split out so the contract has a direct unit test (tests run
+/// concurrently, so mutating the real process env is off-limits).
+fn force_scalar_value(v: Option<&str>) -> bool {
+    match v {
+        Some(v) => !(v.is_empty() || v == "0"),
+        None => false,
+    }
+}
+
+/// True when the `TTQ_FORCE_SCALAR` kill-switch is engaged (set to
+/// anything except empty or `0`).
+pub fn force_scalar() -> bool {
+    force_scalar_value(std::env::var("TTQ_FORCE_SCALAR").ok().as_deref())
+}
+
+/// Select the widest available ISA for this host, honoring the
+/// `TTQ_FORCE_SCALAR` kill-switch. Called once per
+/// [`crate::linalg::pool::WorkerPool`] construction; the result is
+/// stored on the pool so every kernel in a serving section dispatches
+/// consistently.
+pub fn select() -> Isa {
+    if force_scalar() {
+        return Isa::Scalar;
+    }
+    if Isa::Avx2.available() {
+        return Isa::Avx2;
+    }
+    if Isa::Neon.available() {
+        return Isa::Neon;
+    }
+    Isa::Scalar
+}
+
+/// The fixed horizontal-reduction tree shared by every 8-virtual-lane
+/// accumulator (scalar array, AVX2 register extract, NEON pair
+/// extract): pairwise over a stride of 4, then 2, then 1. One
+/// definition so the W4 bit-exactness contract cannot drift.
+#[inline]
+fn reduce8(l: [f32; 8]) -> f32 {
+    ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+}
+
+// ---------------------------------------------------------------------
+// fp32 dot (relaxed contract: cross-ISA within the documented ULP bound)
+// ---------------------------------------------------------------------
+
+/// Strictly-sequential scalar dot — byte-identical to the pre-SIMD
+/// kernels' inner loop, and the reference side of the differential
+/// fp32 suite.
+#[inline]
+fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (av, bv) in a.iter().zip(b) {
+        acc += av * bv;
+    }
+    acc
+}
+
+/// `Σ a[i]·b[i]` over one tile, on the given ISA. Scalar is strictly
+/// sequential; vector paths accumulate per-lane partials and reduce at
+/// the end — results agree within [`crate::util::FP32_MAX_ULPS`] /
+/// [`crate::util::FP32_ABS_TOL`] (the module-level numerics contract).
+#[inline]
+pub fn dot_f32(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot_f32 length mismatch");
+    match isa.effective() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `effective` returns Avx2 only after
+        // `is_x86_feature_detected!("avx2")` confirmed the host supports
+        // every intrinsic the target_feature kernel uses.
+        Isa::Avx2 => unsafe { x86::dot_f32_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `effective` returns Neon only after runtime detection
+        // confirmed NEON on this host.
+        Isa::Neon => unsafe { arm::dot_f32_neon(a, b) },
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+// ---------------------------------------------------------------------
+// W4 group dequant + dot (exact contract: bit-identical across ISAs)
+// ---------------------------------------------------------------------
+
+/// Canonical 8-virtual-lane dot: lane `l` accumulates the terms at
+/// indices `≡ l (mod 8)` in index order, multiply and add as separate
+/// IEEE roundings, reduced by [`reduce8`]. The scalar realization of
+/// the order every vector path reproduces exactly.
+#[inline]
+fn w4_dot_scalar(w: &[f32], x: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    for (j, (wv, xv)) in w.iter().zip(x).enumerate() {
+        lanes[j & 7] += wv * xv;
+    }
+    reduce8(lanes)
+}
+
+/// Dequantized-weight-group × activation-slice dot product, bit-exact
+/// across every ISA (the canonical-lane contract in the module docs).
+/// `w` is one dequantized group from [`w4_dequant_group`]; `x` the
+/// matching activation slice.
+#[inline]
+pub fn w4_dot(isa: Isa, w: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len(), "w4_dot length mismatch");
+    match isa.effective() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 survives `effective` only on a detected-AVX2 host.
+        Isa::Avx2 => unsafe { x86::w4_dot_avx2(w, x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon survives `effective` only on a detected-NEON host.
+        Isa::Neon => unsafe { arm::w4_dot_neon(w, x) },
+        _ => w4_dot_scalar(w, x),
+    }
+}
+
+/// Scalar group dequant — the exact per-element expression
+/// (`code as f32 * scale + zero`, via [`unpack_at`]) the vector unpack
+/// reproduces.
+#[inline]
+fn w4_dequant_scalar(p: &Packed, base: usize, scale: f32, zero: f32, out: &mut [f32]) {
+    for (j, w) in out.iter_mut().enumerate() {
+        *w = unpack_at(p, base + j) as f32 * scale + zero;
+    }
+}
+
+/// Whether the vectorized nibble unpack applies: 4-bit codes, a group
+/// starting on a `u32`-word boundary, and a whole number of 8-code
+/// words — every `quant::pack` group with `group % 8 == 0` qualifies.
+#[inline]
+fn w4_unpack_vectorizable(p: &Packed, base: usize, len: usize) -> bool {
+    p.bits == 4 && (base * 4) % 32 == 0 && len % 8 == 0
+}
+
+/// Dequantize one weight group (`out.len()` codes starting at flat
+/// code index `base`) as `code as f32 * scale + zero`.
+///
+/// Bit-exact across ISAs for every bit width: integer code extraction
+/// is exact, and the elementwise multiply/add round identically in
+/// scalar and vector registers. The AVX2/NEON paths vectorize the
+/// common case (4-bit codes on word-aligned groups — nibble unpack by
+/// per-lane shift/mask, then widen); everything else takes the scalar
+/// expression, which is the same function of the same inputs.
+#[inline]
+pub fn w4_dequant_group(isa: Isa, p: &Packed, base: usize, scale: f32, zero: f32, out: &mut [f32]) {
+    if !w4_unpack_vectorizable(p, base, out.len()) {
+        w4_dequant_scalar(p, base, scale, zero, out);
+        return;
+    }
+    match isa.effective() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 survives `effective` only on a detected-AVX2 host;
+        // `w4_unpack_vectorizable` guarantees whole aligned words.
+        Isa::Avx2 => unsafe { x86::w4_dequant_avx2(&p.words[(base * 4) / 32..], scale, zero, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon survives `effective` only on a detected-NEON host;
+        // alignment guaranteed as above.
+        Isa::Neon => unsafe { arm::w4_dequant_neon(&p.words[(base * 4) / 32..], scale, zero, out) },
+        _ => w4_dequant_scalar(p, base, scale, zero, out),
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 kernels (x86-64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::reduce8;
+    use core::arch::x86_64::*;
+
+    /// 8-lane fp32 dot: vector main loop, sequential scalar tail.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2 (enforced by
+    /// [`super::Isa::effective`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let av = _mm256_loadu_ps(a.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            // mul + add kept separate: same per-element roundings as the
+            // scalar expression (the W4 contract; harmless here).
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+            j += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut tail = 0.0f32;
+        while j < n {
+            tail += a[j] * b[j];
+            j += 1;
+        }
+        reduce8(lanes) + tail
+    }
+
+    /// Canonical-lane W4 dot — bit-identical to the scalar 8-lane form.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn w4_dot_avx2(w: &[f32], x: &[f32]) -> f32 {
+        let n = w.len().min(x.len());
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(wv, xv));
+            j += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        // Tail terms continue the canonical order: index j lands in
+        // lane j mod 8, exactly as the scalar realization does.
+        while j < n {
+            lanes[j & 7] += w[j] * x[j];
+            j += 1;
+        }
+        reduce8(lanes)
+    }
+
+    /// Vectorized 4-bit unpack + dequant over whole aligned words:
+    /// each `u32` word holds 8 little-endian nibbles; a per-lane
+    /// variable shift + mask extracts them in index order, integer→f32
+    /// widening is exact, and `w·scale + zero` rounds per element
+    /// exactly like the scalar expression.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2, and
+    /// `out.len() % 8 == 0` with `words.len() >= out.len() / 8`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn w4_dequant_avx2(words: &[u32], scale: f32, zero: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len() % 8, 0);
+        debug_assert!(words.len() >= out.len() / 8);
+        let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let mask = _mm256_set1_epi32(0xF);
+        let vs = _mm256_set1_ps(scale);
+        let vz = _mm256_set1_ps(zero);
+        for (wi, chunk) in out.chunks_exact_mut(8).enumerate() {
+            let word = _mm256_set1_epi32(words[wi] as i32);
+            let codes = _mm256_and_si256(_mm256_srlv_epi32(word, shifts), mask);
+            let wf = _mm256_cvtepi32_ps(codes);
+            let dq = _mm256_add_ps(_mm256_mul_ps(wf, vs), vz);
+            _mm256_storeu_ps(chunk.as_mut_ptr(), dq);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON kernels (aarch64)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::reduce8;
+    use core::arch::aarch64::*;
+
+    /// 4-lane fp32 dot: vector main loop, sequential scalar tail.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports NEON (enforced by
+    /// [`super::Isa::effective`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_f32(0.0);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let av = vld1q_f32(a.as_ptr().add(j));
+            let bv = vld1q_f32(b.as_ptr().add(j));
+            acc = vaddq_f32(acc, vmulq_f32(av, bv));
+            j += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while j < n {
+            s += a[j] * b[j];
+            j += 1;
+        }
+        s
+    }
+
+    /// Canonical-lane W4 dot on two 4-lane registers (virtual lanes
+    /// 0–3 and 4–7) — bit-identical to the scalar 8-lane form.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn w4_dot_neon(w: &[f32], x: &[f32]) -> f32 {
+        let n = w.len().min(x.len());
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let w0 = vld1q_f32(w.as_ptr().add(j));
+            let x0 = vld1q_f32(x.as_ptr().add(j));
+            let w1 = vld1q_f32(w.as_ptr().add(j + 4));
+            let x1 = vld1q_f32(x.as_ptr().add(j + 4));
+            // mul + add as separate roundings — never vfmaq: FMA's
+            // single rounding would break cross-ISA bit-exactness.
+            lo = vaddq_f32(lo, vmulq_f32(w0, x0));
+            hi = vaddq_f32(hi, vmulq_f32(w1, x1));
+            j += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+        while j < n {
+            lanes[j & 7] += w[j] * x[j];
+            j += 1;
+        }
+        reduce8(lanes)
+    }
+
+    /// Vectorized 4-bit unpack + dequant over whole aligned words; see
+    /// the AVX2 twin for the exactness argument.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports NEON, and
+    /// `out.len() % 8 == 0` with `words.len() >= out.len() / 8`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn w4_dequant_neon(words: &[u32], scale: f32, zero: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len() % 8, 0);
+        debug_assert!(words.len() >= out.len() / 8);
+        // Right shifts via vshlq with negative per-lane shift counts.
+        let sh_lo = vld1q_s32([0i32, -4, -8, -12].as_ptr());
+        let sh_hi = vld1q_s32([-16i32, -20, -24, -28].as_ptr());
+        let mask = vdupq_n_u32(0xF);
+        let vs = vdupq_n_f32(scale);
+        let vz = vdupq_n_f32(zero);
+        for (wi, chunk) in out.chunks_exact_mut(8).enumerate() {
+            let word = vdupq_n_u32(words[wi]);
+            let lo = vandq_u32(vshlq_u32(word, sh_lo), mask);
+            let hi = vandq_u32(vshlq_u32(word, sh_hi), mask);
+            let dq_lo = vaddq_f32(vmulq_f32(vcvtq_f32_u32(lo), vs), vz);
+            let dq_hi = vaddq_f32(vmulq_f32(vcvtq_f32_u32(hi), vs), vz);
+            vst1q_f32(chunk.as_mut_ptr(), dq_lo);
+            vst1q_f32(chunk.as_mut_ptr().add(4), dq_hi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Mat, Rng};
+    use crate::quant::{pack, rtn_quantize_int, QuantSpec};
+    use crate::util::{fp32_close, ulp_diff};
+
+    #[test]
+    fn isa_names_lanes_and_index_roundtrip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::from_index(isa.index()), isa);
+            assert!(!isa.name().is_empty());
+            assert!(isa.lanes() >= 1);
+        }
+        assert_eq!(Isa::Scalar.lanes(), 1);
+        assert_eq!(Isa::Avx2.lanes(), 8);
+        assert_eq!(Isa::Neon.lanes(), 4);
+        // Unknown indices demote to scalar rather than panicking.
+        assert_eq!(Isa::from_index(3), Isa::Scalar);
+    }
+
+    #[test]
+    fn scalar_always_available_and_effective_demotes() {
+        assert!(Isa::Scalar.available());
+        for isa in [Isa::Avx2, Isa::Neon] {
+            let eff = isa.effective();
+            assert!(eff == isa || eff == Isa::Scalar);
+            assert!(eff.available());
+        }
+        // select() must return something the host can actually run.
+        assert!(select().available());
+    }
+
+    #[test]
+    fn dot_f32_matches_sequential_reference() {
+        let mut rng = Rng::new(7);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 255, 256, 257] {
+            let a = Mat::randn(1, n.max(1), &mut rng).data[..n].to_vec();
+            let b = Mat::randn(1, n.max(1), &mut rng).data[..n].to_vec();
+            let want = dot_f32_scalar(&a, &b);
+            assert_eq!(dot_f32(Isa::Scalar, &a, &b), want, "scalar path must be sequential");
+            let got = dot_f32(select(), &a, &b);
+            assert!(
+                fp32_close(got, want),
+                "n={n}: vector dot {got} vs scalar {want} ({} ulps)",
+                ulp_diff(got, want)
+            );
+        }
+    }
+
+    #[test]
+    fn w4_dot_bit_exact_across_selected_isa() {
+        let mut rng = Rng::new(8);
+        for n in [1usize, 5, 8, 16, 23, 32, 48, 100, 128] {
+            let w = Mat::randn(1, n, &mut rng).data;
+            let x = Mat::randn(1, n, &mut rng).data;
+            let want = w4_dot(Isa::Scalar, &w, &x);
+            let got = w4_dot(select(), &w, &x);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}: W4 dot must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn w4_dequant_group_matches_unpack_at_for_all_widths() {
+        let mut rng = Rng::new(9);
+        let w = Mat::randn(6, 96, &mut rng);
+        for bits in [2u32, 3, 4, 5, 8] {
+            for group in [16usize, 32, 48, 96] {
+                let qi = rtn_quantize_int(&w, &QuantSpec::new(bits, group));
+                let p = pack(&qi);
+                if p.cols % p.group != 0 {
+                    continue;
+                }
+                let groups_per_row = p.cols / p.group;
+                let mut buf = vec![0.0f32; p.group];
+                for gi in 0..p.rows * groups_per_row {
+                    let (s, z) = (p.scales[gi], p.zeros[gi]);
+                    w4_dequant_group(select(), &p, gi * p.group, s, z, &mut buf);
+                    for (j, &got) in buf.iter().enumerate() {
+                        let want = unpack_at(&p, gi * p.group + j) as f32 * s + z;
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "bits={bits} group={group} gi={gi} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn force_scalar_parse_rule() {
+        assert!(!force_scalar_value(None));
+        assert!(!force_scalar_value(Some("")));
+        assert!(!force_scalar_value(Some("0")));
+        assert!(force_scalar_value(Some("1")));
+        assert!(force_scalar_value(Some("yes")));
+        // And under the live environment, select() honors the switch.
+        if force_scalar() {
+            assert_eq!(select(), Isa::Scalar);
+        }
+    }
+}

@@ -279,15 +279,16 @@ pub fn prometheus(m: &Metrics) -> String {
 }
 
 /// The Prometheus label set for one kernel site:
-/// `kind="..",phase="..",shape="m{..}xdo{..}xdi{..}"`.
+/// `kind="..",phase="..",shape="m{..}xdo{..}xdi{..}",isa=".."`.
 fn site_labels(site: &KernelSite) -> String {
     format!(
-        "kind=\"{}\",phase=\"{}\",shape=\"m{}xdo{}xdi{}\"",
+        "kind=\"{}\",phase=\"{}\",shape=\"m{}xdo{}xdi{}\",isa=\"{}\"",
         site.kind.name(),
         site.phase.name(),
         site.m_bucket,
         site.d_out_bucket,
-        site.d_in_bucket
+        site.d_in_bucket,
+        site.isa.name()
     )
 }
 

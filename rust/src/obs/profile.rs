@@ -34,8 +34,9 @@
 
 #![forbid(unsafe_code)]
 
+use crate::linalg::simd::Isa;
 use crate::obs::Clock;
-use crate::perfmodel::{roofline_us, Bound};
+use crate::perfmodel::{roofline_us, vector_ceiling_gflops, Bound};
 use crate::sync::atomic::{AtomicU64, Ordering};
 
 /// What the dispatched kernel computes.
@@ -131,6 +132,10 @@ pub struct KernelCall {
     /// Analytic bytes moved: weights or cached K/V streamed plus
     /// activations read and written.
     pub bytes: u64,
+    /// Instruction-level dispatch the kernel ran on (scalar unless the
+    /// caller stamped the pool's selected ISA via
+    /// [`KernelCall::with_isa`]).
+    pub isa: Isa,
 }
 
 impl KernelCall {
@@ -144,6 +149,7 @@ impl KernelCall {
             d_in,
             flops: 2 * (m * d_out * d_in) as u64,
             bytes: 4 * (d_out * d_in + m * d_in + m * d_out) as u64,
+            isa: Isa::Scalar,
         }
     }
 
@@ -159,6 +165,7 @@ impl KernelCall {
             d_in,
             flops: 2 * (m * d_out * d_in) as u64,
             bytes: (code_bytes + meta_bytes + 4 * (m * d_in + m * d_out)) as u64,
+            isa: Isa::Scalar,
         }
     }
 
@@ -174,6 +181,7 @@ impl KernelCall {
             d_in: ctx_total / rows.max(1),
             flops: 4 * (ctx_total * d_attn) as u64,
             bytes: 4 * (2 * ctx_total * d_attn + 2 * rows * d_attn) as u64,
+            isa: Isa::Scalar,
         }
     }
 
@@ -190,7 +198,17 @@ impl KernelCall {
             d_in,
             flops: 2 * (d_out * d_in) as u64,
             bytes: (4 * d_out * d_in + code_bytes + meta_bytes) as u64,
+            isa: Isa::Scalar,
         }
+    }
+
+    /// Stamp the instruction-level dispatch (the pool's selected
+    /// [`Isa`]) onto this call — `backend::native` does this for every
+    /// kernel whose inner loops went through `linalg::simd`, so
+    /// roofline verdicts can tell scalar from vector sites.
+    pub fn with_isa(mut self, isa: Isa) -> KernelCall {
+        self.isa = isa;
+        self
     }
 }
 
@@ -237,6 +255,10 @@ pub struct KernelSite {
     pub d_out_bucket: usize,
     /// Power-of-two bucket of `d_in`.
     pub d_in_bucket: usize,
+    /// Instruction-level dispatch the site's kernels ran on — scalar
+    /// and vector dispatches of the same shape are distinct sites, so
+    /// roofline verdicts never average across ISAs.
+    pub isa: Isa,
 }
 
 impl KernelSite {
@@ -248,19 +270,21 @@ impl KernelSite {
             m_bucket: shape_bucket(call.m),
             d_out_bucket: shape_bucket(call.d_out),
             d_in_bucket: shape_bucket(call.d_in),
+            isa: call.isa,
         }
     }
 
     /// Stable label used across every exporter:
-    /// `kind/phase/m{mb}xdo{ob}xdi{ib}`.
+    /// `kind/phase/m{mb}xdo{ob}xdi{ib}/{isa}`.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/m{}xdo{}xdi{}",
+            "{}/{}/m{}xdo{}xdi{}/{}",
             self.kind.name(),
             self.phase.name(),
             self.m_bucket,
             self.d_out_bucket,
-            self.d_in_bucket
+            self.d_in_bucket,
+            self.isa.name()
         )
     }
 
@@ -273,6 +297,7 @@ impl KernelSite {
             | (bucket_log2(self.m_bucket) << 4)
             | (bucket_log2(self.d_out_bucket) << 10)
             | (bucket_log2(self.d_in_bucket) << 16)
+            | (self.isa.index() << 22)
     }
 
     fn decode(key: u64) -> KernelSite {
@@ -282,6 +307,7 @@ impl KernelSite {
             m_bucket: bucket_from_log2((key >> 4) & 0x3f),
             d_out_bucket: bucket_from_log2((key >> 10) & 0x3f),
             d_in_bucket: bucket_from_log2((key >> 16) & 0x3f),
+            isa: Isa::from_index(key >> 22),
         }
     }
 }
@@ -544,9 +570,19 @@ impl SiteReport {
     fn from_stats(s: &SiteStats, host: &HostSpec) -> SiteReport {
         let us = s.wall_us.max(1) as f64;
         let intensity = s.flops as f64 / (s.bytes.max(1)) as f64;
-        let predicted_us = roofline_us(host.bw_gbps, host.gflops, s.flops as f64, s.bytes as f64);
-        let bound =
-            if intensity < host.balance() { Bound::Memory } else { Bound::Compute };
+        // The host FLOP ceiling is measured with the scalar probe; a
+        // vector site's compute roof is `lanes()`× higher, so scale it
+        // per ISA or every AVX2 site would look implausibly fast and
+        // the Bound verdict would flip to Compute too early.
+        let ceil_gflops = vector_ceiling_gflops(host.gflops, s.site.isa.lanes());
+        let predicted_us = roofline_us(host.bw_gbps, ceil_gflops, s.flops as f64, s.bytes as f64);
+        // Roofline knee at the ISA-scaled ceiling: flop/byte below
+        // `ceil_gflops / bw` streams slower than it computes.
+        let bound = if intensity < ceil_gflops / host.bw_gbps {
+            Bound::Memory
+        } else {
+            Bound::Compute
+        };
         SiteReport {
             site: s.site,
             calls: s.calls,
@@ -695,15 +731,18 @@ mod tests {
             KernelKind::QuantPack,
         ] {
             for phase in [Phase::Prefill, Phase::Decode, Phase::SpecDraft, Phase::SpecVerify] {
-                for (m, o, i) in [(0, 1, 1), (1, 512, 64), (64, 4096, 4096), (513, 100, 3)] {
-                    let s = KernelSite {
-                        kind,
-                        phase,
-                        m_bucket: shape_bucket(m),
-                        d_out_bucket: shape_bucket(o),
-                        d_in_bucket: shape_bucket(i),
-                    };
-                    assert_eq!(KernelSite::decode(s.encode()), s, "roundtrip {s:?}");
+                for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+                    for (m, o, i) in [(0, 1, 1), (1, 512, 64), (64, 4096, 4096), (513, 100, 3)] {
+                        let s = KernelSite {
+                            kind,
+                            phase,
+                            m_bucket: shape_bucket(m),
+                            d_out_bucket: shape_bucket(o),
+                            d_in_bucket: shape_bucket(i),
+                            isa,
+                        };
+                        assert_eq!(KernelSite::decode(s.encode()), s, "roundtrip {s:?}");
+                    }
                 }
             }
         }

@@ -101,6 +101,19 @@ pub fn roofline_us(bw_gbps: f64, gflops: f64, flops: f64, bytes: f64) -> f64 {
     mem_us.max(cmp_us)
 }
 
+/// Compute ceiling for a vector kernel: the measured *scalar* FLOP
+/// throughput ([`crate::obs::profile::HostSpec`]'s probe) scaled by the ISA's
+/// f32 lane count. An idealization — real vector kernels lose some of
+/// the `lanes×` to load alignment and horizontal reductions — but the
+/// roofline wants the *ceiling*, and without it every AVX2 site would
+/// be judged against a roof 8× too low (measured/predicted ratios
+/// systematically < 1 and Bound verdicts flipping to Compute far too
+/// early). Used by `obs::profile` for per-site verdicts; `lanes == 1`
+/// (scalar sites) is the identity, keeping pre-SIMD reports unchanged.
+pub fn vector_ceiling_gflops(scalar_gflops: f64, lanes: usize) -> f64 {
+    scalar_gflops * lanes.max(1) as f64
+}
+
 /// Streaming read-modify-write efficiency of the online `find_params`
 /// pass (fraction of peak BW).
 const EFF_TTQ_QUANT: f64 = 0.55;
@@ -661,6 +674,23 @@ mod tests {
         assert!((t - 1000.0).abs() < 1e-9, "compute-bound time {t}");
         assert_eq!(Bound::Memory.name(), "memory");
         assert_eq!(Bound::Compute.name(), "compute");
+    }
+
+    #[test]
+    fn vector_ceiling_scales_by_lanes() {
+        // Scalar sites keep the measured ceiling untouched.
+        assert_eq!(vector_ceiling_gflops(12.5, 1), 12.5);
+        // AVX2 (8 lanes) / NEON (4 lanes) raise the compute roof only.
+        assert_eq!(vector_ceiling_gflops(12.5, 8), 100.0);
+        assert_eq!(vector_ceiling_gflops(12.5, 4), 50.0);
+        // Degenerate lane counts clamp to the identity, never to zero.
+        assert_eq!(vector_ceiling_gflops(12.5, 0), 12.5);
+        // A memory-bound shape stays memory-bound under a higher
+        // compute roof (raising GFLOP/s can only shrink the compute
+        // term of the max).
+        let scalar = roofline_us(10.0, 100.0, 5e5, 1e6);
+        let vector = roofline_us(10.0, vector_ceiling_gflops(100.0, 8), 5e5, 1e6);
+        assert_eq!(scalar, vector, "memory roof unchanged by lanes");
     }
 
     #[test]

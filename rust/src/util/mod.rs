@@ -52,9 +52,141 @@ pub fn logsumexp(row: &[f32]) -> f64 {
     z.ln() + mx as f64
 }
 
+/// Maximum cross-ISA divergence, in units-in-the-last-place, accepted
+/// for fp32 kernels under the relaxed numerics contract
+/// (`docs/ARCHITECTURE.md` § Kernel dispatch & numerics). Vector dots
+/// re-associate one `K_TILE = 256`-element tile into 8 lane partials;
+/// worst-case reassociation error grows with tile length, and 2·256
+/// ULPs bounds it with margin on every shape the suites drive. W4
+/// kernels do NOT use this — they are bit-exact across ISAs.
+pub const FP32_MAX_ULPS: u32 = 512;
+
+/// Absolute-difference floor paired with [`FP32_MAX_ULPS`]: near zero
+/// (catastrophic cancellation) a tiny absolute error can be millions
+/// of ULPs, so [`fp32_close`] also accepts `|a − b| ≤ FP32_ABS_TOL`.
+pub const FP32_ABS_TOL: f32 = 1e-4;
+
+/// Map an f32's bit pattern onto a signed line where adjacent
+/// representable values differ by 1 (negative floats mirror below
+/// zero), so ULP distance is an integer subtraction.
+fn ulp_index(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        -((b & 0x7fff_ffff) as i64)
+    } else {
+        b as i64
+    }
+}
+
+/// Units-in-the-last-place distance between two f32 values: 0 for
+/// bitwise-equal values (and `0.0` vs `-0.0`), `u32::MAX` when either
+/// is NaN, otherwise the number of representable floats between them
+/// (saturating). `ulp_diff(1.0, next_up(1.0)) == 1`.
+pub fn ulp_diff(a: f32, b: f32) -> u32 {
+    if a == b {
+        return 0; // covers +0.0 vs -0.0, which sit 0 apart numerically
+    }
+    if a.is_nan() || b.is_nan() {
+        return u32::MAX;
+    }
+    let d = (ulp_index(a) - ulp_index(b)).unsigned_abs();
+    d.min(u32::MAX as u64) as u32
+}
+
+/// Maximum [`ulp_diff`] over paired slices — the statistic the
+/// differential SIMD suites report. Panics on length mismatch (a
+/// harness bug, not a numerics result). Empty slices are 0 apart.
+pub fn max_ulp_diff(a: &[f32], b: &[f32]) -> u32 {
+    assert_eq!(a.len(), b.len(), "max_ulp_diff length mismatch");
+    a.iter().zip(b).map(|(&x, &y)| ulp_diff(x, y)).max().unwrap_or(0)
+}
+
+/// The relaxed fp32 comparison every suite that steps down from
+/// bit-identity uses: within [`FP32_MAX_ULPS`] ULPs *or* within
+/// [`FP32_ABS_TOL`] absolutely. One definition, so the documented
+/// contract and the asserted contract cannot drift apart.
+pub fn fp32_close(a: f32, b: f32) -> bool {
+    ulp_diff(a, b) <= FP32_MAX_ULPS || (a - b).abs() <= FP32_ABS_TOL
+}
+
+/// Assert two fp32 slices agree under [`fp32_close`], reporting the
+/// worst offending index, values and ULP distance on failure. `what`
+/// names the comparison in the panic message.
+pub fn assert_fp32_slices_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            fp32_close(x, y),
+            "{what}: index {i}: {x} vs {y} ({} ulps, abs {})",
+            ulp_diff(x, y),
+            (x - y).abs()
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::{argmax, logsumexp};
+    use super::{assert_fp32_slices_close, fp32_close, max_ulp_diff, ulp_diff};
+
+    #[test]
+    fn ulp_diff_golden_cases() {
+        // Hand-computed: 1.0 = 0x3f800000; its upward neighbor is one
+        // bit pattern away.
+        assert_eq!(ulp_diff(1.0, f32::from_bits(0x3f80_0001)), 1);
+        // Equal values, including signed zeros, are 0 apart.
+        assert_eq!(ulp_diff(0.0, -0.0), 0);
+        assert_eq!(ulp_diff(3.25, 3.25), 0);
+        // Doubling crosses one full exponent: 2^23 representable values.
+        assert_eq!(ulp_diff(2.0, 1.0), 1 << 23);
+        // Straddling zero counts the denormals on both sides: the two
+        // smallest-magnitude denormals are 2 apart.
+        assert_eq!(ulp_diff(f32::from_bits(0x8000_0001), f32::from_bits(0x0000_0001)), 2);
+        // ±0 to the smallest denormal is exactly 1.
+        assert_eq!(ulp_diff(0.0, f32::from_bits(0x0000_0001)), 1);
+        // NaN never compares close.
+        assert_eq!(ulp_diff(f32::NAN, 1.0), u32::MAX);
+        assert_eq!(ulp_diff(f32::NAN, f32::NAN), u32::MAX);
+        // Opposite-extreme finite inputs: 2 × (0x7f7fffff) counts every
+        // representable value from −MAX to +MAX — fits in u32, no
+        // saturation needed (hand-computed: 2 × 2139095039).
+        assert_eq!(ulp_diff(f32::MAX, f32::MIN), 4_278_190_078);
+    }
+
+    #[test]
+    fn max_ulp_diff_reports_worst_pair() {
+        let a = [1.0f32, 2.0, 0.0];
+        let b = [1.0f32, f32::from_bits(2.0f32.to_bits() + 3), -0.0];
+        assert_eq!(max_ulp_diff(&a, &b), 3);
+        assert_eq!(max_ulp_diff(&[], &[]), 0);
+    }
+
+    #[test]
+    fn fp32_close_contract() {
+        // Within the ULP bound. Base 1024.0 so one ULP (2^-13 ≈ 1.2e-4)
+        // already exceeds the absolute floor — the ULP clause alone
+        // decides both assertions (at 1.0, 513 ULPs ≈ 6e-5 would slip
+        // under FP32_ABS_TOL and mask the boundary).
+        let base = 1024.0f32;
+        assert!(fp32_close(base, f32::from_bits(base.to_bits() + super::FP32_MAX_ULPS)));
+        // Just beyond it (and beyond the absolute floor).
+        assert!(!fp32_close(
+            base,
+            f32::from_bits(base.to_bits() + super::FP32_MAX_ULPS + 1)
+        ));
+        // Near zero the absolute floor takes over: 1e-5 vs -1e-5 is
+        // millions of ULPs but well inside FP32_ABS_TOL.
+        assert!(ulp_diff(1e-5, -1e-5) > super::FP32_MAX_ULPS);
+        assert!(fp32_close(1e-5, -1e-5));
+        assert!(!fp32_close(f32::NAN, f32::NAN));
+        assert_fp32_slices_close(&[1.0, 1e-5], &[1.0, -1e-5], "contract demo");
+    }
+
+    #[test]
+    #[should_panic(expected = "worst case")]
+    fn slice_assert_panics_with_context() {
+        assert_fp32_slices_close(&[1.0], &[2.0], "worst case");
+    }
 
     #[test]
     fn argmax_basics() {

@@ -1,12 +1,18 @@
 //! Decode-engine correctness suite — runs with ZERO artifacts.
 //!
-//! The acceptance contract: cached incremental decode is **bit-identical**
-//! to full-prefix recompute on every synthetic model family, in both
-//! fp32 and packed-W4 execution. Plus the serving-layer contracts:
-//! streaming event shape, continuous batching at mixed positions,
-//! mid-generation drift→requantize, KV-slot backpressure, and the
-//! padding-row stats regression (bucket slack must never feed the
-//! calibrator).
+//! The acceptance contract: cached incremental decode matches full-prefix
+//! recompute on every synthetic model family, in both fp32 and packed-W4
+//! execution — token streams exactly, fp32 logits within the documented
+//! kernel numerics contract (`util::FP32_MAX_ULPS` / `util::FP32_ABS_TOL`,
+//! see docs/ARCHITECTURE.md § Kernel dispatch & numerics). In-process the
+//! two sides still agree bit for bit — both run on the pool's one
+//! selected ISA and the per-tile dots are shape-independent — but the
+//! suite asserts the *documented* cross-ISA bound so the goldens stay
+//! valid if decode and recompute ever run under different ISA selections.
+//! Plus the serving-layer contracts: streaming event shape, continuous
+//! batching at mixed positions, mid-generation drift→requantize, KV-slot
+//! backpressure, and the padding-row stats regression (bucket slack must
+//! never feed the calibrator).
 
 use std::time::{Duration, Instant};
 
@@ -16,7 +22,7 @@ use ttq_serve::corpus::{CorpusStream, Split, BOS};
 use ttq_serve::eval::Evaluator;
 use ttq_serve::kvcache::{KvCache, KvCacheConfig};
 use ttq_serve::quant::QuantSpec;
-use ttq_serve::util::argmax;
+use ttq_serve::util::{argmax, assert_fp32_slices_close};
 
 fn native() -> NativeBackend {
     NativeBackend::new(&ttq_serve::artifacts_dir())
@@ -45,10 +51,12 @@ fn assert_cached_matches_recompute(model: &str, be: &NativeBackend) {
     let id = cache.alloc().unwrap();
     let step = be.prefill(&w, &toks, &mut cache, &[id], false).unwrap();
     let full = be.logits(&w, &toks, 1).unwrap();
-    assert_eq!(
-        step.logits[..],
-        full[(prompt_len - 1) * vocab..],
-        "{model}: prefill logits differ from the full forward"
+    // fp32 logits compare under the documented ULP/abs bound (PR 10
+    // relaxed these from assert_eq!; token streams below stay exact).
+    assert_fp32_slices_close(
+        &step.logits,
+        &full[(prompt_len - 1) * vocab..],
+        &format!("{model}: prefill logits vs full forward"),
     );
 
     let mut tok = argmax(&step.logits) as i32;
@@ -58,10 +66,10 @@ fn assert_cached_matches_recompute(model: &str, be: &NativeBackend) {
             .decode_step(&w, &[tok], &mut cache, &[id], false)
             .unwrap();
         let full = be.logits(&w, &toks, 1).unwrap();
-        assert_eq!(
-            out.logits[..],
-            full[(toks.len() - 1) * vocab..],
-            "{model} decode step {i}: cached != full recompute (must be bit-identical)"
+        assert_fp32_slices_close(
+            &out.logits,
+            &full[(toks.len() - 1) * vocab..],
+            &format!("{model} decode step {i}: cached vs full recompute"),
         );
         tok = argmax(&out.logits) as i32;
     }
@@ -120,8 +128,8 @@ fn batched_decode_matches_solo_at_mixed_positions() {
     let b = cache.alloc().unwrap();
     let s1 = be.prefill(&w, &p1, &mut cache, &[a], false).unwrap();
     let s2 = be.prefill(&w, &p2, &mut cache, &[b], false).unwrap();
-    assert_eq!(s1.logits, ref1[0]);
-    assert_eq!(s2.logits, ref2[0]);
+    assert_fp32_slices_close(&s1.logits, &ref1[0], "joint prefill seq 1");
+    assert_fp32_slices_close(&s2.logits, &ref2[0], "joint prefill seq 2");
     let mut t1 = argmax(&s1.logits) as i32;
     let mut t2 = argmax(&s2.logits) as i32;
     let vocab = w.manifest.config.vocab;
@@ -129,8 +137,8 @@ fn batched_decode_matches_solo_at_mixed_positions() {
         let out = be
             .decode_step(&w, &[t1, t2], &mut cache, &[a, b], false)
             .unwrap();
-        assert_eq!(out.logits[..vocab], ref1[i][..], "seq 1 step {i}");
-        assert_eq!(out.logits[vocab..], ref2[i][..], "seq 2 step {i}");
+        assert_fp32_slices_close(&out.logits[..vocab], &ref1[i], &format!("seq 1 step {i}"));
+        assert_fp32_slices_close(&out.logits[vocab..], &ref2[i], &format!("seq 2 step {i}"));
         t1 = argmax(&out.logits[..vocab]) as i32;
         t2 = argmax(&out.logits[vocab..]) as i32;
     }

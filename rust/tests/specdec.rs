@@ -3,9 +3,14 @@
 //! The acceptance contract, on every synthetic model family:
 //!
 //! * `KvCache::truncate` then re-append/advance is **bit-identical** to
-//!   never having appended (fp32 and packed-W4 execution);
-//! * `verify_step` row 0 equals `decode_step` bit-for-bit (the
-//!   exactness keystone: batched verification *is* plain decode);
+//!   never having appended (fp32 and packed-W4 execution) — same shape,
+//!   same kernels, so no numerics relaxation applies;
+//! * `verify_step` rows match `decode_step` within the documented fp32
+//!   kernel contract (`util::FP32_MAX_ULPS` / `util::FP32_ABS_TOL` —
+//!   PR 10 relaxed these cross-shape comparisons from bit-identity;
+//!   same-ISA in-process they still agree exactly), and the token
+//!   streams built on them stay exact (batched verification *is* plain
+//!   decode);
 //! * speculative greedy generation (W4 drafter × fp32 verifier) is
 //!   token-identical to plain greedy generation — and stays identical
 //!   under a seeded stochastic sampler, because acceptance is defined
@@ -24,7 +29,7 @@ use ttq_serve::eval::{Evaluator, Sampler};
 use ttq_serve::kvcache::{KvCache, KvCacheConfig};
 use ttq_serve::quant::QuantSpec;
 use ttq_serve::specdec::{drafter_weights, SpecConfig, SpecGenerator, SpecModel};
-use ttq_serve::util::argmax;
+use ttq_serve::util::{argmax, assert_fp32_slices_close};
 
 const FAMILIES: [&str; 3] = ["opt-micro", "qwen-micro", "gemma-micro"];
 
@@ -78,10 +83,12 @@ fn assert_truncate_roundtrip(model: &str, be: &NativeBackend) {
         .verify_step(&w, &[tok, next, next], &mut cache, &[id], false)
         .unwrap();
     assert_eq!(cache.len(id), base_len + 3);
-    assert_eq!(
-        v.logits[..vocab],
-        first.logits[..],
-        "{model}: verify_step row 0 must equal decode_step bit-for-bit"
+    // cross-shape fp32 comparison (m=3 verify vs m=1 decode): the
+    // documented ULP/abs bound, not bit-identity (PR 10).
+    assert_fp32_slices_close(
+        &v.logits[..vocab],
+        &first.logits,
+        &format!("{model}: verify_step row 0 vs decode_step"),
     );
     cache.truncate(id, base_len).unwrap();
     let rewound = be.decode_step(&w, &[tok], &mut cache, &[id], false).unwrap();
@@ -137,7 +144,7 @@ fn verify_step_matches_sequential_decode_positions() {
         .verify_step(&w, &window, &mut ver_cache, &[vid], false)
         .unwrap();
     assert_eq!(v.logits.len(), 4 * vocab);
-    assert_eq!(v.logits, want, "k-row causal window != k sequential decode steps");
+    assert_fp32_slices_close(&v.logits, &want, "k-row causal window vs k sequential decode steps");
 }
 
 // ---------------------------------------------------------------------

@@ -9,9 +9,9 @@
 //!   thread must come from `crate::sync::thread::spawn_named` so the
 //!   loom build can intercept it. The single retained scoped-spawn
 //!   baseline in `bench/throughput.rs` is allowlisted.
-//! * **R2** — no `unsafe` outside `linalg/pool.rs` and `sync/`
-//!   (mirrored by `#![forbid(unsafe_code)]` in every other module; the
-//!   lint catches removal of the attribute).
+//! * **R2** — no `unsafe` outside `linalg/pool.rs`, `linalg/simd.rs`
+//!   and `sync/` (mirrored by `#![forbid(unsafe_code)]` in every other
+//!   module; the lint catches removal of the attribute).
 //! * **R3** — no `.unwrap()` / `.expect()` on the serving path
 //!   (`coordinator`, `backend`, `kvcache`, `specdec`): these modules
 //!   degrade via error enums, never by unwinding mid-batch. Exact
@@ -36,6 +36,11 @@
 //!   `KernelSite`-bearing `KernelCall`; bare `.run_rows(...)` leaves
 //!   kernel wall time unattributed and breaks the ≥ 90% coverage gate
 //!   in `benches/kernel_profile.rs`.
+//! * **R8** — vendor intrinsics (`std::arch` / `core::arch`, including
+//!   the feature-detection macros) confined to `linalg/simd.rs`: the
+//!   SIMD dispatch module is the one place where the W4-exact /
+//!   fp32-ULP numerics contract and the `TTQ_FORCE_SCALAR` kill-switch
+//!   are enforced, so scattered intrinsics elsewhere would bypass both.
 //!
 //! The scanner is a hand-rolled lexer (this tree is dependency-free by
 //! policy, so no `syn`): comments, string/char literals, raw strings
@@ -404,16 +409,21 @@ pub fn scan_str(path: &str, src: &str) -> Vec<Violation> {
         }
     }
 
-    // R2: `unsafe` confined to the pool and the sync shim
-    let r2_exempt = starts_with_any(path, &["rust/src/linalg/pool.rs", "rust/src/sync/"]);
+    // R2: `unsafe` confined to the pool, the sync shim and the SIMD
+    // microkernels
+    let r2_exempt = starts_with_any(
+        path,
+        &["rust/src/linalg/pool.rs", "rust/src/linalg/simd.rs", "rust/src/sync/"],
+    );
     if !r2_exempt {
         for i in find_matches(&toks, &["unsafe"], false) {
             push(
                 toks[i].line,
                 "R2",
-                "`unsafe` outside linalg/pool.rs and sync/: keep \
-                 `#![forbid(unsafe_code)]` on this module and move the \
-                 operation behind a checked pool/shim API"
+                "`unsafe` outside linalg/pool.rs, linalg/simd.rs and \
+                 sync/: keep `#![forbid(unsafe_code)]` on this module \
+                 and move the operation behind a checked pool/shim/simd \
+                 API"
                     .to_string(),
             );
         }
@@ -536,6 +546,27 @@ pub fn scan_str(path: &str, src: &str) -> Vec<Violation> {
         }
     }
 
+    // R8: vendor intrinsics confined to the SIMD dispatch module
+    let r8_exempt = starts_with_any(path, &["rust/src/linalg/simd.rs"]);
+    if !r8_exempt {
+        for pat in [&["std", "::", "arch"][..], &["core", "::", "arch"][..]] {
+            for i in find_matches(&toks, pat, false) {
+                push(
+                    toks[i].line,
+                    "R8",
+                    format!(
+                        "`{}` outside linalg/simd.rs: vendor intrinsics \
+                         and feature detection live behind the \
+                         `linalg::simd::Isa` dispatch (one place for the \
+                         W4-exact / fp32-ULP numerics contract and the \
+                         `TTQ_FORCE_SCALAR` kill-switch)",
+                        pat.join("")
+                    ),
+                );
+            }
+        }
+    }
+
     out
 }
 
@@ -570,6 +601,8 @@ mod tests {
         let bad = "fn f() { unsafe { core::hint::unreachable_unchecked() } }";
         assert_eq!(rules("rust/src/quant/mod.rs", bad), vec!["R2"]);
         assert!(rules("rust/src/linalg/pool.rs", bad).is_empty());
+        // the SIMD microkernel module is on the R2 allowlist too
+        assert!(rules("rust/src/linalg/simd.rs", bad).is_empty());
     }
 
     #[test]
@@ -683,6 +716,24 @@ mod tests {
         let test_mod =
             "#[cfg(test)]\nmod tests {\n fn g(p: &WorkerPool) { p.run_rows(&mut y, 1, 1, 1, |a, b| {}); }\n}";
         assert!(rules("rust/src/backend/native.rs", test_mod).is_empty());
+    }
+
+    #[test]
+    fn r8_fires_on_intrinsics_outside_simd() {
+        let bad = "fn f() { let v = unsafe { std::arch::x86_64::_mm256_setzero_ps() }; }";
+        // R2 (unsafe) and R8 (intrinsics) both fire outside the allowlists
+        assert_eq!(rules("rust/src/backend/native.rs", bad), vec!["R2", "R8"]);
+        let detect = "fn f() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }";
+        assert_eq!(rules("rust/src/linalg/pool.rs", detect), vec!["R8"]);
+        let core_arch = "use core::arch::aarch64::vaddq_f32;";
+        assert_eq!(rules("rust/src/quant/pack.rs", core_arch), vec!["R8"]);
+        // the dispatch module itself is the sanctioned home
+        assert!(rules("rust/src/linalg/simd.rs", bad).is_empty());
+        assert!(rules("rust/src/linalg/simd.rs", core_arch).is_empty());
+        // R8 applies in test code too (no cfg(test) exemption): a
+        // differential test must go through the Isa dispatch
+        let test_mod = "#[cfg(test)]\nmod tests { use core::arch::x86_64::*; }";
+        assert_eq!(rules("rust/src/util/mod.rs", test_mod), vec!["R8"]);
     }
 
     #[test]
